@@ -1,0 +1,92 @@
+//! Energy report: reproduce the paper's headline energy-efficiency story
+//! in one run — PDP/EDP across the five platforms for the three scenario
+//! classes its introduction motivates (conversational Q&A, summarization,
+//! generation), plus the improvement factors vs each GPU.
+//!
+//! ```bash
+//! cargo run --release --example energy_report
+//! ```
+
+use imax_llm::baseline::GpuDevice;
+use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
+use imax_llm::harness::workloads;
+use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
+use imax_llm::model::{ModelConfig, QuantScheme};
+use imax_llm::power;
+use imax_llm::util::report::Table;
+
+fn main() {
+    // The paper's three practical scenarios (§IV.A): latency-sensitive
+    // Q&A [8:1]/[8:4], summarization [32:4], generation [16:16]/[32:16].
+    let scenarios: [(&str, usize, usize); 3] =
+        [("conversational Q&A", 8, 4), ("summarization", 32, 4), ("generation", 32, 16)];
+
+    let asic = ImaxDevice::asic28(2);
+    for (label, n_in, n_out) in scenarios {
+        let mut t = Table::new(
+            &format!("{label} [{n_in}:{n_out}] — energy metrics"),
+            &["model", "quant", "device", "latency (s)", "PDP (J)", "EDP (J*s)"],
+        );
+        for cfg in [ModelConfig::qwen3_0_6b(), ModelConfig::qwen3_1_7b()] {
+            for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS] {
+                let w = Workload {
+                    cfg: cfg.clone(),
+                    scheme,
+                    n_in,
+                    n_out,
+                };
+                let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+                let lat = run.breakdown.e2e_seconds();
+                let e = power::imax_energy(&asic, &LmmConfig::new(64), &run);
+                t.row(vec![
+                    cfg.name.into(),
+                    scheme.name().into(),
+                    "IMAX3 (28nm)".into(),
+                    format!("{lat:.2}"),
+                    format!("{:.1}", e.pdp_j()),
+                    format!("{:.1}", lat * e.pdp_j()),
+                ]);
+                for g in GpuDevice::all() {
+                    let gl = g.e2e_seconds(&w);
+                    let ge = g.energy(&w);
+                    t.row(vec![
+                        cfg.name.into(),
+                        scheme.name().into(),
+                        g.name.into(),
+                        format!("{gl:.2}"),
+                        format!("{:.1}", ge.pdp_j()),
+                        format!("{:.1}", gl * ge.pdp_j()),
+                    ]);
+                }
+            }
+        }
+        t.print();
+    }
+
+    // Headline factors across the whole grid (paper: "improving the PDP
+    // by up to 44.4× and 13.6× compared with the RTX 4090 and Jetson").
+    let mut best_rtx = (0.0f64, String::new());
+    let mut best_gtx = (0.0f64, String::new());
+    let mut best_jet = (0.0f64, String::new());
+    for w in workloads::grid() {
+        let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+        let pdp = power::imax_energy(&asic, &LmmConfig::new(64), &run).pdp_j();
+        let upd = |slot: &mut (f64, String), dev: &GpuDevice| {
+            let r = dev.energy(&w).pdp_j() / pdp;
+            if r > slot.0 {
+                *slot = (r, w.label());
+            }
+        };
+        upd(&mut best_rtx, &GpuDevice::rtx4090());
+        upd(&mut best_gtx, &GpuDevice::gtx1080ti());
+        upd(&mut best_jet, &GpuDevice::jetson_orin());
+    }
+    let mut h = Table::new(
+        "headline PDP improvement factors (IMAX 28nm vs GPU, max over 54 workloads)",
+        &["vs", "factor", "at workload", "paper claims"],
+    );
+    h.row(vec!["RTX 4090".into(), format!("{:.1}x", best_rtx.0), best_rtx.1, "44.4x".into()]);
+    h.row(vec!["GTX 1080 Ti".into(), format!("{:.1}x", best_gtx.0), best_gtx.1, "54x".into()]);
+    h.row(vec!["Jetson AGX Orin".into(), format!("{:.1}x", best_jet.0), best_jet.1, "13.6x".into()]);
+    h.print();
+}

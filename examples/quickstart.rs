@@ -1,0 +1,68 @@
+//! Quickstart: build a tiny Qwen3-architecture model, generate text with
+//! the quantized engine, and see the modeled IMAX cost of the same
+//! kernel sequence — the whole stack in ~60 lines of user code.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use imax_llm::coordinator::{InstrumentedExec, OffloadPolicy};
+use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
+use imax_llm::model::{
+    Engine, ModelConfig, ModelWeights, NativeExec, QuantScheme, Sampler,
+};
+use imax_llm::tokenizer::Tokenizer;
+
+fn main() {
+    // 1. A tiny Qwen3-style model (GQA + QK-norm + RoPE + SwiGLU),
+    //    quantized to Q8_0 — the paper's workhorse format.
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 2025);
+    println!(
+        "model: {} ({} params, {} on disk as {})",
+        cfg.name,
+        cfg.n_params(),
+        imax_llm::util::human_bytes(weights.nbytes()),
+        weights.scheme.name()
+    );
+
+    // 2. Tokenize a prompt with the byte-BPE tokenizer.
+    let corpus = "a coarse grained linear array streams weights through \
+                  a pipeline of processing elements "
+        .repeat(6);
+    let tok = Tokenizer::train(&corpus, 64);
+    let prompt_text = "a coarse grained linear array";
+    let prompt = tok.encode_with_bos(prompt_text);
+    println!("prompt: {prompt_text:?} -> {} tokens", prompt.len());
+
+    // 3. Generate, with the hybrid coordinator instrumenting every
+    //    dot-product kernel against the IMAX cost model.
+    let dev = ImaxDevice::fpga(2);
+    let policy = OffloadPolicy::new(LmmConfig::new(64));
+    let mut exec = InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+    let mut engine = Engine::new(weights);
+    let mut sampler = Sampler::top_k(0.9, 40, 7);
+    let result = engine.generate(&prompt, 24, &mut sampler, &mut exec);
+
+    println!("output: {:?}", tok.decode(&result.tokens));
+    println!(
+        "\nmeasured wall time: prefill {:.1} ms, decode {:.1} ms",
+        exec.wall_prefill * 1e3,
+        exec.wall_decode * 1e3
+    );
+    let p = exec.modeled.prefill;
+    let d = exec.modeled.decode;
+    println!(
+        "modeled on IMAX3 (FPGA, 2 lanes): prefill {:.2} ms, decode {:.2} ms",
+        p.total() * 1e3,
+        d.total() * 1e3
+    );
+    println!(
+        "decode composition: EXEC {:.0}% LOAD {:.0}% HOST {:.0}% (the paper's \
+         LOAD-bound decode, visible even on the tiny model)",
+        100.0 * d.exec / d.total(),
+        100.0 * d.load / d.total(),
+        100.0 * d.host / d.total()
+    );
+    exec.stats.table("quickstart offload ratios").print();
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX model + AOT export).
+
+Python runs ONCE: `make artifacts` invokes `compile.aot`, which lowers the
+jitted model/kernels to HLO text under `artifacts/`. The Rust coordinator
+loads those artifacts via PJRT; Python is never on the request path.
+"""

@@ -1,0 +1,163 @@
+"""AOT export: lower the jitted L1/L2 functions to HLO *text* artifacts.
+
+HLO text (not `.serialize()` / StableHLO bytes) is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime/`) loads every artifact listed in
+`artifacts/manifest.txt` and executes it on the PJRT CPU client. Python
+never runs on the request path.
+"""
+
+import argparse
+import functools
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import QK8_0, QK_K, TINY, TINY_LINEAR_SHAPES
+from .kernels import fp16_dot, q3_k_dot, q6_k_dot, q8_0_dot
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered → XlaComputation → HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def kernel_artifacts():
+    """(name, jitted fn, example shapes) for the standalone L1 kernels."""
+    arts = []
+    f32, i8, f16 = jnp.float32, jnp.int8, jnp.float16
+
+    # Q8_0 at every tiny-model linear shape (the PJRT offload backend
+    # executes these from the Rust hot path).
+    for n, k in TINY_LINEAR_SHAPES:
+        arts.append(
+            (
+                f"q8_0_dot_{n}x{k}",
+                q8_0_dot,
+                [
+                    sd((n, k), i8),
+                    sd((n, k // QK8_0), f32),
+                    sd((k,), i8),
+                    sd((k // QK8_0,), f32),
+                ],
+            )
+        )
+
+    n, k = TINY.d_model, TINY.d_model
+    arts.append((f"fp16_dot_{n}x{k}", fp16_dot, [sd((n, k), f16), sd((k,), f32)]))
+    arts.append(
+        (
+            f"q6_k_dot_{n}x{k}",
+            q6_k_dot,
+            [
+                sd((n, k // 2), jnp.uint8),
+                sd((n, k // 4), jnp.uint8),
+                sd((n, k // 16), i8),
+                sd((n, k // QK_K), f32),
+                sd((k,), i8),
+                sd((k // QK_K,), f32),
+            ],
+        )
+    )
+    arts.append(
+        (
+            f"q3_k_dot_{n}x{k}",
+            functools.partial(q3_k_dot, cvt53=True),
+            [
+                sd((n, k // 4), jnp.uint8),
+                sd((n, k // 8), jnp.uint8),
+                sd((n, k // 16), i8),
+                sd((n, k // QK_K), f32),
+                sd((k,), i8),
+                sd((k // QK_K,), f32),
+            ],
+        )
+    )
+    return arts
+
+
+def model_artifacts():
+    """(name, jitted fn, example shapes) for the L2 model graphs."""
+    arts = []
+    # Decode-step layer forward at a fixed prior-context (ctx_prev = 7,
+    # i.e. attention over 8 positions) — the integration-test shape.
+    ctx_prev = 7
+    arts.append(
+        (
+            f"layer_fwd_q8_ctx{ctx_prev}",
+            model.layer_fwd_q8,
+            model.layer_fwd_example_shapes(ctx_prev),
+        )
+    )
+    arts.append(("lm_head_q8", model.lm_head_q8, model.lm_head_example_shapes()))
+    return arts
+
+
+def shape_sig(shapes) -> str:
+    """Manifest shape signature, e.g. 'i8[256,256];f32[256,8]'."""
+    names = {
+        jnp.int8.dtype: "i8",
+        jnp.uint8.dtype: "u8",
+        jnp.float16.dtype: "f16",
+        jnp.float32.dtype: "f32",
+        jnp.int16.dtype: "i16",
+    }
+    parts = []
+    for s in shapes:
+        dt = names[jnp.dtype(s.dtype)]
+        dims = ",".join(str(d) for d in s.shape)
+        parts.append(f"{dt}[{dims}]")
+    return ";".join(parts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact-name filter"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, fn, shapes in kernel_artifacts() + model_artifacts():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest_lines.append(f"{name}\t{shape_sig(shapes)}\t{digest}")
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    if not only:
+        with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote {args.outdir}/manifest.txt ({len(manifest_lines)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

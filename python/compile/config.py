@@ -1,0 +1,52 @@
+"""Shared tiny-model configuration.
+
+Mirrors `rust/src/model/config.rs::ModelConfig::tiny()` exactly — the AOT
+artifacts are lowered at these shapes and the Rust runtime feeds them
+tensors of matching geometry. Keep the two definitions in sync (the Rust
+integration tests will fail loudly on any drift).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ffn: int = 768
+    vocab_size: int = 2048
+    qk_norm: bool = True
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-6
+    max_seq_len: int = 512
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+TINY = TinyConfig()
+
+# (rows, cols) of every linear projection of the tiny model — the shape set
+# the per-format AOT kernel artifacts are compiled for.
+TINY_LINEAR_SHAPES = sorted(
+    {
+        (TINY.q_dim, TINY.d_model),        # q_proj  (256, 256)
+        (TINY.kv_dim, TINY.d_model),       # k/v_proj (128, 256)
+        (TINY.d_model, TINY.q_dim),        # o_proj  (256, 256)
+        (TINY.d_ffn, TINY.d_model),        # gate/up (768, 256)
+        (TINY.d_model, TINY.d_ffn),        # down    (256, 768)
+        (TINY.vocab_size, TINY.d_model),   # lm_head (2048, 256)
+    }
+)
+
+# Super-block / block sizes (ggml geometry, mirrored from rust/src/quant).
+QK8_0 = 32
+QK_K = 256

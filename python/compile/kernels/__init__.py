@@ -1,0 +1,15 @@
+"""L1 — Pallas kernels for the paper's four quantized dot-product formats.
+
+Each module maps one IMAX dataflow (paper Figs 5–9) onto the Pallas/TPU
+programming model: row-tiled matvec grids whose per-step operand set stays
+within the 64 KB LMM budget, bit-plane decode front-ends (the CVT
+instructions) feeding a shared int32 MAC back-end, and f32 scaling at the
+drain stage. All kernels run under `interpret=True` (see common.py).
+"""
+
+from .fp16_dot import fp16_dot
+from .q3_k_dot import q3_k_dot
+from .q6_k_dot import q6_k_dot
+from .q8_0_dot import q8_0_dot
+
+__all__ = ["fp16_dot", "q3_k_dot", "q6_k_dot", "q8_0_dot"]

@@ -1,0 +1,75 @@
+"""Shared helpers for the Pallas kernels.
+
+Hardware adaptation note (DESIGN.md §4): the IMAX LMM is a 64 KB
+double-buffered local memory per PE; the Pallas analogue is the VMEM tile
+selected by each kernel's BlockSpec. `pick_tile_n` chooses the largest row
+tile whose operand set stays within the 64 KB budget, mirroring the
+paper's LMM-fit criterion, and `vmem_tile_bytes` reports the footprint the
+DESIGN.md §Perf estimates use.
+"""
+
+import jax
+
+# The paper's chosen LMM size (§III.D / §V.A): 64 KB.
+LMM_BYTES = 64 * 1024
+
+# Pallas must run in interpret mode: real TPU lowering emits a Mosaic
+# custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+INTERPRET = True
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest d <= cap with n % d == 0 (>= 1)."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def pick_tile_n(n_rows: int, bytes_per_row: int, extra_bytes: int) -> int:
+    """Pick the row-tile size: the largest divisor of `n_rows` whose tile
+    (rows × bytes_per_row + shared operands) fits the 64 KB LMM budget.
+
+    `extra_bytes` covers the operands shared by every tile (the quantized
+    activation row + scales), which the paper's DMA coalescing transfers
+    once per kernel.
+    """
+    budget = max(LMM_BYTES - extra_bytes, bytes_per_row)
+    cap = max(budget // max(bytes_per_row, 1), 1)
+    return largest_divisor_leq(n_rows, cap)
+
+
+def vmem_tile_bytes(tile_n: int, bytes_per_row: int, extra_bytes: int) -> int:
+    """VMEM footprint of one grid step (documented in DESIGN.md §Perf)."""
+    return tile_n * bytes_per_row + extra_bytes
+
+
+def row_tiled_specs(pl, tile_n: int, per_row_shapes, shared_shapes):
+    """Build BlockSpecs for a row-tiled matvec kernel.
+
+    per_row_shapes: list of trailing shapes for operands indexed [N, ...]
+    (tiled over rows). shared_shapes: operands broadcast to every tile.
+    Returns (in_specs, out_spec).
+    """
+    in_specs = []
+    for trail in per_row_shapes:
+        block = (tile_n, *trail)
+        ndim_trailing = len(trail)
+        in_specs.append(
+            pl.BlockSpec(block, lambda i, _nt=ndim_trailing: (i,) + (0,) * _nt)
+        )
+    for shape in shared_shapes:
+        nd = len(shape)
+        in_specs.append(pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd))
+    out_spec = pl.BlockSpec((tile_n,), lambda i: (i,))
+    return in_specs, out_spec
+
+
+def assert_divisible(k: int, block: int, what: str):
+    if k % block != 0:
+        raise ValueError(f"{what}: length {k} not a multiple of {block}")
+
+
+def cost_estimate(n: int, k: int):
+    """FLOP/byte estimate attached to kernels for XLA's scheduler."""
+    return jax.ShapeDtypeStruct((n,), "float32"), 2 * n * k

@@ -1,0 +1,46 @@
+"""FP16 dot-product kernel (paper Fig 6).
+
+IMAX converts incoming FP16 to FP32 through a per-PE LUT, then runs 2-way
+SIMD FMA with column multithreading over 22 arithmetic units. The Pallas
+mapping: row-tiled matvec, weights widened f16→f32 in VMEM (the LUT
+analogue — XLA lowers the convert to a vectorized widen), f32 FMA
+reduction. One grid step processes `TILE_N` rows; the weight tile plus the
+shared activation row is kept within the 64 KB LMM budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_tile_n, row_tiled_specs
+
+
+def _kernel(w_ref, a_ref, o_ref):
+    # LUT F16→F32 convert (in-line, no dedicated hardware — §III.C).
+    w = w_ref[...].astype(jnp.float32)          # [TILE_N, K]
+    a = a_ref[...].astype(jnp.float32)          # [K]
+    # 2-way SIMD FMA analogue: XLA vectorizes this contraction.
+    o_ref[...] = jnp.sum(w * a[None, :], axis=-1)
+
+
+def tile_n_for(n: int, k: int) -> int:
+    # Per row: K f16 weights; shared: K f32 activations.
+    return pick_tile_n(n, 2 * k, 4 * k)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fp16_dot(w16, a):
+    """Matvec with FP16 weights: w16 f16[N,K], a f32[K] -> f32[N]."""
+    n, k = w16.shape
+    tile = tile_n_for(n, k)
+    in_specs, out_spec = row_tiled_specs(pl, tile, [(k,)], [(k,)])
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=INTERPRET,
+    )(w16, a)

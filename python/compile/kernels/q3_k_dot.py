@@ -1,0 +1,95 @@
+"""Q3_K dot-product kernel (paper Fig 9).
+
+The most intricate format: 2-bit QL planes, a 1-bit QH mask, and 6-bit
+packed sub-block scales. IMAX's custom `OP_CVT53` reconfigures this data —
+approximating the 6-bit scales to 5 bits and unifying the 2+1-bit weights
+into a 3-bit format — so the Q8_0-style back-end can be reused,
+"processing 256 elements per burst by running four parallel dataflows for
+sixteen iterations" (51 arithmetic units).
+
+Pallas mapping: vectorized bit-plane unpack to signed [-4,3] codes
+(CVT53's weight half), optional 5-bit scale truncation (CVT53's scale
+half, `cvt53=True` — the paper's deployed configuration), then the shared
+int32 MAC back-end and f32 drain scaling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, assert_divisible, pick_tile_n, row_tiled_specs
+from ..config import QK_K
+
+
+def decode_q3_codes_jnp(qs, hmask):
+    """jnp mirror of ref.decode_q3_codes: signed codes in [-4, 3]."""
+    lead = qs.shape[:-1]
+    nsb = qs.shape[-1] // 64
+    qsh = qs.reshape(*lead, nsb, 2, 32).astype(jnp.int32)
+    hm = hmask.reshape(*lead, nsb, 32).astype(jnp.int32)
+    outs = []
+    for half in range(2):
+        for j in range(4):
+            low = (qsh[..., half, :] >> (2 * j)) & 0x03
+            bit = (hm >> (half * 4 + j)) & 0x01
+            outs.append(low - 4 * (1 - bit))
+    q = jnp.stack(outs, axis=-2)  # [..., nsb, 8, 32]
+    return q.reshape(*lead, nsb * QK_K)
+
+
+def _make_kernel(cvt53: bool):
+    def kernel(qs_ref, hm_ref, sc_ref, d_ref, aq_ref, ad_ref, o_ref):
+        tile_n = qs_ref.shape[0]
+        k = qs_ref.shape[-1] * 4
+        # CVT53 front-end, weight half: unify 2+1-bit planes to 3-bit codes.
+        q = decode_q3_codes_jnp(qs_ref[...], hm_ref[...])      # [T, K]
+        prod = q * aq_ref[...].astype(jnp.int32)[None, :]
+        sub = prod.reshape(tile_n, k // 16, 16).sum(axis=-1)
+        eff = sc_ref[...].astype(jnp.int32) - 32               # 6-bit code
+        if cvt53:
+            # CVT53 front-end, scale half: approximate to 5 bits.
+            eff = (eff >> 1) << 1
+        scaled = sub * eff
+        per_sb = scaled.reshape(tile_n, k // QK_K, 16).sum(axis=-1)
+        o_ref[...] = (
+            per_sb.astype(jnp.float32) * d_ref[...] * ad_ref[...][None, :]
+        ).sum(axis=-1)
+
+    return kernel
+
+
+def tile_n_for(n: int, k: int) -> int:
+    per_row = k // 4 + k // 8 + k // 16 + (k // QK_K) * 4
+    shared = k + (k // QK_K) * 4
+    return pick_tile_n(n, per_row, shared)
+
+
+@functools.partial(jax.jit, static_argnames=("cvt53",))
+def q3_k_dot(qs, hmask, sc6, d, aq, ad, cvt53: bool = True):
+    """Q3_K×Q8_K matvec.
+
+    qs u8[N,K/4], hmask u8[N,K/8], sc6 i8[N,K/16] (6-bit codes),
+    d f32[N,K/256], aq int8[K], ad f32[K/256] -> f32[N].
+    `cvt53` selects the paper's 5-bit scale approximation (its deployed
+    configuration; False gives the exact llama.cpp kernel).
+    """
+    n = qs.shape[0]
+    k = qs.shape[1] * 4
+    assert_divisible(k, QK_K, "q3_k_dot")
+    tile = tile_n_for(n, k)
+    in_specs, out_spec = row_tiled_specs(
+        pl,
+        tile,
+        [(k // 4,), (k // 8,), (k // 16,), (k // QK_K,)],
+        [(k,), (k // QK_K,)],
+    )
+    return pl.pallas_call(
+        _make_kernel(cvt53),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=INTERPRET,
+    )(qs, hmask, sc6, d, aq, ad)

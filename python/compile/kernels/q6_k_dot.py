@@ -1,0 +1,85 @@
+"""Q6_K dot-product kernel (paper Fig 8).
+
+IMAX decodes the packed 4-bit QL / 2-bit QH planes and the 8-bit sub-block
+scales with the custom `CVT86` instruction (one cycle, 16-bit
+intermediates) and feeds the decoded INT8 stream into the same MAC
+back-end as Q8_0 (`SML16`), using 64 arithmetic units.
+
+Pallas mapping: the CVT86 front-end is a vectorized bit-unpack
+(shift/mask) in VMEM producing int32 codes; the back-end is the shared
+int32 MAC + per-sub-block scale chain; the f16 super-scale and the Q8_K
+activation scale multiply at the drain stage.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, assert_divisible, pick_tile_n, row_tiled_specs
+from ..config import QK_K
+
+
+def decode_q6_codes_jnp(ql, qh):
+    """jnp mirror of ref.decode_q6_codes: (..., K/2),(...,K/4) -> (...,K)
+    int32 codes in [0, 63]."""
+    lead = ql.shape[:-1]
+    nsb = ql.shape[-1] // 128
+    qlh = ql.reshape(*lead, nsb, 2, 64).astype(jnp.int32)
+    qhh = qh.reshape(*lead, nsb, 2, 32).astype(jnp.int32)
+    a, b = qlh[..., :32], qlh[..., 32:]
+    j0 = (a & 0x0F) | (((qhh >> 0) & 0x03) << 4)
+    j1 = (b & 0x0F) | (((qhh >> 2) & 0x03) << 4)
+    j2 = (a >> 4) | (((qhh >> 4) & 0x03) << 4)
+    j3 = (b >> 4) | (((qhh >> 6) & 0x03) << 4)
+    q = jnp.concatenate([j0, j1, j2, j3], axis=-1)
+    return q.reshape(*lead, nsb * QK_K)
+
+
+def _kernel(ql_ref, qh_ref, sc_ref, d_ref, aq_ref, ad_ref, o_ref):
+    tile_n = ql_ref.shape[0]
+    k = ql_ref.shape[-1] * 2
+    # CVT86 front-end: unpack to INT8-range codes, center by -32.
+    q = decode_q6_codes_jnp(ql_ref[...], qh_ref[...]) - 32     # [T, K]
+    # Shared INT8 MAC back-end (SML16): int32 accumulation.
+    prod = q * aq_ref[...].astype(jnp.int32)[None, :]
+    sub = prod.reshape(tile_n, k // 16, 16).sum(axis=-1)       # [T, K/16]
+    scaled = sub * sc_ref[...].astype(jnp.int32)               # i8 scales
+    per_sb = scaled.reshape(tile_n, k // QK_K, 16).sum(axis=-1)
+    # Drain stage: f16 super-scale × Q8_K activation scale.
+    o_ref[...] = (per_sb.astype(jnp.float32) * d_ref[...] * ad_ref[...][None, :]).sum(
+        axis=-1
+    )
+
+
+def tile_n_for(n: int, k: int) -> int:
+    # Per row: K/2 + K/4 packed + K/16 scales + K/256×4 d.
+    per_row = k // 2 + k // 4 + k // 16 + (k // QK_K) * 4
+    shared = k + (k // QK_K) * 4  # activation qs + scales
+    return pick_tile_n(n, per_row, shared)
+
+
+@jax.jit
+def q6_k_dot(ql, qh, sc, d, aq, ad):
+    """Q6_K×Q8_K matvec.
+
+    ql u8[N,K/2], qh u8[N,K/4], sc i8[N,K/16], d f32[N,K/256],
+    aq int8[K], ad f32[K/256] -> f32[N].
+    """
+    n = ql.shape[0]
+    k = ql.shape[1] * 2
+    assert_divisible(k, QK_K, "q6_k_dot")
+    tile = tile_n_for(n, k)
+    in_specs, out_spec = row_tiled_specs(
+        pl,
+        tile,
+        [(k // 2,), (k // 4,), (k // 16,), (k // QK_K,)],
+        [(k,), (k // QK_K,)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=INTERPRET,
+    )(ql, qh, sc, d, aq, ad)

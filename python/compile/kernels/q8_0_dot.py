@@ -1,0 +1,66 @@
+"""Q8_0 dot-product kernel (paper Figs 5 & 7).
+
+The IMAX dataflow: `OP_SML8` performs 2-way SIMD signed 8-bit
+multiply-accumulate into sign-extended 24-bit partials, `OP_AD24`
+aggregates them along twelve pipelined PEs, and the final stage multiplies
+by the f32 scale product — replicated 4× in parallel, two passes per
+32-element block, 46 arithmetic units total.
+
+Pallas mapping: int8 operands widened to int32 in VMEM (SML8's
+sign-extended products; i32 ⊇ the 24-bit accumulator, and a 32-block's
+partial sum is < 2^23 so the hardware width is provably sufficient),
+per-block reduction (AD24 chain), then the `d_w · d_a` f32 scale — one
+grid step per row tile, operands sized to the 64 KB LMM budget.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, assert_divisible, pick_tile_n, row_tiled_specs
+from ..config import QK8_0
+
+
+def _kernel(wq_ref, wd_ref, aq_ref, ad_ref, o_ref):
+    tile_n = wq_ref.shape[0]
+    k = wq_ref.shape[1]
+    nb = k // QK8_0
+    # SML8: widen int8→int32 and multiply (sign-extended products).
+    wq = wq_ref[...].astype(jnp.int32)               # [T, K]
+    aq = aq_ref[...].astype(jnp.int32)               # [K]
+    prod = wq * aq[None, :]
+    # AD24: accumulate within each 32-block (fits 24 bits).
+    isum = prod.reshape(tile_n, nb, QK8_0).sum(axis=-1)  # [T, nb] i32
+    # Final f32 scale stage: d_w * d_a per block, then block reduction.
+    scaled = isum.astype(jnp.float32) * wd_ref[...] * ad_ref[...][None, :]
+    o_ref[...] = scaled.sum(axis=-1)
+
+
+def tile_n_for(n: int, k: int) -> int:
+    # Per row: K int8 + K/32 f32 scales; shared: activation qs + scales.
+    per_row = k + (k // QK8_0) * 4
+    shared = k + (k // QK8_0) * 4
+    return pick_tile_n(n, per_row, shared)
+
+
+@jax.jit
+def q8_0_dot(wq, wd, aq, ad):
+    """Q8_0×Q8_0 matvec.
+
+    wq int8[N,K], wd f32[N,K/32], aq int8[K], ad f32[K/32] -> f32[N].
+    """
+    n, k = wq.shape
+    assert_divisible(k, QK8_0, "q8_0_dot")
+    tile = tile_n_for(n, k)
+    nb = k // QK8_0
+    in_specs, out_spec = row_tiled_specs(
+        pl, tile, [(k,), (nb,)], [(k,), (nb,)]
+    )
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=INTERPRET,
+    )(wq, wd, aq, ad)

@@ -1,0 +1,296 @@
+"""Pure NumPy correctness oracle for the Pallas kernels.
+
+Implements ggml-layout quantizers/dequantizers and reference dot products
+that are *bit-compatible in integer space* with `rust/src/quant/` (same
+block layouts, same rounding: f32 scales rounded to f16 with
+round-to-nearest-even, element codes rounded half-away-from-zero). The
+Pallas kernels in this package are validated against these references by
+`python/tests/`, and the Rust integration tests validate the Rust kernels
+against the AOT-compiled artifacts — closing the three-way loop.
+"""
+
+import numpy as np
+
+from ..config import QK8_0, QK_K
+
+
+def round_away(x: np.ndarray) -> np.ndarray:
+    """Round half away from zero (Rust `f32::round`), unlike np.round's
+    banker's rounding."""
+    return np.trunc(x + np.copysign(0.5, x))
+
+
+def f16_round(x: np.ndarray) -> np.ndarray:
+    """Round f32 values through IEEE binary16 (round-to-nearest-even)."""
+    return np.asarray(x, dtype=np.float32).astype(np.float16).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Q8_0 (32-element blocks, f16 scale)
+# --------------------------------------------------------------------------
+
+def quantize_q8_0(x: np.ndarray):
+    """Quantize rows to Q8_0. x: [..., K] with K % 32 == 0.
+
+    Returns (q int8[..., K], d f32[..., K/32]) — d already f16-rounded.
+    Matches rust quant::q8_0::quantize_row.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    assert x.shape[-1] % QK8_0 == 0
+    blocks = x.reshape(*x.shape[:-1], -1, QK8_0)
+    amax = np.abs(blocks).max(axis=-1)
+    d = amax / 127.0
+    inv = np.where(d > 0, 1.0 / np.where(d > 0, d, 1.0), 0.0)
+    q = round_away(blocks * inv[..., None]).clip(-127, 127).astype(np.int8)
+    return q.reshape(x.shape), f16_round(d)
+
+
+def dequantize_q8_0(q: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """Inverse of quantize_q8_0 (exact, given stored codes + f16 scale)."""
+    blocks = q.reshape(*q.shape[:-1], -1, QK8_0).astype(np.float32)
+    return (blocks * d[..., None]).reshape(q.shape)
+
+
+def ref_dot_q8_0(wq, wd, aq, ad) -> np.ndarray:
+    """Reference Q8_0×Q8_0 matvec.
+
+    wq int8[N,K], wd f32[N,K/32], aq int8[K], ad f32[K/32] -> f32[N].
+    Integer MACs per 32-block (24-bit-safe), then per-block f32 scaling —
+    the computation of paper Fig 5.
+    """
+    n, k = wq.shape
+    wb = wq.astype(np.int32).reshape(n, k // QK8_0, QK8_0)
+    ab = aq.astype(np.int32).reshape(1, k // QK8_0, QK8_0)
+    isum = (wb * ab).sum(axis=-1)  # [N, K/32] int32
+    return (isum.astype(np.float32) * wd * ad[None, :]).sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Q8_K activations (256-element super-blocks, f32 scale, cached bsums)
+# --------------------------------------------------------------------------
+
+def quantize_q8_k(x: np.ndarray):
+    """Quantize an activation row to Q8_K.
+
+    x: [K], K % 256 == 0. Returns (q int8[K], d f32[K/256], bsums i16[K/16]).
+    Matches rust quant::q8_k::quantize_row.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    (k,) = x.shape
+    assert k % QK_K == 0
+    blocks = x.reshape(-1, QK_K)
+    amax = np.abs(blocks).max(axis=-1)
+    d = (amax / 127.0).astype(np.float32)
+    inv = np.where(d > 0, 1.0 / np.where(d > 0, d, 1.0), 0.0)
+    q = round_away(blocks * inv[:, None]).clip(-127, 127).astype(np.int8)
+    bsums = q.reshape(-1, 16).astype(np.int16).sum(axis=-1, dtype=np.int16)
+    return q.reshape(k), d, bsums
+
+
+# --------------------------------------------------------------------------
+# Q6_K (256-element super-blocks: 4-bit QL + 2-bit QH + i8 scales + f16 d)
+# --------------------------------------------------------------------------
+
+def decode_q6_codes(ql: np.ndarray, qh: np.ndarray) -> np.ndarray:
+    """Decode packed Q6_K bit-planes to codes in [0, 63].
+
+    ql: uint8[..., K/2], qh: uint8[..., K/4] -> int32[..., K].
+    ggml layout: two 128-halves, quarters j0..j3 (see rust get_q). This is
+    the CVT86 front-end of paper Fig 8.
+    """
+    lead = ql.shape[:-1]
+    nsb = ql.shape[-1] // 128  # superblocks
+    qlh = ql.reshape(*lead, nsb, 2, 64).astype(np.int32)
+    qhh = qh.reshape(*lead, nsb, 2, 32).astype(np.int32)
+    a, b = qlh[..., :32], qlh[..., 32:]
+    j0 = (a & 0x0F) | (((qhh >> 0) & 0x03) << 4)
+    j1 = (b & 0x0F) | (((qhh >> 2) & 0x03) << 4)
+    j2 = (a >> 4) | (((qhh >> 4) & 0x03) << 4)
+    j3 = (b >> 4) | (((qhh >> 6) & 0x03) << 4)
+    q = np.concatenate([j0, j1, j2, j3], axis=-1)  # [..., nsb, 2, 128]
+    return q.reshape(*lead, nsb * QK_K)
+
+
+def encode_q6_codes(q: np.ndarray):
+    """Inverse of decode_q6_codes. q: int[..., K] in [0,63] -> (ql, qh)."""
+    lead = q.shape[:-1]
+    nsb = q.shape[-1] // QK_K
+    qq = q.reshape(*lead, nsb, 2, 4, 32).astype(np.uint8)  # [.., half, j, l]
+    j0 = qq[..., 0, :]
+    j1 = qq[..., 1, :]
+    j2 = qq[..., 2, :]
+    j3 = qq[..., 3, :]
+    a = (j0 & 0x0F) | ((j2 & 0x0F) << 4)
+    b = (j1 & 0x0F) | ((j3 & 0x0F) << 4)
+    ql = np.concatenate([a, b], axis=-1).reshape(*lead, nsb * 128)
+    qh = (
+        ((j0 >> 4) & 3)
+        | (((j1 >> 4) & 3) << 2)
+        | (((j2 >> 4) & 3) << 4)
+        | (((j3 >> 4) & 3) << 6)
+    ).reshape(*lead, nsb * 64)
+    return ql.astype(np.uint8), qh.astype(np.uint8)
+
+
+def quantize_q6_k(x: np.ndarray):
+    """Quantize rows to Q6_K. x: [..., K], K % 256 == 0.
+
+    Returns (ql u8[...,K/2], qh u8[...,K/4], sc i8[...,K/16], d f32[...,K/256]).
+    Matches rust quant::q6_k::quantize_row (same scale search + rounding).
+    """
+    x = np.asarray(x, dtype=np.float32)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    assert k % QK_K == 0
+    xs = x.reshape(*lead, -1, 16)                    # sub-blocks of 16
+    sub_amax = np.abs(xs).max(axis=-1)               # [..., K/16]
+    sb_amax = sub_amax.reshape(*lead, -1, 16).max(axis=-1)  # [..., K/256]
+    d = f16_round(sb_amax / 31.0 / 127.0)            # f16-rounded superscale
+    d_sub = np.repeat(d, 16, axis=-1)                # per sub-block
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sc = np.where(
+            d_sub > 0, round_away(sub_amax / 31.0 / np.where(d_sub > 0, d_sub, 1.0)), 0.0
+        ).clip(-128, 127).astype(np.int8)
+    step = d_sub * sc.astype(np.float32)             # [..., K/16]
+    step_e = np.repeat(step, 16, axis=-1).reshape(x.shape)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        q = np.where(
+            step_e != 0, round_away(x / np.where(step_e != 0, step_e, 1.0)), 0.0
+        )
+    q = (q.clip(-32, 31) + 32).astype(np.int32)
+    ql, qh = encode_q6_codes(q)
+    return ql, qh, sc, d
+
+
+def dequantize_q6_k(ql, qh, sc, d) -> np.ndarray:
+    """Exact dequantization from stored Q6_K arrays."""
+    q = decode_q6_codes(ql, qh) - 32                 # [..., K]
+    lead = q.shape[:-1]
+    k = q.shape[-1]
+    scf = np.repeat(sc.astype(np.float32), 16, axis=-1).reshape(*lead, k)
+    df = np.repeat(np.asarray(d, np.float32), QK_K, axis=-1).reshape(*lead, k)
+    return q.astype(np.float32) * scf * df
+
+
+def ref_dot_q6_k(ql, qh, sc, d, aq, ad) -> np.ndarray:
+    """Reference Q6_K×Q8_K matvec (paper Fig 8 pipeline).
+
+    Weight arrays [N, ...] as from quantize_q6_k; aq int8[K],
+    ad f32[K/256] -> f32[N].
+    """
+    n = ql.shape[0]
+    k = aq.shape[0]
+    q = decode_q6_codes(ql, qh) - 32                          # [N, K] int32
+    prod = q * aq.astype(np.int32)[None, :]                   # int32
+    sub = prod.reshape(n, k // 16, 16).sum(axis=-1)           # [N, K/16]
+    scaled = sub * sc.astype(np.int32)                        # int32
+    per_sb = scaled.reshape(n, k // QK_K, 16).sum(axis=-1)    # [N, K/256]
+    return (per_sb.astype(np.float32) * d * ad[None, :]).sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Q3_K (256-element super-blocks: 2-bit QL + 1-bit QH + 6-bit scales + f16 d)
+# --------------------------------------------------------------------------
+
+def decode_q3_codes(qs: np.ndarray, hmask: np.ndarray) -> np.ndarray:
+    """Decode packed Q3_K bit-planes to signed codes in [-4, 3].
+
+    qs: uint8[..., K/4], hmask: uint8[..., K/8] -> int32[..., K].
+    The CVT53 front-end of paper Fig 9 (bit-plane part).
+    """
+    lead = qs.shape[:-1]
+    nsb = qs.shape[-1] // 64
+    qsh = qs.reshape(*lead, nsb, 2, 32).astype(np.int32)   # [.., half, l]
+    hm = hmask.reshape(*lead, nsb, 32).astype(np.int32)    # [.., l]
+    outs = []
+    for half in range(2):
+        for j in range(4):
+            low = (qsh[..., half, :] >> (2 * j)) & 0x03
+            bit = (hm >> (half * 4 + j)) & 0x01
+            outs.append(low - 4 * (1 - bit))
+    q = np.stack(outs, axis=-2)  # [..., nsb, 8, 32]
+    return q.reshape(*lead, nsb * QK_K)
+
+
+def encode_q3_codes(q: np.ndarray):
+    """Inverse of decode_q3_codes. q int[..., K] in [-4,3] -> (qs, hmask)."""
+    lead = q.shape[:-1]
+    nsb = q.shape[-1] // QK_K
+    biased = (q + 4).reshape(*lead, nsb, 2, 4, 32).astype(np.uint8)
+    low = biased & 0x03
+    hi = (biased >> 2) & 0x01
+    qs = np.zeros((*lead, nsb, 2, 32), dtype=np.uint8)
+    hm = np.zeros((*lead, nsb, 32), dtype=np.uint8)
+    for j in range(4):
+        qs |= low[..., j, :] << (2 * j)
+        for half in range(2):
+            hm |= hi[..., half, j, :] << (half * 4 + j)
+    return qs.reshape(*lead, nsb * 64), hm.reshape(*lead, nsb * 32)
+
+
+def quantize_q3_k(x: np.ndarray):
+    """Quantize rows to Q3_K. Returns (qs u8[...,K/4], hmask u8[...,K/8],
+    sc6 i8[...,K/16] codes in [0,63], d f32[...,K/256]).
+    Matches rust quant::q3_k::quantize_row."""
+    x = np.asarray(x, dtype=np.float32)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    assert k % QK_K == 0
+    xs = x.reshape(*lead, -1, 16)
+    sub_amax = np.abs(xs).max(axis=-1)
+    sb_amax = sub_amax.reshape(*lead, -1, 16).max(axis=-1)
+    d = f16_round(sb_amax / 4.0 / 31.0)
+    d_sub = np.repeat(d, 16, axis=-1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        eff = np.where(
+            d_sub > 0, round_away(sub_amax / 4.0 / np.where(d_sub > 0, d_sub, 1.0)), 0.0
+        ).clip(-32, 31).astype(np.int32)
+    step = d_sub * eff.astype(np.float32)
+    step_e = np.repeat(step, 16, axis=-1).reshape(x.shape)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        q = np.where(
+            step_e != 0, round_away(x / np.where(step_e != 0, step_e, 1.0)), 0.0
+        )
+    q = q.clip(-4, 3).astype(np.int32)
+    qs, hmask = encode_q3_codes(q)
+    sc6 = (eff + 32).astype(np.int8)  # stored 6-bit code
+    return qs, hmask, sc6, d
+
+
+def dequantize_q3_k(qs, hmask, sc6, d) -> np.ndarray:
+    """Exact dequantization from stored Q3_K arrays."""
+    q = decode_q3_codes(qs, hmask)
+    lead = q.shape[:-1]
+    k = q.shape[-1]
+    eff = sc6.astype(np.int32) - 32
+    scf = np.repeat(eff.astype(np.float32), 16, axis=-1).reshape(*lead, k)
+    df = np.repeat(np.asarray(d, np.float32), QK_K, axis=-1).reshape(*lead, k)
+    return q.astype(np.float32) * scf * df
+
+
+def ref_dot_q3_k(qs, hmask, sc6, d, aq, ad, cvt53: bool = False) -> np.ndarray:
+    """Reference Q3_K×Q8_K matvec (paper Fig 9 pipeline).
+
+    With cvt53=True, applies the paper's OP_CVT53 5-bit scale approximation
+    (drop the LSB of the effective scale)."""
+    n = qs.shape[0]
+    k = aq.shape[0]
+    q = decode_q3_codes(qs, hmask)
+    prod = q * aq.astype(np.int32)[None, :]
+    sub = prod.reshape(n, k // 16, 16).sum(axis=-1)
+    eff = sc6.astype(np.int32) - 32
+    if cvt53:
+        eff = (eff >> 1) << 1
+    scaled = sub * eff
+    per_sb = scaled.reshape(n, k // QK_K, 16).sum(axis=-1)
+    return (per_sb.astype(np.float32) * d * ad[None, :]).sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# FP16
+# --------------------------------------------------------------------------
+
+def ref_dot_fp16(w16: np.ndarray, a: np.ndarray) -> np.ndarray:
+    """FP16-weight matvec reference: widen to f32 and accumulate (paper
+    Fig 6's LUT-convert + FMA). w16: float16[N,K], a: f32[K] -> f32[N]."""
+    return (w16.astype(np.float32) * a[None, :].astype(np.float32)).sum(axis=-1)

@@ -1,0 +1,191 @@
+"""L2 — the Qwen3-architecture compute graph in JAX, calling the L1
+Pallas kernels for every linear projection.
+
+Mirrors `rust/src/model/engine.rs` operator-for-operator (RMSNorm → GQA
+attention with QK-Norm + RoPE → SwiGLU), at the tiny config the AOT
+artifacts are lowered for. Weights enter as the packed quantized arrays
+the paper's DMA transfers carry (e.g. Q8_0 = int8 codes + f32 block
+scales), so the Pallas kernels' decode/MAC pipelines lower into the same
+HLO module that the Rust runtime executes via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import QK8_0, TINY
+from .kernels import q8_0_dot
+
+
+# --------------------------------------------------------------------------
+# Host-op mirrors (must match rust/src/model/ops.rs bit-for-bit in f32
+# semantics; summation order may differ, tolerances cover it).
+# --------------------------------------------------------------------------
+
+def round_away_jnp(x):
+    """Round half away from zero (Rust f32::round)."""
+    return jnp.trunc(x + jnp.copysign(0.5, x))
+
+
+def rmsnorm_jnp(x, w, eps):
+    ss = jnp.mean(x * x)
+    return x * jax.lax.rsqrt(ss + eps) * w
+
+
+def rope_jnp(v, pos, theta_base):
+    """Rotate-half RoPE on one head vector (mirror of ops::rope_inplace)."""
+    d = v.shape[-1]
+    half = d // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = theta_base ** (-2.0 * i / d)
+    ang = pos * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    a, b = v[..., :half], v[..., half:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+def quantize_q8_0_act_jnp(x):
+    """In-graph Q8_0 activation quantization (mirror of
+    rust quant::q8_0::quantize_row, f16 scale rounding included)."""
+    k = x.shape[-1]
+    blocks = x.reshape(k // QK8_0, QK8_0)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = amax / 127.0
+    inv = jnp.where(d > 0, 1.0 / jnp.where(d > 0, d, 1.0), 0.0)
+    q = jnp.clip(round_away_jnp(blocks * inv[:, None]), -127, 127).astype(jnp.int8)
+    d16 = d.astype(jnp.float16).astype(jnp.float32)
+    return q.reshape(k), d16
+
+
+def _linear_q8(wq, wd, x):
+    """Quantize activation + Pallas Q8_0 kernel (one offloaded matvec)."""
+    aq, ad = quantize_q8_0_act_jnp(x)
+    return q8_0_dot(wq, wd, aq, ad)
+
+
+# --------------------------------------------------------------------------
+# One decoder layer, Q8_0 weights (the shape lowered to layer_fwd_q8.hlo.txt)
+# --------------------------------------------------------------------------
+
+def layer_fwd_q8(
+    x,
+    attn_norm,
+    ffn_norm,
+    q_norm,
+    k_norm,
+    wq_q, wq_d,
+    wk_q, wk_d,
+    wv_q, wv_d,
+    wo_q, wo_d,
+    wg_q, wg_d,
+    wu_q, wu_d,
+    wd_q, wd_d,
+    k_cache,
+    v_cache,
+):
+    """One tiny-config decoder layer at position `pos = k_cache.shape[0]`.
+
+    Returns (x_out f32[d_model], k_new f32[kv_dim], v_new f32[kv_dim]).
+    The caches hold the *prior* positions; attention runs over
+    cache ∪ {current}.
+    """
+    cfg = TINY
+    pos = k_cache.shape[0]  # static at lowering time
+    hd = cfg.head_dim
+    groups = cfg.n_heads // cfg.n_kv_heads
+
+    xn = rmsnorm_jnp(x, attn_norm, cfg.rms_eps)
+    q = _linear_q8(wq_q, wq_d, xn)                     # [q_dim]
+    k = _linear_q8(wk_q, wk_d, xn)                     # [kv_dim]
+    v = _linear_q8(wv_q, wv_d, xn)                     # [kv_dim]
+
+    # QK-Norm + RoPE per head.
+    qh = q.reshape(cfg.n_heads, hd)
+    kh = k.reshape(cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        qh = jax.vmap(lambda h: rmsnorm_jnp(h, q_norm, cfg.rms_eps))(qh)
+        kh = jax.vmap(lambda h: rmsnorm_jnp(h, k_norm, cfg.rms_eps))(kh)
+    qh = jax.vmap(lambda h: rope_jnp(h, float(pos), cfg.rope_theta))(qh)
+    kh = jax.vmap(lambda h: rope_jnp(h, float(pos), cfg.rope_theta))(kh)
+
+    # Attention over cache ∪ current (ctx = pos + 1).
+    k_all = jnp.concatenate(
+        [k_cache.reshape(pos, cfg.n_kv_heads, hd), kh[None, :, :]], axis=0
+    )                                                   # [ctx, kvh, hd]
+    v_all = jnp.concatenate(
+        [v_cache.reshape(pos, cfg.n_kv_heads, hd),
+         v.reshape(1, cfg.n_kv_heads, hd)], axis=0
+    )
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def head_attn(h):
+        kvh = h // groups
+        scores = jnp.einsum("d,cd->c", qh[h], k_all[:, kvh, :]) * scale
+        probs = jax.nn.softmax(scores)
+        return jnp.einsum("c,cd->d", probs, v_all[:, kvh, :])
+
+    attn = jax.vmap(head_attn)(jnp.arange(cfg.n_heads))  # [n_heads, hd]
+    attn = attn.reshape(cfg.q_dim)
+
+    x = x + _linear_q8(wo_q, wo_d, attn)
+
+    # SwiGLU FFN.
+    xn2 = rmsnorm_jnp(x, ffn_norm, cfg.rms_eps)
+    gate = _linear_q8(wg_q, wg_d, xn2)
+    up = _linear_q8(wu_q, wu_d, xn2)
+    act = jax.nn.silu(gate) * up
+    x = x + _linear_q8(wd_q, wd_d, act)
+
+    return x, kh.reshape(cfg.kv_dim), v.reshape(cfg.kv_dim)
+
+
+def lm_head_q8(x, final_norm, head_q, head_d):
+    """Final RMSNorm + quantized LM head → logits f32[vocab]."""
+    xn = rmsnorm_jnp(x, final_norm, TINY.rms_eps)
+    return q8_0_dot(head_q, head_d, *quantize_q8_0_act_jnp(xn))
+
+
+# --------------------------------------------------------------------------
+# Example-input builders (shapes only; used by aot.py lowering)
+# --------------------------------------------------------------------------
+
+def layer_fwd_example_shapes(ctx_prev: int):
+    """ShapeDtypeStructs for layer_fwd_q8 at a given prior-context length."""
+    cfg = TINY
+    f32 = jnp.float32
+    i8 = jnp.int8
+    sd = jax.ShapeDtypeStruct
+
+    def wpair(rows, cols):
+        return [sd((rows, cols), i8), sd((rows, cols // QK8_0), f32)]
+
+    args = [
+        sd((cfg.d_model,), f32),       # x
+        sd((cfg.d_model,), f32),       # attn_norm
+        sd((cfg.d_model,), f32),       # ffn_norm
+        sd((cfg.head_dim,), f32),      # q_norm
+        sd((cfg.head_dim,), f32),      # k_norm
+    ]
+    args += wpair(cfg.q_dim, cfg.d_model)     # wq
+    args += wpair(cfg.kv_dim, cfg.d_model)    # wk
+    args += wpair(cfg.kv_dim, cfg.d_model)    # wv
+    args += wpair(cfg.d_model, cfg.q_dim)     # wo
+    args += wpair(cfg.d_ffn, cfg.d_model)     # wg
+    args += wpair(cfg.d_ffn, cfg.d_model)     # wu
+    args += wpair(cfg.d_model, cfg.d_ffn)     # wd
+    args += [
+        sd((ctx_prev, cfg.kv_dim), f32),  # k_cache
+        sd((ctx_prev, cfg.kv_dim), f32),  # v_cache
+    ]
+    return args
+
+
+def lm_head_example_shapes():
+    cfg = TINY
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    return [
+        sd((cfg.d_model,), f32),
+        sd((cfg.d_model,), f32),
+        sd((cfg.vocab_size, cfg.d_model), jnp.int8),
+        sd((cfg.vocab_size, cfg.d_model // QK8_0), f32),
+    ]

@@ -1,0 +1,154 @@
+"""Render the paper's figures from the bench-generated CSV series.
+
+Usage (after `cargo bench` or the individual `imax-llm figNN` commands
+have populated `reports/`):
+
+    python python/plots.py            # writes reports/figNN.png
+
+Produces matplotlib analogues of paper Figs 11-16: grouped bar charts for
+the device comparisons (log-scale energy axes, like the paper), the LMM
+sweep lines, the stacked phase-breakdown bars, and the lane-scaling curve.
+"""
+
+import csv
+import os
+import sys
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+REPORTS = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def read_csv(name):
+    path = os.path.join(REPORTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    return rows[0], rows[1:]
+
+
+def device_bars(csvname, outname, title, ylabel, logy=True):
+    parsed = read_csv(csvname)
+    if parsed is None:
+        print(f"skip {outname}: {csvname} missing (run the bench first)")
+        return
+    header, rows = parsed
+    devices = header[1:]
+    labels = [r[0].replace("Qwen3-", "").replace(" ", "\n", 1) for r in rows]
+    values = [[float(v) for v in r[1:]] for r in rows]
+
+    fig, ax = plt.subplots(figsize=(max(12, len(rows) * 0.45), 5))
+    n = len(devices)
+    width = 0.8 / n
+    xs = range(len(rows))
+    for d in range(n):
+        ax.bar(
+            [x + d * width for x in xs],
+            [values[i][d] for i in range(len(rows))],
+            width,
+            label=devices[d],
+        )
+    ax.set_xticks([x + 0.4 for x in xs])
+    ax.set_xticklabels(labels, rotation=90, fontsize=5)
+    if logy:
+        ax.set_yscale("log")
+    ax.set_ylabel(ylabel)
+    ax.set_title(title)
+    ax.legend(fontsize=7)
+    fig.tight_layout()
+    out = os.path.join(REPORTS, outname)
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+
+def fig14():
+    parsed = read_csv("fig14_lmm_pdp.csv")
+    if parsed is None:
+        print("skip fig14: csv missing")
+        return
+    header, rows = parsed
+    sizes = [int(h.split("KB")[0]) for h in header[1:]]
+    fig, ax = plt.subplots(figsize=(7, 5))
+    for r in rows:
+        ax.plot(sizes, [float(v) for v in r[1:]], marker="o", label=r[0])
+    ax.set_xscale("log", base=2)
+    ax.set_yscale("log")
+    ax.set_xlabel("LMM size (KB)")
+    ax.set_ylabel("PDP (J)")
+    ax.set_title("Fig 14 — PDP vs LMM size (IMAX 28nm)")
+    ax.axvline(64, color="gray", ls=":", lw=1)
+    ax.legend(fontsize=6)
+    fig.tight_layout()
+    out = os.path.join(REPORTS, "fig14.png")
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+
+def fig15():
+    parsed = read_csv("fig15_breakdown.csv")
+    if parsed is None:
+        print("skip fig15: csv missing")
+        return
+    header, rows = parsed
+    comps = header[2:]
+    labels = [f"{r[0].replace('Qwen3-', '')}\n{r[1]}" for r in rows]
+    fig, ax = plt.subplots(figsize=(12, 5))
+    bottoms = [0.0] * len(rows)
+    for ci, comp in enumerate(comps):
+        vals = [float(r[2 + ci].rstrip("%")) for r in rows]
+        ax.bar(labels, vals, bottom=bottoms, label=comp.upper())
+        bottoms = [b + v for b, v in zip(bottoms, vals)]
+    ax.set_ylabel("share of phase time (%)")
+    ax.set_title("Fig 15 — execution-time breakdown (prefill vs decode)")
+    ax.tick_params(axis="x", labelsize=6, rotation=90)
+    ax.legend(fontsize=7)
+    fig.tight_layout()
+    out = os.path.join(REPORTS, "fig15.png")
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+
+def fig16():
+    parsed = read_csv("fig16_scaling.csv")
+    if parsed is None:
+        print("skip fig16: csv missing")
+        return
+    _, rows = parsed
+    lanes = [int(r[0]) for r in rows]
+    e2e = [float(r[1]) for r in rows]
+    tps = [float(r[2]) for r in rows]
+    fig, ax1 = plt.subplots(figsize=(6, 4))
+    ax1.plot(lanes, e2e, marker="o", color="tab:red", label="E2E (s)")
+    ax1.set_xlabel("IMAX lanes")
+    ax1.set_ylabel("E2E latency (s)", color="tab:red")
+    ax2 = ax1.twinx()
+    ax2.plot(lanes, tps, marker="s", color="tab:blue", label="tokens/s")
+    ax2.set_ylabel("tokens/s", color="tab:blue")
+    ax1.set_title("Fig 16 — lane scalability (dual-core host bottleneck)")
+    fig.tight_layout()
+    out = os.path.join(REPORTS, "fig16.png")
+    fig.savefig(out, dpi=140)
+    plt.close(fig)
+    print(f"wrote {out}")
+
+
+def main():
+    os.makedirs(REPORTS, exist_ok=True)
+    device_bars("fig11_latency.csv", "fig11.png", "Fig 11 — E2E latency by device", "latency (s)")
+    device_bars("fig12_pdp.csv", "fig12.png", "Fig 12 — PDP by device (lower is better)", "PDP (J)")
+    device_bars("fig13_edp.csv", "fig13.png", "Fig 13 — EDP by device (lower is better)", "EDP (J·s)")
+    fig14()
+    fig15()
+    fig16()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,88 @@
+"""AOT export path tests: HLO text generation is deterministic, parseable
+by XLA's text parser (sanity), and the manifest describes every artifact."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.config import TINY, TINY_LINEAR_SHAPES
+from compile.kernels import q8_0_dot
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def lower_q8(n, k):
+    shapes = [
+        jax.ShapeDtypeStruct((n, k), jnp.int8),
+        jax.ShapeDtypeStruct((n, k // 32), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.int8),
+        jax.ShapeDtypeStruct((k // 32,), jnp.float32),
+    ]
+    return aot.to_hlo_text(jax.jit(q8_0_dot).lower(*shapes))
+
+
+def test_hlo_text_is_deterministic():
+    a = lower_q8(64, 256)
+    b = lower_q8(64, 256)
+    assert a == b
+
+
+def test_hlo_text_structure():
+    text = lower_q8(64, 256)
+    assert text.startswith("HloModule"), "HLO text header"
+    assert "ENTRY" in text
+    # return_tuple=True → tuple-shaped root.
+    assert "(f32[64]" in text.replace(" ", "")[: len(text)] or "tuple" in text
+
+
+def test_kernel_artifacts_cover_all_tiny_shapes():
+    names = [a[0] for a in aot.kernel_artifacts()]
+    for n, k in TINY_LINEAR_SHAPES:
+        assert f"q8_0_dot_{n}x{k}" in names
+    assert any(s.startswith("fp16_dot") for s in names)
+    assert any(s.startswith("q6_k_dot") for s in names)
+    assert any(s.startswith("q3_k_dot") for s in names)
+
+
+def test_manifest_matches_artifacts_if_built():
+    manifest = os.path.join(ARTIFACTS, "manifest.txt")
+    if not os.path.exists(manifest):
+        import pytest
+
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    lines = [l for l in open(manifest).read().splitlines() if l.strip()]
+    assert len(lines) >= 10
+    for line in lines:
+        name, sig, digest = line.split("\t")
+        path = os.path.join(ARTIFACTS, f"{name}.hlo.txt")
+        assert os.path.exists(path), f"missing artifact {name}"
+        import hashlib
+
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest()[:16] == digest, name
+        assert sig  # non-empty shape signature
+
+
+def test_lowered_kernel_numerics_match_eager():
+    # The lowered (jitted) function and eager interpret-mode execution
+    # must agree exactly.
+    rng = np.random.default_rng(3)
+    n, k = 32, 256
+    wq, wd = ref.quantize_q8_0((rng.standard_normal((n, k)) * 0.5).astype(np.float32))
+    aq, ad = ref.quantize_q8_0(rng.standard_normal(k).astype(np.float32))
+    jitted = jax.jit(q8_0_dot)
+    np.testing.assert_array_equal(
+        np.asarray(jitted(wq, wd, aq, ad)), np.asarray(q8_0_dot(wq, wd, aq, ad))
+    )
+
+
+def test_tiny_config_consistency():
+    # Shared config invariants the Rust side mirrors.
+    assert TINY.q_dim == TINY.n_heads * TINY.head_dim
+    assert TINY.kv_dim == TINY.n_kv_heads * TINY.head_dim
+    assert TINY.d_model % 256 == 0 and TINY.d_ffn % 256 == 0
+    assert (TINY.vocab_size, TINY.d_model) in TINY_LINEAR_SHAPES

@@ -1,0 +1,204 @@
+"""Pallas kernels vs the pure-NumPy oracle (ref.py) — the core L1
+correctness signal. Hypothesis sweeps shapes and value distributions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import QK8_0, QK_K
+from compile.kernels import fp16_dot, q3_k_dot, q6_k_dot, q8_0_dot
+from compile.kernels import ref
+from compile.kernels.common import LMM_BYTES, vmem_tile_bytes
+from compile.kernels.fp16_dot import tile_n_for as fp16_tile
+from compile.kernels.q3_k_dot import tile_n_for as q3_tile
+from compile.kernels.q6_k_dot import tile_n_for as q6_tile
+from compile.kernels.q8_0_dot import tile_n_for as q8_tile
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+def gaussian(rng, shape, sigma=1.0):
+    return (rng.standard_normal(shape) * sigma).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer self-consistency (round-trips through the packed layouts)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_q6_codes_pack_roundtrip(seed, nsb):
+    rng = rng_for(seed)
+    q = rng.integers(0, 64, size=(3, nsb * QK_K), dtype=np.int64)
+    ql, qh = ref.encode_q6_codes(q)
+    assert ql.shape == (3, nsb * 128) and qh.shape == (3, nsb * 64)
+    np.testing.assert_array_equal(ref.decode_q6_codes(ql, qh), q)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_q3_codes_pack_roundtrip(seed, nsb):
+    rng = rng_for(seed)
+    q = rng.integers(-4, 4, size=(2, nsb * QK_K), dtype=np.int64)
+    qs, hm = ref.encode_q3_codes(q)
+    assert qs.shape == (2, nsb * 64) and hm.shape == (2, nsb * 32)
+    np.testing.assert_array_equal(ref.decode_q3_codes(qs, hm), q)
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(0.05, 4.0))
+@settings(max_examples=15, deadline=None)
+def test_quantize_rmse_bounds(seed, sigma):
+    rng = rng_for(seed)
+    x = gaussian(rng, (4, 2 * QK_K), sigma)
+    scale = np.sqrt((x**2).mean())
+
+    y8 = ref.dequantize_q8_0(*ref.quantize_q8_0(x))
+    assert np.sqrt(((x - y8) ** 2).mean()) / scale < 0.012
+
+    y6 = ref.dequantize_q6_k(*ref.quantize_q6_k(x))
+    assert np.sqrt(((x - y6) ** 2).mean()) / scale < 0.05
+
+    y3 = ref.dequantize_q3_k(*ref.quantize_q3_k(x))
+    assert np.sqrt(((x - y3) ** 2).mean()) / scale < 0.35
+
+
+def test_q8_k_bsums_consistent():
+    rng = rng_for(7)
+    x = gaussian(rng, (2 * QK_K,))
+    q, d, bsums = ref.quantize_q8_k(x)
+    np.testing.assert_array_equal(
+        bsums, q.reshape(-1, 16).astype(np.int16).sum(axis=-1)
+    )
+    assert d.shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle — hypothesis over shapes and distributions
+# ---------------------------------------------------------------------------
+
+K_CHOICES_32 = [32, 64, 256, 768]
+K_CHOICES_256 = [256, 512, 768]
+N_CHOICES = [1, 8, 33, 128]
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from(N_CHOICES),
+    st.sampled_from(K_CHOICES_32),
+    st.floats(0.1, 3.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_q8_0_dot_matches_ref(seed, n, k, sigma):
+    rng = rng_for(seed)
+    wq, wd = ref.quantize_q8_0(gaussian(rng, (n, k), sigma))
+    aq, ad = ref.quantize_q8_0(gaussian(rng, (k,)))
+    got = np.asarray(q8_0_dot(wq, wd, aq, ad))
+    want = ref.ref_dot_q8_0(wq, wd, aq, ad)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from(N_CHOICES),
+    st.sampled_from(K_CHOICES_256),
+)
+@settings(max_examples=20, deadline=None)
+def test_q6_k_dot_matches_ref(seed, n, k):
+    rng = rng_for(seed)
+    ql, qh, sc, d = ref.quantize_q6_k(gaussian(rng, (n, k)))
+    aq, ad, _ = ref.quantize_q8_k(gaussian(rng, (k,)))
+    got = np.asarray(q6_k_dot(ql, qh, sc, d, aq, ad))
+    want = ref.ref_dot_q6_k(ql, qh, sc, d, aq, ad)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from(N_CHOICES),
+    st.sampled_from(K_CHOICES_256),
+    st.booleans(),
+)
+@settings(max_examples=20, deadline=None)
+def test_q3_k_dot_matches_ref(seed, n, k, cvt53):
+    rng = rng_for(seed)
+    qs, hm, sc6, d = ref.quantize_q3_k(gaussian(rng, (n, k)))
+    aq, ad, _ = ref.quantize_q8_k(gaussian(rng, (k,)))
+    got = np.asarray(q3_k_dot(qs, hm, sc6, d, aq, ad, cvt53=cvt53))
+    want = ref.ref_dot_q3_k(qs, hm, sc6, d, aq, ad, cvt53=cvt53)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from(N_CHOICES),
+    st.sampled_from([32, 64, 256]),
+)
+@settings(max_examples=20, deadline=None)
+def test_fp16_dot_matches_ref(seed, n, k):
+    rng = rng_for(seed)
+    w16 = gaussian(rng, (n, k)).astype(np.float16)
+    a = gaussian(rng, (k,))
+    got = np.asarray(fp16_dot(w16, a))
+    want = ref.ref_dot_fp16(w16, a)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy against the unquantized dot (end-to-end quantization error)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "fmt,tol",
+    [("q8_0", 0.02), ("q6_k", 0.05), ("q3_k", 0.30)],
+)
+def test_quantized_dot_tracks_f32(fmt, tol):
+    rng = rng_for(11)
+    n, k = 64, 512
+    w = gaussian(rng, (n, k), 0.5)
+    a = gaussian(rng, (k,))
+    want = w @ a
+    if fmt == "q8_0":
+        aq, ad = ref.quantize_q8_0(a)
+        got = np.asarray(q8_0_dot(*ref.quantize_q8_0(w), aq, ad))
+    elif fmt == "q6_k":
+        aq, ad, _ = ref.quantize_q8_k(a)
+        got = np.asarray(q6_k_dot(*ref.quantize_q6_k(w), aq, ad))
+    else:
+        aq, ad, _ = ref.quantize_q8_k(a)
+        got = np.asarray(q3_k_dot(*ref.quantize_q3_k(w), aq, ad))
+    scale = np.linalg.norm(w, axis=-1) * np.linalg.norm(a)
+    assert np.max(np.abs(got - want) / scale) < tol
+
+
+# ---------------------------------------------------------------------------
+# CVT53 approximation quality (paper: "negligible impact")
+# ---------------------------------------------------------------------------
+
+def test_cvt53_negligible():
+    rng = rng_for(13)
+    n, k = 32, 1024
+    qs, hm, sc6, d = ref.quantize_q3_k(gaussian(rng, (n, k)))
+    aq, ad, _ = ref.quantize_q8_k(gaussian(rng, (k,)))
+    exact = ref.ref_dot_q3_k(qs, hm, sc6, d, aq, ad, cvt53=False)
+    approx = ref.ref_dot_q3_k(qs, hm, sc6, d, aq, ad, cvt53=True)
+    denom = np.abs(exact).mean() + 1e-6
+    assert np.abs(exact - approx).mean() / denom < 0.08
+
+
+# ---------------------------------------------------------------------------
+# LMM budget: every kernel's VMEM tile must fit the 64 KB LMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(128, 256), (256, 256), (768, 256), (2048, 256), (256, 768)])
+def test_vmem_tiles_fit_lmm(n, k):
+    cases = [
+        (fp16_tile(n, k), 2 * k, 4 * k),
+        (q8_tile(n, k), k + k // 8, k + k // 8),
+        (q6_tile(n, k), k // 2 + k // 4 + k // 16 + k // QK_K * 4, k + k // QK_K * 4),
+        (q3_tile(n, k), k // 4 + k // 8 + k // 16 + k // QK_K * 4, k + k // QK_K * 4),
+    ]
+    for tile, per_row, shared in cases:
+        assert n % tile == 0, "tile divides N"
+        assert vmem_tile_bytes(tile, per_row, shared) <= LMM_BYTES

@@ -1,0 +1,24 @@
+//! Bench: the §III.D DMA transfer-coalescing ablation (paper: LOAD ×1.2,
+//! DRAIN ×4.8 vs the naive per-array implementation).
+use imax_llm::harness::experiments as exp;
+use imax_llm::imax::{dma, ImaxDevice, TransferMode};
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    // Micro: the transfer cost model itself.
+    let dev = ImaxDevice::fpga(2);
+    let mut set = BenchSet::new("dma — transfer cost model");
+    let t = dma::Transfer {
+        bytes: 256 * 1024,
+        n_arrays: 4,
+    };
+    set.bench("load_seconds(coalesced)", || {
+        dma::load_seconds(&dev, t, TransferMode::Coalesced)
+    });
+    set.bench("load_seconds(naive)", || {
+        dma::load_seconds(&dev, t, TransferMode::Naive)
+    });
+    set.report();
+
+    exp::ablate_dma().print();
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig 11 — E2E latency for all 54 workloads on
+//! all five platforms — and time the full-grid evaluation.
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig11 — E2E latency grid");
+    // Time a single-workload evaluation (the harness unit of work).
+    let w = imax_llm::harness::workloads::grid()[0].clone();
+    set.bench("eval_workload(0.6B Q8_0 [8:1])", || exp::eval_workload(&w));
+    set.report();
+
+    // Produce the figure itself.
+    let grid = exp::eval_grid();
+    exp::fig11(&grid).print();
+    println!("(series written to reports/fig11_latency.csv)");
+}

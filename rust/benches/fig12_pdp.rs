@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Fig 12 — PDP (energy) comparison by device.
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig12 — PDP grid");
+    let w = imax_llm::harness::workloads::find(
+        "1.7b",
+        imax_llm::model::QuantScheme::Q8_0,
+        16,
+        4,
+    )
+    .unwrap();
+    set.bench("eval_workload(1.7B Q8_0 [16:4])", || exp::eval_workload(&w));
+    set.report();
+
+    let grid = exp::eval_grid();
+    exp::fig12(&grid).print();
+    println!("(series written to reports/fig12_pdp.csv)");
+}

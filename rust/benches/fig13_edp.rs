@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Fig 13 — EDP comparison by device.
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig13 — EDP grid");
+    let w = imax_llm::harness::workloads::find(
+        "0.6b",
+        imax_llm::model::QuantScheme::Q3KS,
+        32,
+        16,
+    )
+    .unwrap();
+    set.bench("eval_workload(0.6B Q3_K_S [32:16])", || exp::eval_workload(&w));
+    set.report();
+
+    let grid = exp::eval_grid();
+    exp::fig13(&grid).print();
+    println!("(series written to reports/fig13_edp.csv)");
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Fig 14 — PDP vs LMM size (16..512 KB sweep).
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig14 — LMM sweep");
+    set.bench("lmm_sweep(6 sizes x 6 workloads)", || {
+        exp::fig14(&[16, 32, 64, 128, 256, 512])
+    });
+    set.report();
+    exp::fig14(&[16, 32, 64, 128, 256, 512]).print();
+    println!("(series written to reports/fig14_lmm_pdp.csv)");
+}

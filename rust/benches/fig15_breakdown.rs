@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 15 — prefill/decode execution-time
+//! breakdown (EXEC/LOAD/DRAIN/CONF/REGV/RANGE).
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig15 — phase breakdown");
+    set.bench("breakdown(6 workloads x 2 phases)", exp::fig15);
+    set.report();
+    exp::fig15().print();
+    println!("(series written to reports/fig15_breakdown.csv)");
+}

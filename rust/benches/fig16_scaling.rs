@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 16 — lane scalability under the dual-core
+//! host bottleneck.
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("fig16 — lane scaling");
+    set.bench("lane_sweep(1,2,4,8)", exp::fig16);
+    set.report();
+    exp::fig16().print();
+    println!("(series written to reports/fig16_scaling.csv)");
+}

@@ -1,0 +1,60 @@
+//! Bench: the native quantized dot-product kernels (the Rust analogues of
+//! paper Figs 5-9) — throughput per format, plus end-to-end tiny-model
+//! decode. This is the L3 hot path the §Perf pass optimizes.
+use imax_llm::model::{Engine, ModelConfig, ModelWeights, NativeExec, QuantScheme, Sampler};
+use imax_llm::quant::{fp16, q3_k, q6_k, q8_0, q8_k};
+use imax_llm::util::bench::{bb, BenchSet};
+use imax_llm::util::f16::F16;
+use imax_llm::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(9);
+    let k = 4096usize;
+    let mut w = vec![0.0f32; k];
+    let mut a = vec![0.0f32; k];
+    rng.fill_normal(&mut w, 0.5);
+    rng.fill_normal(&mut a, 1.0);
+
+    let w8 = q8_0::quantize_row(&w);
+    let a8 = q8_0::quantize_row(&a);
+    let w6 = q6_k::quantize_row(&w);
+    let w3 = q3_k::quantize_row(&w);
+    let ak = q8_k::quantize_row(&a);
+    let wh: Vec<F16> = w.iter().map(|&v| F16::from_f32(v)).collect();
+
+    let mut set = BenchSet::new("quantized vec_dot kernels (K=4096)");
+    set.bench_elems("fp16_dot", k as f64, || bb(fp16::vec_dot_f16(&wh, &a)));
+    set.bench_elems("q8_0_dot", k as f64, || bb(q8_0::vec_dot(&w8, &a8)));
+    set.bench_elems("q6_k_dot", k as f64, || bb(q6_k::vec_dot(&w6, &ak)));
+    set.bench_elems("q3_k_dot", k as f64, || bb(q3_k::vec_dot(&w3, &ak)));
+    set.bench_elems("q3_k_dot_cvt53", k as f64, || {
+        bb(q3_k::vec_dot_cvt53(&w3, &ak))
+    });
+    set.bench_elems("quantize_row_q8_0", k as f64, || bb(q8_0::quantize_row(&a)));
+    set.bench_elems("quantize_row_q8_k", k as f64, || bb(q8_k::quantize_row(&a)));
+    set.report();
+
+    // End-to-end tiny-model token throughput (the functional hot path).
+    let cfg = ModelConfig::tiny();
+    let mut set2 = BenchSet::new("tiny-model end-to-end");
+    for scheme in [QuantScheme::F16, QuantScheme::Q8_0, QuantScheme::Q3KS] {
+        let mut engine = Engine::new(ModelWeights::random(&cfg, scheme, 3));
+        set2.bench(&format!("decode_token({})", scheme.name()), || {
+            if engine.cache.len() > 200 {
+                engine.reset();
+            }
+            let phase = if engine.cache.is_empty() {
+                imax_llm::model::Phase::Prefill
+            } else {
+                imax_llm::model::Phase::Decode
+            };
+            engine.forward(7, phase, true, &mut NativeExec)
+        });
+    }
+    // Full request.
+    let mut engine = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q8_0, 3));
+    set2.bench("generate([4 prompt : 8 out], Q8_0)", || {
+        engine.generate(&[1, 2, 3, 4], 8, &mut Sampler::greedy(), &mut NativeExec)
+    });
+    set2.report();
+}

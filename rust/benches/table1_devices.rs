@@ -1,0 +1,6 @@
+//! Bench: regenerate paper Table 1 — device specifications.
+use imax_llm::harness::experiments as exp;
+
+fn main() {
+    exp::table1().print();
+}

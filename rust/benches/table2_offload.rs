@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Table 2 — offload ratios per model / quant /
+//! kernel format at the 64 KB LMM deployment.
+use imax_llm::harness::experiments as exp;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("table2 — offload ratios");
+    set.bench("offload_ratios(6 model-scheme combos)", exp::table2);
+    set.report();
+    exp::table2().print();
+    println!("(series written to reports/table2_offload.csv)");
+}

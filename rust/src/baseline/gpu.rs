@@ -1,0 +1,232 @@
+//! Analytic GPU comparators (paper Table 1's commercial platforms).
+//!
+//! The paper measured llama.cpp on an RTX 4090, a GTX 1080 Ti and a
+//! Jetson AGX Orin; we have none of them (DESIGN.md §2), so each is a
+//! roofline model: prefill is compute-bound (batched GEMM at an effective
+//! fraction of peak), decode is memory-bandwidth-bound (the whole weight
+//! set streams per token), plus per-token launch overhead and a fixed
+//! framework setup. Parameters are calibrated against the paper's own
+//! published per-device numbers (DESIGN.md §6) and then frozen.
+
+use crate::coordinator::hybrid::Workload;
+use crate::model::config::{model_bytes, LinearKind, QuantScheme};
+use crate::model::graph::ops_for_token;
+use crate::power::EnergyReport;
+
+/// One commercial comparison platform.
+#[derive(Clone, Debug)]
+pub struct GpuDevice {
+    pub name: &'static str,
+    /// Nominal TDP (W) — the paper's power model input.
+    pub tdp_w: f64,
+    /// Host CPU TDP applied during host-primary phases (W).
+    pub host_tdp_w: f64,
+    /// Peak memory bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Effective fraction of peak bandwidth llama.cpp decode achieves.
+    pub bw_eff: f64,
+    /// Effective compute throughput for prefill GEMMs (MAC/s).
+    pub flops_eff: f64,
+    /// Fixed framework/model setup charged to E2E latency (s).
+    pub setup_s: f64,
+    /// Per-token GPU launch/dispatch overhead (s).
+    pub per_token_s: f64,
+    /// Per-token host-side overhead (sampling over the 152K vocab,
+    /// detokenization, graph rebuild) — zero for the integrated Jetson,
+    /// whose budget folds it into per_token_s.
+    pub per_token_host_s: f64,
+    /// K-quant decode slowdown vs Q8_0 (CUDA K-quant kernels are less
+    /// bandwidth-efficient).
+    pub kquant_penalty: f64,
+    /// Table 1 metadata.
+    pub process_nm: u32,
+    pub chip_area_mm2: f64,
+    pub cores: u32,
+    pub freq_mhz: u32,
+    pub memory: &'static str,
+}
+
+impl GpuDevice {
+    pub fn rtx4090() -> GpuDevice {
+        GpuDevice {
+            name: "NVIDIA RTX 4090",
+            tdp_w: 450.0,
+            host_tdp_w: 240.0, // Xeon W5-2455X
+            mem_bw: 1008e9,
+            bw_eff: 0.65,
+            flops_eff: 35e12,
+            setup_s: 0.45,
+            per_token_s: 2.6e-3,
+            per_token_host_s: 6.0e-3,
+            kquant_penalty: 1.6,
+            process_nm: 5,
+            chip_area_mm2: 608.0,
+            cores: 16384,
+            freq_mhz: 2520,
+            memory: "24 GB GDDR6X",
+        }
+    }
+
+    pub fn gtx1080ti() -> GpuDevice {
+        GpuDevice {
+            name: "NVIDIA GTX 1080 Ti",
+            tdp_w: 250.0,
+            host_tdp_w: 240.0,
+            mem_bw: 484e9,
+            bw_eff: 0.60,
+            flops_eff: 9e12,
+            setup_s: 0.55,
+            per_token_s: 4.5e-3,
+            per_token_host_s: 12.0e-3,
+            kquant_penalty: 1.9,
+            process_nm: 16,
+            chip_area_mm2: 471.0,
+            cores: 3584,
+            freq_mhz: 1582,
+            memory: "11 GB GDDR5X",
+        }
+    }
+
+    pub fn jetson_orin() -> GpuDevice {
+        GpuDevice {
+            name: "Jetson AGX Orin 32GB",
+            tdp_w: 60.0, // nominal maximum-performance mode
+            host_tdp_w: 0.0, // integrated — the 60 W budget covers the SoC
+            mem_bw: 204.8e9,
+            bw_eff: 0.60,
+            flops_eff: 5e12,
+            setup_s: 0.9,
+            per_token_s: 20.0e-3,
+            per_token_host_s: 0.0,
+            kquant_penalty: 1.7,
+            process_nm: 8,
+            chip_area_mm2: 200.0,
+            cores: 1792,
+            freq_mhz: 930,
+            memory: "32 GB LPDDR5",
+        }
+    }
+
+    pub fn all() -> Vec<GpuDevice> {
+        vec![Self::rtx4090(), Self::gtx1080ti(), Self::jetson_orin()]
+    }
+
+    /// Bytes the decode phase must stream per token: every weight tensor
+    /// except the embedding lookup.
+    fn decode_bytes_per_token(w: &Workload) -> f64 {
+        let total = model_bytes(&w.cfg, w.scheme) as f64;
+        let embed = w.cfg.vocab_size as f64
+            * LinearKind::LmHead.weight_type(w.scheme).row_bytes(w.cfg.d_model) as f64;
+        total - embed
+    }
+
+    /// Prefill MAC count (batched over the prompt).
+    fn prefill_macs(w: &Workload) -> f64 {
+        let per_tok: u64 = ops_for_token(&w.cfg, w.scheme, w.n_in - 1, false)
+            .iter()
+            .map(|o| o.macs())
+            .sum();
+        per_tok as f64 * w.n_in as f64
+    }
+
+    /// GPU-active time: compute + memory streaming + launches.
+    pub fn active_seconds(&self, w: &Workload) -> f64 {
+        let kq = if w.scheme == QuantScheme::Q3KS {
+            self.kquant_penalty
+        } else {
+            1.0
+        };
+        let prefill = Self::prefill_macs(w) / self.flops_eff * kq;
+        let decode = w.n_out.saturating_sub(1) as f64 * Self::decode_bytes_per_token(w) * kq
+            / (self.mem_bw * self.bw_eff);
+        // K-quant graphs dispatch more (smaller) kernels per layer, so
+        // the per-token overhead scales with the penalty too.
+        let launches = (w.n_in + w.n_out) as f64 * (self.per_token_s + self.per_token_host_s) * kq;
+        prefill + decode + launches
+    }
+
+    /// E2E latency (the Fig 11 / PDP / EDP quantity). The paper's metric
+    /// is generation latency under load — framework/model setup
+    /// (`setup_s`) is excluded, matching its per-device numbers (the
+    /// 28.4 J RTX PDP on 1.7B Q8_0 [16:4] implies a sub-0.1 s latency,
+    /// impossible with CUDA context setup included).
+    pub fn e2e_seconds(&self, w: &Workload) -> f64 {
+        self.active_seconds(w)
+    }
+
+    /// Energy per the paper's TDP model: nominal TDP over the active
+    /// latency ("performance under peak load conditions").
+    pub fn energy(&self, w: &Workload) -> EnergyReport {
+        EnergyReport::from_phases(&[(self.active_seconds(w), self.tdp_w)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn wl(cfg: ModelConfig, scheme: QuantScheme, n_in: usize, n_out: usize) -> Workload {
+        Workload {
+            cfg,
+            scheme,
+            n_in,
+            n_out,
+        }
+    }
+
+    #[test]
+    fn rtx_is_fastest_everywhere() {
+        for w in [
+            wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16),
+            wl(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 16, 4),
+            wl(ModelConfig::qwen3_8b(), QuantScheme::Q8_0, 32, 16),
+        ] {
+            let rtx = GpuDevice::rtx4090().e2e_seconds(&w);
+            let gtx = GpuDevice::gtx1080ti().e2e_seconds(&w);
+            let jet = GpuDevice::jetson_orin().e2e_seconds(&w);
+            assert!(rtx < gtx && rtx < jet, "{}: {rtx} {gtx} {jet}", w.label());
+        }
+    }
+
+    #[test]
+    fn decode_dominates_for_large_models() {
+        let d = GpuDevice::jetson_orin();
+        let w = wl(ModelConfig::qwen3_8b(), QuantScheme::Q8_0, 8, 16);
+        let decode = 15.0 * GpuDevice::decode_bytes_per_token(&w) / (d.mem_bw * d.bw_eff);
+        assert!(decode / d.active_seconds(&w) > 0.5);
+    }
+
+    #[test]
+    fn jetson_energy_competitive_despite_slower() {
+        // The 60 W Jetson burns less energy than the 450 W RTX on
+        // memory-bound workloads even while being slower.
+        let w = wl(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 32, 16);
+        let rtx = GpuDevice::rtx4090();
+        let jet = GpuDevice::jetson_orin();
+        assert!(jet.e2e_seconds(&w) > rtx.e2e_seconds(&w));
+        assert!(jet.energy(&w).pdp_j() < rtx.energy(&w).pdp_j());
+    }
+
+    #[test]
+    fn kquant_penalty_applies() {
+        let d = GpuDevice::rtx4090();
+        let q8 = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q8_0, 32, 16);
+        let q3 = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16);
+        // Q3_K_S moves fewer bytes but pays the kernel penalty; per-byte
+        // time must be higher.
+        let t8 = d.active_seconds(&q8);
+        let t3 = d.active_seconds(&q3);
+        let b8 = GpuDevice::decode_bytes_per_token(&q8);
+        let b3 = GpuDevice::decode_bytes_per_token(&q3);
+        assert!(b3 < b8);
+        assert!(t3 / b3 > t8 / b8);
+    }
+
+    #[test]
+    fn table1_metadata_present() {
+        for d in GpuDevice::all() {
+            assert!(d.process_nm > 0 && d.chip_area_mm2 > 0.0 && d.cores > 0);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Comparison platforms and calibration anchors.
+//!
+//! * [`gpu`] — roofline models of the paper's commercial comparators
+//!   (RTX 4090, GTX 1080 Ti, Jetson AGX Orin) with the TDP power model.
+//! * [`calibration`] — the paper's published numbers, used to pin the
+//!   simulator's shape (asserted by `rust/tests/integration_experiments`).
+
+pub mod calibration;
+pub mod gpu;
+
+pub use gpu::GpuDevice;

@@ -1,0 +1,336 @@
+//! The hybrid host/IMAX workload simulator — the timing path that prices a
+//! full `[n_in : n_out]` inference run at paper scale (Qwen3 0.6B/1.7B/8B)
+//! without materializing weights.
+//!
+//! Uses the same kernel-call enumeration as the functional engine
+//! ([`crate::model::graph`]); prefill is costed as one batched ubatch
+//! (weights amortized over the prompt — llama.cpp behaviour, and the
+//! origin of the paper's prefill-compute-bound / decode-LOAD-bound
+//! duality), decode as per-token steps.
+
+use crate::coordinator::offload::{OffloadPolicy, OffloadStats};
+use crate::imax::device::ImaxDevice;
+use crate::imax::dma::TransferMode;
+use crate::imax::pio::ConfTracker;
+use crate::imax::sim;
+use crate::imax::timing::{PhaseCost, RunBreakdown};
+use crate::model::config::{ModelConfig, QuantScheme};
+use crate::model::graph::{ops_for_token, MatvecOp, OpKind, Phase};
+
+/// A `[n_in : n_out]` workload on a model+scheme (the paper's notation).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub cfg: ModelConfig,
+    pub scheme: QuantScheme,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+impl Workload {
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} [{}:{}]",
+            self.cfg.name,
+            self.scheme.name(),
+            self.n_in,
+            self.n_out
+        )
+    }
+}
+
+/// Result of simulating one workload on one IMAX configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadRun {
+    pub breakdown: RunBreakdown,
+    pub stats: OffloadStats,
+    /// Total bytes moved host→IMAX (LOAD traffic).
+    pub load_bytes: u64,
+    /// Seconds spent in IMAX-active vs host-primary time, per kernel
+    /// class — the inputs to the paper's phase-aware power model.
+    pub active_time: ActiveTime,
+}
+
+/// Time with IMAX lanes active, split per kernel class (for the power
+/// model: each kernel has its own synthesized power), plus transfer time
+/// (DMA/PIO), light host time (dispatch/staging/sampling) and heavy host
+/// time (host-executed kernels, NEON pegged).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActiveTime {
+    pub fp16: f64,
+    pub q8_0: f64,
+    pub q6_k: f64,
+    pub q3_k: f64,
+    /// DMA + PIO activity (LOAD/DRAIN/CONF/REGV/RANGE).
+    pub xfer: f64,
+    /// Host dispatch, staging, norms, sampling.
+    pub host_primary: f64,
+    /// Host-executed (non-offloaded) kernels.
+    pub host_compute: f64,
+}
+
+impl ActiveTime {
+    pub fn imax_active(&self) -> f64 {
+        self.fp16 + self.q8_0 + self.q6_k + self.q3_k
+    }
+
+    fn add_class(&mut self, class: crate::imax::isa::KernelClass, secs: f64) {
+        use crate::imax::isa::KernelClass as K;
+        match class {
+            K::Fp16 => self.fp16 += secs,
+            K::Q8_0 => self.q8_0 += secs,
+            K::Q6K => self.q6_k += secs,
+            K::Q3K => self.q3_k += secs,
+        }
+    }
+}
+
+/// Cost one kernel instance under the policy; returns (cost, offloaded).
+fn cost_op(
+    dev: &ImaxDevice,
+    policy: &OffloadPolicy,
+    tracker: &mut ConfTracker,
+    op: &MatvecOp,
+    batch: usize,
+    mode: TransferMode,
+) -> (PhaseCost, bool) {
+    if policy.should_offload(dev, op) {
+        (
+            sim::offloaded_cost(dev, &policy.lmm, tracker, op, batch, mode),
+            true,
+        )
+    } else {
+        (sim::host_cost(dev, op, batch), false)
+    }
+}
+
+/// Simulate with the standard policy for this workload (LMM from the
+/// device, DMA-buffer exclusions applied).
+pub fn simulate_auto(w: &Workload, dev: &ImaxDevice, mode: TransferMode) -> WorkloadRun {
+    let policy = OffloadPolicy::for_workload(
+        dev,
+        &w.cfg,
+        w.scheme,
+        crate::imax::lmm::LmmConfig::new(dev.lmm_kb),
+    );
+    simulate(w, dev, &policy, mode)
+}
+
+/// Simulate a full workload run.
+pub fn simulate(
+    w: &Workload,
+    dev: &ImaxDevice,
+    policy: &OffloadPolicy,
+    mode: TransferMode,
+) -> WorkloadRun {
+    let mut breakdown = RunBreakdown::default();
+    let mut stats = OffloadStats::default();
+    let mut load_bytes = 0u64;
+    let mut active = ActiveTime::default();
+    let mut tracker = ConfTracker::new();
+
+    // ---- prefill: one batched ubatch over the prompt ----
+    // Linear kernels run once with batch = n_in (weights amortized);
+    // attention kernels run per position (their operand is the growing
+    // KV cache, never reusable across positions).
+    let last = w.n_in - 1;
+    for op in ops_for_token(&w.cfg, w.scheme, last, true) {
+        match op.kind {
+            OpKind::Linear(_) => {
+                let (cost, off) =
+                    cost_op(dev, policy, &mut tracker, &op, w.n_in, mode);
+                record(
+                    &mut breakdown,
+                    &mut stats,
+                    &mut load_bytes,
+                    &mut active,
+                    Phase::Prefill,
+                    &op,
+                    cost,
+                    off,
+                    w.n_in,
+                );
+            }
+            OpKind::AttnScore | OpKind::AttnMix => {
+                // Sum attention over every prompt position.
+                for pos in 0..w.n_in {
+                    let mut aop = op.clone();
+                    match op.kind {
+                        OpKind::AttnScore => aop.rows = w.cfg.n_heads * (pos + 1),
+                        OpKind::AttnMix => aop.cols = pos + 1,
+                        _ => unreachable!(),
+                    }
+                    let (cost, off) =
+                        cost_op(dev, policy, &mut tracker, &aop, 1, mode);
+                    record(
+                        &mut breakdown,
+                        &mut stats,
+                        &mut load_bytes,
+                        &mut active,
+                        Phase::Prefill,
+                        &aop,
+                        cost,
+                        off,
+                        1,
+                    );
+                }
+            }
+        }
+    }
+    // Host-side per-token overheads across the prompt.
+    let pre_host = sim::host_token_overhead(
+        dev,
+        w.cfg.d_model,
+        w.cfg.n_layers,
+        w.cfg.n_heads,
+        w.n_in,
+        Some(w.cfg.vocab_size),
+    )
+    .scaled(w.n_in as f64);
+    breakdown.add(Phase::Prefill, pre_host);
+    active.host_primary += pre_host.host;
+
+    // ---- decode: per-token steps ----
+    for step in 0..w.n_out.saturating_sub(1) {
+        let pos = w.n_in + step;
+        for op in ops_for_token(&w.cfg, w.scheme, pos, true) {
+            let (cost, off) = cost_op(dev, policy, &mut tracker, &op, 1, mode);
+            record(
+                &mut breakdown,
+                &mut stats,
+                &mut load_bytes,
+                &mut active,
+                Phase::Decode,
+                &op,
+                cost,
+                off,
+                1,
+            );
+        }
+        let host = sim::host_token_overhead(
+            dev,
+            w.cfg.d_model,
+            w.cfg.n_layers,
+            w.cfg.n_heads,
+            pos + 1,
+            Some(w.cfg.vocab_size),
+        );
+        breakdown.add(Phase::Decode, host);
+        active.host_primary += host.host;
+    }
+
+    WorkloadRun {
+        breakdown,
+        stats,
+        load_bytes,
+        active_time: active,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    breakdown: &mut RunBreakdown,
+    stats: &mut OffloadStats,
+    load_bytes: &mut u64,
+    active: &mut ActiveTime,
+    phase: Phase,
+    op: &MatvecOp,
+    cost: PhaseCost,
+    offloaded: bool,
+    batch: usize,
+) {
+    breakdown.add(phase, cost);
+    // Table 2 counts each dot-product invocation; a batched linear runs
+    // rows × batch invocations.
+    let mut scaled = op.clone();
+    scaled.rows *= batch;
+    stats.record(&scaled, offloaded);
+    if offloaded {
+        *load_bytes += (op.weight_bytes() + op.act_bytes() * batch) as u64;
+        // EXEC at the kernel's synthesized power; transfers and PIO at
+        // the memory-path power; host dispatch at light host power.
+        active.add_class(crate::imax::isa::KernelClass::for_type(op.wty), cost.exec);
+        active.xfer += cost.imax_total() - cost.exec;
+        active.host_primary += cost.host;
+    } else {
+        active.host_compute += cost.total();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imax::lmm::LmmConfig;
+    use crate::imax::isa::KernelClass;
+
+    fn run(cfg: ModelConfig, scheme: QuantScheme, n_in: usize, n_out: usize) -> WorkloadRun {
+        let w = Workload {
+            cfg,
+            scheme,
+            n_in,
+            n_out,
+        };
+        simulate_auto(&w, &ImaxDevice::fpga(2), TransferMode::Coalesced)
+    }
+
+    #[test]
+    fn decode_is_load_bound_prefill_compute_bound() {
+        // The paper's central Fig 15 finding.
+        let r = run(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 32, 16);
+        let d = r.breakdown.decode;
+        let p = r.breakdown.prefill;
+        assert!(d.load > d.exec, "decode LOAD {} > EXEC {}", d.load, d.exec);
+        assert!(p.exec > p.load, "prefill EXEC {} > LOAD {}", p.exec, p.load);
+    }
+
+    #[test]
+    fn e2e_grows_with_model_size() {
+        let small = run(ModelConfig::qwen3_0_6b(), QuantScheme::Q8_0, 16, 4);
+        let large = run(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 16, 4);
+        assert!(large.breakdown.e2e_seconds() > 1.5 * small.breakdown.e2e_seconds());
+    }
+
+    #[test]
+    fn more_output_tokens_cost_more() {
+        let a = run(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 16, 4);
+        let b = run(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 16, 16);
+        assert!(b.breakdown.e2e_seconds() > a.breakdown.e2e_seconds());
+    }
+
+    #[test]
+    fn q3ks_offload_ratios_high_q8_8b_low() {
+        let r = run(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16);
+        assert!(r.stats.total_ratio() > 0.85, "{}", r.stats.total_ratio());
+        assert!(r.stats.ratio(KernelClass::Q3K).unwrap() > 0.9);
+
+        let r8 = run(ModelConfig::qwen3_8b(), QuantScheme::Q8_0, 32, 16);
+        assert!(
+            r8.stats.total_ratio() < 0.35,
+            "8B Q8_0 total offload should collapse: {}",
+            r8.stats.total_ratio()
+        );
+        assert!(r8.stats.ratio(KernelClass::Q8_0).unwrap() < 0.2);
+    }
+
+    #[test]
+    fn active_time_components_sum_sane() {
+        let r = run(ModelConfig::qwen3_1_7b(), QuantScheme::Q3KS, 16, 4);
+        let at = r.active_time;
+        assert!(at.q3_k > 0.0 && at.q6_k > 0.0 && at.fp16 >= 0.0);
+        assert!(at.imax_active() > 0.0);
+        assert!(at.host_primary > 0.0);
+    }
+
+    #[test]
+    fn naive_dma_slower() {
+        let w = Workload {
+            cfg: ModelConfig::qwen3_0_6b(),
+            scheme: QuantScheme::Q8_0,
+            n_in: 8,
+            n_out: 4,
+        };
+        let dev = ImaxDevice::fpga(2);
+        let c = simulate_auto(&w, &dev, TransferMode::Coalesced);
+        let n = simulate_auto(&w, &dev, TransferMode::Naive);
+        assert!(n.breakdown.e2e_seconds() > c.breakdown.e2e_seconds());
+    }
+}

@@ -1,0 +1,25 @@
+//! The hybrid host/IMAX execution coordinator — the paper's system
+//! contribution (§III.A): task partitioning between the Arm host and the
+//! CGLA, offload policy, lane scheduling, and the serving loop.
+//!
+//! * [`offload`] — the LMM-fit + energy-benefit offload decision and the
+//!   Table 2 offload-ratio accounting.
+//! * [`hybrid`] — the paper-scale workload simulator (prefill as one
+//!   batched ubatch, decode per token) producing Fig 11/15 numbers.
+//! * [`phases`] — instrumentation wrapper tying the *functional* tiny-
+//!   model engine to the same cost model.
+//! * [`scheduler`] — the Fig 16 lane-scalability sweep with the host
+//!   bottleneck model.
+//! * [`serve`] — batched request serving over std threads (the
+//!   examples/serve_e2e.rs driver).
+
+pub mod hybrid;
+pub mod offload;
+pub mod phases;
+pub mod scheduler;
+pub mod serve;
+
+pub use hybrid::{simulate, Workload, WorkloadRun};
+pub use offload::{OffloadPolicy, OffloadStats};
+pub use phases::InstrumentedExec;
+pub use serve::{serve, Request, ServeReport};

@@ -1,0 +1,146 @@
+//! Instrumented execution: wraps the functional engine's kernel dispatch
+//! so every real tiny-model inference also produces (a) measured host
+//! wall-time per phase and (b) the modeled IMAX phase costs for the same
+//! kernel sequence — tying the functional and timing paths together (the
+//! quickstart example prints both side by side).
+
+use std::time::Instant;
+
+use crate::coordinator::offload::{OffloadPolicy, OffloadStats};
+use crate::imax::device::ImaxDevice;
+use crate::imax::dma::TransferMode;
+use crate::imax::pio::ConfTracker;
+use crate::imax::sim;
+use crate::imax::timing::RunBreakdown;
+use crate::model::engine::MatvecExec;
+use crate::model::graph::{MatvecOp, Phase};
+use crate::tensor::{ActQuant, QTensor};
+
+/// A [`MatvecExec`] that runs kernels through an inner executor while
+/// accumulating modeled IMAX costs, offload statistics, and measured
+/// wall time per phase.
+pub struct InstrumentedExec<'a, E: MatvecExec> {
+    pub inner: E,
+    pub dev: &'a ImaxDevice,
+    pub policy: &'a OffloadPolicy,
+    pub mode: TransferMode,
+    pub modeled: RunBreakdown,
+    pub stats: OffloadStats,
+    pub wall_prefill: f64,
+    pub wall_decode: f64,
+    tracker: ConfTracker,
+    current_phase: Phase,
+    step_start: Option<Instant>,
+}
+
+impl<'a, E: MatvecExec> InstrumentedExec<'a, E> {
+    pub fn new(
+        inner: E,
+        dev: &'a ImaxDevice,
+        policy: &'a OffloadPolicy,
+        mode: TransferMode,
+    ) -> Self {
+        InstrumentedExec {
+            inner,
+            dev,
+            policy,
+            mode,
+            modeled: RunBreakdown::default(),
+            stats: OffloadStats::default(),
+            wall_prefill: 0.0,
+            wall_decode: 0.0,
+            tracker: ConfTracker::new(),
+            current_phase: Phase::Prefill,
+            step_start: None,
+        }
+    }
+
+    fn account(&mut self, op: &MatvecOp) {
+        let offloaded = self.policy.should_offload(self.dev, op);
+        let cost = if offloaded {
+            sim::offloaded_cost(
+                self.dev,
+                &self.policy.lmm,
+                &mut self.tracker,
+                op,
+                1,
+                self.mode,
+            )
+        } else {
+            sim::host_cost(self.dev, op, 1)
+        };
+        self.modeled.add(self.current_phase, cost);
+        self.stats.record(op, offloaded);
+    }
+}
+
+impl<'a, E: MatvecExec> MatvecExec for InstrumentedExec<'a, E> {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        self.account(op);
+        self.inner.linear(op, w, act, out);
+    }
+
+    fn attn(&mut self, op: &MatvecOp) {
+        self.account(op);
+        self.inner.attn(op);
+    }
+
+    fn begin_step(&mut self, phase: Phase, pos: usize) {
+        self.current_phase = phase;
+        self.step_start = Some(Instant::now());
+        self.inner.begin_step(phase, pos);
+    }
+
+    fn end_step(&mut self, phase: Phase, pos: usize) {
+        if let Some(t0) = self.step_start.take() {
+            let dt = t0.elapsed().as_secs_f64();
+            match phase {
+                Phase::Prefill => self.wall_prefill += dt,
+                Phase::Decode => self.wall_decode += dt,
+            }
+        }
+        self.inner.end_step(phase, pos);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imax::lmm::LmmConfig;
+    use crate::model::config::{ModelConfig, QuantScheme};
+    use crate::model::engine::{Engine, NativeExec};
+    use crate::model::sampler::Sampler;
+    use crate::model::weights::ModelWeights;
+
+    #[test]
+    fn instrumentation_tracks_real_generation() {
+        let cfg = ModelConfig::tiny();
+        let mut engine = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q8_0, 3));
+        let dev = ImaxDevice::fpga(2);
+        let policy = OffloadPolicy::new(LmmConfig::new(64));
+        let mut exec =
+            InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+        let res = engine.generate(&[1, 2, 3, 4], 4, &mut Sampler::greedy(), &mut exec);
+        assert_eq!(res.tokens.len(), 4);
+        // 4 prefill + 3 decode steps, each with linears + attention.
+        assert!(exec.modeled.prefill.total() > 0.0);
+        assert!(exec.modeled.decode.total() > 0.0);
+        assert!(exec.wall_prefill > 0.0);
+        assert!(exec.wall_decode > 0.0);
+        assert!(exec.stats.total_ratio() > 0.0);
+    }
+
+    #[test]
+    fn instrumented_results_match_native() {
+        let cfg = ModelConfig::tiny();
+        let mut e1 = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q3KS, 5));
+        let mut e2 = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q3KS, 5));
+        let dev = ImaxDevice::fpga(2);
+        let policy = OffloadPolicy::new(LmmConfig::new(64));
+        let mut inst =
+            InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+        let a = e1.generate(&[7, 8, 9], 5, &mut Sampler::greedy(), &mut NativeExec);
+        let b = e2.generate(&[7, 8, 9], 5, &mut Sampler::greedy(), &mut inst);
+        assert_eq!(a.tokens, b.tokens, "instrumentation must not alter results");
+    }
+}

@@ -1,0 +1,214 @@
+//! Batched request serving on std threads (no tokio in the vendored set).
+//!
+//! The serving driver behind `examples/serve_e2e.rs`: a FIFO request
+//! queue feeds worker threads, each owning an engine instance built from
+//! shared weights (the host side of the paper's system runs one llama.cpp
+//! context per Arm core — our workers mirror that). Reports per-request
+//! latency and aggregate throughput, the metrics the paper's E2E
+//! evaluation is built on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::model::engine::{Engine, NativeExec};
+use crate::model::sampler::Sampler;
+use crate::model::weights::ModelWeights;
+use crate::util::stats::{percentile, Summary};
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: Vec<u32>,
+    pub n_out: usize,
+}
+
+/// Completed request with timing.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: usize,
+    pub tokens: Vec<u32>,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+    pub worker: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub wall_s: f64,
+    pub total_tokens: usize,
+    pub throughput_tok_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_mean_s: f64,
+}
+
+/// Serve a batch of requests over `n_workers` engine workers; blocks until
+/// all requests complete.
+pub fn serve(
+    weights: &ModelWeights,
+    requests: Vec<Request>,
+    n_workers: usize,
+    sampler_seed: u64,
+) -> ServeReport {
+    assert!(n_workers >= 1);
+    let n_req = requests.len();
+    let started = Instant::now();
+
+    // FIFO queue with enqueue timestamps.
+    let queue: Arc<Mutex<std::collections::VecDeque<(Request, Instant)>>> = Arc::new(
+        Mutex::new(requests.into_iter().map(|r| (r, Instant::now())).collect()),
+    );
+    let (tx, rx) = mpsc::channel::<Completion>();
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::new();
+    for worker in 0..n_workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let done = Arc::clone(&done);
+        let weights = weights.clone();
+        handles.push(thread::spawn(move || {
+            let mut engine = Engine::new(weights);
+            let mut sampler = Sampler::top_k(0.9, 40, sampler_seed + worker as u64);
+            loop {
+                let item = queue.lock().unwrap().pop_front();
+                let Some((req, enq)) = item else { break };
+                let t0 = Instant::now();
+                let queue_s = (t0 - enq).as_secs_f64();
+
+                engine.reset();
+                // Prefill phase timing.
+                let mut logits = None;
+                let tp0 = Instant::now();
+                for (i, &tok) in req.prompt.iter().enumerate() {
+                    let last = i + 1 == req.prompt.len();
+                    logits = engine.forward(
+                        tok,
+                        crate::model::graph::Phase::Prefill,
+                        last,
+                        &mut NativeExec,
+                    );
+                }
+                let prefill_s = tp0.elapsed().as_secs_f64();
+
+                // Decode phase.
+                let td0 = Instant::now();
+                let mut tokens = Vec::with_capacity(req.n_out);
+                for _ in 0..req.n_out {
+                    let l = logits.as_ref().expect("logits");
+                    let next = sampler.sample(l);
+                    tokens.push(next);
+                    if tokens.len() == req.n_out {
+                        break;
+                    }
+                    logits = engine.forward(
+                        next,
+                        crate::model::graph::Phase::Decode,
+                        true,
+                        &mut NativeExec,
+                    );
+                }
+                let decode_s = td0.elapsed().as_secs_f64();
+
+                tx.send(Completion {
+                    id: req.id,
+                    tokens,
+                    queue_s,
+                    prefill_s,
+                    decode_s,
+                    total_s: t0.elapsed().as_secs_f64() + queue_s,
+                    worker,
+                })
+                .ok();
+                done.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut completions: Vec<Completion> = rx.iter().collect();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    completions.sort_by_key(|c| c.id);
+    assert_eq!(completions.len(), n_req, "all requests completed");
+
+    let wall_s = started.elapsed().as_secs_f64();
+    let total_tokens: usize = completions
+        .iter()
+        .map(|c| c.tokens.len() + 0)
+        .sum::<usize>();
+    let lats: Vec<f64> = completions.iter().map(|c| c.total_s).collect();
+    let summary = Summary::from_slice(&lats);
+    ServeReport {
+        throughput_tok_s: total_tokens as f64 / wall_s,
+        latency_p50_s: percentile(&lats, 50.0),
+        latency_p95_s: percentile(&lats, 95.0),
+        latency_mean_s: summary.mean(),
+        completions,
+        wall_s,
+        total_tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelConfig, QuantScheme};
+
+    fn tiny_weights() -> ModelWeights {
+        ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 11)
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|id| Request {
+                id,
+                prompt: vec![1 + id as u32, 2, 3, 4],
+                n_out: 3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_requests_single_worker() {
+        let rep = serve(&tiny_weights(), reqs(4), 1, 42);
+        assert_eq!(rep.completions.len(), 4);
+        assert_eq!(rep.total_tokens, 12);
+        assert!(rep.throughput_tok_s > 0.0);
+        for c in &rep.completions {
+            assert_eq!(c.tokens.len(), 3);
+            assert!(c.prefill_s > 0.0 && c.decode_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn multi_worker_completes_and_uses_workers() {
+        let rep = serve(&tiny_weights(), reqs(6), 2, 42);
+        assert_eq!(rep.completions.len(), 6);
+        let workers: std::collections::HashSet<usize> =
+            rep.completions.iter().map(|c| c.worker).collect();
+        assert!(!workers.is_empty() && workers.len() <= 2);
+    }
+
+    #[test]
+    fn completions_sorted_by_id() {
+        let rep = serve(&tiny_weights(), reqs(5), 2, 7);
+        let ids: Vec<usize> = rep.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let rep = serve(&tiny_weights(), reqs(8), 2, 9);
+        assert!(rep.latency_p50_s <= rep.latency_p95_s);
+        assert!(rep.latency_mean_s > 0.0);
+    }
+}

@@ -1,0 +1,428 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each runner computes the full data series behind the corresponding
+//! figure, prints it as an aligned table, and writes a CSV under
+//! `reports/` so the series can be re-plotted. The bench targets in
+//! `rust/benches/` wrap these runners.
+
+use crate::baseline::gpu::GpuDevice;
+use crate::coordinator::hybrid::{simulate, Workload, WorkloadRun};
+use crate::coordinator::offload::OffloadPolicy;
+use crate::coordinator::scheduler;
+use crate::imax::device::ImaxDevice;
+use crate::imax::dma::TransferMode;
+use crate::imax::lmm::LmmConfig;
+use crate::imax::timing::Component;
+use crate::model::config::QuantScheme;
+use crate::power::{self, EnergyReport};
+use crate::util::report::{Csv, Table};
+
+use super::workloads;
+
+/// Where figure CSVs land.
+pub const REPORT_DIR: &str = "reports";
+
+/// One row of the Fig 11–13 device comparison.
+#[derive(Clone, Debug)]
+pub struct DeviceMetrics {
+    pub device: String,
+    pub latency_s: f64,
+    pub pdp_j: f64,
+    pub edp_js: f64,
+}
+
+/// Full result set for one workload across all five platforms.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    pub workload: Workload,
+    pub devices: Vec<DeviceMetrics>,
+    pub imax_run: WorkloadRun,
+}
+
+fn imax_metrics(name: &str, dev: &ImaxDevice, run: &WorkloadRun) -> DeviceMetrics {
+    let lmm = LmmConfig::new(dev.lmm_kb);
+    let latency = run.breakdown.e2e_seconds();
+    let e = power::imax_energy(dev, &lmm, run);
+    DeviceMetrics {
+        device: name.to_string(),
+        latency_s: latency,
+        pdp_j: e.pdp_j(),
+        edp_js: latency * e.pdp_j(),
+    }
+}
+
+fn gpu_metrics(dev: &GpuDevice, w: &Workload) -> DeviceMetrics {
+    let latency = dev.e2e_seconds(w);
+    let e: EnergyReport = dev.energy(w);
+    DeviceMetrics {
+        device: dev.name.to_string(),
+        latency_s: latency,
+        pdp_j: e.pdp_j(),
+        edp_js: latency * e.pdp_j(),
+    }
+}
+
+/// Evaluate one workload on all platforms (the unit of Figs 11–13).
+pub fn eval_workload(w: &Workload) -> WorkloadResult {
+    let fpga = ImaxDevice::fpga(2);
+    let asic = ImaxDevice::asic28(2);
+    let run_f = crate::coordinator::hybrid::simulate_auto(w, &fpga, TransferMode::Coalesced);
+    let run_a = crate::coordinator::hybrid::simulate_auto(w, &asic, TransferMode::Coalesced);
+
+    let mut devices = vec![
+        imax_metrics("IMAX3 (FPGA)", &fpga, &run_f),
+        imax_metrics("IMAX3 (28nm)", &asic, &run_a),
+    ];
+    for g in GpuDevice::all() {
+        devices.push(gpu_metrics(&g, w));
+    }
+    WorkloadResult {
+        workload: w.clone(),
+        devices,
+        imax_run: run_a,
+    }
+}
+
+/// Evaluate the whole 54-workload grid once (shared by Figs 11–13).
+pub fn eval_grid() -> Vec<WorkloadResult> {
+    workloads::grid().iter().map(eval_workload).collect()
+}
+
+fn metric_table(
+    title: &str,
+    results: &[WorkloadResult],
+    metric: impl Fn(&DeviceMetrics) -> f64,
+    unit: &str,
+) -> (Table, Csv) {
+    let dev_names: Vec<String> = results[0]
+        .devices
+        .iter()
+        .map(|d| d.device.clone())
+        .collect();
+    let mut header: Vec<&str> = vec!["workload"];
+    let owned: Vec<String> = dev_names.iter().map(|d| format!("{d} ({unit})")).collect();
+    for o in &owned {
+        header.push(o);
+    }
+    let mut table = Table::new(title, &header);
+    let mut csv_header = vec!["workload".to_string()];
+    csv_header.extend(dev_names.clone());
+    let mut csv = Csv::new(&csv_header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for r in results {
+        let mut row = vec![r.workload.label()];
+        for d in &r.devices {
+            row.push(format!("{:.3}", metric(d)));
+        }
+        csv.row(&row);
+        table.row(row);
+    }
+    (table, csv)
+}
+
+/// Fig 11 — E2E latency by device across the 54 workloads.
+pub fn fig11(results: &[WorkloadResult]) -> Table {
+    let (t, csv) = metric_table("Fig 11 — E2E latency", results, |d| d.latency_s, "s");
+    csv.write_to(format!("{REPORT_DIR}/fig11_latency.csv")).ok();
+    t
+}
+
+/// Fig 12 — PDP (energy) by device.
+pub fn fig12(results: &[WorkloadResult]) -> Table {
+    let (t, csv) = metric_table("Fig 12 — PDP (lower is better)", results, |d| d.pdp_j, "J");
+    csv.write_to(format!("{REPORT_DIR}/fig12_pdp.csv")).ok();
+    t
+}
+
+/// Fig 13 — EDP by device.
+pub fn fig13(results: &[WorkloadResult]) -> Table {
+    let (t, csv) = metric_table("Fig 13 — EDP (lower is better)", results, |d| d.edp_js, "J*s");
+    csv.write_to(format!("{REPORT_DIR}/fig13_edp.csv")).ok();
+    t
+}
+
+/// Fig 14 — LMM size sweep → PDP per workload (IMAX 28 nm).
+pub fn fig14(lmm_sizes: &[usize]) -> Table {
+    let mut header = vec!["workload".to_string()];
+    header.extend(lmm_sizes.iter().map(|kb| format!("{kb}KB (J)")));
+    let mut t = Table::new(
+        "Fig 14 — PDP vs LMM size (IMAX 28nm)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut csv = Csv::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    // The paper sweeps the grid's representative workloads; we use the
+    // [32:16] column of every model × scheme.
+    for cfg in workloads::models() {
+        for scheme in workloads::SCHEMES {
+            let w = Workload {
+                cfg: cfg.clone(),
+                scheme,
+                n_in: 32,
+                n_out: 16,
+            };
+            let mut row = vec![w.label()];
+            for &kb in lmm_sizes {
+                let dev = ImaxDevice::asic28(2).with_lmm_kb(kb);
+                let lmm = LmmConfig::new(kb);
+                let policy = OffloadPolicy::for_workload(&dev, &w.cfg, w.scheme, lmm);
+                let run = simulate(&w, &dev, &policy, TransferMode::Coalesced);
+                let e = power::imax_energy(&dev, &lmm, &run);
+                row.push(format!("{:.2}", e.pdp_j()));
+            }
+            csv.row(&row);
+            t.row(row);
+        }
+    }
+    csv.write_to(format!("{REPORT_DIR}/fig14_lmm_pdp.csv")).ok();
+    t
+}
+
+/// Fig 15 — prefill/decode execution-time breakdown on the FPGA.
+pub fn fig15() -> Table {
+    let mut t = Table::new(
+        "Fig 15 — IMAX execution-time breakdown (FPGA, shares of phase total)",
+        &[
+            "workload", "phase", "EXEC", "LOAD", "DRAIN", "CONF", "REGV", "RANGE", "HOST",
+        ],
+    );
+    let mut csv = Csv::new(&[
+        "workload", "phase", "exec", "load", "drain", "conf", "regv", "range", "host",
+    ]);
+    let dev = ImaxDevice::fpga(2);
+    for cfg in workloads::models() {
+        for scheme in workloads::SCHEMES {
+            let w = Workload {
+                cfg: cfg.clone(),
+                scheme,
+                n_in: 32,
+                n_out: 16,
+            };
+            let run = crate::coordinator::hybrid::simulate_auto(&w, &dev, TransferMode::Coalesced);
+            for (phase, cost) in [
+                ("prefill", run.breakdown.prefill),
+                ("decode", run.breakdown.decode),
+            ] {
+                let total = cost.total();
+                let share = |c: Component| {
+                    if total > 0.0 {
+                        format!("{:.1}%", 100.0 * cost.get(c) / total)
+                    } else {
+                        "-".to_string()
+                    }
+                };
+                let row = vec![
+                    w.label(),
+                    phase.to_string(),
+                    share(Component::Exec),
+                    share(Component::Load),
+                    share(Component::Drain),
+                    share(Component::Conf),
+                    share(Component::Regv),
+                    share(Component::Range),
+                    share(Component::Host),
+                ];
+                csv.row(&row);
+                t.row(row);
+            }
+        }
+    }
+    csv.write_to(format!("{REPORT_DIR}/fig15_breakdown.csv")).ok();
+    t
+}
+
+/// Fig 16 — lane scalability (E2E latency and tokens/s vs lane count).
+pub fn fig16() -> Table {
+    let mut t = Table::new(
+        "Fig 16 — lane scalability (FPGA, Qwen3-0.6B Q3_K_S [32:16])",
+        &["lanes", "E2E (s)", "tokens/s", "EXEC (s)", "HOST (s)"],
+    );
+    let mut csv = Csv::new(&["lanes", "e2e_s", "tokens_per_s", "exec_s", "host_s"]);
+    let w = Workload {
+        cfg: crate::model::config::ModelConfig::qwen3_0_6b(),
+        scheme: QuantScheme::Q3KS,
+        n_in: 32,
+        n_out: 16,
+    };
+    for p in scheduler::lane_sweep(
+        &w,
+        &ImaxDevice::fpga(2),
+        &[1, 2, 4, 8],
+        TransferMode::Coalesced,
+    ) {
+        let row = vec![
+            p.lanes.to_string(),
+            format!("{:.2}", p.e2e_s),
+            format!("{:.3}", p.tokens_per_s),
+            format!("{:.2}", p.exec_s),
+            format!("{:.2}", p.host_s),
+        ];
+        csv.row(&row);
+        t.row(row);
+    }
+    csv.write_to(format!("{REPORT_DIR}/fig16_scaling.csv")).ok();
+    t
+}
+
+/// Table 1 — device specifications.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — physical specifications",
+        &[
+            "device", "CPU", "cores", "area (mm2)", "process (nm)", "freq (MHz)", "memory",
+            "power (W)",
+        ],
+    );
+    t.row(vec![
+        "IMAX3 (Xilinx VPK180)".into(),
+        "Arm Cortex-A72".into(),
+        "64/lane".into(),
+        "-".into(),
+        "7".into(),
+        "145".into(),
+        "8GB+4GB DDR4".into(),
+        "180".into(),
+    ]);
+    t.row(vec![
+        "IMAX3 (28 nm)".into(),
+        "-".into(),
+        "64/lane".into(),
+        "14.6".into(),
+        "28".into(),
+        "840".into(),
+        "-".into(),
+        "2.16-6.1/kernel".into(),
+    ]);
+    for g in GpuDevice::all() {
+        t.row(vec![
+            g.name.into(),
+            if g.name.contains("Jetson") {
+                "Arm Cortex-A78AE".into()
+            } else {
+                "Xeon W5-2455X".into()
+            },
+            g.cores.to_string(),
+            format!("{}", g.chip_area_mm2),
+            g.process_nm.to_string(),
+            g.freq_mhz.to_string(),
+            g.memory.into(),
+            format!("{}", g.tdp_w),
+        ]);
+    }
+    t
+}
+
+/// Table 2 — offload ratios per model/quant/kernel format at 64 KB.
+pub fn table2() -> Table {
+    use crate::imax::isa::KernelClass;
+    let mut t = Table::new(
+        "Table 2 — offload ratio of computational kernels (64 KB LMM)",
+        &["model", "quant", "FP16", "Q3_K", "Q6_K", "Q8_0", "Total"],
+    );
+    let mut csv = Csv::new(&["model", "quant", "fp16", "q3_k", "q6_k", "q8_0", "total"]);
+    let dev = ImaxDevice::asic28(2);
+    for cfg in workloads::models() {
+        for scheme in workloads::SCHEMES {
+            let w = Workload {
+                cfg: cfg.clone(),
+                scheme,
+                n_in: 32,
+                n_out: 16,
+            };
+            let run = crate::coordinator::hybrid::simulate_auto(&w, &dev, TransferMode::Coalesced);
+            let fmt = |c: KernelClass| match run.stats.ratio(c) {
+                Some(r) => format!("{:.2}%", 100.0 * r),
+                None => "-".to_string(),
+            };
+            let row = vec![
+                cfg.name.to_string(),
+                scheme.name().to_string(),
+                fmt(KernelClass::Fp16),
+                fmt(KernelClass::Q3K),
+                fmt(KernelClass::Q6K),
+                fmt(KernelClass::Q8_0),
+                format!("{:.2}%", 100.0 * run.stats.total_ratio()),
+            ];
+            csv.row(&row);
+            t.row(row);
+        }
+    }
+    csv.write_to(format!("{REPORT_DIR}/table2_offload.csv")).ok();
+    t
+}
+
+/// §III.D — DMA transfer-coalescing ablation (LOAD ×1.2, DRAIN ×4.8).
+pub fn ablate_dma() -> Table {
+    let mut t = Table::new(
+        "DMA coalescing ablation (naive / coalesced)",
+        &["workload", "LOAD gain", "DRAIN gain", "E2E gain"],
+    );
+    let dev = ImaxDevice::fpga(2);
+    for cfg in workloads::models() {
+        let w = Workload {
+            cfg: cfg.clone(),
+            scheme: QuantScheme::Q8_0,
+            n_in: 32,
+            n_out: 16,
+        };
+        let coal = crate::coordinator::hybrid::simulate_auto(&w, &dev, TransferMode::Coalesced);
+        let naive = crate::coordinator::hybrid::simulate_auto(&w, &dev, TransferMode::Naive);
+        let ct = coal.breakdown.total();
+        let nt = naive.breakdown.total();
+        t.row(vec![
+            w.label(),
+            format!("{:.2}x", nt.load / ct.load.max(1e-12)),
+            format!("{:.2}x", nt.drain / ct.drain.max(1e-12)),
+            format!(
+                "{:.2}x",
+                naive.breakdown.e2e_seconds() / coal.breakdown.e2e_seconds()
+            ),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn quick_workload() -> Workload {
+        Workload {
+            cfg: ModelConfig::qwen3_0_6b(),
+            scheme: QuantScheme::Q8_0,
+            n_in: 8,
+            n_out: 4,
+        }
+    }
+
+    #[test]
+    fn eval_workload_covers_five_devices() {
+        let r = eval_workload(&quick_workload());
+        assert_eq!(r.devices.len(), 5);
+        for d in &r.devices {
+            assert!(d.latency_s > 0.0, "{}", d.device);
+            assert!(d.pdp_j > 0.0);
+            assert!(d.edp_js > 0.0);
+        }
+    }
+
+    #[test]
+    fn rtx_latency_wins_imax_pdp_competitive() {
+        let r = eval_workload(&Workload {
+            cfg: ModelConfig::qwen3_1_7b(),
+            scheme: QuantScheme::Q8_0,
+            n_in: 16,
+            n_out: 4,
+        });
+        let get = |n: &str| r.devices.iter().find(|d| d.device.contains(n)).unwrap();
+        let rtx = get("4090");
+        let imax28 = get("28nm");
+        assert!(rtx.latency_s < imax28.latency_s, "GPU wins latency");
+        assert!(imax28.pdp_j < rtx.pdp_j, "IMAX wins energy");
+    }
+
+    #[test]
+    fn table1_has_five_rows() {
+        let t = table1();
+        assert!(t.render().lines().count() >= 8);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment harness: the 54-workload grid ([`workloads`]) and one
+//! runner per paper table/figure ([`experiments`]). The `rust/benches/`
+//! targets and the CLI subcommands are thin wrappers over these.
+
+pub mod experiments;
+pub mod workloads;
+
+pub use experiments::{eval_grid, eval_workload, WorkloadResult};

@@ -1,0 +1,85 @@
+//! The paper's workload grid (§IV.A): 3 Qwen3 models × 2 quantized model
+//! files × 9 input/output-token combinations = 54 distinct workloads,
+//! "from [8:1] to [32:16]".
+
+use crate::coordinator::hybrid::Workload;
+use crate::model::config::{ModelConfig, QuantScheme};
+
+/// Input-token counts of the grid.
+pub const N_IN: [usize; 3] = [8, 16, 32];
+/// Output-token counts of the grid.
+pub const N_OUT: [usize; 3] = [1, 4, 16];
+
+/// The evaluated models.
+pub fn models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::qwen3_0_6b(),
+        ModelConfig::qwen3_1_7b(),
+        ModelConfig::qwen3_8b(),
+    ]
+}
+
+/// The evaluated quantized model files.
+pub const SCHEMES: [QuantScheme; 2] = [QuantScheme::Q8_0, QuantScheme::Q3KS];
+
+/// The full 54-workload grid, ordered model-major (the paper's figures
+/// group by model, then quantization, then token combo).
+pub fn grid() -> Vec<Workload> {
+    let mut out = Vec::with_capacity(54);
+    for cfg in models() {
+        for scheme in SCHEMES {
+            for n_in in N_IN {
+                for n_out in N_OUT {
+                    out.push(Workload {
+                        cfg: cfg.clone(),
+                        scheme,
+                        n_in,
+                        n_out,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Look up one grid workload by its paper-style label components.
+pub fn find(model: &str, scheme: QuantScheme, n_in: usize, n_out: usize) -> Option<Workload> {
+    let cfg = ModelConfig::by_name(model)?;
+    Some(Workload {
+        cfg,
+        scheme,
+        n_in,
+        n_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_54_workloads() {
+        let g = grid();
+        assert_eq!(g.len(), 54);
+        // Range matches the paper: [8:1] .. [32:16].
+        assert_eq!(g[0].n_in, 8);
+        assert_eq!(g[0].n_out, 1);
+        assert!(g.iter().any(|w| w.n_in == 32 && w.n_out == 16));
+    }
+
+    #[test]
+    fn all_labels_unique() {
+        let g = grid();
+        let labels: std::collections::HashSet<String> =
+            g.iter().map(|w| w.label()).collect();
+        assert_eq!(labels.len(), 54);
+    }
+
+    #[test]
+    fn find_returns_known_workloads() {
+        let w = find("1.7b", QuantScheme::Q8_0, 16, 4).unwrap();
+        assert_eq!(w.label(), "Qwen3-1.7B Q8_0 [16:4]");
+        assert!(find("nope", QuantScheme::Q8_0, 16, 4).is_none());
+    }
+}

@@ -1,0 +1,209 @@
+//! IMAX device parameterizations: the measured FPGA prototype and the
+//! projected 28 nm ASIC (paper §IV.A).
+//!
+//! All free parameters are calibrated once against the paper's published
+//! anchor measurements (DESIGN.md §6) and then held fixed across every
+//! experiment; `baseline::calibration` asserts the anchors stay within
+//! tolerance.
+
+/// FPGA vs projected ASIC implementation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum ImaxImpl {
+    /// AMD Versal VPK180 prototype @ 145 MHz.
+    Fpga,
+    /// TSMC 28 nm projection @ 840 MHz (Synopsys DC synthesis).
+    Asic28,
+}
+
+/// Host CPU model (dual-core Arm Cortex-A72 on the Versal PS).
+#[derive(Clone, Copy, Debug)]
+pub struct HostParams {
+    /// Cores available for engine control flow (A72 has 2).
+    pub cores: usize,
+    /// Large-copy bandwidth for DMA-buffer coalescing (bytes/s). The
+    /// dominant host cost: every offloaded operand set is staged into the
+    /// contiguous DMA buffer (§III.D).
+    pub memcpy_bw: f64,
+    /// Host-side elementwise op throughput (elements/s) for RMSNorm,
+    /// RoPE, softmax, activation quantization, sampling scans.
+    pub elemop_rate: f64,
+    /// Fixed per-offload-call software overhead (s): graph dispatch,
+    /// buffer bookkeeping, completion check.
+    pub call_overhead: f64,
+    /// Idle power (W) added to active-lane power in the ASIC energy model.
+    pub idle_power_w: f64,
+    /// Power while the host computes kernels itself (NEON pegged, W).
+    pub active_power_w: f64,
+    /// Power during light host work: dispatch, staging, sampling (W).
+    pub light_power_w: f64,
+    /// Power of the DMA/DDR path while transfers are in flight (W).
+    pub xfer_power_w: f64,
+}
+
+/// Full IMAX system parameters.
+#[derive(Clone, Debug)]
+pub struct ImaxDevice {
+    pub imp: ImaxImpl,
+    /// Core clock (Hz): 145 MHz FPGA, 840 MHz ASIC.
+    pub clock_hz: f64,
+    /// Compute lanes used (paper's main evaluation: 2 of 8).
+    pub lanes: usize,
+    /// PEs per lane (64).
+    pub pes_per_lane: usize,
+    /// LMM size per PE in KiB (16–512 configurable; 64 deployed).
+    pub lmm_kb: usize,
+    /// Effective DMA bandwidth host↔LMM (bytes/s).
+    pub dma_bw: f64,
+    /// Per-DMA-transaction setup latency (s) — the cost coalescing
+    /// amortizes (§III.D).
+    pub dma_setup: f64,
+    /// Per-PIO-word cost (s) for CONF/REGV/RANGE writes.
+    pub pio_word: f64,
+    /// Host-side DMA staging buffer capacity (Table 1: 4 GB DDR4 on the
+    /// VPK180). Offloaded weights must be resident here; §V.C: "the
+    /// prototype's limited DMA buffer size restricted our experiments" —
+    /// the constraint behind Table 2's 8B Q8_0 non-offload.
+    pub dma_buffer_bytes: usize,
+    /// Pipeline utilization multiplier on the ISA steady-state rate
+    /// (column-wise multithreading keeps multiple logical ops in flight —
+    /// §III.C). Calibrated on the anchor EXEC time.
+    pub exec_eff: f64,
+    pub host: HostParams,
+    /// FPGA board power (Table 1: 180 W) for FPGA-side energy numbers.
+    pub board_power_w: f64,
+}
+
+impl ImaxDevice {
+    /// The measured FPGA prototype (2-lane main configuration).
+    ///
+    /// dma_bw / memcpy_bw / pio_word are calibrated against the paper's
+    /// 0.6B Q3_K_S [32:16] breakdown (16.3 s = EXEC 4.47 + HOST 5.43 +
+    /// LOAD 5.31 + DRAIN 0.31 + other 0.78).
+    pub fn fpga(lanes: usize) -> ImaxDevice {
+        ImaxDevice {
+            imp: ImaxImpl::Fpga,
+            clock_hz: 145e6,
+            lanes,
+            pes_per_lane: 64,
+            lmm_kb: 64,
+            dma_bw: 1.15e9,
+            dma_setup: 6.0e-6,
+            pio_word: 1.8e-6,
+            dma_buffer_bytes: 4_000_000_000, // Table 1: "4 GB DDR4 for DMA buffer"
+            exec_eff: 1.36,
+            host: HostParams {
+                cores: 2,
+                memcpy_bw: 2.8e9,
+                elemop_rate: 2.0e8,
+                call_overhead: 1.4e-3,
+                idle_power_w: 1.0,
+                active_power_w: 4.5,
+                light_power_w: 1.8,
+                xfer_power_w: 2.0,
+            },
+            board_power_w: 180.0,
+        }
+    }
+
+    /// The 28 nm ASIC projection: core clock ×5.79 (840/145); PIO scales
+    /// with the core; the memory path (DMA + host staging) improves by
+    /// the integration factor calibrated on the paper's 5.63 s / 16.3 s
+    /// representative-workload ratio (≈2.3×, an integrated SoC fabric
+    /// rather than the FPGA NoC).
+    pub fn asic28(lanes: usize) -> ImaxDevice {
+        let f = ImaxDevice::fpga(lanes);
+        let clock_ratio = 840e6 / 145e6;
+        let mem_ratio = 2.34;
+        ImaxDevice {
+            imp: ImaxImpl::Asic28,
+            clock_hz: 840e6,
+            dma_bw: f.dma_bw * mem_ratio,
+            dma_setup: f.dma_setup / clock_ratio,
+            pio_word: f.pio_word / clock_ratio,
+            host: HostParams {
+                memcpy_bw: f.host.memcpy_bw * mem_ratio,
+                elemop_rate: f.host.elemop_rate * mem_ratio,
+                call_overhead: f.host.call_overhead / mem_ratio,
+                ..f.host
+            },
+            board_power_w: f64::NAN, // not meaningful for the ASIC
+            ..f
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self.imp {
+            ImaxImpl::Fpga => format!("IMAX3 (FPGA, {} lanes)", self.lanes),
+            ImaxImpl::Asic28 => format!("IMAX3 (28 nm, {} lanes)", self.lanes),
+        }
+    }
+
+    /// Total LMM capacity (bytes) across the active lanes.
+    pub fn lmm_total_bytes(&self) -> usize {
+        self.lmm_kb * 1024 * self.pes_per_lane * self.lanes
+    }
+
+    /// LMM bytes per PE.
+    pub fn lmm_pe_bytes(&self) -> usize {
+        self.lmm_kb * 1024
+    }
+
+    /// With a given LMM size (Fig 14 sweep).
+    pub fn with_lmm_kb(mut self, kb: usize) -> ImaxDevice {
+        assert!((16..=512).contains(&kb), "LMM configurable 16..512 KB");
+        self.lmm_kb = kb;
+        self
+    }
+
+    /// With a different lane count (Fig 16 sweep).
+    pub fn with_lanes(mut self, lanes: usize) -> ImaxDevice {
+        assert!((1..=8).contains(&lanes), "IMAX3 has 8 lanes");
+        self.lanes = lanes;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_defaults_match_paper_table1() {
+        let d = ImaxDevice::fpga(2);
+        assert_eq!(d.clock_hz, 145e6);
+        assert_eq!(d.pes_per_lane, 64);
+        assert_eq!(d.lmm_kb, 64);
+        assert_eq!(d.host.cores, 2);
+        assert_eq!(d.board_power_w, 180.0);
+    }
+
+    #[test]
+    fn asic_scales_clock_6x() {
+        let a = ImaxDevice::asic28(2);
+        assert_eq!(a.clock_hz, 840e6);
+        let ratio = a.clock_hz / ImaxDevice::fpga(2).clock_hz;
+        assert!((ratio - 5.79).abs() < 0.01, "paper: ≈6× speedup");
+        // Memory path improves less than the core clock.
+        assert!(a.dma_bw / ImaxDevice::fpga(2).dma_bw < ratio);
+    }
+
+    #[test]
+    fn lmm_capacity_math() {
+        let d = ImaxDevice::fpga(2);
+        assert_eq!(d.lmm_total_bytes(), 64 * 1024 * 64 * 2);
+        let big = d.clone().with_lmm_kb(512);
+        assert_eq!(big.lmm_total_bytes(), 512 * 1024 * 64 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "8 lanes")]
+    fn lane_bounds_enforced() {
+        ImaxDevice::fpga(2).with_lanes(9);
+    }
+
+    #[test]
+    #[should_panic(expected = "LMM configurable")]
+    fn lmm_bounds_enforced() {
+        ImaxDevice::fpga(2).with_lmm_kb(8);
+    }
+}

@@ -1,0 +1,222 @@
+//! The IMAX custom instruction set and per-kernel dataflow mappings
+//! (paper §III.C, Figs 5–9).
+//!
+//! Each PE packs three ALUs (integer / logic / shift), two address
+//! generators and an FPU-capable datapath; the compiler maps dot-product
+//! dataflows onto chains of PEs using the custom instructions below. The
+//! unit counts and per-burst geometry are taken directly from the paper's
+//! text and drive the cycle model in [`crate::imax::sim`].
+
+use crate::quant::GgmlType;
+
+/// IMAX custom instructions referenced by the paper.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Instr {
+    /// 2-way SIMD signed 8-bit multiply–accumulate → 24-bit partials
+    /// (Q8_0 back-end, Fig 7).
+    OpSml8,
+    /// 2-way 24-bit integer addition along the pipeline (Fig 5).
+    OpAd24,
+    /// 16-bit multiply used after K-quant decode (Fig 8).
+    OpSml16,
+    /// Decode 4-bit QL + 2-bit QH + 8-bit scales → 16-bit intermediates in
+    /// one cycle (Q6_K front-end, Fig 8).
+    OpCvt86,
+    /// Approximate 6-bit scales → 5-bit, pack 2+1-bit weights → 3-bit
+    /// (Q3_K front-end, Fig 9).
+    OpCvt53,
+    /// 2-way SIMD f32 fused multiply–add (FP16 kernel, Fig 6).
+    OpFmaSimd,
+    /// In-PE LUT conversion FP16 → FP32 (Fig 6).
+    OpLutCvt,
+    /// LMM load / store issued by the address generators.
+    OpLd,
+    OpSt,
+}
+
+/// One of the paper's four kernel dataflows.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum KernelClass {
+    Fp16,
+    Q8_0,
+    Q6K,
+    Q3K,
+}
+
+impl KernelClass {
+    pub const ALL: [KernelClass; 4] =
+        [KernelClass::Fp16, KernelClass::Q8_0, KernelClass::Q6K, KernelClass::Q3K];
+
+    /// Which kernel executes a weight format.
+    pub fn for_type(ty: GgmlType) -> KernelClass {
+        match ty {
+            // F32 host tensors offload through the FP16 datapath too
+            // (widened loads), and F16 natively.
+            GgmlType::F32 | GgmlType::F16 => KernelClass::Fp16,
+            GgmlType::Q8_0 => KernelClass::Q8_0,
+            GgmlType::Q6K => KernelClass::Q6K,
+            GgmlType::Q3K => KernelClass::Q3K,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelClass::Fp16 => "FP16",
+            KernelClass::Q8_0 => "Q8_0",
+            KernelClass::Q6K => "Q6_K",
+            KernelClass::Q3K => "Q3_K",
+        }
+    }
+
+    /// Arithmetic units occupied by the mapped dataflow (paper §III.C:
+    /// FP16 22, Q8_0 46, Q3_K 51, Q6_K 64).
+    pub fn units(self) -> usize {
+        match self {
+            KernelClass::Fp16 => 22,
+            KernelClass::Q8_0 => 46,
+            KernelClass::Q3K => 51,
+            KernelClass::Q6K => 64,
+        }
+    }
+
+    /// Elements processed per burst by one lane's mapped dataflow:
+    /// FP16 "16-element multiplication in a single operational burst";
+    /// Q8_0 "two such parallel executions complete ... a full 32-element
+    /// vector segment"; Q3_K/Q6_K "processing 256 elements per burst by
+    /// running four parallel dataflows for sixteen iterations".
+    pub fn elems_per_burst(self) -> usize {
+        match self {
+            KernelClass::Fp16 => 16,
+            KernelClass::Q8_0 => 32,
+            KernelClass::Q6K | KernelClass::Q3K => 256,
+        }
+    }
+
+    /// Pipeline iterations one burst occupies (steady-state, per lane).
+    /// FP16/Q8_0 retire a burst per iteration; the K-quants run their
+    /// 4-wide dataflow for 16 iterations per 256-element burst.
+    pub fn cycles_per_burst(self) -> usize {
+        match self {
+            KernelClass::Fp16 => 1,
+            KernelClass::Q8_0 => 1,
+            KernelClass::Q6K | KernelClass::Q3K => 16,
+        }
+    }
+
+    /// Steady-state throughput in elements (MACs) per cycle per lane.
+    pub fn elems_per_cycle(self) -> f64 {
+        self.elems_per_burst() as f64 / self.cycles_per_burst() as f64
+    }
+
+    /// Pipeline fill depth in cycles (dataflow stages through the linear
+    /// PE array; ≈ PEs traversed: 12-stage pipelines for the quantized
+    /// kernels per Fig 5, shorter for FP16).
+    pub fn pipeline_depth(self) -> usize {
+        match self {
+            KernelClass::Fp16 => 8,
+            KernelClass::Q8_0 => 12,
+            KernelClass::Q6K => 14,
+            KernelClass::Q3K => 14,
+        }
+    }
+
+    /// The instruction sequence of one dataflow stage (documentation /
+    /// Fig 5–9 reproduction; also used by the ISA microbench).
+    pub fn dataflow(self) -> &'static [Instr] {
+        match self {
+            KernelClass::Fp16 => &[
+                Instr::OpLd,
+                Instr::OpLutCvt,
+                Instr::OpFmaSimd,
+                Instr::OpFmaSimd,
+                Instr::OpSt,
+            ],
+            KernelClass::Q8_0 => &[
+                Instr::OpLd,
+                Instr::OpSml8,
+                Instr::OpAd24,
+                Instr::OpAd24,
+                Instr::OpSt,
+            ],
+            KernelClass::Q6K => &[
+                Instr::OpLd,
+                Instr::OpCvt86,
+                Instr::OpSml16,
+                Instr::OpAd24,
+                Instr::OpSt,
+            ],
+            KernelClass::Q3K => &[
+                Instr::OpLd,
+                Instr::OpCvt53,
+                Instr::OpSml8,
+                Instr::OpAd24,
+                Instr::OpSt,
+            ],
+        }
+    }
+
+    /// ASIC power per active lane in watts (paper Table 1 note: FP16
+    /// 2.16 W, Q8_0 4.41 W, Q3_K 4.88 W, Q6_K 6.1 W at 64 KB LMM).
+    pub fn asic_power_w(self) -> f64 {
+        match self {
+            KernelClass::Fp16 => 2.16,
+            KernelClass::Q8_0 => 4.41,
+            KernelClass::Q3K => 4.88,
+            KernelClass::Q6K => 6.1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_counts_match_paper() {
+        assert_eq!(KernelClass::Fp16.units(), 22);
+        assert_eq!(KernelClass::Q8_0.units(), 46);
+        assert_eq!(KernelClass::Q3K.units(), 51);
+        assert_eq!(KernelClass::Q6K.units(), 64);
+    }
+
+    #[test]
+    fn burst_geometry_matches_paper() {
+        assert_eq!(KernelClass::Fp16.elems_per_burst(), 16);
+        assert_eq!(KernelClass::Q8_0.elems_per_burst(), 32);
+        assert_eq!(KernelClass::Q3K.elems_per_burst(), 256);
+        assert_eq!(KernelClass::Q3K.cycles_per_burst(), 16);
+        assert!((KernelClass::Q3K.elems_per_cycle() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn format_to_kernel_mapping() {
+        assert_eq!(KernelClass::for_type(GgmlType::F16), KernelClass::Fp16);
+        assert_eq!(KernelClass::for_type(GgmlType::Q8_0), KernelClass::Q8_0);
+        assert_eq!(KernelClass::for_type(GgmlType::Q6K), KernelClass::Q6K);
+        assert_eq!(KernelClass::for_type(GgmlType::Q3K), KernelClass::Q3K);
+    }
+
+    #[test]
+    fn dataflows_start_with_load_end_with_store() {
+        for k in KernelClass::ALL {
+            let df = k.dataflow();
+            assert_eq!(df.first(), Some(&Instr::OpLd), "{}", k.name());
+            assert_eq!(df.last(), Some(&Instr::OpSt), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn asic_power_ordering() {
+        // More units → more power; Q6_K (64 units) is the hungriest.
+        assert!(KernelClass::Q6K.asic_power_w() > KernelClass::Q3K.asic_power_w());
+        assert!(KernelClass::Q3K.asic_power_w() > KernelClass::Q8_0.asic_power_w());
+        assert!(KernelClass::Q8_0.asic_power_w() > KernelClass::Fp16.asic_power_w());
+    }
+
+    #[test]
+    fn kquant_frontends_use_cvt() {
+        assert!(KernelClass::Q6K.dataflow().contains(&Instr::OpCvt86));
+        assert!(KernelClass::Q3K.dataflow().contains(&Instr::OpCvt53));
+        assert!(!KernelClass::Q8_0.dataflow().contains(&Instr::OpCvt86));
+    }
+}

@@ -1,0 +1,167 @@
+//! Local Memory Module (LMM) model.
+//!
+//! Each PE pairs with a hardware-managed, double-buffered LMM
+//! (configurable 16–512 KB; 64 KB deployed — paper §III.D/§V.A). The LMM
+//! size governs (a) whether a kernel's per-burst operand tile fits
+//! on-chip — the offload criterion — and (b) static power, which grows
+//! linearly with capacity and drives the Fig 14 PDP trade-off.
+
+use crate::imax::isa::KernelClass;
+use crate::model::graph::MatvecOp;
+
+/// LMM configuration for one PE.
+#[derive(Clone, Copy, Debug)]
+pub struct LmmConfig {
+    pub size_kb: usize,
+    pub double_buffered: bool,
+}
+
+impl LmmConfig {
+    pub fn new(size_kb: usize) -> LmmConfig {
+        assert!((16..=512).contains(&size_kb));
+        LmmConfig {
+            size_kb,
+            double_buffered: true,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.size_kb * 1024
+    }
+
+    /// Capacity usable by one operand tile: double buffering splits the
+    /// LMM so compute and DMA overlap (§II.D), halving the per-tile view.
+    pub fn tile_bytes(&self) -> usize {
+        if self.double_buffered {
+            self.bytes() / 2
+        } else {
+            self.bytes()
+        }
+    }
+
+    /// Static power contribution per lane (W), linear in capacity
+    /// (paper §V.A: "a larger LMM also linearly increases static power").
+    /// Calibrated so the 64 KB deployment reproduces the Table 1 ASIC
+    /// kernel powers (which *include* 64 KB LMMs).
+    pub fn static_power_per_lane_w(&self) -> f64 {
+        // ~6.1 mW per PE per 64 KB step × 64 PEs ≈ 0.39 W/lane at 64 KB.
+        const W_PER_KB_PER_PE: f64 = 6.1e-3 / 64.0;
+        W_PER_KB_PER_PE * self.size_kb as f64 * 64.0
+    }
+
+    /// Extra power vs the deployed 64 KB baseline (Fig 14's sweep knob).
+    pub fn power_delta_vs_64kb_w(&self) -> f64 {
+        self.static_power_per_lane_w() - LmmConfig::new(64).static_power_per_lane_w()
+    }
+}
+
+/// The operand tile one kernel instance must stage per burst-group:
+/// quantized activation row (+ scales) shared across rows, plus the
+/// weight rows in flight. This is the §III.D coalesced block.
+pub fn operand_tile_bytes(op: &MatvecOp, rows_in_flight: usize) -> usize {
+    op.act_bytes() + rows_in_flight * op.wty.row_bytes(op.cols) + 4 * rows_in_flight
+}
+
+/// Whether a kernel instance can stream through a given LMM: the shared
+/// activation plus at least one weight row in flight must fit the per-PE
+/// tile (the paper's "sufficient to accommodate the tensor sizes involved
+/// in the dot-product operations" criterion). The four parallel dataflows
+/// (Figs 5/9) split a row's burst, not distinct rows.
+pub fn fits(op: &MatvecOp, lmm: &LmmConfig) -> bool {
+    let _ = KernelClass::for_type(op.wty);
+    operand_tile_bytes(op, 1) <= lmm.tile_bytes()
+}
+
+/// Maximum weight rows resident per PE tile alongside the activation
+/// (drives DMA burst sizing in the mapper).
+pub fn rows_per_tile(op: &MatvecOp, lmm: &LmmConfig) -> usize {
+    let avail = lmm.tile_bytes().saturating_sub(op.act_bytes());
+    (avail / (op.wty.row_bytes(op.cols) + 4)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
+    use crate::model::graph::{OpKind, MatvecOp};
+    use crate::quant::GgmlType;
+
+    fn op_for(kind: LinearKind, cfg: &ModelConfig, scheme: QuantScheme) -> MatvecOp {
+        let (rows, cols) = kind.shape(cfg);
+        MatvecOp {
+            kind: OpKind::Linear(kind),
+            layer: Some(0),
+            wty: kind.weight_type(scheme),
+            rows,
+            cols,
+        }
+    }
+
+    #[test]
+    fn static_power_linear_in_size() {
+        let p64 = LmmConfig::new(64).static_power_per_lane_w();
+        let p128 = LmmConfig::new(128).static_power_per_lane_w();
+        let p256 = LmmConfig::new(256).static_power_per_lane_w();
+        assert!((p128 - 2.0 * p64).abs() < 1e-9);
+        assert!((p256 - 4.0 * p64).abs() < 1e-9);
+        assert_eq!(LmmConfig::new(64).power_delta_vs_64kb_w(), 0.0);
+    }
+
+    #[test]
+    fn qwen_dot_tiles_fit_64kb() {
+        // Paper §III.D: 64 KB "is sufficient to accommodate the tensor
+        // sizes involved in the dot-product operations of the Qwen3
+        // models" — per-burst tiles, not whole matrices.
+        let lmm = LmmConfig::new(64);
+        for cfg in [
+            ModelConfig::qwen3_0_6b(),
+            ModelConfig::qwen3_1_7b(),
+            ModelConfig::qwen3_8b(),
+        ] {
+            for kind in LinearKind::ALL {
+                for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS] {
+                    let op = op_for(kind, &cfg, scheme);
+                    assert!(fits(&op, &lmm), "{} {} {}", cfg.name, kind.name(), scheme.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_lmm_rejects_wide_rows() {
+        // A 16 KB LMM (tile = 8 KB) cannot hold even one row of a Q8_0
+        // K=12288 projection (row ≈ 13 KB) plus its activation.
+        let op = MatvecOp {
+            kind: OpKind::Linear(LinearKind::FfnDown),
+            layer: Some(0),
+            wty: GgmlType::Q8_0,
+            rows: 4096,
+            cols: 12288,
+        };
+        assert!(!fits(&op, &LmmConfig::new(16)));
+        assert!(fits(&op, &LmmConfig::new(512)));
+    }
+
+    #[test]
+    fn rows_per_tile_monotone_in_lmm() {
+        let op = MatvecOp {
+            kind: OpKind::Linear(LinearKind::FfnGate),
+            layer: Some(0),
+            wty: GgmlType::Q3K,
+            rows: 3072,
+            cols: 1024,
+        };
+        let small = rows_per_tile(&op, &LmmConfig::new(32));
+        let large = rows_per_tile(&op, &LmmConfig::new(256));
+        assert!(large > small);
+        assert!(small >= 1);
+    }
+
+    #[test]
+    fn double_buffer_halves_tile() {
+        let mut l = LmmConfig::new(64);
+        assert_eq!(l.tile_bytes(), 32 * 1024);
+        l.double_buffered = false;
+        assert_eq!(l.tile_bytes(), 64 * 1024);
+    }
+}

@@ -1,0 +1,27 @@
+//! The IMAX3 CGLA simulator — our substitute for the paper's FPGA
+//! prototype and 28 nm ASIC projection (DESIGN.md §2).
+//!
+//! IMAX3 is a Coarse-Grained *Linear* Array: per lane, 64 CISC PEs
+//! interleaved with 64 KB double-buffered Local Memory Modules in a 1-D
+//! pipeline; eight lanes behind a DMA engine and a PIO configuration path,
+//! hosted by a dual-core Cortex-A72 (paper Figs 1–3). The simulator is a
+//! *structural cost model*: it prices each offloaded dot-product kernel by
+//! the machine's published dataflow geometry (units, elements/burst,
+//! pipeline depth — [`isa`]), LMM tiling ([`lmm`]), DMA coalescing
+//! ([`dma`]), PIO configuration ([`pio`]), and the host's staging work
+//! ([`sim`]), with the FPGA/ASIC parameter sets in [`device`] calibrated
+//! against the paper's own measurements (DESIGN.md §6).
+
+pub mod device;
+pub mod dma;
+pub mod isa;
+pub mod lmm;
+pub mod pio;
+pub mod sim;
+pub mod timing;
+
+pub use device::{ImaxDevice, ImaxImpl};
+pub use dma::TransferMode;
+pub use isa::{Instr, KernelClass};
+pub use lmm::LmmConfig;
+pub use timing::{Component, PhaseCost, RunBreakdown};

@@ -1,0 +1,122 @@
+//! Programmed-I/O configuration costs (paper §V.B's CONF / REGV / RANGE).
+//!
+//! Before a kernel runs, the host writes (a) the mapping commands that
+//! configure the PE dataflow (CONF), (b) initial values for the internal
+//! PE registers (REGV — proportional to the number of units the dataflow
+//! occupies, which is why the 64-unit Q6_K kernel dominates REGV in the
+//! paper's Q3_K_S prefill breakdowns), and (c) the LMM address windows
+//! (RANGE). All via slow PIO writes over the PS–PL path.
+
+use crate::imax::device::ImaxDevice;
+use crate::imax::isa::KernelClass;
+
+/// PIO word counts for one kernel configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PioWords {
+    pub conf: usize,
+    pub regv: usize,
+    pub range: usize,
+}
+
+/// Words written when a kernel *class* is (re)mapped onto the lanes.
+/// CONF is per dataflow stage and replica; REGV per occupied unit; RANGE
+/// per LMM window (operand arrays + result).
+pub fn words_for(class: KernelClass, n_operand_arrays: usize) -> PioWords {
+    PioWords {
+        // 4 parallel dataflow replicas × stages × 2 words per stage.
+        conf: 4 * class.dataflow().len() * 2,
+        // 2 words per occupied arithmetic unit (init + mode).
+        regv: 2 * class.units(),
+        // one (base, limit) pair per operand array + result window.
+        range: 2 * (n_operand_arrays + 1),
+    }
+}
+
+/// Seconds for a PIO word sequence.
+pub fn seconds(dev: &ImaxDevice, words: usize) -> f64 {
+    words as f64 * dev.pio_word
+}
+
+/// Configuration cost policy: reconfiguration (CONF + REGV) is paid when
+/// the kernel class changes on the lanes; RANGE is paid per kernel
+/// instance (every instance addresses new buffers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConfTracker {
+    current: Option<KernelClass>,
+}
+
+impl ConfTracker {
+    pub fn new() -> ConfTracker {
+        ConfTracker::default()
+    }
+
+    /// Returns (conf_s, regv_s, range_s) for launching one instance of
+    /// `class`, updating the resident-mapping state.
+    pub fn launch(
+        &mut self,
+        dev: &ImaxDevice,
+        class: KernelClass,
+        n_operand_arrays: usize,
+    ) -> (f64, f64, f64) {
+        let w = words_for(class, n_operand_arrays);
+        let range_s = seconds(dev, w.range);
+        if self.current == Some(class) {
+            // Mapping already resident: only fresh register state for the
+            // new instance's accumulators (a fraction of full init).
+            let regv_s = seconds(dev, w.regv / 4);
+            (0.0, regv_s, range_s)
+        } else {
+            self.current = Some(class);
+            (seconds(dev, w.conf), seconds(dev, w.regv), range_s)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.current = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imax::device::ImaxDevice;
+
+    #[test]
+    fn regv_scales_with_units() {
+        let q6 = words_for(KernelClass::Q6K, 6);
+        let fp = words_for(KernelClass::Fp16, 2);
+        assert_eq!(q6.regv, 128); // 2 × 64 units
+        assert_eq!(fp.regv, 44); // 2 × 22 units
+        assert!(q6.regv > fp.regv);
+    }
+
+    #[test]
+    fn range_scales_with_operands() {
+        let a = words_for(KernelClass::Q8_0, 4);
+        let b = words_for(KernelClass::Q8_0, 2);
+        assert_eq!(a.range, 10);
+        assert_eq!(b.range, 6);
+    }
+
+    #[test]
+    fn reconfiguration_only_on_class_switch() {
+        let dev = ImaxDevice::fpga(2);
+        let mut t = ConfTracker::new();
+        let (c1, r1, _) = t.launch(&dev, KernelClass::Q3K, 6);
+        assert!(c1 > 0.0 && r1 > 0.0);
+        // Same class again: no CONF, reduced REGV.
+        let (c2, r2, _) = t.launch(&dev, KernelClass::Q3K, 6);
+        assert_eq!(c2, 0.0);
+        assert!(r2 < r1);
+        // Switch class: full cost again.
+        let (c3, _, _) = t.launch(&dev, KernelClass::Q6K, 6);
+        assert!(c3 > 0.0);
+    }
+
+    #[test]
+    fn asic_pio_faster_than_fpga() {
+        let f = ImaxDevice::fpga(2);
+        let a = ImaxDevice::asic28(2);
+        assert!(seconds(&a, 100) < seconds(&f, 100));
+    }
+}

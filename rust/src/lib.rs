@@ -1,0 +1,43 @@
+//! # imax-llm
+//!
+//! Reproduction of *"Efficient Kernel Mapping and Comprehensive System
+//! Evaluation of LLM Acceleration on a CGLA"* (Ando et al., IEEE Access 2025,
+//! DOI 10.1109/ACCESS.2025.3636266).
+//!
+//! The crate provides, from scratch:
+//!
+//! * [`quant`] — ggml-style block quantization formats (FP16, Q8_0, Q6_K,
+//!   Q3_K) with quantize / dequantize / integer dot-product kernels — the
+//!   llama.cpp substrate the paper offloads.
+//! * [`model`] — a Qwen3-architecture inference engine (GQA + RoPE + RMSNorm
+//!   + SwiGLU, KV cache, prefill/decode) that both *runs* tiny real models
+//!   and *enumerates* the kernel-call graph of the paper-scale models for
+//!   the timing path.
+//! * [`imax`] — a cycle-level simulator of the IMAX3 CGLA: linear PE array,
+//!   custom ISA (SML8/AD24/SML16/CVT86/CVT53/…), double-buffered LMMs, a DMA
+//!   engine with transfer coalescing, and PIO configuration costs.
+//! * [`coordinator`] — the paper's hybrid host/accelerator execution model:
+//!   offload policy (LMM fit), multi-lane scheduling under a host-throughput
+//!   ceiling, per-phase instrumentation (EXEC/LOAD/DRAIN/CONF/REGV/RANGE),
+//!   and a batched serving loop.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) via the `xla` crate; Python never runs at request time.
+//! * [`power`] / [`baseline`] — the paper's power model (PDP/EDP) and
+//!   roofline GPU comparators (RTX 4090, GTX 1080 Ti, Jetson AGX Orin).
+//! * [`harness`] — the 54-workload grid and one runner per paper table and
+//!   figure (Table 1–2, Fig 11–16, DMA-coalescing ablation).
+//!
+//! See `DESIGN.md` for the substitution table (FPGA/ASIC/GPUs → simulator +
+//! calibrated analytic models) and `EXPERIMENTS.md` for paper-vs-measured.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod harness;
+pub mod imax;
+pub mod model;
+pub mod power;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,361 @@
+//! imax-llm CLI — the L3 coordinator binary.
+//!
+//! Subcommands map 1:1 to the paper's artifacts:
+//!
+//! ```text
+//! imax-llm table1|table2|fig11|fig12|fig13|fig14|fig15|fig16|ablate-dma
+//! imax-llm anchors              # calibration vs the paper's numbers
+//! imax-llm kernels              # Fig 5-9 kernel mapping summary
+//! imax-llm run    [--model tiny|110m] [--scheme Q8_0] [--prompt txt] [--n 32]
+//! imax-llm serve  [--requests 16] [--workers 2]
+//! imax-llm build-model --out path [--model tiny|110m] [--scheme Q8_0]
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use imax_llm::baseline::calibration as cal;
+use imax_llm::baseline::GpuDevice;
+use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
+use imax_llm::coordinator::{serve, InstrumentedExec, Request};
+use imax_llm::harness::experiments as exp;
+use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
+use imax_llm::model::{
+    Engine, ModelConfig, ModelWeights, NativeExec, QuantScheme, Sampler,
+};
+use imax_llm::power;
+use imax_llm::tokenizer::Tokenizer;
+use imax_llm::util::report::Table;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn model_flag(flags: &HashMap<String, String>) -> Result<ModelConfig> {
+    let name = flags.get("model").map(|s| s.as_str()).unwrap_or("tiny");
+    ModelConfig::by_name(name).with_context(|| format!("unknown model '{name}'"))
+}
+
+fn scheme_flag(flags: &HashMap<String, String>) -> Result<QuantScheme> {
+    let name = flags.get("scheme").map(|s| s.as_str()).unwrap_or("Q8_0");
+    QuantScheme::by_name(name).with_context(|| format!("unknown scheme '{name}'"))
+}
+
+fn cmd_kernels() {
+    let mut t = Table::new(
+        "IMAX kernel mappings (paper §III.C, Figs 5-9)",
+        &["kernel", "units", "elems/burst", "cycles/burst", "pipeline", "dataflow"],
+    );
+    for k in KernelClass::ALL {
+        let df: Vec<String> = k.dataflow().iter().map(|i| format!("{i:?}")).collect();
+        t.row(vec![
+            k.name().to_string(),
+            k.units().to_string(),
+            k.elems_per_burst().to_string(),
+            k.cycles_per_burst().to_string(),
+            k.pipeline_depth().to_string(),
+            df.join("->"),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_anchors() {
+    // Calibration summary: simulated value vs paper anchor, side by side.
+    let mut t = Table::new(
+        "Calibration vs paper anchors (shape, not absolutes — DESIGN.md §6)",
+        &["anchor", "paper", "simulated", "ratio"],
+    );
+    let fpga = ImaxDevice::fpga(2);
+    let asic = ImaxDevice::asic28(2);
+
+    // Anchor 1: 0.6B Q3_K_S [32:16] FPGA breakdown.
+    let w = Workload {
+        cfg: ModelConfig::qwen3_0_6b(),
+        scheme: QuantScheme::Q3KS,
+        n_in: 32,
+        n_out: 16,
+    };
+    let run = simulate_auto(&w, &fpga, TransferMode::Coalesced);
+    let tot = run.breakdown.total();
+    let mut anchor_row = |name: &str, paper: f64, sim: f64| {
+        t.row(vec![
+            name.to_string(),
+            format!("{paper:.2}"),
+            format!("{sim:.2}"),
+            format!("{:.2}x", sim / paper),
+        ]);
+    };
+    anchor_row("0.6B Q3KS[32:16] FPGA total (s)", cal::anchor_breakdown::TOTAL_S, run.breakdown.e2e_seconds());
+    anchor_row("  EXEC (s)", cal::anchor_breakdown::EXEC_S, tot.exec);
+    anchor_row("  LOAD (s)", cal::anchor_breakdown::LOAD_S, tot.load);
+    anchor_row("  HOST (s)", cal::anchor_breakdown::HOST_S, tot.host);
+    anchor_row("  DRAIN (s)", cal::anchor_breakdown::DRAIN_S, tot.drain);
+    anchor_row(
+        "  CONFIG (s)",
+        cal::anchor_breakdown::CONFIG_S,
+        tot.conf + tot.regv + tot.range,
+    );
+
+    // Anchor: same workload, 28 nm latency + EDP.
+    let run_a = simulate_auto(&w, &asic, TransferMode::Coalesced);
+    let lat_a = run_a.breakdown.e2e_seconds();
+    let e_a = power::imax_energy(&asic, &LmmConfig::new(64), &run_a);
+    anchor_row(
+        "0.6B Q3KS[32:16] 28nm latency (s)",
+        cal::anchor_edp_06b_q3_32_16::IMAX28_LATENCY_S,
+        lat_a,
+    );
+    anchor_row(
+        "0.6B Q3KS[32:16] 28nm EDP (J*s)",
+        cal::anchor_edp_06b_q3_32_16::IMAX28,
+        lat_a * e_a.pdp_j(),
+    );
+    anchor_row(
+        "0.6B Q3KS[32:16] RTX EDP (J*s)",
+        cal::anchor_edp_06b_q3_32_16::RTX4090,
+        GpuDevice::rtx4090().e2e_seconds(&w) * GpuDevice::rtx4090().energy(&w).pdp_j(),
+    );
+    anchor_row(
+        "0.6B Q3KS[32:16] Jetson EDP (J*s)",
+        cal::anchor_edp_06b_q3_32_16::JETSON,
+        GpuDevice::jetson_orin().e2e_seconds(&w) * GpuDevice::jetson_orin().energy(&w).pdp_j(),
+    );
+
+    // Anchor 2: 1.7B Q8_0 [16:4] PDP, four platforms.
+    let w2 = Workload {
+        cfg: ModelConfig::qwen3_1_7b(),
+        scheme: QuantScheme::Q8_0,
+        n_in: 16,
+        n_out: 4,
+    };
+    let run2 = simulate_auto(&w2, &asic, TransferMode::Coalesced);
+    let e2 = power::imax_energy(&asic, &LmmConfig::new(64), &run2);
+    anchor_row("1.7B Q8[16:4] PDP imax28 (J)", cal::anchor_pdp_17b_q8_16_4::IMAX28, e2.pdp_j());
+    anchor_row(
+        "1.7B Q8[16:4] PDP RTX4090 (J)",
+        cal::anchor_pdp_17b_q8_16_4::RTX4090,
+        GpuDevice::rtx4090().energy(&w2).pdp_j(),
+    );
+    anchor_row(
+        "1.7B Q8[16:4] PDP GTX1080Ti (J)",
+        cal::anchor_pdp_17b_q8_16_4::GTX1080TI,
+        GpuDevice::gtx1080ti().energy(&w2).pdp_j(),
+    );
+    anchor_row(
+        "1.7B Q8[16:4] PDP Jetson (J)",
+        cal::anchor_pdp_17b_q8_16_4::JETSON,
+        GpuDevice::jetson_orin().energy(&w2).pdp_j(),
+    );
+
+    // Anchor 3: 8B Q8_0 [32:16] PDP inversion.
+    let w3 = Workload {
+        cfg: ModelConfig::qwen3_8b(),
+        scheme: QuantScheme::Q8_0,
+        n_in: 32,
+        n_out: 16,
+    };
+    let run3 = simulate_auto(&w3, &asic, TransferMode::Coalesced);
+    let e3 = power::imax_energy(&asic, &LmmConfig::new(64), &run3);
+    anchor_row("8B Q8[32:16] PDP imax28 (J)", cal::anchor_pdp_8b_q8_32_16::IMAX28, e3.pdp_j());
+    anchor_row(
+        "8B Q8[32:16] PDP RTX4090 (J)",
+        cal::anchor_pdp_8b_q8_32_16::RTX4090,
+        GpuDevice::rtx4090().energy(&w3).pdp_j(),
+    );
+    anchor_row(
+        "8B Q8[32:16] PDP Jetson (J)",
+        cal::anchor_pdp_8b_q8_32_16::JETSON,
+        GpuDevice::jetson_orin().energy(&w3).pdp_j(),
+    );
+
+    // Anchor 5: 1.7B Q8_0 [32:16] EDP (Jetson wins).
+    let w5 = Workload {
+        cfg: ModelConfig::qwen3_1_7b(),
+        scheme: QuantScheme::Q8_0,
+        n_in: 32,
+        n_out: 16,
+    };
+    let run5 = simulate_auto(&w5, &asic, TransferMode::Coalesced);
+    let e5 = power::imax_energy(&asic, &LmmConfig::new(64), &run5);
+    let lat5 = run5.breakdown.e2e_seconds();
+    anchor_row("1.7B Q8[32:16] 28nm latency (s)", cal::anchor_edp_17b_q8_32_16::IMAX28_LATENCY_S, lat5);
+    anchor_row("1.7B Q8[32:16] 28nm EDP (J*s)", cal::anchor_edp_17b_q8_32_16::IMAX28, lat5 * e5.pdp_j());
+    let jet = GpuDevice::jetson_orin();
+    anchor_row(
+        "1.7B Q8[32:16] Jetson latency (s)",
+        cal::anchor_edp_17b_q8_32_16::JETSON_LATENCY_S,
+        jet.e2e_seconds(&w5),
+    );
+    anchor_row(
+        "1.7B Q8[32:16] Jetson EDP (J*s)",
+        cal::anchor_edp_17b_q8_32_16::JETSON,
+        jet.e2e_seconds(&w5) * jet.energy(&w5).pdp_j(),
+    );
+    t.print();
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = model_flag(flags)?;
+    let scheme = scheme_flag(flags)?;
+    let n_out: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let prompt_text = flags
+        .get("prompt")
+        .cloned()
+        .unwrap_or_else(|| "the coarse-grained linear array accelerates".to_string());
+
+    eprintln!("building {} ({}) with random-init weights…", cfg.name, scheme.name());
+    let weights = ModelWeights::random(&cfg, scheme, 2025);
+    let tok = Tokenizer::train(&prompt_text.repeat(8), 64);
+    let prompt = tok.encode_with_bos(&prompt_text);
+    let mut engine = Engine::new(weights);
+
+    let dev = ImaxDevice::fpga(2);
+    let policy = imax_llm::coordinator::OffloadPolicy::new(LmmConfig::new(64));
+    let mut exec = InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+    let t0 = std::time::Instant::now();
+    let res = engine.generate(&prompt, n_out, &mut Sampler::top_k(0.9, 40, 7), &mut exec);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("prompt tokens : {}", prompt.len());
+    println!("output tokens : {}", res.tokens.len());
+    println!("output text   : {:?}", tok.decode(&res.tokens));
+    println!(
+        "wall time     : {wall:.3}s ({:.1} tok/s)",
+        (prompt.len() + res.tokens.len()) as f64 / wall
+    );
+    println!(
+        "modeled IMAX  : prefill {:.4}s decode {:.4}s (FPGA 2-lane)",
+        exec.modeled.prefill.total(),
+        exec.modeled.decode.total()
+    );
+    exec.stats.table(&format!("{} {}", cfg.name, scheme.name())).print();
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = model_flag(flags)?;
+    let scheme = scheme_flag(flags)?;
+    let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    eprintln!("building {} ({})…", cfg.name, scheme.name());
+    let weights = ModelWeights::random(&cfg, scheme, 2025);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| Request {
+            id,
+            prompt: (0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32).collect(),
+            n_out: 16,
+        })
+        .collect();
+    let rep = serve(&weights, requests, workers, 42);
+    println!(
+        "served {} requests / {} tokens in {:.2}s — {:.1} tok/s, p50 {:.3}s p95 {:.3}s",
+        rep.completions.len(),
+        rep.total_tokens,
+        rep.wall_s,
+        rep.throughput_tok_s,
+        rep.latency_p50_s,
+        rep.latency_p95_s
+    );
+    Ok(())
+}
+
+fn cmd_build_model(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = model_flag(flags)?;
+    let scheme = scheme_flag(flags)?;
+    let out = flags.get("out").context("--out required")?;
+    let weights = ModelWeights::random(&cfg, scheme, 2025);
+    imax_llm::model::file::save(&weights, out)?;
+    println!(
+        "wrote {} ({} params, {})",
+        out,
+        cfg.n_params(),
+        imax_llm::util::human_bytes(weights.nbytes())
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+
+    match cmd {
+        "table1" => exp::table1().print(),
+        "table2" => exp::table2().print(),
+        "fig11" | "fig12" | "fig13" => {
+            eprintln!("evaluating the 54-workload grid…");
+            let grid = exp::eval_grid();
+            match cmd {
+                "fig11" => exp::fig11(&grid).print(),
+                "fig12" => exp::fig12(&grid).print(),
+                _ => exp::fig13(&grid).print(),
+            }
+        }
+        "fig14" => exp::fig14(&[16, 32, 64, 128, 256, 512]).print(),
+        "fig15" => exp::fig15().print(),
+        "fig16" => exp::fig16().print(),
+        "ablate-dma" => exp::ablate_dma().print(),
+        "anchors" => cmd_anchors(),
+        "kernels" => cmd_kernels(),
+        "run" => cmd_run(&flags)?,
+        "serve" => cmd_serve(&flags)?,
+        "build-model" => cmd_build_model(&flags)?,
+        "all" => {
+            let grid = exp::eval_grid();
+            exp::table1().print();
+            exp::fig11(&grid).print();
+            exp::fig12(&grid).print();
+            exp::fig13(&grid).print();
+            exp::fig14(&[16, 32, 64, 128, 256, 512]).print();
+            exp::fig15().print();
+            exp::fig16().print();
+            exp::table2().print();
+            exp::ablate_dma().print();
+            cmd_anchors();
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+        }
+        other => bail!("unknown command '{other}' (try `imax-llm help`)"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+imax-llm — IMAX CGLA LLM-acceleration reproduction (IEEE Access 2025)
+
+experiments:
+  table1            device specifications
+  table2            offload ratios per model/quant/kernel
+  fig11|fig12|fig13 E2E latency / PDP / EDP across the 54-workload grid
+  fig14             LMM-size sweep (PDP)
+  fig15             prefill/decode execution-time breakdown
+  fig16             lane scalability
+  ablate-dma        DMA transfer-coalescing ablation
+  anchors           calibration vs the paper's published numbers
+  all               everything above
+
+functional engine (real tiny models, real tokens):
+  run         [--model tiny|110m] [--scheme F16|Q8_0|Q3_K_S] [--prompt txt] [--n N]
+  serve       [--requests N] [--workers N] [--model tiny|110m] [--scheme S]
+  build-model --out model.imx3 [--model tiny|110m] [--scheme S]
+  kernels     Fig 5-9 kernel-mapping summary
+";

@@ -1,0 +1,406 @@
+//! Binary model file format (a minimal GGUF analogue).
+//!
+//! The paper's experiments load "the exact same quantized model files" on
+//! every platform; our serving example does the same — build a model once
+//! (`imax-llm build-model`), then every run loads identical bytes. The
+//! format stores the config, the quant scheme, and each tensor's raw ggml
+//! block bytes.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  u32 = 0x494D5833  ("IMX3")
+//! version u32 = 1
+//! config: name_len u32, name bytes, 10 × u32 fields
+//! scheme: u8 (0=F16, 1=Q8_0, 2=Q3_K_S)
+//! n_tensors u32
+//! per tensor: name_len u32, name, ty u8, rows u64, cols u64,
+//!             nbytes u64, raw block bytes
+//! ```
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::{ModelConfig, QuantScheme};
+use crate::model::weights::{LayerWeights, ModelWeights};
+use crate::quant::{GgmlType, QK_K};
+use crate::tensor::{QTensor, TensorData};
+use crate::util::f16::F16;
+
+const MAGIC: u32 = 0x494D_5833;
+const VERSION: u32 = 1;
+
+fn ty_code(ty: GgmlType) -> u8 {
+    match ty {
+        GgmlType::F32 => 0,
+        GgmlType::F16 => 1,
+        GgmlType::Q8_0 => 2,
+        GgmlType::Q6K => 3,
+        GgmlType::Q3K => 4,
+    }
+}
+
+fn ty_from_code(c: u8) -> Result<GgmlType> {
+    Ok(match c {
+        0 => GgmlType::F32,
+        1 => GgmlType::F16,
+        2 => GgmlType::Q8_0,
+        3 => GgmlType::Q6K,
+        4 => GgmlType::Q3K,
+        _ => bail!("unknown tensor type code {c}"),
+    })
+}
+
+fn scheme_code(s: QuantScheme) -> u8 {
+    match s {
+        QuantScheme::F16 => 0,
+        QuantScheme::Q8_0 => 1,
+        QuantScheme::Q3KS => 2,
+    }
+}
+
+fn scheme_from_code(c: u8) -> Result<QuantScheme> {
+    Ok(match c {
+        0 => QuantScheme::F16,
+        1 => QuantScheme::Q8_0,
+        2 => QuantScheme::Q3KS,
+        _ => bail!("unknown scheme code {c}"),
+    })
+}
+
+/// Serialize a tensor's data to raw ggml block bytes.
+fn tensor_bytes(t: &QTensor) -> Vec<u8> {
+    match &t.data {
+        TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        TensorData::F16(v) => v.iter().flat_map(|h| h.0.to_le_bytes()).collect(),
+        TensorData::Q8_0(b) => crate::quant::q8_0::to_bytes(b),
+        TensorData::Q6K(b) => crate::quant::q6_k::to_bytes(b),
+        TensorData::Q3K(b) => crate::quant::q3_k::to_bytes(b),
+    }
+}
+
+/// Rebuild a tensor from raw block bytes.
+fn tensor_from_bytes(
+    name: &str,
+    ty: GgmlType,
+    rows: usize,
+    cols: usize,
+    bytes: &[u8],
+) -> Result<QTensor> {
+    let expect = rows * ty.row_bytes(cols);
+    if bytes.len() != expect {
+        bail!("tensor {name}: expected {expect} bytes, got {}", bytes.len());
+    }
+    let data = match ty {
+        GgmlType::F32 => TensorData::F32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        GgmlType::F16 => TensorData::F16(
+            bytes
+                .chunks_exact(2)
+                .map(|c| F16(u16::from_le_bytes([c[0], c[1]])))
+                .collect(),
+        ),
+        GgmlType::Q8_0 => TensorData::Q8_0(crate::quant::q8_0::from_bytes(bytes)),
+        GgmlType::Q6K => TensorData::Q6K(crate::quant::q6_k::from_bytes(bytes)),
+        GgmlType::Q3K => TensorData::Q3K(crate::quant::q3_k::from_bytes(bytes)),
+    };
+    Ok(QTensor {
+        name: name.to_string(),
+        ty,
+        rows,
+        cols,
+        data,
+    })
+}
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u8(&mut self, v: u8) -> io::Result<()> {
+        self.w.write_all(&[v])
+    }
+    fn u32(&mut self, v: u32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn f32(&mut self, v: f32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+    fn str(&mut self, s: &str) -> io::Result<()> {
+        self.u32(s.len() as u32)?;
+        self.w.write_all(s.as_bytes())
+    }
+    fn tensor(&mut self, t: &QTensor) -> io::Result<()> {
+        self.str(&t.name)?;
+        self.u8(ty_code(t.ty))?;
+        self.u64(t.rows as u64)?;
+        self.u64(t.cols as u64)?;
+        let bytes = tensor_bytes(t);
+        self.u64(bytes.len() as u64)?;
+        self.w.write_all(&bytes)
+    }
+    fn f32_vec(&mut self, name: &str, v: &[f32]) -> io::Result<()> {
+        self.str(name)?;
+        self.u8(ty_code(GgmlType::F32))?;
+        self.u64(1)?;
+        self.u64(v.len() as u64)?;
+        self.u64(4 * v.len() as u64)?;
+        for &x in v {
+            self.f32(x)?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            bail!("string length {n} unreasonable (corrupt file?)");
+        }
+        let mut b = vec![0u8; n];
+        self.r.read_exact(&mut b)?;
+        Ok(String::from_utf8(b)?)
+    }
+    fn tensor(&mut self) -> Result<QTensor> {
+        let name = self.str()?;
+        let ty = ty_from_code(self.u8()?)?;
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let nbytes = self.u64()? as usize;
+        if nbytes > 8usize << 30 {
+            bail!("tensor {name}: {nbytes} bytes unreasonable");
+        }
+        let mut bytes = vec![0u8; nbytes];
+        self.r.read_exact(&mut bytes)?;
+        tensor_from_bytes(&name, ty, rows, cols, &bytes)
+    }
+    fn f32_vec(&mut self, expect_name: &str) -> Result<Vec<f32>> {
+        let t = self.tensor()?;
+        if t.name != expect_name {
+            bail!("expected tensor '{expect_name}', found '{}'", t.name);
+        }
+        match t.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor '{expect_name}' is not F32"),
+        }
+    }
+}
+
+/// Save model weights to `path`.
+pub fn save(weights: &ModelWeights, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let f = fs::File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = Writer {
+        w: io::BufWriter::new(f),
+    };
+    let cfg = &weights.cfg;
+    w.u32(MAGIC)?;
+    w.u32(VERSION)?;
+    w.str(cfg.name)?;
+    for v in [
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        cfg.d_ffn,
+        cfg.vocab_size,
+        cfg.qk_norm as usize,
+        cfg.max_seq_len,
+    ] {
+        w.u32(v as u32)?;
+    }
+    w.f32(cfg.rope_theta)?;
+    w.f32(cfg.rms_eps)?;
+    w.u8(scheme_code(weights.scheme))?;
+    let n_tensors = 1 /*embed*/ + 1 /*head*/ + 1 /*final norm*/
+        + weights.layers.len() * 11;
+    w.u32(n_tensors as u32)?;
+    w.tensor(&weights.embed)?;
+    for (l, lw) in weights.layers.iter().enumerate() {
+        w.f32_vec(&format!("blk.{l}.attn_norm"), &lw.attn_norm)?;
+        w.f32_vec(&format!("blk.{l}.ffn_norm"), &lw.ffn_norm)?;
+        w.f32_vec(&format!("blk.{l}.q_norm"), &lw.q_norm)?;
+        w.f32_vec(&format!("blk.{l}.k_norm"), &lw.k_norm)?;
+        w.tensor(&lw.wq)?;
+        w.tensor(&lw.wk)?;
+        w.tensor(&lw.wv)?;
+        w.tensor(&lw.wo)?;
+        w.tensor(&lw.w_gate)?;
+        w.tensor(&lw.w_up)?;
+        w.tensor(&lw.w_down)?;
+    }
+    w.f32_vec("final_norm", &weights.final_norm)?;
+    w.tensor(&weights.lm_head)?;
+    Ok(())
+}
+
+/// Load model weights from `path`.
+pub fn load(path: impl AsRef<Path>) -> Result<ModelWeights> {
+    let f = fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = Reader {
+        r: io::BufReader::new(f),
+    };
+    if r.u32()? != MAGIC {
+        bail!("bad magic (not an imax-llm model file)");
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        bail!("unsupported version {ver}");
+    }
+    let name = r.str()?;
+    let mut fields = [0u32; 9];
+    for f in fields.iter_mut() {
+        *f = r.u32()?;
+    }
+    let rope_theta = r.f32()?;
+    let rms_eps = r.f32()?;
+    // Leak the name into 'static (model files are loaded once per process).
+    let static_name: &'static str = Box::leak(name.into_boxed_str());
+    let cfg = ModelConfig {
+        name: static_name,
+        n_layers: fields[0] as usize,
+        d_model: fields[1] as usize,
+        n_heads: fields[2] as usize,
+        n_kv_heads: fields[3] as usize,
+        head_dim: fields[4] as usize,
+        d_ffn: fields[5] as usize,
+        vocab_size: fields[6] as usize,
+        qk_norm: fields[7] != 0,
+        max_seq_len: fields[8] as usize,
+        rope_theta,
+        rms_eps,
+    };
+    let scheme = scheme_from_code(r.u8()?)?;
+    let n_tensors = r.u32()? as usize;
+    let expect = 3 + cfg.n_layers * 11;
+    if n_tensors != expect {
+        bail!("expected {expect} tensors, file has {n_tensors}");
+    }
+    let embed = r.tensor()?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let attn_norm = r.f32_vec(&format!("blk.{l}.attn_norm"))?;
+        let ffn_norm = r.f32_vec(&format!("blk.{l}.ffn_norm"))?;
+        let q_norm = r.f32_vec(&format!("blk.{l}.q_norm"))?;
+        let k_norm = r.f32_vec(&format!("blk.{l}.k_norm"))?;
+        layers.push(LayerWeights {
+            attn_norm,
+            ffn_norm,
+            q_norm,
+            k_norm,
+            wq: r.tensor()?,
+            wk: r.tensor()?,
+            wv: r.tensor()?,
+            wo: r.tensor()?,
+            w_gate: r.tensor()?,
+            w_up: r.tensor()?,
+            w_down: r.tensor()?,
+        });
+    }
+    let final_norm = r.f32_vec("final_norm")?;
+    let lm_head = r.tensor()?;
+    Ok(ModelWeights {
+        cfg,
+        scheme,
+        embed,
+        layers,
+        final_norm,
+        lm_head,
+    })
+}
+
+// QK_K referenced to keep the import local to block-size sanity checks.
+const _: () = assert!(QK_K == 256);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::engine::{Engine, NativeExec};
+    use crate::model::graph::Phase;
+    use crate::model::weights::ModelWeights;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("imax_llm_test_{tag}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip_identical_logits() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q3KS, 99);
+        let path = tmpfile("roundtrip");
+        save(&w, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.scheme, QuantScheme::Q3KS);
+        assert_eq!(loaded.cfg.d_model, cfg.d_model);
+
+        let mut e1 = Engine::new(w);
+        let mut e2 = Engine::new(loaded);
+        let l1 = e1.forward(7, Phase::Prefill, true, &mut NativeExec).unwrap();
+        let l2 = e2.forward(7, Phase::Prefill, true, &mut NativeExec).unwrap();
+        assert_eq!(l1, l2, "bit-identical logits after save/load");
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOPE-not-a-model-file").unwrap();
+        let err = load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q8_0, 1);
+        let path = tmpfile("trunc");
+        save(&w, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

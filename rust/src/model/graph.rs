@@ -1,0 +1,328 @@
+//! Kernel-call graph enumeration.
+//!
+//! One token step of llama.cpp-style inference is a fixed sequence of
+//! dot-product kernels (the pink boxes of paper Fig 4). This module
+//! enumerates that sequence *symbolically* — shapes, formats, byte sizes —
+//! so the same code path drives both the functional engine (which executes
+//! each op) and the IMAX timing model (which costs each op at paper scale
+//! without materializing weights). Keeping one enumeration is what makes
+//! the Table 2 offload ratios and the Fig 15 breakdowns consistent with
+//! the real engine.
+
+use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
+use crate::quant::GgmlType;
+use crate::tensor::ActQuant;
+
+/// LLM inference phase (the paper's central workload duality).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Phase {
+    /// Parallel prompt processing.
+    Prefill,
+    /// Sequential token generation.
+    Decode,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// What a dot-product kernel instance computes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum OpKind {
+    /// A weight-matrix projection (weights streamed from model memory).
+    Linear(LinearKind),
+    /// Attention scores q·Kᵀ over the KV cache (FP16 kernel on IMAX).
+    AttnScore,
+    /// Attention mix probs·V over the KV cache (FP16 kernel on IMAX).
+    AttnMix,
+}
+
+impl OpKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Linear(k) => k.name(),
+            OpKind::AttnScore => "attn_score",
+            OpKind::AttnMix => "attn_mix",
+        }
+    }
+}
+
+/// One dot-product kernel instance: `rows` dot products of length `cols`
+/// in weight format `wty`.
+#[derive(Clone, Debug)]
+pub struct MatvecOp {
+    pub kind: OpKind,
+    /// Layer index, or `None` for the LM head.
+    pub layer: Option<usize>,
+    pub wty: GgmlType,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MatvecOp {
+    /// Multiply–accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.rows as u64 * self.cols as u64
+    }
+
+    /// Number of individual dot-product invocations (the unit the paper's
+    /// Table 2 offload ratios are expressed in).
+    pub fn dots(&self) -> u64 {
+        self.rows as u64
+    }
+
+    /// Bytes of the weight-side operand (per-token DMA traffic if
+    /// offloaded: model weights for linears, KV cache for attention).
+    pub fn weight_bytes(&self) -> usize {
+        self.rows * self.wty.row_bytes(self.cols)
+    }
+
+    /// Bytes of the quantized activation operand.
+    pub fn act_bytes(&self) -> usize {
+        match self.wty {
+            GgmlType::F32 | GgmlType::F16 => 4 * self.cols,
+            GgmlType::Q8_0 => GgmlType::Q8_0.row_bytes(self.cols),
+            GgmlType::Q6K | GgmlType::Q3K => {
+                // Q8_K activations: 4 + 256 + 32 bytes per 256 elements.
+                crate::util::ceil_div(self.cols, 256) * crate::quant::q8_k::BLOCK_BYTES
+            }
+        }
+    }
+
+    /// Bytes of the f32 result vector drained back to the host.
+    pub fn out_bytes(&self) -> usize {
+        4 * self.rows
+    }
+
+    /// Number of distinct input arrays the host must coalesce for DMA
+    /// (§III.D: "the Q8_0 kernel requires four distinct input arrays").
+    pub fn dma_operand_arrays(&self) -> usize {
+        match self.wty {
+            // weights + activations (both f32/f16 contiguous).
+            GgmlType::F32 | GgmlType::F16 => 2,
+            // w qs + w scales + act qs + act scales.
+            GgmlType::Q8_0 => 4,
+            // + packed high bits / sub-block scales.
+            GgmlType::Q6K | GgmlType::Q3K => 6,
+        }
+    }
+}
+
+/// Enumerate the dot-product kernels for one token at context position
+/// `pos` (0-based; attention sees `pos + 1` cached entries including the
+/// current token). `logits` selects whether the LM head runs (llama.cpp
+/// computes logits for the last prefill token and every decode token).
+pub fn ops_for_token(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    pos: usize,
+    logits: bool,
+) -> Vec<MatvecOp> {
+    let ctx = pos + 1;
+    let mut ops = Vec::with_capacity(cfg.n_layers * 9 + 1);
+    for layer in 0..cfg.n_layers {
+        let l = Some(layer);
+        for kind in [
+            LinearKind::QProj,
+            LinearKind::KProj,
+            LinearKind::VProj,
+        ] {
+            let (rows, cols) = kind.shape(cfg);
+            ops.push(MatvecOp {
+                kind: OpKind::Linear(kind),
+                layer: l,
+                wty: kind.weight_type(scheme),
+                rows,
+                cols,
+            });
+        }
+        // Attention over the KV cache: n_heads score-dots of length
+        // head_dim per cached position, then the value mix. KV cache is
+        // FP16 (llama.cpp default; paper offloads these to the FP16
+        // kernel).
+        ops.push(MatvecOp {
+            kind: OpKind::AttnScore,
+            layer: l,
+            wty: GgmlType::F16,
+            rows: cfg.n_heads * ctx,
+            cols: cfg.head_dim,
+        });
+        ops.push(MatvecOp {
+            kind: OpKind::AttnMix,
+            layer: l,
+            wty: GgmlType::F16,
+            rows: cfg.n_heads * cfg.head_dim,
+            cols: ctx,
+        });
+        for kind in [
+            LinearKind::OProj,
+            LinearKind::FfnGate,
+            LinearKind::FfnUp,
+            LinearKind::FfnDown,
+        ] {
+            let (rows, cols) = kind.shape(cfg);
+            ops.push(MatvecOp {
+                kind: OpKind::Linear(kind),
+                layer: l,
+                wty: kind.weight_type(scheme),
+                rows,
+                cols,
+            });
+        }
+    }
+    if logits {
+        let (rows, cols) = LinearKind::LmHead.shape(cfg);
+        ops.push(MatvecOp {
+            kind: OpKind::Linear(LinearKind::LmHead),
+            layer: None,
+            wty: LinearKind::LmHead.weight_type(scheme),
+            rows,
+            cols,
+        });
+    }
+    ops
+}
+
+/// Enumerate all token steps of a `[n_in : n_out]` workload (the paper's
+/// token-I/O notation): prefill positions `0..n_in`, then decode positions
+/// `n_in..n_in+n_out`.
+pub fn ops_for_workload(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    n_in: usize,
+    n_out: usize,
+) -> Vec<(Phase, Vec<MatvecOp>)> {
+    let mut steps = Vec::with_capacity(n_in + n_out);
+    for pos in 0..n_in {
+        let logits = pos + 1 == n_in; // last prefill token produces logits
+        steps.push((Phase::Prefill, ops_for_token(cfg, scheme, pos, logits)));
+    }
+    for pos in n_in..n_in + n_out {
+        steps.push((Phase::Decode, ops_for_token(cfg, scheme, pos, true)));
+    }
+    steps
+}
+
+/// Quantize an activation for `wty`'s kernel — shared helper so the
+/// functional engine and the byte accounting agree on formats.
+pub fn quantize_activation(wty: GgmlType, x: &[f32]) -> ActQuant {
+    ActQuant::for_weight(wty, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_count_per_token() {
+        let cfg = ModelConfig::tiny();
+        let ops = ops_for_token(&cfg, QuantScheme::Q8_0, 0, true);
+        // 9 ops per layer + lm head.
+        assert_eq!(ops.len(), cfg.n_layers * 9 + 1);
+        let no_logits = ops_for_token(&cfg, QuantScheme::Q8_0, 0, false);
+        assert_eq!(no_logits.len(), cfg.n_layers * 9);
+    }
+
+    #[test]
+    fn attention_grows_with_context() {
+        let cfg = ModelConfig::tiny();
+        let at = |pos: usize| -> u64 {
+            ops_for_token(&cfg, QuantScheme::Q8_0, pos, false)
+                .iter()
+                .filter(|o| matches!(o.kind, OpKind::AttnScore | OpKind::AttnMix))
+                .map(|o| o.macs())
+                .sum()
+        };
+        assert!(at(10) > at(1));
+        // Attention MACs scale linearly in ctx.
+        assert_eq!(at(19), 2 * at(9));
+    }
+
+    #[test]
+    fn linear_macs_independent_of_position() {
+        let cfg = ModelConfig::qwen3_0_6b();
+        let lin = |pos: usize| -> u64 {
+            ops_for_token(&cfg, QuantScheme::Q8_0, pos, true)
+                .iter()
+                .filter(|o| matches!(o.kind, OpKind::Linear(_)))
+                .map(|o| o.macs())
+                .sum()
+        };
+        assert_eq!(lin(0), lin(100));
+        // ~0.75G MACs per token for 0.6B (linear part).
+        let g = lin(0) as f64 / 1e9;
+        assert!((0.5..1.0).contains(&g), "linear GMACs {g}");
+    }
+
+    #[test]
+    fn workload_phases() {
+        let cfg = ModelConfig::tiny();
+        let steps = ops_for_workload(&cfg, QuantScheme::Q3KS, 8, 4);
+        assert_eq!(steps.len(), 12);
+        assert_eq!(
+            steps.iter().filter(|(p, _)| *p == Phase::Prefill).count(),
+            8
+        );
+        // Only the last prefill step has the LM head.
+        let lm_heads_in_prefill: usize = steps[..8]
+            .iter()
+            .map(|(_, ops)| {
+                ops.iter()
+                    .filter(|o| o.kind == OpKind::Linear(LinearKind::LmHead))
+                    .count()
+            })
+            .sum();
+        assert_eq!(lm_heads_in_prefill, 1);
+        // Every decode step has it.
+        for (p, ops) in &steps[8..] {
+            assert_eq!(*p, Phase::Decode);
+            assert!(ops
+                .iter()
+                .any(|o| o.kind == OpKind::Linear(LinearKind::LmHead)));
+        }
+    }
+
+    #[test]
+    fn q3ks_scheme_contains_both_kquants() {
+        let cfg = ModelConfig::tiny();
+        let ops = ops_for_token(&cfg, QuantScheme::Q3KS, 0, true);
+        assert!(ops.iter().any(|o| o.wty == GgmlType::Q3K));
+        assert!(ops.iter().any(|o| o.wty == GgmlType::Q6K));
+        assert!(ops.iter().any(|o| o.wty == GgmlType::F16)); // attention
+    }
+
+    #[test]
+    fn byte_accounting_q8_example() {
+        // A 1.7B Q8_0 ffn_gate: 6144 × 2048 → weight bytes = rows × 2048/32×34.
+        let cfg = ModelConfig::qwen3_1_7b();
+        let ops = ops_for_token(&cfg, QuantScheme::Q8_0, 0, false);
+        let gate = ops
+            .iter()
+            .find(|o| o.kind == OpKind::Linear(LinearKind::FfnGate))
+            .unwrap();
+        assert_eq!(gate.weight_bytes(), 6144 * (2048 / 32) * 34);
+        assert_eq!(gate.act_bytes(), (2048 / 32) * 34);
+        assert_eq!(gate.out_bytes(), 4 * 6144);
+        assert_eq!(gate.dma_operand_arrays(), 4);
+    }
+
+    #[test]
+    fn total_macs_scale_with_model() {
+        let macs = |cfg: &ModelConfig| -> u64 {
+            ops_for_token(cfg, QuantScheme::Q8_0, 31, true)
+                .iter()
+                .map(|o| o.macs())
+                .sum()
+        };
+        let m06 = macs(&ModelConfig::qwen3_0_6b());
+        let m17 = macs(&ModelConfig::qwen3_1_7b());
+        let m8 = macs(&ModelConfig::qwen3_8b());
+        assert!(m17 > 2 * m06);
+        assert!(m8 > 3 * m17);
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-layer KV cache.
+//!
+//! The paper's host CPU owns "KV cache management" (§III.A), and the
+//! decode phase's LOAD-bound behaviour (§V.B) comes from streaming this
+//! cache to the accelerator every step. The functional engine keeps K/V in
+//! f32; the *byte accounting* used by the timing path models the llama.cpp
+//! default of an FP16 cache (see `MatvecOp::weight_bytes` with
+//! `GgmlType::F16`).
+
+use crate::model::config::ModelConfig;
+
+/// KV cache for all layers: `[n_layers][max_seq][kv_dim]`, row-major.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub kv_dim: usize,
+    pub max_seq: usize,
+    /// Current number of cached positions (shared across layers).
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n_layers: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        let kv_dim = cfg.kv_dim();
+        KvCache {
+            kv_dim,
+            max_seq: cfg.max_seq_len,
+            len: 0,
+            k: vec![0.0; cfg.n_layers * cfg.max_seq_len * kv_dim],
+            v: vec![0.0; cfg.n_layers * cfg.max_seq_len * kv_dim],
+            n_layers: cfg.n_layers,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Clear all cached positions (new request on the same engine).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Append one position's K and V for layer `layer`. Positions must be
+    /// appended for every layer before `advance()` is called.
+    pub fn store(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        assert!(self.len < self.max_seq, "KV cache full ({})", self.max_seq);
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        let base = (layer * self.max_seq + self.len) * self.kv_dim;
+        self.k[base..base + self.kv_dim].copy_from_slice(k);
+        self.v[base..base + self.kv_dim].copy_from_slice(v);
+    }
+
+    /// Advance the shared position counter after all layers stored.
+    pub fn advance(&mut self) {
+        self.len += 1;
+    }
+
+    /// K vector of head `kv_head` at position `pos` in `layer`.
+    #[inline]
+    pub fn k_at(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        debug_assert!(pos < self.len || pos < self.max_seq);
+        let base = (layer * self.max_seq + pos) * self.kv_dim + kv_head * head_dim;
+        &self.k[base..base + head_dim]
+    }
+
+    /// V vector of head `kv_head` at position `pos` in `layer`.
+    #[inline]
+    pub fn v_at(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
+        let base = (layer * self.max_seq + pos) * self.kv_dim + kv_head * head_dim;
+        &self.v[base..base + head_dim]
+    }
+
+    /// Bytes one decode step must stream if the cache lives host-side and
+    /// attention is offloaded (FP16 cache entries, both K and V):
+    /// `2 formats × ctx × kv_dim × 2 bytes` per layer.
+    pub fn stream_bytes_per_layer(&self, ctx: usize) -> usize {
+        2 * ctx * self.kv_dim * 2
+    }
+
+    /// Total resident size of the cache at the current length (f16
+    /// accounting, all layers) — the quantity that grows linearly with
+    /// context in the paper's long-context discussion.
+    pub fn resident_bytes_f16(&self) -> usize {
+        2 * self.n_layers * self.len * self.kv_dim * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn store_and_read_roundtrip() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::new(&cfg);
+        let kv_dim = cfg.kv_dim();
+        for pos in 0..3 {
+            for layer in 0..cfg.n_layers {
+                let k: Vec<f32> = (0..kv_dim).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.store(layer, &k, &v);
+            }
+            c.advance();
+        }
+        assert_eq!(c.len(), 3);
+        let hd = cfg.head_dim;
+        let k = c.k_at(1, 2, 1, hd);
+        assert_eq!(k[0], (2 * 100 + 10 + hd) as f32);
+        let v = c.v_at(1, 2, 1, hd);
+        assert_eq!(v[0], -((2 * 100 + 10 + hd) as f32));
+    }
+
+    #[test]
+    fn reset_empties() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::new(&cfg);
+        for layer in 0..cfg.n_layers {
+            c.store(layer, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
+        }
+        c.advance();
+        assert_eq!(c.len(), 1);
+        c.reset();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let cfg = ModelConfig::qwen3_1_7b();
+        let c = KvCache::new(&cfg);
+        // 1.7B: kv_dim = 8*128 = 1024; per layer per ctx entry: 2*2*1024 B.
+        assert_eq!(c.stream_bytes_per_layer(48), 2 * 48 * 1024 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn overflow_detected() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.max_seq_len = 2;
+        let mut c = KvCache::new(&cfg);
+        for _ in 0..3 {
+            c.store(0, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
+            c.advance();
+        }
+    }
+}

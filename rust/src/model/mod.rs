@@ -1,0 +1,31 @@
+//! The LLM inference engine — our from-scratch substitute for llama.cpp
+//! (see DESIGN.md §2), architecture-faithful to Qwen3: GQA attention with
+//! QK-Norm and RoPE, RMSNorm, SwiGLU FFN, untied quantized LM head.
+//!
+//! * [`config`] — hyperparameters: the paper's Qwen3 0.6B/1.7B/8B plus
+//!   tiny runnable presets; quant schemes (Q8_0, Q3_K_S, F16).
+//! * [`graph`] — symbolic enumeration of every dot-product kernel per
+//!   token (shared by the functional engine and the IMAX timing model).
+//! * [`weights`] / [`file`] — quantized tensors; build random-init or
+//!   save/load the crate's binary model format.
+//! * [`kv_cache`] — per-layer KV cache with the byte accounting behind
+//!   the paper's LOAD-bound decode finding.
+//! * [`engine`] — the forward pass and generation loop, with the
+//!   [`engine::MatvecExec`] hook the hybrid coordinator intercepts.
+//! * [`ops`] — host-side operators (RMSNorm, RoPE, softmax, SwiGLU).
+//! * [`sampler`] — greedy / top-k temperature sampling.
+
+pub mod config;
+pub mod engine;
+pub mod file;
+pub mod graph;
+pub mod kv_cache;
+pub mod ops;
+pub mod sampler;
+pub mod weights;
+
+pub use config::{LinearKind, ModelConfig, QuantScheme};
+pub use engine::{Engine, GenerateResult, MatvecExec, NativeExec};
+pub use graph::{MatvecOp, OpKind, Phase};
+pub use sampler::Sampler;
+pub use weights::ModelWeights;

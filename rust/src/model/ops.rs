@@ -1,0 +1,172 @@
+//! Host-side (non-offloaded) operators.
+//!
+//! Per the paper's task partitioning (Fig 4) these stay on the CPU: RMS
+//! normalization, rotary position encodings, softmax, and the SwiGLU
+//! activation — "complex, sequential control flow" operations whose
+//! parameter counts and FLOP shares are negligible next to the dot-product
+//! kernels.
+
+/// RMSNorm: `y = x / rms(x) * w`, rms = sqrt(mean(x²) + eps).
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), out.len());
+    let ss: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ss + eps).sqrt();
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * inv * wi;
+    }
+}
+
+/// In-place RMSNorm over a slice with its own buffer reuse.
+pub fn rmsnorm_inplace(x: &mut [f32], w: &[f32], eps: f32) {
+    let ss: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ss + eps).sqrt();
+    for (xi, &wi) in x.iter_mut().zip(w) {
+        *xi *= inv * wi;
+    }
+}
+
+/// Rotary position embedding applied in-place to one head vector
+/// (interleaved-pair convention, matching `python/compile/model.py`).
+pub fn rope_inplace(v: &mut [f32], pos: usize, theta_base: f32) {
+    let d = v.len();
+    debug_assert!(d % 2 == 0);
+    let half = d / 2;
+    for i in 0..half {
+        // Pair (v[i], v[i+half]) — "rotate-half" convention used by Qwen.
+        let freq = theta_base.powf(-2.0 * i as f32 / d as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (v[i], v[i + half]);
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// SiLU (swish): `x * sigmoid(x)` — the gate activation of SwiGLU.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU combine: `out[i] = silu(gate[i]) * up[i]`.
+pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    assert_eq!(gate.len(), up.len());
+    assert_eq!(gate.len(), out.len());
+    for ((o, &g), &u) in out.iter_mut().zip(gate).zip(up) {
+        *o = silu(g) * u;
+    }
+}
+
+/// Vector add in place (`acc += x`), the residual connections.
+pub fn add_inplace(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rmsnorm_unit_output_norm() {
+        let mut rng = Rng::new(20);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_normal(&mut x, 3.0);
+        let w = vec![1.0f32; 64];
+        let mut y = vec![0.0f32; 64];
+        rmsnorm(&x, &w, 1e-6, &mut y);
+        let rms = (y.iter().map(|v| v * v).sum::<f32>() / 64.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+    }
+
+    #[test]
+    fn rmsnorm_inplace_matches() {
+        let x = vec![1.0f32, -2.0, 3.0, 0.5];
+        let w = vec![0.5f32, 1.0, 2.0, 1.5];
+        let mut a = vec![0.0f32; 4];
+        rmsnorm(&x, &w, 1e-6, &mut a);
+        let mut b = x.clone();
+        rmsnorm_inplace(&mut b, &w, 1e-6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut rng = Rng::new(21);
+        let mut v = vec![0.0f32; 64];
+        rng.fill_normal(&mut v, 1.0);
+        let orig = v.clone();
+        let norm0: f32 = v.iter().map(|x| x * x).sum();
+        rope_inplace(&mut v, 0, 1e4);
+        assert_eq!(v, orig, "pos 0 is identity");
+        rope_inplace(&mut v, 17, 1e4);
+        let norm1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() / norm0 < 1e-5, "rotation preserves norm");
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <rope(q,m), rope(k,n)> depends only on m-n (per frequency pair):
+        // check a shifted pair yields the same dot product.
+        let q0 = vec![0.3f32, -1.2, 0.7, 2.0];
+        let k0 = vec![1.0f32, 0.5, -0.25, 0.8];
+        let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let mut q1 = q0.clone();
+        let mut k1 = k0.clone();
+        rope_inplace(&mut q1, 5, 1e4);
+        rope_inplace(&mut k1, 3, 1e4);
+        let mut q2 = q0.clone();
+        let mut k2 = k0.clone();
+        rope_inplace(&mut q2, 9, 1e4);
+        rope_inplace(&mut k2, 7, 1e4);
+        assert!((dot(&q1, &k1) - dot(&q2, &k2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x.iter().all(|&v| v.is_finite() && v > 0.0));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.731_058_6).abs() < 1e-5);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn swiglu_elementwise() {
+        let gate = [0.0f32, 1.0];
+        let up = [5.0f32, 2.0];
+        let mut out = [0.0f32; 2];
+        swiglu(&gate, &up, &mut out);
+        assert_eq!(out[0], 0.0);
+        assert!((out[1] - 2.0 * silu(1.0)).abs() < 1e-6);
+    }
+}

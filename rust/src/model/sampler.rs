@@ -1,0 +1,123 @@
+//! Token samplers. The paper's host CPU performs "the final Softmax
+//! operation" and token selection; we provide greedy and
+//! temperature/top-k sampling (llama.cpp defaults) with a seeded RNG for
+//! the paper's fixed-seed reproducibility requirement.
+
+use crate::util::rng::Rng;
+
+/// Sampling strategy.
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    /// Argmax (deterministic).
+    Greedy,
+    /// Softmax sampling at `temperature` over the `top_k` best logits.
+    TopK {
+        temperature: f32,
+        top_k: usize,
+        rng: Rng,
+    },
+}
+
+impl Sampler {
+    pub fn greedy() -> Sampler {
+        Sampler::Greedy
+    }
+
+    pub fn top_k(temperature: f32, top_k: usize, seed: u64) -> Sampler {
+        assert!(temperature > 0.0);
+        assert!(top_k >= 1);
+        Sampler::TopK {
+            temperature,
+            top_k,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Pick the next token from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        assert!(!logits.is_empty());
+        match self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::TopK {
+                temperature,
+                top_k,
+                rng,
+            } => {
+                let k = (*top_k).min(logits.len());
+                // Partial selection of the k best (indices).
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap()
+                });
+                idx.truncate(k);
+                // Softmax over the survivors at the given temperature.
+                let max = idx
+                    .iter()
+                    .map(|&i| logits[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f32> = idx
+                    .iter()
+                    .map(|&i| ((logits[i] - max) / *temperature).exp())
+                    .collect();
+                idx[rng.sample_weighted(&weights)] as u32
+            }
+        }
+    }
+}
+
+fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.1, 5.0, -2.0, 4.9]), 1);
+    }
+
+    #[test]
+    fn greedy_first_max_on_tie() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[3.0, 3.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn topk_stays_within_top_k() {
+        let mut s = Sampler::top_k(1.0, 2, 42);
+        let logits = [10.0f32, -50.0, 9.5, -50.0, -50.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 2, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut s = Sampler::top_k(0.01, 5, 7);
+        let logits = [1.0f32, 2.0, 3.0, 2.5, 0.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..100).map(|i| ((i * 37) % 19) as f32 * 0.3).collect();
+        let run = |seed| {
+            let mut s = Sampler::top_k(0.8, 10, seed);
+            (0..20).map(|_| s.sample(&logits)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+}

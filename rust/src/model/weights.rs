@@ -1,0 +1,191 @@
+//! Model weights: quantized tensors for every layer, built either from a
+//! deterministic random initialization (the functional test path — we have
+//! no Qwen3 checkpoint license-free in this offline image) or loaded from
+//! the crate's own binary model file ([`crate::model::file`]).
+//!
+//! Random-init weights exercise *exactly* the same kernels, formats,
+//! shapes and byte counts as real checkpoints; only the text quality
+//! differs, which none of the paper's metrics depend on (DESIGN.md §2).
+
+use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
+use crate::tensor::QTensor;
+use crate::util::rng::Rng;
+
+/// Weights of one decoder layer.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    /// QK-Norm weights (per-head RMSNorm), present when `cfg.qk_norm`.
+    pub q_norm: Vec<f32>,
+    pub k_norm: Vec<f32>,
+    pub wq: QTensor,
+    pub wk: QTensor,
+    pub wv: QTensor,
+    pub wo: QTensor,
+    pub w_gate: QTensor,
+    pub w_up: QTensor,
+    pub w_down: QTensor,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub scheme: QuantScheme,
+    pub embed: QTensor,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: QTensor,
+}
+
+impl ModelWeights {
+    /// Build deterministic random-initialized weights (seeded).
+    ///
+    /// Initialization follows standard transformer practice
+    /// (N(0, 0.02-ish) scaled by fan-in) so activations stay in a sane
+    /// range through all layers and the quantizers see realistic
+    /// distributions.
+    pub fn random(cfg: &ModelConfig, scheme: QuantScheme, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let sigma_d = 0.7 / (cfg.d_model as f32).sqrt();
+
+        let quant_linear = |name: String, kind: LinearKind, rng: &mut Rng| -> QTensor {
+            let (rows, cols) = kind.shape(cfg);
+            let sigma = 0.7 / (cols as f32).sqrt();
+            let mut w = vec![0.0f32; rows * cols];
+            rng.fill_normal(&mut w, sigma);
+            QTensor::quantize(&name, kind.weight_type(scheme), rows, cols, &w)
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: vec![1.0; cfg.d_model],
+                ffn_norm: vec![1.0; cfg.d_model],
+                q_norm: vec![1.0; if cfg.qk_norm { cfg.head_dim } else { 0 }],
+                k_norm: vec![1.0; if cfg.qk_norm { cfg.head_dim } else { 0 }],
+                wq: quant_linear(format!("blk.{l}.attn_q"), LinearKind::QProj, &mut rng),
+                wk: quant_linear(format!("blk.{l}.attn_k"), LinearKind::KProj, &mut rng),
+                wv: quant_linear(format!("blk.{l}.attn_v"), LinearKind::VProj, &mut rng),
+                wo: quant_linear(format!("blk.{l}.attn_output"), LinearKind::OProj, &mut rng),
+                w_gate: quant_linear(format!("blk.{l}.ffn_gate"), LinearKind::FfnGate, &mut rng),
+                w_up: quant_linear(format!("blk.{l}.ffn_up"), LinearKind::FfnUp, &mut rng),
+                w_down: quant_linear(format!("blk.{l}.ffn_down"), LinearKind::FfnDown, &mut rng),
+            });
+        }
+
+        // Embedding table stored in the LM-head's format (llama.cpp keeps
+        // token_embd quantized too); rows are dequantized on lookup.
+        let emb_ty = LinearKind::LmHead.weight_type(scheme);
+        let mut emb = vec![0.0f32; cfg.vocab_size * cfg.d_model];
+        rng.fill_normal(&mut emb, sigma_d);
+        let embed = QTensor::quantize("token_embd", emb_ty, cfg.vocab_size, cfg.d_model, &emb);
+
+        let mut head = vec![0.0f32; cfg.vocab_size * cfg.d_model];
+        rng.fill_normal(&mut head, sigma_d);
+        let lm_head = QTensor::quantize(
+            "output",
+            emb_ty,
+            cfg.vocab_size,
+            cfg.d_model,
+            &head,
+        );
+
+        ModelWeights {
+            cfg: cfg.clone(),
+            scheme,
+            embed,
+            layers,
+            final_norm: vec![1.0; cfg.d_model],
+            lm_head,
+        }
+    }
+
+    /// Pick the weight tensor for a linear kind in a layer.
+    pub fn linear(&self, layer: usize, kind: LinearKind) -> &QTensor {
+        match kind {
+            LinearKind::QProj => &self.layers[layer].wq,
+            LinearKind::KProj => &self.layers[layer].wk,
+            LinearKind::VProj => &self.layers[layer].wv,
+            LinearKind::OProj => &self.layers[layer].wo,
+            LinearKind::FfnGate => &self.layers[layer].w_gate,
+            LinearKind::FfnUp => &self.layers[layer].w_up,
+            LinearKind::FfnDown => &self.layers[layer].w_down,
+            LinearKind::LmHead => &self.lm_head,
+        }
+    }
+
+    /// Total serialized weight bytes (matches `config::model_bytes` up to
+    /// the f32-vs-f16 norm storage detail).
+    pub fn nbytes(&self) -> usize {
+        let mut total = self.embed.nbytes() + self.lm_head.nbytes();
+        for l in &self.layers {
+            total += l.wq.nbytes()
+                + l.wk.nbytes()
+                + l.wv.nbytes()
+                + l.wo.nbytes()
+                + l.w_gate.nbytes()
+                + l.w_up.nbytes()
+                + l.w_down.nbytes();
+            total += 4 * (l.attn_norm.len() + l.ffn_norm.len() + l.q_norm.len() + l.k_norm.len());
+        }
+        total + 4 * self.final_norm.len()
+    }
+
+    /// Dequantized embedding row for a token id.
+    pub fn embed_token(&self, tok: u32) -> Vec<f32> {
+        assert!((tok as usize) < self.cfg.vocab_size, "token {tok} out of vocab");
+        self.embed.dequantize_row(tok as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GgmlType as T;
+
+    #[test]
+    fn tiny_builds_with_expected_types() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q3KS, 1);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        assert_eq!(w.layers[0].wq.ty, T::Q3K);
+        assert_eq!(w.layers[0].wv.ty, T::Q6K);
+        assert_eq!(w.layers[0].w_down.ty, T::Q6K);
+        assert_eq!(w.lm_head.ty, T::Q6K);
+        assert_eq!(w.layers[0].wq.rows, cfg.q_dim());
+        assert_eq!(w.layers[0].wk.rows, cfg.kv_dim());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ModelConfig::tiny();
+        let a = ModelWeights::random(&cfg, QuantScheme::Q8_0, 7);
+        let b = ModelWeights::random(&cfg, QuantScheme::Q8_0, 7);
+        assert_eq!(a.embed_token(5), b.embed_token(5));
+        assert_eq!(a.layers[2].wq.dequantize_row(3), b.layers[2].wq.dequantize_row(3));
+    }
+
+    #[test]
+    fn embedding_rows_are_sane() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q8_0, 2);
+        let e = w.embed_token(100);
+        assert_eq!(e.len(), cfg.d_model);
+        let norm = (e.iter().map(|v| v * v).sum::<f32>() / e.len() as f32).sqrt();
+        assert!(norm > 0.005 && norm < 0.5, "rms {norm}");
+    }
+
+    #[test]
+    fn nbytes_close_to_config_estimate() {
+        let cfg = ModelConfig::tiny();
+        for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS, QuantScheme::F16] {
+            let w = ModelWeights::random(&cfg, scheme, 3);
+            let est = crate::model::config::model_bytes(&cfg, scheme);
+            let got = w.nbytes();
+            let ratio = got as f64 / est as f64;
+            assert!((0.95..1.1).contains(&ratio), "{}: {ratio}", scheme.name());
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! FP16 tensor format and the FP16 dot-product kernel.
+//!
+//! The paper keeps normalization-layer weights (and uses FP16 as the
+//! baseline kernel) in half precision; its Fig 6 dataflow converts incoming
+//! FP16 data to FP32 in-line through a per-PE lookup table, then runs
+//! 2-way SIMD FMA with column-wise multithreading (22 arithmetic units,
+//! 16 elements per burst). Functionally that is: widen to f32, FMA, which
+//! is what [`vec_dot_f16`] does.
+
+use crate::util::f16::F16;
+
+/// Quantize a row to raw little-endian f16 bytes.
+pub fn quantize_row_f16_bytes(x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(x.len() * 2);
+    for &v in x {
+        out.extend_from_slice(&F16::from_f32(v).0.to_le_bytes());
+    }
+    out
+}
+
+/// Dequantize raw little-endian f16 bytes to f32.
+pub fn dequantize_row_f16_bytes(bytes: &[u8], n: usize) -> Vec<f32> {
+    assert!(bytes.len() >= 2 * n);
+    bytes
+        .chunks_exact(2)
+        .take(n)
+        .map(|c| F16(u16::from_le_bytes([c[0], c[1]])).to_f32())
+        .collect()
+}
+
+/// Encode an f32 slice as an F16 vector.
+pub fn encode_row(x: &[f32]) -> Vec<F16> {
+    x.iter().map(|&v| F16::from_f32(v)).collect()
+}
+
+/// FP16 dot product against f32 activations: widen each weight to f32
+/// (the paper's LUT conversion) and FMA. Activations stay f32 on the host
+/// path, matching llama.cpp's `ggml_vec_dot_f16` usage for norm weights.
+#[inline]
+pub fn vec_dot_f16(w: &[F16], a: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), a.len());
+    // LUT conversion (the paper's in-PE table, Fig 6) + 4 independent
+    // accumulators modelling the 2-way SIMD FMA with column
+    // multithreading; also lets LLVM vectorize the gather-multiply.
+    let mut acc = [0.0f32; 4];
+    let chunks = w.len() / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc[0] += w[i].to_f32_lut() * a[i];
+        acc[1] += w[i + 1].to_f32_lut() * a[i + 1];
+        acc[2] += w[i + 2].to_f32_lut() * a[i + 2];
+        acc[3] += w[i + 3].to_f32_lut() * a[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in 4 * chunks..w.len() {
+        tail += w[i].to_f32_lut() * a[i];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// FP16×FP16 dot (both operands half precision), used when activations are
+/// also stored compressed (KV-cache reads in some configurations).
+#[inline]
+pub fn vec_dot_f16_f16(w: &[F16], a: &[F16]) -> f32 {
+    debug_assert_eq!(w.len(), a.len());
+    w.iter()
+        .zip(a.iter())
+        .map(|(x, y)| x.to_f32() * y.to_f32())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let x = [1.0f32, -0.5, 3.14159, 65504.0];
+        let b = quantize_row_f16_bytes(&x);
+        assert_eq!(b.len(), 8);
+        let y = dequantize_row_f16_bytes(&b, 4);
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((xi - yi).abs() / xi.abs().max(1.0) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dot_matches_f32_within_half_precision() {
+        let mut rng = Rng::new(13);
+        let n = 1000;
+        let mut w = vec![0.0f32; n];
+        let mut a = vec![0.0f32; n];
+        rng.fill_normal(&mut w, 1.0);
+        rng.fill_normal(&mut a, 1.0);
+        let wh = encode_row(&w);
+        let got = vec_dot_f16(&wh, &a);
+        let want: f32 = w.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let scale: f32 = (n as f32).sqrt();
+        assert!((got - want).abs() < 2e-3 * scale, "{got} vs {want}");
+    }
+
+    #[test]
+    fn odd_length_handled() {
+        let w = encode_row(&[1.0, 2.0, 3.0]);
+        let a = [1.0f32, 1.0, 1.0];
+        assert_eq!(vec_dot_f16(&w, &a), 6.0);
+    }
+
+    #[test]
+    fn f16_f16_dot() {
+        let w = encode_row(&[0.5, -2.0]);
+        let a = encode_row(&[4.0, 1.0]);
+        assert_eq!(vec_dot_f16_f16(&w, &a), 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Block quantization formats — the llama.cpp/ggml substrate the paper's
+//! kernels operate on (§III.B of the paper).
+//!
+//! The paper implements four dot-product kernels on IMAX:
+//!
+//! | kernel | format | bits/weight | block | paper dataflow |
+//! |--------|--------|-------------|-------|----------------|
+//! | FP16   | [`fp16`] | 16 | — | Fig 6: LUT F16→F32 + SIMD FMA |
+//! | Q8_0   | [`q8_0`] | 8.5 | 32 | Figs 5/7: SML8 + AD24 + f32 scale |
+//! | Q6_K   | [`q6_k`] | 6.56 | 256 | Fig 8: CVT86 decode + SML16 MAC |
+//! | Q3_K   | [`q3_k`] | 3.44 | 256 | Fig 9: CVT53 decode + INT8 MAC |
+//!
+//! Block layouts follow ggml (`block_q8_0`, `block_q6_K`, `block_q3_K`) so
+//! tensor byte sizes — which drive the paper's DMA/LMM analysis — are
+//! exact. Activations are quantized per ggml convention: [`q8_0`] rows for
+//! Q8_0 weights, [`q8_k`] super-block rows for the K-quants. All integer
+//! dot products accumulate in i32 (the paper's hardware uses 24-bit
+//! accumulators; i32 is a superset, and per-block sums fit in 24 bits:
+//! 32 × 127 × 127 < 2^23).
+
+pub mod fp16;
+pub mod q3_k;
+pub mod q6_k;
+pub mod q8_0;
+pub mod q8_k;
+
+use crate::util::ceil_div;
+
+/// Super-block size shared by the K-quants (ggml `QK_K`).
+pub const QK_K: usize = 256;
+
+/// Tensor element formats used across the system.
+///
+/// `GgmlType` mirrors the subset of ggml types the paper maps onto IMAX,
+/// plus `F32` for host-side activations.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum GgmlType {
+    F32,
+    F16,
+    Q8_0,
+    Q6K,
+    Q3K,
+}
+
+impl GgmlType {
+    /// Elements per quantization block.
+    pub const fn block_size(self) -> usize {
+        match self {
+            GgmlType::F32 | GgmlType::F16 => 1,
+            GgmlType::Q8_0 => q8_0::QK8_0,
+            GgmlType::Q6K | GgmlType::Q3K => QK_K,
+        }
+    }
+
+    /// Bytes per quantization block.
+    pub const fn block_bytes(self) -> usize {
+        match self {
+            GgmlType::F32 => 4,
+            GgmlType::F16 => 2,
+            GgmlType::Q8_0 => q8_0::BLOCK_BYTES,
+            GgmlType::Q6K => q6_k::BLOCK_BYTES,
+            GgmlType::Q3K => q3_k::BLOCK_BYTES,
+        }
+    }
+
+    /// Bytes needed to store `n` elements (n must be block-aligned for the
+    /// quantized types; callers pad rows to block multiples).
+    pub const fn row_bytes(self, n: usize) -> usize {
+        ceil_div(n, self.block_size()) * self.block_bytes()
+    }
+
+    /// Effective bits per weight (the paper quotes Q3_K_S as a 4.5×
+    /// footprint reduction vs FP16; 16 / 3.44 ≈ 4.65 ✓).
+    pub fn bits_per_weight(self) -> f64 {
+        self.block_bytes() as f64 * 8.0 / self.block_size() as f64
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GgmlType::F32 => "F32",
+            GgmlType::F16 => "FP16",
+            GgmlType::Q8_0 => "Q8_0",
+            GgmlType::Q6K => "Q6_K",
+            GgmlType::Q3K => "Q3_K",
+        }
+    }
+}
+
+/// Quantize an f32 row into `ty` format, returning raw block bytes.
+/// `n` must be a multiple of `ty.block_size()`.
+pub fn quantize_row(ty: GgmlType, x: &[f32]) -> Vec<u8> {
+    match ty {
+        GgmlType::F32 => x.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        GgmlType::F16 => fp16::quantize_row_f16_bytes(x),
+        GgmlType::Q8_0 => q8_0::quantize_row_bytes(x),
+        GgmlType::Q6K => q6_k::quantize_row_bytes(x),
+        GgmlType::Q3K => q3_k::quantize_row_bytes(x),
+    }
+}
+
+/// Dequantize raw block bytes back to f32 (`n` elements).
+pub fn dequantize_row(ty: GgmlType, bytes: &[u8], n: usize) -> Vec<f32> {
+    match ty {
+        GgmlType::F32 => bytes
+            .chunks_exact(4)
+            .take(n)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        GgmlType::F16 => fp16::dequantize_row_f16_bytes(bytes, n),
+        GgmlType::Q8_0 => q8_0::dequantize_row_bytes(bytes, n),
+        GgmlType::Q6K => q6_k::dequantize_row_bytes(bytes, n),
+        GgmlType::Q3K => q3_k::dequantize_row_bytes(bytes, n),
+    }
+}
+
+/// Worst-case relative RMS quantization error per format, used by tests
+/// and by the accuracy notes in EXPERIMENTS.md. Values are loose upper
+/// bounds for N(0,1) data validated by the property tests.
+pub fn expected_rmse_bound(ty: GgmlType) -> f32 {
+    match ty {
+        GgmlType::F32 => 0.0,
+        GgmlType::F16 => 1e-3,
+        GgmlType::Q8_0 => 0.012,
+        GgmlType::Q6K => 0.05,
+        GgmlType::Q3K => 0.35,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rmse;
+
+    #[test]
+    fn block_geometry_matches_ggml() {
+        assert_eq!(GgmlType::Q8_0.block_size(), 32);
+        assert_eq!(GgmlType::Q8_0.block_bytes(), 34); // 2 (f16 d) + 32 (i8)
+        assert_eq!(GgmlType::Q6K.block_size(), 256);
+        assert_eq!(GgmlType::Q6K.block_bytes(), 210); // 128+64+16+2
+        assert_eq!(GgmlType::Q3K.block_size(), 256);
+        assert_eq!(GgmlType::Q3K.block_bytes(), 110); // 32+64+12+2
+    }
+
+    #[test]
+    fn bits_per_weight() {
+        assert!((GgmlType::Q8_0.bits_per_weight() - 8.5).abs() < 1e-9);
+        assert!((GgmlType::Q6K.bits_per_weight() - 6.5625).abs() < 1e-9);
+        assert!((GgmlType::Q3K.bits_per_weight() - 3.4375).abs() < 1e-9);
+        // Paper §III.B: Q3_K ≈ 4.5× smaller than FP16.
+        let ratio = 16.0 / GgmlType::Q3K.bits_per_weight();
+        assert!(ratio > 4.4 && ratio < 4.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn row_bytes_examples() {
+        // A Qwen3-0.6B gate projection row (d_ffn=3072) in each format.
+        assert_eq!(GgmlType::F16.row_bytes(3072), 6144);
+        assert_eq!(GgmlType::Q8_0.row_bytes(3072), 3072 / 32 * 34);
+        assert_eq!(GgmlType::Q6K.row_bytes(3072), 3072 / 256 * 210);
+        assert_eq!(GgmlType::Q3K.row_bytes(3072), 3072 / 256 * 110);
+    }
+
+    #[test]
+    fn roundtrip_rmse_within_bound_all_formats() {
+        let mut rng = Rng::new(2025);
+        for ty in [GgmlType::F16, GgmlType::Q8_0, GgmlType::Q6K, GgmlType::Q3K] {
+            let n = 4 * ty.block_size().max(32);
+            let mut x = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 1.0);
+            let q = quantize_row(ty, &x);
+            assert_eq!(q.len(), ty.row_bytes(n));
+            let y = dequantize_row(ty, &q, n);
+            let scale = x.iter().map(|v| v * v).sum::<f32>().sqrt() / (n as f32).sqrt();
+            let e = rmse(&x, &y) / scale;
+            assert!(
+                e <= expected_rmse_bound(ty),
+                "{}: rmse {} > bound {}",
+                ty.name(),
+                e,
+                expected_rmse_bound(ty)
+            );
+        }
+    }
+
+    #[test]
+    fn f32_row_roundtrip_exact() {
+        let x = [1.5f32, -2.25, 0.0, 1e-20];
+        let b = quantize_row(GgmlType::F32, &x);
+        assert_eq!(dequantize_row(GgmlType::F32, &b, 4), x);
+    }
+}

@@ -1,0 +1,355 @@
+//! Q6_K: 6.5625-bit super-block quantization (ggml `block_q6_K`).
+//!
+//! 256 elements per super-block, 16 sub-blocks of 16 with signed int8
+//! scales and one f16 super-scale:
+//!
+//! ```text
+//! ql[128]   low 4 bits of each 6-bit q
+//! qh[64]    high 2 bits of each q
+//! scales[16] int8 sub-block scales
+//! d         f16 super scale
+//! x[i] = d * scales[i/16] * (q[i] - 32),   q in [0, 63]
+//! ```
+//!
+//! 210 bytes / 256 = 6.5625 bpw. The paper's Fig 8 dataflow decodes the
+//! packed QL/QH pairs with the custom `CVT86` instruction into 16-bit
+//! intermediates and feeds the shared INT8 MAC back-end (`SML16`); our
+//! [`vec_dot`] performs the same decode-then-MAC with i32 accumulation and
+//! applies `d * d_a` at the end, using the activation `bsums` to fold the
+//! constant `-32` offset exactly like llama.cpp's scalar kernel.
+
+use crate::quant::q8_k::BlockQ8K;
+use crate::quant::QK_K;
+use crate::util::f16::F16;
+
+/// Bytes per super-block: ql(128) + qh(64) + scales(16) + d(2).
+pub const BLOCK_BYTES: usize = QK_K / 2 + QK_K / 4 + QK_K / 16 + 2;
+
+/// One Q6_K super-block (ggml memory layout).
+#[derive(Clone, Debug)]
+pub struct BlockQ6K {
+    pub ql: [u8; QK_K / 2],
+    pub qh: [u8; QK_K / 4],
+    pub scales: [i8; QK_K / 16],
+    pub d: F16,
+}
+
+impl Default for BlockQ6K {
+    fn default() -> Self {
+        BlockQ6K {
+            ql: [0; QK_K / 2],
+            qh: [0; QK_K / 4],
+            scales: [0; QK_K / 16],
+            d: F16::ZERO,
+        }
+    }
+}
+
+/// Extract the 6-bit code q[i] ∈ [0,63] for element `i` (ggml layout).
+///
+/// Elements are organized in two 128-halves; within a half, position
+/// `l ∈ [0,32)` and quarter `j ∈ {0,1,2,3}`:
+/// `q = (ql-bits) | (qh-bits << 4)` — see `dequantize_row_q6_K` in ggml.
+#[inline]
+pub fn get_q(b: &BlockQ6K, i: usize) -> u8 {
+    debug_assert!(i < QK_K);
+    let half = i / 128; // 0 or 1
+    let r = i % 128;
+    let j = r / 32; // quarter within the half
+    let l = r % 32;
+    let ql_base = half * 64;
+    let qh_base = half * 32;
+    let low = match j {
+        0 => b.ql[ql_base + l] & 0x0F,
+        1 => b.ql[ql_base + 32 + l] & 0x0F,
+        2 => b.ql[ql_base + l] >> 4,
+        _ => b.ql[ql_base + 32 + l] >> 4,
+    };
+    let high = (b.qh[qh_base + l] >> (2 * j)) & 0x03;
+    low | (high << 4)
+}
+
+/// Store the 6-bit code for element `i` (inverse of [`get_q`]).
+#[inline]
+fn set_q(b: &mut BlockQ6K, i: usize, q: u8) {
+    debug_assert!(q < 64);
+    let half = i / 128;
+    let r = i % 128;
+    let j = r / 32;
+    let l = r % 32;
+    let ql_base = half * 64;
+    let qh_base = half * 32;
+    let low = q & 0x0F;
+    let high = (q >> 4) & 0x03;
+    match j {
+        0 => b.ql[ql_base + l] = (b.ql[ql_base + l] & 0xF0) | low,
+        1 => b.ql[ql_base + 32 + l] = (b.ql[ql_base + 32 + l] & 0xF0) | low,
+        2 => b.ql[ql_base + l] = (b.ql[ql_base + l] & 0x0F) | (low << 4),
+        _ => b.ql[ql_base + 32 + l] = (b.ql[ql_base + 32 + l] & 0x0F) | (low << 4),
+    }
+    let shift = 2 * j;
+    b.qh[qh_base + l] = (b.qh[qh_base + l] & !(0x03 << shift)) | (high << shift);
+}
+
+/// Quantize 256 values into one super-block.
+///
+/// Per sub-block `s`: `a_s = max|x|/31`; super-scale `d = max_s a_s / 127`;
+/// `scales[s] = round(a_s/d)`; `q = clamp(round(x / (d*scales[s])) + 32, 0, 63)`.
+pub fn quantize_block(x: &[f32; QK_K]) -> BlockQ6K {
+    let mut b = BlockQ6K::default();
+    let mut sub_amax = [0.0f32; 16];
+    for (s, chunk) in x.chunks_exact(16).enumerate() {
+        sub_amax[s] = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    }
+    let max_a = sub_amax.iter().fold(0.0f32, |m, &v| m.max(v));
+    if max_a == 0.0 {
+        return b;
+    }
+    // Effective per-sub scale a_s/31 maps values onto q-32 ∈ [-32, 31].
+    let d = max_a / 31.0 / 127.0;
+    b.d = F16::from_f32(d);
+    let d = b.d.to_f32(); // use the f16-rounded value for encoding
+    for s in 0..16 {
+        let sc = if d > 0.0 {
+            (sub_amax[s] / 31.0 / d).round().clamp(-128.0, 127.0) as i8
+        } else {
+            0
+        };
+        b.scales[s] = sc;
+        let step = d * sc as f32;
+        for l in 0..16 {
+            let i = s * 16 + l;
+            let q = if step != 0.0 {
+                (x[i] / step).round().clamp(-32.0, 31.0) as i32 + 32
+            } else {
+                32
+            };
+            set_q(&mut b, i, q as u8);
+        }
+    }
+    b
+}
+
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ6K> {
+    assert_eq!(x.len() % QK_K, 0, "Q6_K row must be 256-aligned");
+    x.chunks_exact(QK_K)
+        .map(|c| quantize_block(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize super-blocks to f32.
+pub fn dequantize_row(blocks: &[BlockQ6K], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    'outer: for b in blocks {
+        let d = b.d.to_f32();
+        for i in 0..QK_K {
+            if out.len() == n {
+                break 'outer;
+            }
+            let q = get_q(b, i) as i32 - 32;
+            out.push(d * b.scales[i / 16] as f32 * q as f32);
+        }
+    }
+    assert_eq!(out.len(), n);
+    out
+}
+
+/// Q6_K × Q8_K integer dot product (ggml `ggml_vec_dot_q6_K_q8_K`).
+///
+/// Accumulates `scales[s] * Σ_l q6[l]*q8[l]` per sub-block in i32, folds
+/// the `-32` offset via the activation `bsums`, then applies `d * d_a`.
+/// This is exactly the decode→INT8-MAC→scale pipeline of paper Fig 8.
+pub fn vec_dot(w: &[BlockQ6K], a: &[BlockQ8K]) -> f32 {
+    debug_assert_eq!(w.len(), a.len());
+    let mut acc = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        // Block-wise decode (no per-element index math): walk the two
+        // 128-halves and the four bit-plane quarters directly, exactly as
+        // the CVT86 hardware streams them (Fig 8). Each (half, j, l<16 /
+        // l>=16) span maps to one sub-block scale.
+        let mut isum = 0i64;
+        let mut mins = 0i32;
+        for s in 0..16 {
+            mins += bw.scales[s] as i32 * ba.bsums[s] as i32;
+        }
+        for half in 0..2 {
+            let ql = &bw.ql[half * 64..half * 64 + 64];
+            let qh = &bw.qh[half * 32..half * 32 + 32];
+            let qa = &ba.qs[half * 128..half * 128 + 128];
+            let sc = &bw.scales[half * 8..half * 8 + 8];
+            let mut subs = [0i32; 8]; // per (j, l-half) sub-block sums
+            for l in 0..32 {
+                let lo_a = ql[l] as i32;
+                let lo_b = ql[32 + l] as i32;
+                let h = qh[l] as i32;
+                let q0 = (lo_a & 0x0F) | ((h & 0x03) << 4);
+                let q1 = (lo_b & 0x0F) | (((h >> 2) & 0x03) << 4);
+                let q2 = (lo_a >> 4) | (((h >> 4) & 0x03) << 4);
+                let q3 = (lo_b >> 4) | (((h >> 6) & 0x03) << 4);
+                let g = l >> 4; // 0 or 1: which 16-sub-block within j
+                subs[g] += q0 * qa[l] as i32;
+                subs[2 + g] += q1 * qa[32 + l] as i32;
+                subs[4 + g] += q2 * qa[64 + l] as i32;
+                subs[6 + g] += q3 * qa[96 + l] as i32;
+            }
+            for (j, &sub) in subs.iter().enumerate() {
+                isum += (sc[j] as i32 * sub) as i64;
+            }
+        }
+        // x = d*sc*(q-32) ⇒ dot = d*d_a*(Σ sc·q·qa − 32·Σ sc·bsum).
+        acc += bw.d.to_f32() * ba.d * (isum - 32 * mins as i64) as f32;
+    }
+    acc
+}
+
+/// Serialize to ggml byte layout: ql, qh, scales, d.
+pub fn to_bytes(blocks: &[BlockQ6K]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(blocks.len() * BLOCK_BYTES);
+    for b in blocks {
+        out.extend_from_slice(&b.ql);
+        out.extend_from_slice(&b.qh);
+        out.extend(b.scales.iter().map(|&s| s as u8));
+        out.extend_from_slice(&b.d.0.to_le_bytes());
+    }
+    out
+}
+
+/// Parse from ggml byte layout.
+pub fn from_bytes(bytes: &[u8]) -> Vec<BlockQ6K> {
+    assert_eq!(bytes.len() % BLOCK_BYTES, 0);
+    bytes
+        .chunks_exact(BLOCK_BYTES)
+        .map(|c| {
+            let mut b = BlockQ6K::default();
+            b.ql.copy_from_slice(&c[0..128]);
+            b.qh.copy_from_slice(&c[128..192]);
+            for (s, &v) in b.scales.iter_mut().zip(&c[192..208]) {
+                *s = v as i8;
+            }
+            b.d = F16(u16::from_le_bytes([c[208], c[209]]));
+            b
+        })
+        .collect()
+}
+
+pub fn quantize_row_bytes(x: &[f32]) -> Vec<u8> {
+    to_bytes(&quantize_row(x))
+}
+
+pub fn dequantize_row_bytes(bytes: &[u8], n: usize) -> Vec<f32> {
+    dequantize_row(&from_bytes(bytes), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::q8_k;
+    use crate::util::proptest_lite::Runner;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn q_codes_roundtrip_all_positions() {
+        let mut b = BlockQ6K::default();
+        // Write a distinct 6-bit pattern to every position and read back.
+        for i in 0..QK_K {
+            set_q(&mut b, i, ((i * 37) % 64) as u8);
+        }
+        for i in 0..QK_K {
+            assert_eq!(get_q(&b, i), ((i * 37) % 64) as u8, "pos {i}");
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_rmse() {
+        let mut rng = Rng::new(6);
+        let mut x = [0.0f32; QK_K];
+        for v in x.iter_mut() {
+            *v = rng.normal();
+        }
+        let b = quantize_block(&x);
+        let y = dequantize_row(&[b], QK_K);
+        let err = crate::util::stats::rmse(&x, &y);
+        assert!(err < 0.05, "rmse {err}");
+    }
+
+    #[test]
+    fn bytes_roundtrip_exact() {
+        let mut rng = Rng::new(7);
+        let mut x = vec![0.0f32; 2 * QK_K];
+        rng.fill_normal(&mut x, 1.5);
+        let blocks = quantize_row(&x);
+        let bytes = to_bytes(&blocks);
+        assert_eq!(bytes.len(), 2 * BLOCK_BYTES);
+        let parsed = from_bytes(&bytes);
+        for (p, q) in blocks.iter().zip(&parsed) {
+            assert_eq!(p.ql, q.ql);
+            assert_eq!(p.qh, q.qh);
+            assert_eq!(p.scales, q.scales);
+            assert_eq!(p.d.0, q.d.0);
+        }
+    }
+
+    #[test]
+    fn vec_dot_matches_dequantized_reference() {
+        let mut rng = Rng::new(8);
+        let n = 2 * QK_K;
+        let mut w = vec![0.0f32; n];
+        let mut a = vec![0.0f32; n];
+        rng.fill_normal(&mut w, 0.7);
+        rng.fill_normal(&mut a, 1.0);
+        let wq = quantize_row(&w);
+        let aq = q8_k::quantize_row(&a);
+        let got = vec_dot(&wq, &aq);
+        // Reference: dot of the two dequantized rows (exact in f64).
+        let wd = dequantize_row(&wq, n);
+        let ad = q8_k::dequantize_row(&aq, n);
+        let want: f64 = wd
+            .iter()
+            .zip(&ad)
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        assert!(
+            ((got as f64) - want).abs() < 1e-2 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn prop_vec_dot_tracks_f32_dot() {
+        Runner::new("q6k-dot-vs-f32").cases(48).run_noshrink(
+            |r| {
+                let nb = 1 + r.below(3);
+                let mut v = vec![0.0f32; 2 * nb * QK_K];
+                for x in v.iter_mut() {
+                    *x = r.normal() * 0.8;
+                }
+                v
+            },
+            |v| {
+                let n = v.len() / 2;
+                let (w, a) = v.split_at(n);
+                let got = vec_dot(&quantize_row(w), &q8_k::quantize_row(a));
+                let want: f32 = w.iter().zip(a).map(|(x, y)| x * y).sum();
+                let scale: f32 = w.iter().map(|x| x * x).sum::<f32>().sqrt()
+                    * a.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let tol = 0.05 * scale.max(1.0);
+                if (got - want).abs() <= tol {
+                    Ok(())
+                } else {
+                    Err(format!("got {got} want {want} tol {tol}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn extreme_values_clamp_not_wrap() {
+        let mut x = [0.0f32; QK_K];
+        x[0] = 100.0;
+        x[1] = -100.0;
+        let b = quantize_block(&x);
+        let y = dequantize_row(&[b], QK_K);
+        assert!(y[0] > 0.0 && y[1] < 0.0);
+        assert!((y[0] - 100.0).abs() / 100.0 < 0.05);
+    }
+}

@@ -1,0 +1,258 @@
+//! Q8_0: 8-bit block quantization (ggml `block_q8_0`).
+//!
+//! 32 elements per block; one f16 scale `d` plus 32 signed int8 values:
+//! `x[i] = d * q[i]`. 34 bytes / 32 elements = 8.5 bits per weight.
+//!
+//! This is the paper's workhorse format ("This kernel constitutes the
+//! majority of the operations performed in the Q8_0 models") and the
+//! architectural foundation of all its quantized dataflows (Fig 5): the
+//! IMAX `OP_SML8` instruction multiplies int8 pairs into 24-bit partial
+//! sums, `OP_AD24` aggregates along the PE pipeline, and a single f32
+//! multiply applies `d_w * d_a` at the drain stage. The Rust kernel mirrors
+//! that exactly: i32 MAC over the block, then one f32 scale per block.
+
+use crate::util::f16::F16;
+
+/// Elements per Q8_0 block (ggml `QK8_0`).
+pub const QK8_0: usize = 32;
+/// Bytes per block: f16 scale + 32 int8.
+pub const BLOCK_BYTES: usize = 2 + QK8_0;
+
+/// One Q8_0 block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockQ8_0 {
+    pub d: F16,
+    pub qs: [i8; QK8_0],
+}
+
+impl Default for BlockQ8_0 {
+    fn default() -> Self {
+        BlockQ8_0 {
+            d: F16::ZERO,
+            qs: [0; QK8_0],
+        }
+    }
+}
+
+/// Quantize 32 values into one block: `d = max|x| / 127`, `q = round(x/d)`.
+pub fn quantize_block(x: &[f32; QK8_0]) -> BlockQ8_0 {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let d = amax / 127.0;
+    let id = if d > 0.0 { 1.0 / d } else { 0.0 };
+    let mut qs = [0i8; QK8_0];
+    for (q, &v) in qs.iter_mut().zip(x.iter()) {
+        *q = (v * id).round().clamp(-127.0, 127.0) as i8;
+    }
+    BlockQ8_0 {
+        d: F16::from_f32(d),
+        qs,
+    }
+}
+
+/// Quantize a row (length multiple of 32).
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ8_0> {
+    assert_eq!(x.len() % QK8_0, 0, "Q8_0 row must be 32-aligned");
+    x.chunks_exact(QK8_0)
+        .map(|c| quantize_block(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize blocks to f32.
+pub fn dequantize_row(blocks: &[BlockQ8_0], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    'outer: for b in blocks {
+        let d = b.d.to_f32();
+        for &q in &b.qs {
+            if out.len() == n {
+                break 'outer;
+            }
+            out.push(d * q as f32);
+        }
+    }
+    assert_eq!(out.len(), n);
+    out
+}
+
+/// Integer dot product of a Q8_0 weight row with a Q8_0 activation row —
+/// ggml `ggml_vec_dot_q8_0_q8_0`, the computation the paper's Fig 5
+/// dataflow implements.
+///
+/// Per block: `sum_i32(qw[i] * qa[i]) * dw * da`, accumulated in f32.
+#[inline]
+pub fn vec_dot(w: &[BlockQ8_0], a: &[BlockQ8_0]) -> f32 {
+    debug_assert_eq!(w.len(), a.len());
+    let mut acc = 0.0f32;
+    for (bw, ba) in w.iter().zip(a.iter()) {
+        // 32 × 127 × 127 < 2^23: fits the hardware's 24-bit accumulator.
+        // Four independent lanes (the paper's 4 replicated dataflows,
+        // Fig 5) let LLVM vectorize the int8 MAC chain.
+        let mut lanes = [0i32; 4];
+        for k in 0..QK8_0 / 4 {
+            let i = 4 * k;
+            lanes[0] += bw.qs[i] as i32 * ba.qs[i] as i32;
+            lanes[1] += bw.qs[i + 1] as i32 * ba.qs[i + 1] as i32;
+            lanes[2] += bw.qs[i + 2] as i32 * ba.qs[i + 2] as i32;
+            lanes[3] += bw.qs[i + 3] as i32 * ba.qs[i + 3] as i32;
+        }
+        let isum = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        acc += isum as f32 * bw.d.to_f32_lut() * ba.d.to_f32_lut();
+    }
+    acc
+}
+
+/// Serialize blocks to the ggml byte layout (d little-endian f16, then qs).
+pub fn to_bytes(blocks: &[BlockQ8_0]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(blocks.len() * BLOCK_BYTES);
+    for b in blocks {
+        out.extend_from_slice(&b.d.0.to_le_bytes());
+        out.extend(b.qs.iter().map(|&q| q as u8));
+    }
+    out
+}
+
+/// Parse blocks from the ggml byte layout.
+pub fn from_bytes(bytes: &[u8]) -> Vec<BlockQ8_0> {
+    assert_eq!(bytes.len() % BLOCK_BYTES, 0);
+    bytes
+        .chunks_exact(BLOCK_BYTES)
+        .map(|c| {
+            let d = F16(u16::from_le_bytes([c[0], c[1]]));
+            let mut qs = [0i8; QK8_0];
+            for (q, &b) in qs.iter_mut().zip(&c[2..]) {
+                *q = b as i8;
+            }
+            BlockQ8_0 { d, qs }
+        })
+        .collect()
+}
+
+pub fn quantize_row_bytes(x: &[f32]) -> Vec<u8> {
+    to_bytes(&quantize_row(x))
+}
+
+pub fn dequantize_row_bytes(bytes: &[u8], n: usize) -> Vec<f32> {
+    dequantize_row(&from_bytes(bytes), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{shrink_f32_vec, Runner};
+    use crate::util::rng::Rng;
+
+    fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn quantize_zero_block() {
+        let b = quantize_block(&[0.0; QK8_0]);
+        assert_eq!(b.d.to_f32(), 0.0);
+        assert!(b.qs.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn max_value_maps_to_127() {
+        let mut x = [0.0f32; QK8_0];
+        x[5] = 2.0;
+        x[9] = -1.0;
+        let b = quantize_block(&x);
+        assert_eq!(b.qs[5], 127);
+        assert_eq!(b.qs[9], -64); // -1.0 / (2/127) = -63.5 → round half away = -64
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let mut x = [0.0f32; QK8_0];
+        for v in x.iter_mut() {
+            *v = rng.uniform(-3.0, 3.0);
+        }
+        let b = quantize_block(&x);
+        let y = dequantize_row(&[b], QK8_0);
+        // Error ≤ d/2 per element plus the f16 rounding of d itself.
+        let d = b.d.to_f32();
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((xi - yi).abs() <= d * 0.5 + d * 2.0f32.powi(-10), "{xi} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exact() {
+        let mut rng = Rng::new(2);
+        let mut x = vec![0.0f32; 96];
+        rng.fill_normal(&mut x, 1.0);
+        let blocks = quantize_row(&x);
+        let bytes = to_bytes(&blocks);
+        assert_eq!(bytes.len(), 3 * BLOCK_BYTES);
+        let parsed = from_bytes(&bytes);
+        for (a, b) in blocks.iter().zip(&parsed) {
+            assert_eq!(a.d.0, b.d.0);
+            assert_eq!(a.qs, b.qs);
+        }
+    }
+
+    #[test]
+    fn vec_dot_matches_dequantized_dot() {
+        let mut rng = Rng::new(3);
+        let n = 128;
+        let mut w = vec![0.0f32; n];
+        let mut a = vec![0.0f32; n];
+        rng.fill_normal(&mut w, 0.5);
+        rng.fill_normal(&mut a, 1.0);
+        let wq = quantize_row(&w);
+        let aq = quantize_row(&a);
+        let got = vec_dot(&wq, &aq);
+        let want = dot_f32(&dequantize_row(&wq, n), &dequantize_row(&aq, n));
+        assert!(
+            (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn prop_dot_close_to_f32_reference() {
+        Runner::new("q8_0-dot-vs-f32").cases(64).run(
+            |r| {
+                let nblocks = 1 + r.below(8);
+                let mut v = vec![0.0f32; 2 * nblocks * QK8_0];
+                for x in v.iter_mut() {
+                    *x = r.normal();
+                }
+                v
+            },
+            |v| {
+                let n = v.len() / 2;
+                if n % QK8_0 != 0 || n == 0 {
+                    return Ok(()); // shrinker may produce unaligned; skip
+                }
+                let (w, a) = v.split_at(n);
+                let got = vec_dot(&quantize_row(w), &quantize_row(a));
+                let want = dot_f32(w, a);
+                // Q8_0 quantization noise: relative tolerance on the product
+                // of norms (standard error model for quantized dots).
+                let scale: f32 = w.iter().map(|x| x * x).sum::<f32>().sqrt()
+                    * a.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let tol = 0.02 * scale.max(1.0);
+                if (got - want).abs() <= tol {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}, tol {tol}"))
+                }
+            },
+            shrink_f32_vec,
+        );
+    }
+
+    #[test]
+    fn isum_fits_24_bits() {
+        // Adversarial block: all ±127 — the paper's 24-bit AD24 accumulator
+        // must hold the per-block partial sum.
+        let w = BlockQ8_0 {
+            d: F16::ONE,
+            qs: [127; QK8_0],
+        };
+        let isum: i32 = w.qs.iter().map(|&q| q as i32 * q as i32).sum();
+        assert!(isum < (1 << 23), "isum {isum} must fit signed 24-bit");
+    }
+}

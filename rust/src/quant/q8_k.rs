@@ -1,0 +1,123 @@
+//! Q8_K: 8-bit activation quantization over 256-element super-blocks
+//! (ggml `block_q8_K`).
+//!
+//! Used as the activation-side operand for the K-quant weight kernels
+//! (Q6_K, Q3_K): `x[i] = d * q[i]` with one f32 scale per 256 elements,
+//! plus cached 16-element sub-block sums (`bsums`) that the integer kernels
+//! use to fold constant offsets (e.g. the `-32` in Q6_K) without a second
+//! pass. This mirrors llama.cpp, where `quantize_row_q8_K` runs on the CPU
+//! before the dot kernel is dispatched — in the paper's system this is part
+//! of the host-side work preceding a DMA transfer to IMAX.
+
+use crate::quant::QK_K;
+
+/// Bytes per block when serialized: f32 d + 256 i8 + 16 i16 bsums.
+pub const BLOCK_BYTES: usize = 4 + QK_K + 2 * (QK_K / 16);
+
+/// One Q8_K super-block.
+#[derive(Clone, Debug)]
+pub struct BlockQ8K {
+    pub d: f32,
+    pub qs: [i8; QK_K],
+    /// Sums of each 16-element group of `qs` (i16 is sufficient:
+    /// 16 × 127 = 2032).
+    pub bsums: [i16; QK_K / 16],
+}
+
+impl Default for BlockQ8K {
+    fn default() -> Self {
+        BlockQ8K {
+            d: 0.0,
+            qs: [0; QK_K],
+            bsums: [0; QK_K / 16],
+        }
+    }
+}
+
+/// Quantize 256 values into one super-block.
+pub fn quantize_block(x: &[f32; QK_K]) -> BlockQ8K {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let d = amax / 127.0;
+    let id = if d > 0.0 { 1.0 / d } else { 0.0 };
+    let mut b = BlockQ8K {
+        d,
+        ..Default::default()
+    };
+    for (i, &v) in x.iter().enumerate() {
+        b.qs[i] = (v * id).round().clamp(-127.0, 127.0) as i8;
+    }
+    for (g, chunk) in b.qs.chunks_exact(16).enumerate() {
+        b.bsums[g] = chunk.iter().map(|&q| q as i16).sum();
+    }
+    b
+}
+
+/// Quantize a row (length multiple of 256).
+pub fn quantize_row(x: &[f32]) -> Vec<BlockQ8K> {
+    assert_eq!(x.len() % QK_K, 0, "Q8_K row must be 256-aligned");
+    x.chunks_exact(QK_K)
+        .map(|c| quantize_block(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Dequantize back to f32.
+pub fn dequantize_row(blocks: &[BlockQ8K], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    'outer: for b in blocks {
+        for &q in &b.qs {
+            if out.len() == n {
+                break 'outer;
+            }
+            out.push(b.d * q as f32);
+        }
+    }
+    assert_eq!(out.len(), n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bsums_are_consistent() {
+        let mut rng = Rng::new(4);
+        let mut x = [0.0f32; QK_K];
+        for v in x.iter_mut() {
+            *v = rng.normal();
+        }
+        let b = quantize_block(&x);
+        for g in 0..QK_K / 16 {
+            let s: i16 = b.qs[g * 16..(g + 1) * 16].iter().map(|&q| q as i16).sum();
+            assert_eq!(s, b.bsums[g]);
+        }
+    }
+
+    #[test]
+    fn zero_block() {
+        let b = quantize_block(&[0.0; QK_K]);
+        assert_eq!(b.d, 0.0);
+        assert!(b.qs.iter().all(|&q| q == 0));
+        assert!(b.bsums.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn roundtrip_error_half_step() {
+        let mut rng = Rng::new(5);
+        let mut x = vec![0.0f32; 2 * QK_K];
+        rng.fill_normal(&mut x, 2.0);
+        let blocks = quantize_row(&x);
+        let y = dequantize_row(&blocks, x.len());
+        for (i, (xi, yi)) in x.iter().zip(&y).enumerate() {
+            let d = blocks[i / QK_K].d;
+            assert!((xi - yi).abs() <= 0.5 * d + 1e-7, "elem {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "256-aligned")]
+    fn unaligned_row_rejected() {
+        quantize_row(&vec![0.0f32; 100]);
+    }
+}

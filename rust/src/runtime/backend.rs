@@ -1,0 +1,103 @@
+//! PJRT-backed kernel execution: a [`MatvecExec`] that routes the tiny
+//! model's Q8_0 linear projections through the AOT-compiled Pallas
+//! kernels instead of the native Rust kernels.
+//!
+//! This is the composition proof for the three-layer architecture: the
+//! L3 coordinator's engine loop drives L1 Pallas arithmetic (inside the
+//! L2-lowered HLO) through PJRT, with identical packed operands to the
+//! native path. `rust/tests/integration_runtime.rs` asserts the numerics
+//! agree.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::model::engine::MatvecExec;
+use crate::model::graph::MatvecOp;
+use crate::quant::{q8_0, GgmlType};
+use crate::runtime::artifacts::ArtifactDir;
+use crate::runtime::pjrt::{lit, PjrtRuntime};
+use crate::tensor::{ActQuant, QTensor, TensorData};
+
+/// Split Q8_0 blocks into the (codes, scales) arrays the Pallas kernel
+/// takes (the paper's "four distinct input arrays", §III.D).
+pub fn split_q8_blocks(blocks: &[q8_0::BlockQ8_0]) -> (Vec<i8>, Vec<f32>) {
+    let mut qs = Vec::with_capacity(blocks.len() * q8_0::QK8_0);
+    let mut ds = Vec::with_capacity(blocks.len());
+    for b in blocks {
+        qs.extend_from_slice(&b.qs);
+        ds.push(b.d.to_f32());
+    }
+    (qs, ds)
+}
+
+/// MatvecExec that offloads Q8_0 linears to PJRT artifacts, falling back
+/// to native kernels for formats/shapes without an artifact.
+pub struct PjrtExec {
+    pub rt: PjrtRuntime,
+    /// Cached unpacked weight arrays keyed by tensor name (the host-side
+    /// DMA staging buffer analogue).
+    weight_cache: HashMap<String, (Vec<i8>, Vec<f32>)>,
+    /// Kernels executed via PJRT vs native fallback (introspection).
+    pub pjrt_calls: usize,
+    pub native_calls: usize,
+}
+
+impl PjrtExec {
+    pub fn new() -> Result<PjrtExec> {
+        Ok(PjrtExec {
+            rt: PjrtRuntime::new()?,
+            weight_cache: HashMap::new(),
+            pjrt_calls: 0,
+            native_calls: 0,
+        })
+    }
+
+    fn try_pjrt(
+        &mut self,
+        op: &MatvecOp,
+        w: &QTensor,
+        act: &ActQuant,
+        out: &mut [f32],
+    ) -> Result<bool> {
+        if w.ty != GgmlType::Q8_0 {
+            return Ok(false);
+        }
+        let name = ArtifactDir::q8_dot_name(op.rows, op.cols);
+        if !self.rt.artifacts.has(&name) {
+            return Ok(false);
+        }
+        let (TensorData::Q8_0(blocks), ActQuant::Q8_0(ablocks)) = (&w.data, act) else {
+            return Ok(false);
+        };
+        let nb = op.cols / q8_0::QK8_0;
+        if !self.weight_cache.contains_key(&w.name) {
+            self.weight_cache
+                .insert(w.name.clone(), split_q8_blocks(blocks));
+        }
+        let (wqv, wdv) = self.weight_cache.get(&w.name).expect("cached");
+        let wq = lit::i8(&[op.rows, op.cols], wqv)?;
+        let wd = lit::f32(&[op.rows, nb], wdv)?;
+        let (aq, ad) = split_q8_blocks(ablocks);
+        let aql = lit::i8(&[op.cols], &aq)?;
+        let adl = lit::f32(&[nb], &ad)?;
+        let result = self.rt.execute_vec1_f32(&name, &[wq, wd, aql, adl])?;
+        out.copy_from_slice(&result);
+        Ok(true)
+    }
+}
+
+impl MatvecExec for PjrtExec {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        match self.try_pjrt(op, w, act, out) {
+            Ok(true) => {
+                self.pjrt_calls += 1;
+            }
+            Ok(false) => {
+                self.native_calls += 1;
+                crate::tensor::matvec_into(w, act, out);
+            }
+            Err(e) => panic!("pjrt backend failed on {}: {e:#}", w.name),
+        }
+    }
+}

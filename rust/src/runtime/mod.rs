@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the Rust request path (Python never runs at inference time).
+//!
+//! * [`artifacts`] — locate `artifacts/`, parse `manifest.txt`, validate
+//!   shape signatures against the tiny-model config.
+//! * [`pjrt`] — the `xla`-crate wrapper: HLO text → `HloModuleProto` →
+//!   compile on the PJRT CPU client → execute with packed quantized
+//!   operands.
+//! * [`backend`] — a [`crate::model::MatvecExec`] implementation that
+//!   reroutes Q8_0 linear projections of the tiny model through the
+//!   compiled Pallas kernels, proving the three layers compose.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::ArtifactDir;
+pub use backend::PjrtExec;
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,152 @@
+//! The `xla`-crate PJRT wrapper: compile HLO-text artifacts once, execute
+//! many times from the hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` — serialized
+//! protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1). All
+//! artifacts are lowered with `return_tuple=True`, so results are always
+//! unwrapped from a tuple.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifacts::ArtifactDir;
+use crate::util::f16::F16;
+
+/// Literal constructors for the packed operand formats.
+pub mod lit {
+    use super::*;
+
+    pub fn f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+            .map_err(|e| anyhow!("f32 literal: {e:?}"))
+    }
+
+    pub fn i8(dims: &[usize], data: &[i8]) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, &bytes)
+            .map_err(|e| anyhow!("i8 literal: {e:?}"))
+    }
+
+    pub fn u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, dims, data)
+            .map_err(|e| anyhow!("u8 literal: {e:?}"))
+    }
+
+    pub fn f16(dims: &[usize], data: &[F16]) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = data.iter().flat_map(|h| h.0.to_le_bytes()).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F16, dims, &bytes)
+            .map_err(|e| anyhow!("f16 literal: {e:?}"))
+    }
+}
+
+/// A PJRT CPU client with a cache of compiled artifact executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub artifacts: ArtifactDir,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client and locate the artifact directory.
+    pub fn new() -> Result<PjrtRuntime> {
+        let artifacts = ArtifactDir::locate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            artifacts,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Names of currently compiled executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a loaded artifact; returns the elements of the result
+    /// tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = self.executables.get(name).expect("just loaded");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("execute {name}: empty result"))?;
+        let literal = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Execute an artifact returning a single f32 vector (the dot-kernel
+    /// artifacts).
+    pub fn execute_vec1_f32(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let mut out = self.execute(name, inputs)?;
+        let first = out
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("{name}: empty tuple"))?;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{name} result to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests here only cover literal construction; the full
+    //! compile/execute loop needs artifacts and lives in
+    //! `rust/tests/integration_runtime.rs`.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = lit::f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i8() {
+        let l = lit::i8(&[4], &[-1, 2, -3, 127]).unwrap();
+        assert_eq!(l.to_vec::<i8>().unwrap(), vec![-1, 2, -3, 127]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit::f32(&[3], &[1.0]).is_err());
+    }
+}

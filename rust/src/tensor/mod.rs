@@ -1,0 +1,283 @@
+//! Quantized tensors and the matrix–vector kernels the engine dispatches.
+//!
+//! Weights are 2-D row-major quantized tensors ([`QTensor`]); activations
+//! are f32 vectors that get quantized once per matvec into the format the
+//! weight kernel consumes ([`ActQuant`]) — exactly llama.cpp's structure,
+//! where `quantize_row_q8_K/q8_0` runs once and the row kernels reuse it.
+//! In the paper's system the quantized activation row is one of the "four
+//! distinct input arrays" coalesced into a single DMA transfer (§III.D).
+
+use crate::quant::{fp16, q3_k, q6_k, q8_0, q8_k, GgmlType};
+use crate::util::f16::F16;
+
+/// Storage for one quantized 2-D tensor.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F16(Vec<F16>),
+    Q8_0(Vec<q8_0::BlockQ8_0>),
+    Q6K(Vec<q6_k::BlockQ6K>),
+    Q3K(Vec<q3_k::BlockQ3K>),
+}
+
+/// A row-major 2-D quantized tensor (`rows × cols`). 1-D vectors are
+/// represented as `rows = 1`.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub name: String,
+    pub ty: GgmlType,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: TensorData,
+}
+
+impl QTensor {
+    /// Quantize an f32 matrix (row-major, `rows × cols`) into `ty`.
+    /// `cols` must be a multiple of the format's block size.
+    pub fn quantize(name: &str, ty: GgmlType, rows: usize, cols: usize, x: &[f32]) -> QTensor {
+        assert_eq!(x.len(), rows * cols, "{name}: shape mismatch");
+        assert_eq!(
+            cols % ty.block_size(),
+            0,
+            "{name}: cols {cols} not aligned to {} block {}",
+            ty.name(),
+            ty.block_size()
+        );
+        let data = match ty {
+            GgmlType::F32 => TensorData::F32(x.to_vec()),
+            GgmlType::F16 => TensorData::F16(fp16::encode_row(x)),
+            GgmlType::Q8_0 => TensorData::Q8_0(q8_0::quantize_row(x)),
+            GgmlType::Q6K => TensorData::Q6K(q6_k::quantize_row(x)),
+            GgmlType::Q3K => TensorData::Q3K(q3_k::quantize_row(x)),
+        };
+        QTensor {
+            name: name.to_string(),
+            ty,
+            rows,
+            cols,
+            data,
+        }
+    }
+
+    /// Total serialized size in bytes — the quantity the paper's DMA/LMM
+    /// analysis is driven by.
+    pub fn nbytes(&self) -> usize {
+        self.rows * self.ty.row_bytes(self.cols)
+    }
+
+    /// Bytes of one row (one dot-product operand tile).
+    pub fn row_bytes(&self) -> usize {
+        self.ty.row_bytes(self.cols)
+    }
+
+    pub fn nelems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Dequantize row `r` to f32 (test/debug path).
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        assert!(r < self.rows);
+        let bpr = self.cols / self.ty.block_size();
+        match &self.data {
+            TensorData::F32(v) => v[r * self.cols..(r + 1) * self.cols].to_vec(),
+            TensorData::F16(v) => v[r * self.cols..(r + 1) * self.cols]
+                .iter()
+                .map(|h| h.to_f32())
+                .collect(),
+            TensorData::Q8_0(b) => q8_0::dequantize_row(&b[r * bpr..(r + 1) * bpr], self.cols),
+            TensorData::Q6K(b) => q6_k::dequantize_row(&b[r * bpr..(r + 1) * bpr], self.cols),
+            TensorData::Q3K(b) => q3_k::dequantize_row(&b[r * bpr..(r + 1) * bpr], self.cols),
+        }
+    }
+
+    /// Dequantize the whole tensor (row-major).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.nelems());
+        for r in 0..self.rows {
+            out.extend(self.dequantize_row(r));
+        }
+        out
+    }
+}
+
+/// Activations quantized into the format a weight type's kernel consumes.
+#[derive(Clone, Debug)]
+pub enum ActQuant {
+    /// f32 passthrough (for F32/F16 weight kernels).
+    F32(Vec<f32>),
+    /// Q8_0 blocks (for Q8_0 weights — ggml q8_0×q8_0 path).
+    Q8_0(Vec<q8_0::BlockQ8_0>),
+    /// Q8_K super-blocks (for Q6_K / Q3_K weights).
+    Q8K(Vec<q8_k::BlockQ8K>),
+}
+
+impl ActQuant {
+    /// Quantize activation vector `x` for a weight of type `wty`.
+    pub fn for_weight(wty: GgmlType, x: &[f32]) -> ActQuant {
+        match wty {
+            GgmlType::F32 | GgmlType::F16 => ActQuant::F32(x.to_vec()),
+            GgmlType::Q8_0 => ActQuant::Q8_0(q8_0::quantize_row(x)),
+            GgmlType::Q6K | GgmlType::Q3K => ActQuant::Q8K(q8_k::quantize_row(x)),
+        }
+    }
+
+    /// Serialized byte size of the quantized activation row (DMA operand).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            ActQuant::F32(v) => 4 * v.len(),
+            ActQuant::Q8_0(b) => b.len() * q8_0::BLOCK_BYTES,
+            ActQuant::Q8K(b) => b.len() * q8_k::BLOCK_BYTES,
+        }
+    }
+}
+
+/// `y[r] = dot(W[r, :], x)` for one row.
+#[inline]
+pub fn row_dot(w: &QTensor, r: usize, act: &ActQuant) -> f32 {
+    let bpr = w.cols / w.ty.block_size();
+    match (&w.data, act) {
+        (TensorData::F32(v), ActQuant::F32(x)) => v[r * w.cols..(r + 1) * w.cols]
+            .iter()
+            .zip(x.iter())
+            .map(|(a, b)| a * b)
+            .sum(),
+        (TensorData::F16(v), ActQuant::F32(x)) => {
+            fp16::vec_dot_f16(&v[r * w.cols..(r + 1) * w.cols], x)
+        }
+        (TensorData::Q8_0(b), ActQuant::Q8_0(a)) => {
+            q8_0::vec_dot(&b[r * bpr..(r + 1) * bpr], a)
+        }
+        (TensorData::Q6K(b), ActQuant::Q8K(a)) => q6_k::vec_dot(&b[r * bpr..(r + 1) * bpr], a),
+        (TensorData::Q3K(b), ActQuant::Q8K(a)) => q3_k::vec_dot(&b[r * bpr..(r + 1) * bpr], a),
+        _ => panic!(
+            "tensor '{}': weight {:?} incompatible with activation format",
+            w.name, w.ty
+        ),
+    }
+}
+
+/// Full matvec `y = W x` (`W: rows × cols`, `x: cols`), quantizing the
+/// activation once. This is the unit of work the paper offloads to IMAX.
+pub fn matvec(w: &QTensor, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols, "{}: matvec dim mismatch", w.name);
+    let act = ActQuant::for_weight(w.ty, x);
+    matvec_pre(w, &act)
+}
+
+/// Matvec with a pre-quantized activation (reused across weight tensors
+/// that share an input, e.g. q/k/v projections).
+pub fn matvec_pre(w: &QTensor, act: &ActQuant) -> Vec<f32> {
+    (0..w.rows).map(|r| row_dot(w, r, act)).collect()
+}
+
+/// Matvec into a caller-provided buffer (hot-path variant; avoids the
+/// per-call allocation in the decode loop).
+pub fn matvec_into(w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+    assert_eq!(out.len(), w.rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = row_dot(w, r, act);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dense_matvec(w: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+        (0..rows)
+            .map(|r| {
+                w[r * cols..(r + 1) * cols]
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matvec_all_formats_close_to_dense() {
+        let mut rng = Rng::new(14);
+        let (rows, cols) = (8, 512);
+        let mut w = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; cols];
+        rng.fill_normal(&mut w, 0.3);
+        rng.fill_normal(&mut x, 1.0);
+        let want = dense_matvec(&w, rows, cols, &x);
+        let scale = (cols as f32).sqrt() * 0.3;
+
+        for (ty, tol_mult) in [
+            (GgmlType::F32, 1e-6),
+            (GgmlType::F16, 1e-3),
+            (GgmlType::Q8_0, 0.02),
+            (GgmlType::Q6K, 0.05),
+            (GgmlType::Q3K, 0.25),
+        ] {
+            let q = QTensor::quantize("w", ty, rows, cols, &w);
+            let got = matvec(&q, &x);
+            for (g, wnt) in got.iter().zip(&want) {
+                assert!(
+                    (g - wnt).abs() <= tol_mult * scale * 3.0 + 1e-4,
+                    "{}: got {g} want {wnt}",
+                    ty.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nbytes_matches_format_math() {
+        let w = vec![0.0f32; 4 * 256];
+        let q = QTensor::quantize("w", GgmlType::Q3K, 4, 256, &w);
+        assert_eq!(q.nbytes(), 4 * 110);
+        assert_eq!(q.row_bytes(), 110);
+    }
+
+    #[test]
+    fn matvec_into_matches_matvec() {
+        let mut rng = Rng::new(15);
+        let (rows, cols) = (5, 64);
+        let mut w = vec![0.0f32; rows * cols];
+        let mut x = vec![0.0f32; cols];
+        rng.fill_normal(&mut w, 1.0);
+        rng.fill_normal(&mut x, 1.0);
+        let q = QTensor::quantize("w", GgmlType::Q8_0, rows, cols, &w);
+        let a = matvec(&q, &x);
+        let act = ActQuant::for_weight(q.ty, &x);
+        let mut b = vec![0.0f32; rows];
+        matvec_into(&q, &act, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "not aligned")]
+    fn misaligned_cols_rejected() {
+        QTensor::quantize("w", GgmlType::Q6K, 1, 100, &vec![0.0; 100]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn mismatched_activation_rejected() {
+        let q = QTensor::quantize("w", GgmlType::Q8_0, 1, 32, &vec![0.0; 32]);
+        let act = ActQuant::F32(vec![0.0; 32]);
+        row_dot(&q, 0, &act);
+    }
+
+    #[test]
+    fn shared_activation_reuse_consistent() {
+        let mut rng = Rng::new(16);
+        let cols = 256;
+        let mut w1 = vec![0.0f32; 4 * cols];
+        let mut w2 = vec![0.0f32; 2 * cols];
+        let mut x = vec![0.0f32; cols];
+        rng.fill_normal(&mut w1, 1.0);
+        rng.fill_normal(&mut w2, 1.0);
+        rng.fill_normal(&mut x, 1.0);
+        let q1 = QTensor::quantize("q", GgmlType::Q6K, 4, cols, &w1);
+        let q2 = QTensor::quantize("k", GgmlType::Q6K, 2, cols, &w2);
+        let act = ActQuant::for_weight(GgmlType::Q6K, &x);
+        assert_eq!(matvec_pre(&q1, &act), matvec(&q1, &x));
+        assert_eq!(matvec_pre(&q2, &act), matvec(&q2, &x));
+    }
+}

@@ -1,0 +1,211 @@
+//! Byte-level BPE tokenizer substrate.
+//!
+//! The paper's host CPU is responsible for "prompt tokenization" (§III.A);
+//! llama.cpp ships the Qwen3 BPE tokenizer inside the GGUF. We have no
+//! GGUF, so we implement a self-contained byte-level BPE: the base
+//! vocabulary is the 256 bytes plus special tokens, and merges are learned
+//! from a seed corpus at model-build time. Functionally equivalent for the
+//! system evaluation — tokenization cost sits in the host phase either way.
+
+use std::collections::HashMap;
+
+/// Special token ids.
+pub const TOK_BOS: u32 = 0;
+pub const TOK_EOS: u32 = 1;
+/// First byte token; byte b is token `TOK_BYTE0 + b`.
+pub const TOK_BYTE0: u32 = 2;
+/// First merge token id.
+pub const TOK_MERGE0: u32 = TOK_BYTE0 + 256;
+
+/// A trained byte-level BPE tokenizer.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// merges[i] = (left, right) produced token `TOK_MERGE0 + i`.
+    merges: Vec<(u32, u32)>,
+    /// Lookup (left, right) -> merged id.
+    merge_map: HashMap<(u32, u32), u32>,
+    /// Decoded byte string per token id.
+    decoded: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Train a tokenizer with up to `n_merges` merges from a seed corpus.
+    pub fn train(corpus: &str, n_merges: usize) -> Tokenizer {
+        let mut decoded: Vec<Vec<u8>> = Vec::with_capacity(TOK_MERGE0 as usize + n_merges);
+        decoded.push(b"<bos>".to_vec());
+        decoded.push(b"<eos>".to_vec());
+        for b in 0u16..256 {
+            decoded.push(vec![b as u8]);
+        }
+
+        let mut seq: Vec<u32> = corpus.bytes().map(|b| TOK_BYTE0 + b as u32).collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut merge_map = HashMap::new();
+
+        for _ in 0..n_merges {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic argmax: highest count, ties by smallest pair.
+            let best = counts
+                .iter()
+                .filter(|(_, &c)| c >= 2)
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+            let (&pair, _) = match best {
+                Some(kv) => kv,
+                None => break, // nothing left to merge
+            };
+            let new_id = TOK_MERGE0 + merges.len() as u32;
+            merges.push(pair);
+            merge_map.insert(pair, new_id);
+            let mut bytes = decoded[pair.0 as usize].clone();
+            bytes.extend_from_slice(&decoded[pair.1 as usize]);
+            decoded.push(bytes);
+
+            // Apply the merge to the training sequence.
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+
+        Tokenizer {
+            merges,
+            merge_map,
+            decoded,
+        }
+    }
+
+    /// Trivial tokenizer with no merges (pure byte fallback).
+    pub fn byte_level() -> Tokenizer {
+        Tokenizer::train("", 0)
+    }
+
+    /// Vocabulary size (specials + bytes + merges).
+    pub fn vocab_size(&self) -> usize {
+        self.decoded.len()
+    }
+
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut seq: Vec<u32> = text.bytes().map(|b| TOK_BYTE0 + b as u32).collect();
+        // Apply merges in training order (standard BPE inference).
+        for (i, &pair) in self.merges.iter().enumerate() {
+            let new_id = TOK_MERGE0 + i as u32;
+            if seq.len() < 2 {
+                break;
+            }
+            let mut out = Vec::with_capacity(seq.len());
+            let mut j = 0;
+            while j < seq.len() {
+                if j + 1 < seq.len() && (seq[j], seq[j + 1]) == pair {
+                    out.push(new_id);
+                    j += 2;
+                } else {
+                    out.push(seq[j]);
+                    j += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    /// Encode with BOS prepended (llama.cpp-style prompt encoding).
+    pub fn encode_with_bos(&self, text: &str) -> Vec<u32> {
+        let mut v = vec![TOK_BOS];
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Decode token ids back to text (lossy UTF-8).
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in toks {
+            if t == TOK_BOS || t == TOK_EOS {
+                continue;
+            }
+            if let Some(d) = self.decoded.get(t as usize) {
+                bytes.extend_from_slice(d);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Id of the merged pair, if trained.
+    pub fn merged(&self, left: u32, right: u32) -> Option<u32> {
+        self.merge_map.get(&(left, right)).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::byte_level();
+        let s = "hello, CGLA! 日本語";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.vocab_size(), 258);
+    }
+
+    #[test]
+    fn trained_roundtrip_and_compression() {
+        let corpus = "the quick brown fox jumps over the lazy dog. the fox. the dog. "
+            .repeat(20);
+        let t = Tokenizer::train(&corpus, 64);
+        assert!(t.vocab_size() > 258, "some merges learned");
+        let s = "the quick fox and the lazy dog";
+        let enc = t.encode(s);
+        assert_eq!(t.decode(&enc), s);
+        // BPE must compress text drawn from the training distribution.
+        assert!(
+            enc.len() < s.len(),
+            "compressed {} < raw {}",
+            enc.len(),
+            s.len()
+        );
+    }
+
+    #[test]
+    fn roundtrip_outside_training_distribution() {
+        let t = Tokenizer::train(&"abcabcabc".repeat(50), 16);
+        let s = "zzz completely different 123 \u{1F600}";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let t = Tokenizer::byte_level();
+        let e = t.encode_with_bos("x");
+        assert_eq!(e[0], TOK_BOS);
+        assert_eq!(e.len(), 2);
+    }
+
+    #[test]
+    fn merge_lookup_consistent() {
+        let corpus = "aaaa aaaa aaaa".repeat(10);
+        let t = Tokenizer::train(&corpus, 4);
+        if let Some(&pair) = t.merges.first() {
+            assert_eq!(t.merged(pair.0, pair.1), Some(TOK_MERGE0));
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = Tokenizer::train("some corpus text here", 8);
+        assert!(t.encode("").is_empty());
+        assert_eq!(t.decode(&[]), "");
+    }
+}

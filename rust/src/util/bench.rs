@@ -1,0 +1,182 @@
+//! Minimal wall-clock bench harness (no `criterion` in the vendored set).
+//!
+//! Each `rust/benches/*.rs` target is `harness = false` and drives
+//! [`BenchSet`]: warmup, fixed-duration measurement, mean/stddev/min report.
+//! For the experiment benches (Figs 11–16) the *measured* quantity is the
+//! harness runtime; the figures themselves are printed from the simulator's
+//! modeled seconds/joules, like the paper's tables.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Re-export for bench bodies.
+pub use std::hint::black_box as bb;
+
+/// One micro-benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub iters: u64,
+    /// Optional throughput divisor (elements per iter) for elem/s output.
+    pub elems_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        let thr = match self.elems_per_iter {
+            Some(e) if self.mean_s > 0.0 => {
+                format!("  {:>10.3} Melem/s", e / self.mean_s / 1e6)
+            }
+            _ => String::new(),
+        };
+        format!(
+            "{:<44} {:>12.3} us/iter (+/- {:>8.3})  min {:>12.3} us  n={}{}",
+            self.name,
+            self.mean_s * 1e6,
+            self.stddev_s * 1e6,
+            self.min_s * 1e6,
+            self.iters,
+            thr
+        )
+    }
+}
+
+/// Bench group: runs closures for a target duration each, prints a report.
+pub struct BenchSet {
+    title: String,
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<Measurement>,
+    quick: bool,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> BenchSet {
+        // IMAX_BENCH_QUICK=1 shortens runs (used by `make test` smoke).
+        let quick = std::env::var("IMAX_BENCH_QUICK").map_or(false, |v| v == "1");
+        BenchSet {
+            title: title.to_string(),
+            warmup: if quick {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(150)
+            },
+            measure: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(700)
+            },
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f` repeatedly; `f` should return something to black-box.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &mut Self {
+        self.bench_with_elems(name, None, &mut f)
+    }
+
+    /// Like [`bench`], reporting throughput as `elems / s`.
+    pub fn bench_elems<T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &mut Self {
+        self.bench_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_with_elems<T>(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &mut Self {
+        // Warmup + estimate cost of one call.
+        let warm_start = Instant::now();
+        let mut one = Duration::from_nanos(1);
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            let t = Instant::now();
+            black_box(f());
+            one = t.elapsed().max(Duration::from_nanos(1));
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        // Choose a batch size targeting ~1ms per sample.
+        let batch = ((Duration::from_millis(1).as_nanos() / one.as_nanos()).max(1)) as u64;
+
+        let mut samples = Summary::new();
+        let mut iters = 0u64;
+        let meas_start = Instant::now();
+        while meas_start.elapsed() < self.measure || samples.count() < 3 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let per_iter = t.elapsed().as_secs_f64() / batch as f64;
+            samples.add(per_iter);
+            iters += batch;
+            if samples.count() > 10_000 {
+                break;
+            }
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            mean_s: samples.mean(),
+            stddev_s: samples.stddev(),
+            min_s: samples.min(),
+            iters,
+            elems_per_iter: elems,
+        });
+        self
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    pub fn report(&self) {
+        println!("\n=== bench: {} ===", self.title);
+        for m in &self.results {
+            println!("{}", m.report_line());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_times() {
+        std::env::set_var("IMAX_BENCH_QUICK", "1");
+        let mut set = BenchSet::new("unit");
+        set.bench("noop-sum", || (0..100u64).sum::<u64>());
+        let m = &set.results()[0];
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s > 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("IMAX_BENCH_QUICK", "1");
+        let mut set = BenchSet::new("unit");
+        set.bench_elems("sum1k", 1000.0, || (0..1000u64).sum::<u64>());
+        let line = set.results()[0].report_line();
+        assert!(line.contains("Melem/s"), "{line}");
+    }
+}

@@ -1,0 +1,209 @@
+//! IEEE-754 binary16 (half precision) conversion.
+//!
+//! ggml stores block scale factors (`d`, `dmin`) and FP16 weight tensors as
+//! binary16. The `half` crate is not in the vendored set, so we implement
+//! the two conversions directly. Round-to-nearest-even on encode, exact on
+//! decode (every f16 is representable in f32).
+
+/// A raw IEEE-754 binary16 value (bit pattern).
+///
+/// Stored as the transparent `u16` bit pattern so quantized blocks can be
+/// memcpy'd / serialized without conversion.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    /// Largest finite f16 = 65504.0.
+    pub const MAX: F16 = F16(0x7BFF);
+
+    /// Encode an `f32` to the nearest `f16` (round-to-nearest-even),
+    /// overflowing to ±inf like hardware F32→F16 converters.
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    /// Decode to `f32` (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    /// Decode via the process-wide lookup table — the software analogue
+    /// of the paper's in-PE LUT conversion (Fig 6). ~4× faster than the
+    /// bit-manipulation path on the matvec hot loop.
+    #[inline]
+    pub fn to_f32_lut(self) -> f32 {
+        lut()[self.0 as usize]
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// f32 → f16 bit pattern, round-to-nearest-even, IEEE semantics
+/// (subnormal f16 outputs supported, overflow → inf, NaN preserved).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf or NaN. Keep a quiet-NaN payload bit if NaN.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        // Overflows f16 range -> inf.
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // Normal f16. 13 mantissa bits are dropped; round to nearest even.
+        let mant16 = (mant >> 13) as u16;
+        let out = sign | (((e + 15) as u16) << 10) | mant16;
+        let rem = mant & 0x1FFF;
+        let halfway = 0x1000;
+        if rem > halfway || (rem == halfway && (mant16 & 1) == 1) {
+            // Carry may ripple into the exponent; that is correct
+            // (e.g. 0x3BFF + 1 = 0x3C00 encodes rounding up to 1.0).
+            return out + 1;
+        }
+        return out;
+    }
+    if e >= -25 {
+        // Subnormal f16: shift the (implicit-1 restored) mantissa right.
+        let mant = mant | 0x0080_0000;
+        let shift = (-14 - e) as u32 + 13;
+        let mant16 = (mant >> shift) as u16;
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let out = sign | mant16;
+        if rem > halfway || (rem == halfway && (mant16 & 1) == 1) {
+            return out + 1;
+        }
+        return out;
+    }
+    // Underflows to signed zero.
+    sign
+}
+
+/// Full 64K-entry decode table (256 KiB), built once on first use.
+fn lut() -> &'static [f32; 65536] {
+    static LUT: std::sync::OnceLock<Box<[f32; 65536]>> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536].into_boxed_slice();
+        for (h, slot) in t.iter_mut().enumerate() {
+            *slot = f16_bits_to_f32(h as u16);
+        }
+        t.try_into().unwrap()
+    })
+}
+
+/// f16 bit pattern → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: value = mant × 2^-24. Normalize into f32: with p
+            // the index of the leading set bit, value = 1.m' × 2^(p-24).
+            let mut e = -14i32; // becomes p - 24 after the shifts below
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -2.5, 65504.0, 6.1035156e-5] {
+            assert_eq!(F16::from_f32(v).to_f32(), v, "roundtrip {v}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::INFINITY).is_infinite());
+        assert!(F16::from_f32(1e9).is_infinite(), "overflow to inf");
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1e-10).to_f32(), 0.0, "underflow to zero");
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        // Smallest positive subnormal f16 = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32(tiny).0, 1);
+        assert_eq!(F16(1).to_f32(), tiny);
+        // A mid-range subnormal.
+        let v = 3.0 * 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32(v).to_f32(), v);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // nearest-even resolves down to 1.0.
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32(halfway).to_f32(), 1.0);
+        // Slightly above halfway rounds up.
+        let above = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20);
+        assert_eq!(F16::from_f32(above).to_f32(), 1.0 + 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn exhaustive_decode_encode_consistency() {
+        // Every finite f16 must survive decode->encode exactly.
+        for h in 0u16..=0xFFFF {
+            let f = F16(h);
+            if f.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(f.to_f32());
+            assert_eq!(back.0, h, "bits 0x{h:04x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // |x - f16(x)| / |x| <= 2^-11 for x in normal range.
+        let mut x = 6.2e-5f32;
+        while x < 6.0e4 {
+            let err = (F16::from_f32(x).to_f32() - x).abs() / x;
+            assert!(err <= 2.0f32.powi(-11), "x={x} err={err}");
+            x *= 1.37;
+        }
+    }
+}

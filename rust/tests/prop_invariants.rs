@@ -1,0 +1,237 @@
+//! Cross-module property tests (proptest-lite): invariants over random
+//! shapes/values that individual unit tests don't cover.
+
+use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
+use imax_llm::imax::{ImaxDevice, TransferMode};
+use imax_llm::model::config::{ModelConfig, QuantScheme};
+use imax_llm::quant::{dequantize_row, quantize_row, GgmlType};
+use imax_llm::util::proptest_lite::Runner;
+use imax_llm::util::rng::Rng;
+
+#[test]
+fn prop_quantize_dequantize_idempotent() {
+    // dq(q(dq(q(x)))) == dq(q(x)) for every format: quantization is a
+    // projection (idempotent after one round).
+    Runner::new("quant-idempotent").cases(40).run_noshrink(
+        |r: &mut Rng| {
+            let fmt = match r.below(4) {
+                0 => GgmlType::F16,
+                1 => GgmlType::Q8_0,
+                2 => GgmlType::Q6K,
+                _ => GgmlType::Q3K,
+            };
+            let blocks = 1 + r.below(4);
+            let n = blocks * fmt.block_size().max(32);
+            let mut x = vec![0.0f32; n];
+            for v in x.iter_mut() {
+                *v = r.normal() * r.uniform(0.1, 4.0);
+            }
+            (fmt, x)
+        },
+        |(fmt, x)| {
+            let once = dequantize_row(*fmt, &quantize_row(*fmt, x), x.len());
+            let twice = dequantize_row(*fmt, &quantize_row(*fmt, &once), x.len());
+            // The K-quants re-fit sub-block scales on requantization (the
+            // dequantized data has different sub-maxima when values
+            // saturated), so idempotence holds only up to one quantization
+            // step — format-dependent. Q8_0/F16 are near-exact.
+            let rms = (once.iter().map(|v| v * v).sum::<f32>() / once.len() as f32).sqrt();
+            let step_frac = match fmt {
+                GgmlType::F16 => 1e-3,
+                GgmlType::Q8_0 => 2e-2,
+                GgmlType::Q6K => 8e-2,
+                GgmlType::Q3K => 4e-1,
+                GgmlType::F32 => 0.0,
+            };
+            for (i, (a, b)) in once.iter().zip(&twice).enumerate() {
+                let tol = step_frac * (a.abs() + rms).max(1e-3);
+                if (a - b).abs() > tol {
+                    return Err(format!("{}: elem {i}: {a} vs {b}", fmt.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantization_error_scales_linearly() {
+    // Quantization is scale-equivariant: q(c·x) ≈ c·q(x).
+    Runner::new("quant-scale-equivariant").cases(30).run_noshrink(
+        |r: &mut Rng| {
+            let mut x = vec![0.0f32; 256];
+            for v in x.iter_mut() {
+                *v = r.normal();
+            }
+            let c = r.uniform(0.5, 8.0);
+            (x, c)
+        },
+        |(x, c)| {
+            let base = dequantize_row(GgmlType::Q6K, &quantize_row(GgmlType::Q6K, x), x.len());
+            let scaled_x: Vec<f32> = x.iter().map(|v| v * c).collect();
+            let scaled =
+                dequantize_row(GgmlType::Q6K, &quantize_row(GgmlType::Q6K, &scaled_x), x.len());
+            let rms = (base.iter().map(|v| v * v).sum::<f32>() / base.len() as f32).sqrt();
+            for (i, (b, s)) in base.iter().zip(&scaled).enumerate() {
+                let want = b * c;
+                // The f16 super-scale and integer sub-scales re-round under
+                // scaling: equivariance holds to within one Q6_K step.
+                if (s - want).abs() > 0.12 * (want.abs() + c * rms) {
+                    return Err(format!("elem {i}: {s} vs {want} (c={c})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_breakdown_components_sum_to_total() {
+    // PhaseCost accounting is strictly additive across random workloads.
+    Runner::new("breakdown-additive").cases(12).run_noshrink(
+        |r: &mut Rng| {
+            let model = match r.below(2) {
+                0 => ModelConfig::qwen3_0_6b(),
+                _ => ModelConfig::qwen3_1_7b(),
+            };
+            let scheme = if r.below(2) == 0 {
+                QuantScheme::Q8_0
+            } else {
+                QuantScheme::Q3KS
+            };
+            (model, scheme, 1 + r.below(16), 1 + r.below(8))
+        },
+        |(cfg, scheme, n_in, n_out)| {
+            let w = Workload {
+                cfg: cfg.clone(),
+                scheme: *scheme,
+                n_in: *n_in,
+                n_out: *n_out,
+            };
+            let run = simulate_auto(&w, &ImaxDevice::fpga(2), TransferMode::Coalesced);
+            let t = run.breakdown.total();
+            let sum = t.exec + t.load + t.drain + t.conf + t.regv + t.range + t.host;
+            if (sum - run.breakdown.e2e_seconds()).abs() > 1e-9 * sum.max(1.0) {
+                return Err(format!("sum {sum} != e2e {}", run.breakdown.e2e_seconds()));
+            }
+            let pd = run.breakdown.prefill.total() + run.breakdown.decode.total();
+            if (pd - sum).abs() > 1e-9 * sum.max(1.0) {
+                return Err(format!("prefill+decode {pd} != total {sum}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_monotone_in_tokens() {
+    // More input or output tokens never reduces modeled E2E latency.
+    Runner::new("latency-monotone").cases(10).run_noshrink(
+        |r: &mut Rng| (1 + r.below(24), 1 + r.below(12)),
+        |&(n_in, n_out)| {
+            let mk = |ni: usize, no: usize| {
+                let w = Workload {
+                    cfg: ModelConfig::qwen3_0_6b(),
+                    scheme: QuantScheme::Q8_0,
+                    n_in: ni,
+                    n_out: no,
+                };
+                simulate_auto(&w, &ImaxDevice::fpga(2), TransferMode::Coalesced)
+                    .breakdown
+                    .e2e_seconds()
+            };
+            let base = mk(n_in, n_out);
+            if mk(n_in + 4, n_out) < base {
+                return Err(format!("longer prompt got faster at [{n_in}:{n_out}]"));
+            }
+            if mk(n_in, n_out + 2) < base {
+                return Err(format!("more outputs got faster at [{n_in}:{n_out}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_offload_ratio_bounded_and_stable() {
+    // Offload ratios are in [0,1] and total is a convex combination of
+    // the per-class ratios.
+    Runner::new("offload-ratio-bounds").cases(10).run_noshrink(
+        |r: &mut Rng| {
+            let model = match r.below(3) {
+                0 => ModelConfig::qwen3_0_6b(),
+                1 => ModelConfig::qwen3_1_7b(),
+                _ => ModelConfig::qwen3_8b(),
+            };
+            let scheme = if r.below(2) == 0 {
+                QuantScheme::Q8_0
+            } else {
+                QuantScheme::Q3KS
+            };
+            (model, scheme)
+        },
+        |(cfg, scheme)| {
+            let w = Workload {
+                cfg: cfg.clone(),
+                scheme: *scheme,
+                n_in: 8,
+                n_out: 4,
+            };
+            let run = simulate_auto(&w, &ImaxDevice::asic28(2), TransferMode::Coalesced);
+            let total = run.stats.total_ratio();
+            if !(0.0..=1.0).contains(&total) {
+                return Err(format!("total ratio {total}"));
+            }
+            use imax_llm::imax::KernelClass;
+            let mut lo = 1.0f64;
+            let mut hi = 0.0f64;
+            let mut any = false;
+            for c in KernelClass::ALL {
+                if let Some(rr) = run.stats.ratio(c) {
+                    if !(0.0..=1.0).contains(&rr) {
+                        return Err(format!("{} ratio {rr}", c.name()));
+                    }
+                    lo = lo.min(rr);
+                    hi = hi.max(rr);
+                    any = true;
+                }
+            }
+            if any && !(lo - 1e-9..=hi + 1e-9).contains(&total) {
+                return Err(format!("total {total} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_deterministic_under_seed() {
+    // Full engine determinism across random prompts and schemes.
+    Runner::new("engine-deterministic").cases(6).run_noshrink(
+        |r: &mut Rng| {
+            let scheme = match r.below(3) {
+                0 => QuantScheme::F16,
+                1 => QuantScheme::Q8_0,
+                _ => QuantScheme::Q3KS,
+            };
+            let len = 1 + r.below(6);
+            let prompt: Vec<u32> = (0..len).map(|_| r.below(2048) as u32).collect();
+            (scheme, prompt, r.next_u64())
+        },
+        |(scheme, prompt, seed)| {
+            use imax_llm::model::engine::{Engine, NativeExec};
+            use imax_llm::model::sampler::Sampler;
+            use imax_llm::model::weights::ModelWeights;
+            let cfg = ModelConfig::tiny();
+            let run = |s: u64| {
+                let mut e = Engine::new(ModelWeights::random(&cfg, *scheme, s));
+                e.generate(prompt, 4, &mut Sampler::top_k(0.8, 20, 3), &mut NativeExec)
+                    .tokens
+            };
+            if run(*seed) != run(*seed) {
+                return Err("nondeterministic generation".to_string());
+            }
+            Ok(())
+        },
+    );
+}
