@@ -6,11 +6,8 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use imax_llm::coordinator::{InstrumentedExec, OffloadPolicy};
-use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
-use imax_llm::model::{
-    Engine, ModelConfig, ModelWeights, NativeExec, QuantScheme, Sampler,
-};
+use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::runtime::BackendRegistry;
 use imax_llm::tokenizer::Tokenizer;
 
 fn main() {
@@ -35,23 +32,24 @@ fn main() {
     let prompt = tok.encode_with_bos(prompt_text);
     println!("prompt: {prompt_text:?} -> {} tokens", prompt.len());
 
-    // 3. Generate, with the hybrid coordinator instrumenting every
-    //    dot-product kernel against the IMAX cost model.
-    let dev = ImaxDevice::fpga(2);
-    let policy = OffloadPolicy::new(LmmConfig::new(64));
-    let mut exec = InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+    // 3. Generate through the backend registry's instrumented-IMAX
+    //    executor: every dot-product kernel the engine dispatches is
+    //    also accounted against the IMAX cost model.
+    let mut exec = BackendRegistry::build_named("imax").expect("imax backend");
     let mut engine = Engine::new(weights);
     let mut sampler = Sampler::top_k(0.9, 40, 7);
     let result = engine.generate(&prompt, 24, &mut sampler, &mut exec);
 
     println!("output: {:?}", tok.decode(&result.tokens));
+    let rep = exec.report();
     println!(
         "\nmeasured wall time: prefill {:.1} ms, decode {:.1} ms",
-        exec.wall_prefill * 1e3,
-        exec.wall_decode * 1e3
+        rep.wall_prefill_s * 1e3,
+        rep.wall_decode_s * 1e3
     );
-    let p = exec.modeled.prefill;
-    let d = exec.modeled.decode;
+    let modeled = rep.modeled.expect("imax backend models phases");
+    let p = modeled.prefill;
+    let d = modeled.decode;
     println!(
         "modeled on IMAX3 (FPGA, 2 lanes): prefill {:.2} ms, decode {:.2} ms",
         p.total() * 1e3,
@@ -64,5 +62,7 @@ fn main() {
         100.0 * d.load / d.total(),
         100.0 * d.host / d.total()
     );
-    exec.stats.table("quickstart offload ratios").print();
+    if let Some(stats) = exec.offload_stats() {
+        stats.table("quickstart offload ratios").print();
+    }
 }

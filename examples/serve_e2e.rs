@@ -8,15 +8,17 @@
 //! ```bash
 //! cargo run --release --example serve_e2e            # default: 12 requests
 //! SERVE_REQUESTS=32 SERVE_WORKERS=4 cargo run --release --example serve_e2e
+//! SERVE_BACKEND=imax cargo run --release --example serve_e2e   # modeled phases
 //! ```
 
 use std::time::Instant;
 
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
-use imax_llm::coordinator::{serve, Request};
+use imax_llm::coordinator::{serve_with, Request, ServeOptions};
 use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
 use imax_llm::model::{file as model_file, ModelConfig, ModelWeights, QuantScheme};
 use imax_llm::power;
+use imax_llm::runtime::ExecSpec;
 use imax_llm::tokenizer::Tokenizer;
 use imax_llm::util::report::Table;
 
@@ -28,6 +30,9 @@ fn main() {
     let n_requests = env_usize("SERVE_REQUESTS", 12);
     let n_workers = env_usize("SERVE_WORKERS", 2);
     let n_out = env_usize("SERVE_TOKENS", 24);
+    let n_slots = env_usize("SERVE_SLOTS", 4);
+    let backend = std::env::var("SERVE_BACKEND").unwrap_or_else(|_| "native".to_string());
+    let spec = ExecSpec::parse(&backend).expect("SERVE_BACKEND");
 
     // ---- build or load the model (the paper loads identical quantized
     //      model files on every platform; we persist ours the same way) ----
@@ -74,11 +79,20 @@ fn main() {
         .collect();
     let total_prompt_toks: usize = requests.iter().map(|r| r.prompt.len()).sum();
 
-    // ---- serve ----
+    // ---- serve (continuous batching: requests are admitted into free
+    //      session slots between decode rounds) ----
     println!(
-        "\nserving {n_requests} requests × {n_out} output tokens on {n_workers} workers …"
+        "\nserving {n_requests} requests × {n_out} output tokens on {n_workers} workers \
+         × {n_slots} sessions [{}] …",
+        spec.name()
     );
-    let rep = serve(&weights, requests, n_workers, 42);
+    let opts = ServeOptions {
+        slots_per_worker: n_slots,
+        sampler_seed: 42,
+        spec,
+        ..ServeOptions::default()
+    };
+    let rep = serve_with(&weights, requests, n_workers, &opts).expect("serve");
 
     let mut t = Table::new(
         "serve_e2e results (real compute, tiny-110M Q8_0)",
@@ -109,6 +123,17 @@ fn main() {
         "prefill : decode time".into(),
         format!("{:.2} s : {:.2} s", prefill, decode),
     ]);
+    t.row(vec!["backend".into(), rep.backend.clone()]);
+    if let Some(modeled) = rep.modeled {
+        t.row(vec![
+            "modeled IMAX prefill : decode".into(),
+            format!(
+                "{:.2} s : {:.2} s",
+                modeled.prefill.total(),
+                modeled.decode.total()
+            ),
+        ]);
+    }
     t.print();
 
     // A couple of sample generations (random weights → gibberish, but

@@ -1,0 +1,9 @@
+"""Pytest anchor: importing this conftest puts `python/` on sys.path so
+the suites can `from compile import ...` whether pytest is invoked from
+the repository root (`python -m pytest python/tests -q`) or from
+`python/` itself."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

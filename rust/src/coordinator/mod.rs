@@ -7,10 +7,13 @@
 //! * [`hybrid`] — the paper-scale workload simulator (prefill as one
 //!   batched ubatch, decode per token) producing Fig 11/15 numbers.
 //! * [`phases`] — instrumentation wrapper tying the *functional* tiny-
-//!   model engine to the same cost model.
-//! * [`scheduler`] — the Fig 16 lane-scalability sweep with the host
+//!   model engine to the same cost model (ubatch-aware: batched prefill
+//!   amortizes weight LOAD and configuration).
+//! * [`scheduler`] — the continuous-batching session scheduler behind
+//!   `serve`, plus the Fig 16 lane-scalability sweep with the host
 //!   bottleneck model.
-//! * [`serve`] — batched request serving over std threads (the
+//! * [`serve`] — continuous-batching request serving over std threads
+//!   and the [`crate::runtime::backend::BackendRegistry`] (the
 //!   examples/serve_e2e.rs driver).
 
 pub mod hybrid;
@@ -22,4 +25,5 @@ pub mod serve;
 pub use hybrid::{simulate, Workload, WorkloadRun};
 pub use offload::{OffloadPolicy, OffloadStats};
 pub use phases::InstrumentedExec;
-pub use serve::{serve, Request, ServeReport};
+pub use scheduler::{ContinuousBatcher, Request, SessionLog};
+pub use serve::{serve, serve_with, Completion, ServeOptions, ServeReport};

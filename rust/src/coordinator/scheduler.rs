@@ -1,19 +1,226 @@
-//! Lane scalability analysis (paper Fig 16 / §V.C).
+//! Scheduling: the continuous-batching session scheduler that drives the
+//! serving loop, plus the Fig 16 lane-scalability sweep.
 //!
-//! The FPGA carries 8 IMAX lanes, but the dual-core A72 host saturates
-//! beyond two: "performance saturates and then degrades beyond a two-lane
-//! configuration ... a direct consequence of the dual-core ARM host's
-//! limited capability to manage data transfers and control flow for
-//! multiple parallel lanes." The scheduler model distributes kernel rows
-//! across lanes (EXEC speedup) while the host-contention factor in
-//! [`crate::imax::sim`] inflates HOST/LOAD issue costs — reproducing the
-//! saturation curve.
+//! **Continuous batching** ([`ContinuousBatcher`]): one engine with
+//! several KV-cache session slots serves many requests concurrently —
+//! new requests are admitted into free slots *between decode rounds*, so
+//! a request that arrives mid-run starts prefilling and decoding while
+//! earlier requests are still generating (vLLM-style iteration-level
+//! scheduling; cf. the host-side serving structure of the paper's §III.A
+//! where the Arm host multiplexes llama.cpp contexts). The batcher is
+//! single-threaded and deterministic; `coordinator::serve` runs one per
+//! worker thread over a shared queue.
+//!
+//! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
+//! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
+//! two — the scheduler model distributes kernel rows across lanes (EXEC
+//! speedup) while the host-contention factor in [`crate::imax::sim`]
+//! inflates HOST/LOAD issue costs, reproducing the saturation curve.
+
+use std::time::Instant;
 
 use crate::coordinator::hybrid::{simulate, Workload, WorkloadRun};
 use crate::coordinator::offload::OffloadPolicy;
 use crate::imax::device::ImaxDevice;
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
+use crate::model::engine::{Engine, MatvecExec, Session};
+use crate::model::graph::Phase;
+use crate::model::sampler::Sampler;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: Vec<u32>,
+    pub n_out: usize,
+}
+
+/// Lifecycle record of one served request, timestamped on the serving
+/// epoch's clock (seconds since `ContinuousBatcher::new`'s `epoch`).
+#[derive(Clone, Debug)]
+pub struct SessionLog {
+    pub id: usize,
+    pub tokens: Vec<u32>,
+    pub n_prefill: usize,
+    /// Time spent in the shared queue before admission.
+    pub queue_s: f64,
+    /// Prefill / decode processing time attributed to this request.
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    /// Epoch-relative lifecycle marks.
+    pub admitted_s: f64,
+    pub decode_start_s: f64,
+    pub finished_s: f64,
+}
+
+/// One in-flight request: its session, latest logits, and timing.
+struct InFlight {
+    req: Request,
+    session: Session,
+    logits: Vec<f32>,
+    tokens: Vec<u32>,
+    queue_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    admitted_s: f64,
+    decode_start_s: f64,
+}
+
+impl InFlight {
+    /// Split into the session (returned to the engine's slot pool) and
+    /// the request's lifecycle log.
+    fn finish(self, finished_s: f64) -> (Session, SessionLog) {
+        let InFlight {
+            req,
+            session,
+            logits: _,
+            tokens,
+            queue_s,
+            prefill_s,
+            decode_s,
+            admitted_s,
+            decode_start_s,
+        } = self;
+        let log = SessionLog {
+            id: req.id,
+            n_prefill: req.prompt.len(),
+            tokens,
+            queue_s,
+            prefill_s,
+            decode_s,
+            admitted_s,
+            decode_start_s,
+            finished_s,
+        };
+        (session, log)
+    }
+}
+
+/// Iteration-level scheduler for one worker: admit → prefill as ubatches
+/// → interleaved decode rounds, over the engine's session slots.
+pub struct ContinuousBatcher {
+    engine: Engine,
+    ubatch: usize,
+    epoch: Instant,
+    active: Vec<InFlight>,
+}
+
+impl ContinuousBatcher {
+    /// `epoch` is the serving run's start instant (shared across workers
+    /// so every `SessionLog` sits on one timeline).
+    pub fn new(engine: Engine, ubatch: usize, epoch: Instant) -> ContinuousBatcher {
+        assert!(ubatch >= 1);
+        ContinuousBatcher {
+            engine,
+            ubatch,
+            epoch,
+            active: Vec::new(),
+        }
+    }
+
+    /// Free session slots (how many more requests can be admitted).
+    pub fn capacity(&self) -> usize {
+        self.engine.free_sessions()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Admit one request into a free slot and run its prefill (as ubatch
+    /// chunks). Requires `capacity() > 0`. Returns the finished log
+    /// immediately for degenerate `n_out == 0` requests.
+    pub fn admit(
+        &mut self,
+        req: Request,
+        sampler: Sampler,
+        queue_s: f64,
+        exec: &mut dyn MatvecExec,
+    ) -> Option<SessionLog> {
+        let session = self
+            .engine
+            .open_session(sampler)
+            .expect("admit() requires capacity() > 0");
+        let admitted_s = self.epoch.elapsed().as_secs_f64();
+        let tp0 = Instant::now();
+        let logits = self
+            .engine
+            .prefill_session(&session, &req.prompt, self.ubatch, exec);
+        let prefill_s = tp0.elapsed().as_secs_f64();
+        let inflight = InFlight {
+            req,
+            session,
+            logits,
+            tokens: Vec::new(),
+            queue_s,
+            prefill_s,
+            decode_s: 0.0,
+            admitted_s,
+            decode_start_s: admitted_s + prefill_s,
+        };
+        if inflight.req.n_out == 0 {
+            let finished_s = self.epoch.elapsed().as_secs_f64();
+            let (session, mut log) = inflight.finish(finished_s);
+            self.engine.close_session(session);
+            // A 0-output request never decodes; pin its decode mark to
+            // its finish time so interval arithmetic stays well-formed.
+            log.decode_start_s = log.finished_s;
+            return Some(log);
+        }
+        self.active.push(inflight);
+        None
+    }
+
+    /// One decode step for every active request, in admission order;
+    /// requests that reach their `n_out` are retired and returned. Each
+    /// request samples exactly `n_out` tokens over its lifetime (the
+    /// final sampled token needs no further forward pass).
+    pub fn decode_round(&mut self, exec: &mut dyn MatvecExec) -> Vec<SessionLog> {
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let td0 = Instant::now();
+            let f = &mut self.active[i];
+            if f.tokens.is_empty() {
+                f.decode_start_s = self.epoch.elapsed().as_secs_f64();
+            }
+            let next = f.session.sampler.sample(&f.logits);
+            f.tokens.push(next);
+            let done = f.tokens.len() == f.req.n_out;
+            if !done {
+                f.logits = self
+                    .engine
+                    .forward_session(&f.session, next, Phase::Decode, true, exec)
+                    .expect("decode produced logits");
+            }
+            self.active[i].decode_s += td0.elapsed().as_secs_f64();
+            if done {
+                let f = self.active.remove(i);
+                let finished_s = self.epoch.elapsed().as_secs_f64();
+                let (session, log) = f.finish(finished_s);
+                self.engine.close_session(session);
+                finished.push(log);
+            } else {
+                i += 1;
+            }
+        }
+        finished
+    }
+
+    /// Drain every active request to completion (no further admissions).
+    pub fn drain(&mut self, exec: &mut dyn MatvecExec) -> Vec<SessionLog> {
+        let mut out = Vec::new();
+        while self.n_active() > 0 {
+            out.extend(self.decode_round(exec));
+        }
+        out
+    }
+}
 
 /// One point of the Fig 16 sweep.
 #[derive(Clone, Debug)]
@@ -67,6 +274,8 @@ pub fn best_lanes(points: &[ScalingPoint]) -> usize {
 mod tests {
     use super::*;
     use crate::model::config::{ModelConfig, QuantScheme};
+    use crate::model::engine::NativeExec;
+    use crate::model::weights::ModelWeights;
 
     fn workload() -> Workload {
         Workload {
@@ -75,6 +284,86 @@ mod tests {
             n_in: 32,
             n_out: 16,
         }
+    }
+
+    fn tiny_weights() -> ModelWeights {
+        ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 11)
+    }
+
+    #[test]
+    fn batcher_matches_generate() {
+        let weights = tiny_weights();
+        let prompt = vec![1u32, 5, 9, 2, 7];
+        let n_out = 6;
+
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(weights.clone(), 2),
+            3,
+            Instant::now(),
+        );
+        let mut exec = NativeExec;
+        let req = Request { id: 0, prompt: prompt.clone(), n_out };
+        assert!(b.admit(req, Sampler::greedy(), 0.0, &mut exec).is_none());
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 1);
+
+        let mut reference = Engine::new(weights);
+        let want = reference.generate(&prompt, n_out, &mut Sampler::greedy(), &mut NativeExec);
+        assert_eq!(logs[0].tokens, want.tokens, "batcher must match generate");
+        assert_eq!(logs[0].n_prefill, prompt.len());
+        assert!(logs[0].decode_start_s >= logs[0].admitted_s);
+        assert!(logs[0].finished_s >= logs[0].decode_start_s);
+    }
+
+    #[test]
+    fn mid_run_admission_interleaves() {
+        // The continuous-batching property, deterministically: a request
+        // admitted after another has started decoding finishes its own
+        // decode before the earlier request completes.
+        let weights = tiny_weights();
+        let mut b =
+            ContinuousBatcher::new(Engine::with_slots(weights, 2), 32, Instant::now());
+        let mut exec = NativeExec;
+
+        let r0 = Request { id: 0, prompt: vec![1, 2, 3], n_out: 8 };
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec);
+        // r0 decodes a few rounds alone…
+        for _ in 0..3 {
+            assert!(b.decode_round(&mut exec).is_empty());
+        }
+        // …then r1 arrives mid-run and joins the same engine.
+        let r1 = Request { id: 1, prompt: vec![9, 8], n_out: 2 };
+        b.admit(r1, Sampler::greedy(), 0.0, &mut exec);
+        assert_eq!(b.n_active(), 2);
+
+        let mut logs = b.drain(&mut exec);
+        logs.sort_by_key(|l| l.id);
+        let (l0, l1) = (&logs[0], &logs[1]);
+        assert_eq!(l0.tokens.len(), 8);
+        assert_eq!(l1.tokens.len(), 2);
+        assert!(
+            l1.admitted_s > l0.decode_start_s,
+            "r1 admitted after r0 started decoding"
+        );
+        assert!(
+            l1.finished_s < l0.finished_s,
+            "short r1 finishes while long r0 is still decoding"
+        );
+    }
+
+    #[test]
+    fn zero_output_request_finishes_at_admit() {
+        let weights = tiny_weights();
+        let mut b =
+            ContinuousBatcher::new(Engine::with_slots(weights, 1), 32, Instant::now());
+        let req = Request { id: 7, prompt: vec![1, 2], n_out: 0 };
+        let log = b
+            .admit(req, Sampler::greedy(), 0.0, &mut NativeExec)
+            .expect("finishes immediately");
+        assert_eq!(log.id, 7);
+        assert!(log.tokens.is_empty());
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.capacity(), 1, "slot released");
     }
 
     #[test]

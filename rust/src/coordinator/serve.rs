@@ -1,31 +1,60 @@
-//! Batched request serving on std threads (no tokio in the vendored set).
+//! Continuous-batching request serving on std threads (no tokio in the
+//! vendored set).
 //!
-//! The serving driver behind `examples/serve_e2e.rs`: a FIFO request
-//! queue feeds worker threads, each owning an engine instance built from
-//! shared weights (the host side of the paper's system runs one llama.cpp
-//! context per Arm core — our workers mirror that). Reports per-request
-//! latency and aggregate throughput, the metrics the paper's E2E
-//! evaluation is built on.
+//! The serving driver behind `examples/serve_e2e.rs` and `imax-llm
+//! serve`: a shared admission queue feeds worker threads, each owning a
+//! multi-session engine driven by a [`ContinuousBatcher`] — prefill runs
+//! as ubatch chunks and decode rounds interleave every live request, so
+//! a request admitted mid-run starts decoding while earlier requests are
+//! still generating. The kernel executor comes from the
+//! [`BackendRegistry`], so the same loop can serve on native kernels,
+//! instrumented-IMAX accounting (per-phase modeled costs in the report),
+//! or PJRT. Reports per-request latency and aggregate throughput, the
+//! metrics the paper's E2E evaluation is built on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use crate::model::engine::{Engine, NativeExec};
+use anyhow::Result;
+
+use crate::coordinator::scheduler::ContinuousBatcher;
+pub use crate::coordinator::scheduler::Request;
+use crate::imax::timing::RunBreakdown;
+use crate::model::engine::{Engine, DEFAULT_UBATCH};
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
+use crate::runtime::backend::{BackendRegistry, BackendReport, ExecSpec};
 use crate::util::stats::{percentile, Summary};
 
-/// One generation request.
+/// Serving configuration beyond the request list.
 #[derive(Clone, Debug)]
-pub struct Request {
-    pub id: usize,
-    pub prompt: Vec<u32>,
-    pub n_out: usize,
+pub struct ServeOptions {
+    /// Concurrent sessions per worker engine (continuous-batching width).
+    pub slots_per_worker: usize,
+    /// Prefill chunk size.
+    pub ubatch: usize,
+    /// Base seed; request `id` is mixed in so results are independent of
+    /// which worker serves a request.
+    pub sampler_seed: u64,
+    /// Kernel executor, built per worker via the [`BackendRegistry`].
+    pub spec: ExecSpec,
 }
 
-/// Completed request with timing.
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            slots_per_worker: 4,
+            ubatch: DEFAULT_UBATCH,
+            sampler_seed: 42,
+            spec: ExecSpec::Native,
+        }
+    }
+}
+
+/// Completed request with timing (epoch-relative marks are seconds since
+/// the serve call started).
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: usize,
@@ -33,8 +62,12 @@ pub struct Completion {
     pub queue_s: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
+    /// Enqueue → completion.
     pub total_s: f64,
     pub worker: usize,
+    pub admitted_s: f64,
+    pub decode_start_s: f64,
+    pub finished_s: f64,
 }
 
 /// Aggregate serving statistics.
@@ -47,107 +80,124 @@ pub struct ServeReport {
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_mean_s: f64,
+    /// Which backend served the run.
+    pub backend: String,
+    /// Modeled IMAX per-phase costs summed over workers (imax backend).
+    pub modeled: Option<RunBreakdown>,
+    /// Offloaded / total MACs across the run (imax backend).
+    pub offload_ratio: Option<f64>,
 }
 
-/// Serve a batch of requests over `n_workers` engine workers; blocks until
-/// all requests complete.
+/// Serve a batch of requests over `n_workers` native-kernel workers;
+/// blocks until all requests complete. Thin wrapper over [`serve_with`]
+/// with default continuous-batching options.
 pub fn serve(
     weights: &ModelWeights,
     requests: Vec<Request>,
     n_workers: usize,
     sampler_seed: u64,
 ) -> ServeReport {
+    let opts = ServeOptions {
+        sampler_seed,
+        ..ServeOptions::default()
+    };
+    serve_with(weights, requests, n_workers, &opts).expect("native backend always builds")
+}
+
+/// Serve with explicit options (backend spec, session slots, ubatch).
+pub fn serve_with(
+    weights: &ModelWeights,
+    requests: Vec<Request>,
+    n_workers: usize,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
     assert!(n_workers >= 1);
+    if opts.slots_per_worker == 0 {
+        anyhow::bail!("slots_per_worker must be at least 1");
+    }
+    if opts.ubatch == 0 {
+        anyhow::bail!("ubatch must be at least 1");
+    }
+    BackendRegistry::validate(&opts.spec)?;
     let n_req = requests.len();
     let started = Instant::now();
 
-    // FIFO queue with enqueue timestamps.
-    let queue: Arc<Mutex<std::collections::VecDeque<(Request, Instant)>>> = Arc::new(
-        Mutex::new(requests.into_iter().map(|r| (r, Instant::now())).collect()),
-    );
+    // Shared admission queue with enqueue timestamps.
+    let queue: Arc<Mutex<VecDeque<(Request, Instant)>>> = Arc::new(Mutex::new(
+        requests.into_iter().map(|r| (r, Instant::now())).collect(),
+    ));
     let (tx, rx) = mpsc::channel::<Completion>();
-    let done = Arc::new(AtomicUsize::new(0));
 
     let mut handles = Vec::new();
     for worker in 0..n_workers {
         let queue = Arc::clone(&queue);
         let tx = tx.clone();
-        let done = Arc::clone(&done);
         let weights = weights.clone();
-        handles.push(thread::spawn(move || {
-            let mut engine = Engine::new(weights);
-            let mut sampler = Sampler::top_k(0.9, 40, sampler_seed + worker as u64);
-            loop {
-                let item = queue.lock().unwrap().pop_front();
-                let Some((req, enq)) = item else { break };
-                let t0 = Instant::now();
-                let queue_s = (t0 - enq).as_secs_f64();
-
-                engine.reset();
-                // Prefill phase timing.
-                let mut logits = None;
-                let tp0 = Instant::now();
-                for (i, &tok) in req.prompt.iter().enumerate() {
-                    let last = i + 1 == req.prompt.len();
-                    logits = engine.forward(
-                        tok,
-                        crate::model::graph::Phase::Prefill,
-                        last,
-                        &mut NativeExec,
-                    );
-                }
-                let prefill_s = tp0.elapsed().as_secs_f64();
-
-                // Decode phase.
-                let td0 = Instant::now();
-                let mut tokens = Vec::with_capacity(req.n_out);
-                for _ in 0..req.n_out {
-                    let l = logits.as_ref().expect("logits");
-                    let next = sampler.sample(l);
-                    tokens.push(next);
-                    if tokens.len() == req.n_out {
-                        break;
-                    }
-                    logits = engine.forward(
-                        next,
-                        crate::model::graph::Phase::Decode,
-                        true,
-                        &mut NativeExec,
-                    );
-                }
-                let decode_s = td0.elapsed().as_secs_f64();
-
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || -> BackendReport {
+            let mut exec =
+                BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
+            let engine = Engine::with_slots(weights, opts.slots_per_worker);
+            let mut batcher = ContinuousBatcher::new(engine, opts.ubatch, started);
+            let send = |log: crate::coordinator::scheduler::SessionLog,
+                        tx: &mpsc::Sender<Completion>| {
                 tx.send(Completion {
-                    id: req.id,
-                    tokens,
-                    queue_s,
-                    prefill_s,
-                    decode_s,
-                    total_s: t0.elapsed().as_secs_f64() + queue_s,
+                    id: log.id,
+                    total_s: log.queue_s + (log.finished_s - log.admitted_s),
+                    tokens: log.tokens,
+                    queue_s: log.queue_s,
+                    prefill_s: log.prefill_s,
+                    decode_s: log.decode_s,
                     worker,
+                    admitted_s: log.admitted_s,
+                    decode_start_s: log.decode_start_s,
+                    finished_s: log.finished_s,
                 })
                 .ok();
-                done.fetch_add(1, Ordering::SeqCst);
+            };
+            loop {
+                // Admit new requests into free session slots *between*
+                // decode rounds — the continuous-batching step.
+                while batcher.capacity() > 0 {
+                    let item = queue.lock().unwrap().pop_front();
+                    let Some((req, enq)) = item else { break };
+                    let queue_s = enq.elapsed().as_secs_f64();
+                    let sampler =
+                        Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
+                    if let Some(log) = batcher.admit(req, sampler, queue_s, &mut exec) {
+                        send(log, &tx);
+                    }
+                }
+                if batcher.n_active() == 0 {
+                    if queue.lock().unwrap().is_empty() {
+                        break;
+                    }
+                    continue;
+                }
+                // One interleaved decode step for every live request.
+                for log in batcher.decode_round(&mut exec) {
+                    send(log, &tx);
+                }
             }
+            exec.report()
         }));
     }
     drop(tx);
 
     let mut completions: Vec<Completion> = rx.iter().collect();
-    for h in handles {
-        h.join().expect("worker panicked");
-    }
+    let reports: Vec<BackendReport> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker panicked"))
+        .collect();
     completions.sort_by_key(|c| c.id);
     assert_eq!(completions.len(), n_req, "all requests completed");
 
     let wall_s = started.elapsed().as_secs_f64();
-    let total_tokens: usize = completions
-        .iter()
-        .map(|c| c.tokens.len() + 0)
-        .sum::<usize>();
+    let total_tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
     let lats: Vec<f64> = completions.iter().map(|c| c.total_s).collect();
     let summary = Summary::from_slice(&lats);
-    ServeReport {
+    let merged = BackendReport::merged(&reports);
+    Ok(ServeReport {
         throughput_tok_s: total_tokens as f64 / wall_s,
         latency_p50_s: percentile(&lats, 50.0),
         latency_p95_s: percentile(&lats, 95.0),
@@ -155,13 +205,17 @@ pub fn serve(
         completions,
         wall_s,
         total_tokens,
-    }
+        backend: opts.spec.name(),
+        modeled: merged.modeled,
+        offload_ratio: merged.offload_ratio,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::config::{ModelConfig, QuantScheme};
+    use crate::runtime::backend::ImaxSpec;
 
     fn tiny_weights() -> ModelWeights {
         ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 11)
@@ -183,9 +237,12 @@ mod tests {
         assert_eq!(rep.completions.len(), 4);
         assert_eq!(rep.total_tokens, 12);
         assert!(rep.throughput_tok_s > 0.0);
+        assert_eq!(rep.backend, "native");
+        assert!(rep.modeled.is_none());
         for c in &rep.completions {
             assert_eq!(c.tokens.len(), 3);
             assert!(c.prefill_s > 0.0 && c.decode_s > 0.0);
+            assert!(c.finished_s >= c.decode_start_s);
         }
     }
 
@@ -210,5 +267,65 @@ mod tests {
         let rep = serve(&tiny_weights(), reqs(8), 2, 9);
         assert!(rep.latency_p50_s <= rep.latency_p95_s);
         assert!(rep.latency_mean_s > 0.0);
+    }
+
+    #[test]
+    fn continuous_batching_overlaps_requests() {
+        // 8 requests, 2 workers × 2 slots: requests 5..8 are admitted
+        // mid-run and must start decoding before the earlier requests on
+        // their worker finish. Distinct n_out per request staggers the
+        // finishes, so every mid-run admission lands next to a still-live
+        // session.
+        let requests: Vec<Request> = (0..8)
+            .map(|id| Request {
+                id,
+                prompt: vec![1 + id as u32, 2, 3, 4],
+                n_out: 4 + id * 2,
+            })
+            .collect();
+        let opts = ServeOptions {
+            slots_per_worker: 2,
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&tiny_weights(), requests, 2, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 8);
+        let overlap = rep.completions.iter().any(|late| {
+            rep.completions.iter().any(|early| {
+                early.worker == late.worker
+                    && late.admitted_s > early.decode_start_s
+                    && late.decode_start_s < early.finished_s
+            })
+        });
+        assert!(
+            overlap,
+            "a mid-run admission must decode while an earlier request is still live"
+        );
+    }
+
+    #[test]
+    fn imax_backend_reports_phases_under_serve() {
+        let opts = ServeOptions {
+            spec: ExecSpec::Imax(ImaxSpec::default()),
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&tiny_weights(), reqs(3), 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        assert_eq!(rep.backend, "imax:fpga2");
+        let m = rep.modeled.expect("imax backend models phases");
+        assert!(m.prefill.total() > 0.0, "prefill accounted");
+        assert!(m.decode.total() > 0.0, "decode accounted");
+        assert!(rep.offload_ratio.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rejects_unavailable_backend() {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let opts = ServeOptions {
+                spec: ExecSpec::Pjrt,
+                ..ServeOptions::default()
+            };
+            assert!(serve_with(&tiny_weights(), reqs(1), 1, &opts).is_err());
+        }
     }
 }

@@ -20,13 +20,12 @@ use anyhow::{bail, Context, Result};
 use imax_llm::baseline::calibration as cal;
 use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
-use imax_llm::coordinator::{serve, InstrumentedExec, Request};
+use imax_llm::coordinator::{serve_with, Request, ServeOptions};
 use imax_llm::harness::experiments as exp;
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
-use imax_llm::model::{
-    Engine, ModelConfig, ModelWeights, NativeExec, QuantScheme, Sampler,
-};
+use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_UBATCH};
 use imax_llm::power;
+use imax_llm::runtime::{BackendRegistry, ExecSpec};
 use imax_llm::tokenizer::Tokenizer;
 use imax_llm::util::report::Table;
 
@@ -212,28 +211,38 @@ fn cmd_anchors() {
     t.print();
 }
 
+fn backend_flag(flags: &HashMap<String, String>, default: &str) -> Result<ExecSpec> {
+    let name = flags.get("backend").map(|s| s.as_str()).unwrap_or(default);
+    ExecSpec::parse(name)
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = model_flag(flags)?;
     let scheme = scheme_flag(flags)?;
+    let spec = backend_flag(flags, "imax")?;
     let n_out: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let prompt_text = flags
         .get("prompt")
         .cloned()
         .unwrap_or_else(|| "the coarse-grained linear array accelerates".to_string());
 
-    eprintln!("building {} ({}) with random-init weights…", cfg.name, scheme.name());
+    eprintln!(
+        "building {} ({}) with random-init weights, backend {}…",
+        cfg.name,
+        scheme.name(),
+        spec.name()
+    );
     let weights = ModelWeights::random(&cfg, scheme, 2025);
     let tok = Tokenizer::train(&prompt_text.repeat(8), 64);
     let prompt = tok.encode_with_bos(&prompt_text);
     let mut engine = Engine::new(weights);
 
-    let dev = ImaxDevice::fpga(2);
-    let policy = imax_llm::coordinator::OffloadPolicy::new(LmmConfig::new(64));
-    let mut exec = InstrumentedExec::new(NativeExec, &dev, &policy, TransferMode::Coalesced);
+    let mut exec = BackendRegistry::build(&spec)?;
     let t0 = std::time::Instant::now();
     let res = engine.generate(&prompt, n_out, &mut Sampler::top_k(0.9, 40, 7), &mut exec);
     let wall = t0.elapsed().as_secs_f64();
 
+    println!("backend       : {}", spec.name());
     println!("prompt tokens : {}", prompt.len());
     println!("output tokens : {}", res.tokens.len());
     println!("output text   : {:?}", tok.decode(&res.tokens));
@@ -241,21 +250,38 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         "wall time     : {wall:.3}s ({:.1} tok/s)",
         (prompt.len() + res.tokens.len()) as f64 / wall
     );
-    println!(
-        "modeled IMAX  : prefill {:.4}s decode {:.4}s (FPGA 2-lane)",
-        exec.modeled.prefill.total(),
-        exec.modeled.decode.total()
-    );
-    exec.stats.table(&format!("{} {}", cfg.name, scheme.name())).print();
+    let rep = exec.report();
+    if let Some(modeled) = rep.modeled {
+        println!(
+            "modeled IMAX  : prefill {:.4}s decode {:.4}s",
+            modeled.prefill.total(),
+            modeled.decode.total()
+        );
+    }
+    if let Some(stats) = exec.offload_stats() {
+        stats.table(&format!("{} {}", cfg.name, scheme.name())).print();
+    }
     Ok(())
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = model_flag(flags)?;
     let scheme = scheme_flag(flags)?;
+    let spec = backend_flag(flags, "native")?;
     let n_req: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
-    eprintln!("building {} ({})…", cfg.name, scheme.name());
+    let slots: usize = flags.get("slots").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let ubatch: usize = flags
+        .get("ubatch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(DEFAULT_UBATCH);
+    eprintln!(
+        "building {} ({}), backend {}, {workers} workers × {slots} sessions…",
+        cfg.name,
+        scheme.name(),
+        spec.name()
+    );
     let weights = ModelWeights::random(&cfg, scheme, 2025);
     let requests: Vec<Request> = (0..n_req)
         .map(|id| Request {
@@ -264,16 +290,31 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             n_out: 16,
         })
         .collect();
-    let rep = serve(&weights, requests, workers, 42);
+    let opts = ServeOptions {
+        slots_per_worker: slots,
+        ubatch,
+        sampler_seed: 42,
+        spec,
+    };
+    let rep = serve_with(&weights, requests, workers, &opts)?;
     println!(
-        "served {} requests / {} tokens in {:.2}s — {:.1} tok/s, p50 {:.3}s p95 {:.3}s",
+        "served {} requests / {} tokens in {:.2}s — {:.1} tok/s, p50 {:.3}s p95 {:.3}s [{}]",
         rep.completions.len(),
         rep.total_tokens,
         rep.wall_s,
         rep.throughput_tok_s,
         rep.latency_p50_s,
-        rep.latency_p95_s
+        rep.latency_p95_s,
+        rep.backend,
     );
+    if let Some(modeled) = rep.modeled {
+        println!(
+            "modeled IMAX per-phase: prefill {:.4}s decode {:.4}s (offload ratio {:.0}%)",
+            modeled.prefill.total(),
+            modeled.decode.total(),
+            100.0 * rep.offload_ratio.unwrap_or(0.0)
+        );
+    }
     Ok(())
 }
 
@@ -355,7 +396,13 @@ experiments:
 
 functional engine (real tiny models, real tokens):
   run         [--model tiny|110m] [--scheme F16|Q8_0|Q3_K_S] [--prompt txt] [--n N]
-  serve       [--requests N] [--workers N] [--model tiny|110m] [--scheme S]
+              [--backend native|imax|imax:asic|pjrt]   (default imax)
+  serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
+              [--model tiny|110m] [--scheme S]
+              [--backend native|imax|imax:asic|pjrt]   (default native)
+              continuous batching: sessions are admitted into free slots
+              between decode rounds; --backend imax adds modeled per-phase
+              IMAX accounting to the serve report
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 ";

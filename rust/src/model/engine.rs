@@ -7,6 +7,15 @@
 //! native Rust kernels — without the engine knowing which. This mirrors the
 //! paper's structure where llama.cpp's graph executor calls into a backend
 //! that may offload to IMAX.
+//!
+//! The engine is multi-sequence: a [`Session`] owns one slot of the
+//! slot-indexed [`KvCache`], and [`Engine::forward_ubatch`] processes a
+//! prefill chunk of several tokens in one call (llama.cpp's ubatch),
+//! which is what lets backends amortize weight transfer and
+//! configuration across the chunk — the root of the paper's
+//! prefill-compute-bound vs decode-LOAD-bound duality (§V.B). The
+//! legacy single-sequence [`Engine::forward`] / [`Engine::generate`] API
+//! is a thin wrapper over slot 0.
 
 use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
 use crate::model::graph::{MatvecOp, OpKind, Phase};
@@ -17,6 +26,10 @@ use crate::model::weights::ModelWeights;
 use crate::quant::GgmlType;
 use crate::tensor::{matvec_into, ActQuant, QTensor};
 
+/// Default prefill chunk size (llama.cpp's `n_ubatch` spirit; bounds the
+/// per-chunk scratch memory while amortizing per-kernel overheads).
+pub const DEFAULT_UBATCH: usize = 32;
+
 /// Execution hook for dot-product kernels.
 pub trait MatvecExec {
     /// Execute `out = W · act` for a linear projection. `op` carries the
@@ -24,11 +37,23 @@ pub trait MatvecExec {
     /// decisions.
     fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]);
 
+    /// Execute the same projection for every token of a ubatch:
+    /// `outs[i*rows..][..rows] = W · acts[i]`. Backends may override to
+    /// amortize the weight transfer / configuration across the chunk
+    /// (batched prefill); the default dispatches token-by-token, which
+    /// keeps results bit-identical to the sequential path.
+    fn linear_ubatch(&mut self, op: &MatvecOp, w: &QTensor, acts: &[ActQuant], outs: &mut [f32]) {
+        for (act, out) in acts.iter().zip(outs.chunks_mut(op.rows)) {
+            self.linear(op, w, act, out);
+        }
+    }
+
     /// Observe an attention kernel (score or mix) computed by the engine;
     /// used by the coordinator for timing/energy accounting. Default: no-op.
     fn attn(&mut self, _op: &MatvecOp) {}
 
-    /// Token-step boundary notification. Default: no-op.
+    /// Step boundary notification: one per forward call (a ubatch counts
+    /// as one step spanning `pos..pos+n`). Default: no-op.
     fn begin_step(&mut self, _phase: Phase, _pos: usize) {}
     fn end_step(&mut self, _phase: Phase, _pos: usize) {}
 }
@@ -43,27 +68,100 @@ impl MatvecExec for NativeExec {
     }
 }
 
-/// Scratch buffers for one token step (allocated once, reused).
-struct Scratch {
-    xn: Vec<f32>,      // normed input
-    q: Vec<f32>,       // q_dim
-    k: Vec<f32>,       // kv_dim
-    v: Vec<f32>,       // kv_dim
-    attn_out: Vec<f32>, // q_dim (concatenated head outputs)
-    proj: Vec<f32>,    // d_model (o_proj / ffn_down output)
-    gate: Vec<f32>,    // d_ffn
-    up: Vec<f32>,      // d_ffn
-    act: Vec<f32>,     // d_ffn (swiglu result)
-    scores: Vec<f32>,  // max_seq attention scores
-    logits: Vec<f32>,  // vocab
+/// One in-flight sequence: a claimed KV-cache slot plus the sampler state
+/// that decodes it. Obtained from [`Engine::open_session`]; the position
+/// is tracked by the cache slot itself (`Engine::session_pos`).
+#[derive(Debug)]
+pub struct Session {
+    slot: usize,
+    pub sampler: Sampler,
 }
 
-/// The inference engine: weights + KV cache + scratch.
+impl Session {
+    /// The KV-cache slot this session owns.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
+/// Scratch buffers sized for `cap` ubatch tokens (allocated once, grown
+/// on demand, reused across steps).
+struct Scratch {
+    cap: usize,
+    xn: Vec<f32>,       // cap × d_model (normed input)
+    q: Vec<f32>,        // cap × q_dim
+    k: Vec<f32>,        // cap × kv_dim
+    v: Vec<f32>,        // cap × kv_dim
+    attn_out: Vec<f32>, // cap × q_dim (concatenated head outputs)
+    proj: Vec<f32>,     // cap × d_model (o_proj / ffn_down output)
+    gate: Vec<f32>,     // cap × d_ffn
+    up: Vec<f32>,       // cap × d_ffn
+    act: Vec<f32>,      // cap × d_ffn (swiglu result)
+    scores: Vec<f32>,   // max_seq attention scores (one token at a time)
+    logits: Vec<f32>,   // vocab (last ubatch token only)
+}
+
+impl Scratch {
+    fn new(cfg: &ModelConfig) -> Scratch {
+        let mut s = Scratch {
+            cap: 0,
+            xn: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            attn_out: Vec::new(),
+            proj: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            act: Vec::new(),
+            scores: vec![0.0; cfg.max_seq_len],
+            logits: vec![0.0; cfg.vocab_size],
+        };
+        s.ensure(cfg, 1);
+        s
+    }
+
+    fn ensure(&mut self, cfg: &ModelConfig, n: usize) {
+        if n <= self.cap {
+            return;
+        }
+        self.xn.resize(n * cfg.d_model, 0.0);
+        self.q.resize(n * cfg.q_dim(), 0.0);
+        self.k.resize(n * cfg.kv_dim(), 0.0);
+        self.v.resize(n * cfg.kv_dim(), 0.0);
+        self.attn_out.resize(n * cfg.q_dim(), 0.0);
+        self.proj.resize(n * cfg.d_model, 0.0);
+        self.gate.resize(n * cfg.d_ffn, 0.0);
+        self.up.resize(n * cfg.d_ffn, 0.0);
+        self.act.resize(n * cfg.d_ffn, 0.0);
+        self.cap = n;
+    }
+}
+
+fn linear_op_for(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    kind: LinearKind,
+    layer: Option<usize>,
+) -> MatvecOp {
+    let (rows, cols) = kind.shape(cfg);
+    MatvecOp {
+        kind: OpKind::Linear(kind),
+        layer,
+        wty: kind.weight_type(scheme),
+        rows,
+        cols,
+    }
+}
+
+/// The inference engine: weights + multi-slot KV cache + scratch.
 pub struct Engine {
     pub weights: ModelWeights,
     pub cache: KvCache,
     scratch: Scratch,
-    /// Ops counted since construction (functional-path statistics).
+    /// Slots not currently owned by a session (LIFO for cache warmth).
+    free_slots: Vec<usize>,
+    /// Tokens processed since construction (functional-path statistics).
     pub n_tokens_processed: usize,
 }
 
@@ -77,26 +175,23 @@ pub struct GenerateResult {
 }
 
 impl Engine {
+    /// Single-sequence engine (legacy API; slot 0 is the implicit
+    /// sequence).
     pub fn new(weights: ModelWeights) -> Engine {
+        Engine::with_slots(weights, 1)
+    }
+
+    /// Engine holding up to `n_slots` concurrent sequences (continuous
+    /// batching).
+    pub fn with_slots(weights: ModelWeights, n_slots: usize) -> Engine {
         let cfg = &weights.cfg;
-        let scratch = Scratch {
-            xn: vec![0.0; cfg.d_model.max(cfg.q_dim())],
-            q: vec![0.0; cfg.q_dim()],
-            k: vec![0.0; cfg.kv_dim()],
-            v: vec![0.0; cfg.kv_dim()],
-            attn_out: vec![0.0; cfg.q_dim()],
-            proj: vec![0.0; cfg.d_model],
-            gate: vec![0.0; cfg.d_ffn],
-            up: vec![0.0; cfg.d_ffn],
-            act: vec![0.0; cfg.d_ffn],
-            scores: vec![0.0; cfg.max_seq_len],
-            logits: vec![0.0; cfg.vocab_size],
-        };
-        let cache = KvCache::new(cfg);
+        let scratch = Scratch::new(cfg);
+        let cache = KvCache::with_slots(cfg, n_slots);
         Engine {
             weights,
             cache,
             scratch,
+            free_slots: (0..n_slots).rev().collect(),
             n_tokens_processed: 0,
         }
     }
@@ -109,24 +204,103 @@ impl Engine {
         self.weights.scheme
     }
 
-    /// Reset the KV cache for a fresh request.
+    pub fn n_slots(&self) -> usize {
+        self.cache.n_slots
+    }
+
+    /// Sessions that can still be opened.
+    pub fn free_sessions(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    /// Claim a free KV-cache slot for a new sequence. `None` when every
+    /// slot is owned by a live session.
+    pub fn open_session(&mut self, sampler: Sampler) -> Option<Session> {
+        let slot = self.free_slots.pop()?;
+        self.cache.reset_slot(slot);
+        Some(Session { slot, sampler })
+    }
+
+    /// Release a session's slot back to the free pool.
+    pub fn close_session(&mut self, session: Session) {
+        self.cache.reset_slot(session.slot);
+        self.free_slots.push(session.slot);
+    }
+
+    /// Context length of the session's sequence so far.
+    pub fn session_pos(&self, session: &Session) -> usize {
+        self.cache.slot_len(session.slot)
+    }
+
+    /// Reset the KV cache for a fresh request (legacy single-sequence
+    /// API; clears every slot).
     pub fn reset(&mut self) {
         self.cache.reset();
     }
 
-    fn linear_op(&self, kind: LinearKind, layer: Option<usize>) -> MatvecOp {
-        let (rows, cols) = kind.shape(self.cfg());
-        MatvecOp {
-            kind: OpKind::Linear(kind),
-            layer,
-            wty: kind.weight_type(self.scheme()),
-            rows,
-            cols,
-        }
+    /// Process one token for `session` at its current position.
+    pub fn forward_session(
+        &mut self,
+        session: &Session,
+        token: u32,
+        phase: Phase,
+        want_logits: bool,
+        exec: &mut dyn MatvecExec,
+    ) -> Option<Vec<f32>> {
+        self.ubatch_on_slot(session.slot, &[token], phase, want_logits, exec)
     }
 
-    /// Process one token at position `pos` (= current cache length).
-    /// Returns logits if `want_logits`.
+    /// Process a chunk of `tokens` for `session` in one call (prefill
+    /// ubatch). Returns the logits of the chunk's last token if
+    /// `want_logits`.
+    pub fn forward_ubatch(
+        &mut self,
+        session: &Session,
+        tokens: &[u32],
+        phase: Phase,
+        want_logits: bool,
+        exec: &mut dyn MatvecExec,
+    ) -> Option<Vec<f32>> {
+        self.ubatch_on_slot(session.slot, tokens, phase, want_logits, exec)
+    }
+
+    /// Prefill a whole prompt for `session` in chunks of at most
+    /// `ubatch` tokens; returns the last token's logits.
+    pub fn prefill_session(
+        &mut self,
+        session: &Session,
+        prompt: &[u32],
+        ubatch: usize,
+        exec: &mut dyn MatvecExec,
+    ) -> Vec<f32> {
+        self.prefill_on_slot(session.slot, prompt, ubatch, exec)
+    }
+
+    /// Chunked-prefill core shared by the session API and the legacy
+    /// `generate` path.
+    fn prefill_on_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[u32],
+        ubatch: usize,
+        exec: &mut dyn MatvecExec,
+    ) -> Vec<f32> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(ubatch >= 1, "ubatch must be at least 1");
+        let mut logits = None;
+        let mut start = 0;
+        while start < prompt.len() {
+            let end = (start + ubatch).min(prompt.len());
+            let last = end == prompt.len();
+            logits = self.ubatch_on_slot(slot, &prompt[start..end], Phase::Prefill, last, exec);
+            start = end;
+        }
+        logits.expect("prefill produced logits")
+    }
+
+    /// Process one token at position `pos` (= current cache length) on
+    /// the implicit slot 0 (legacy single-sequence API). Returns logits
+    /// if `want_logits`.
     pub fn forward(
         &mut self,
         token: u32,
@@ -134,139 +308,239 @@ impl Engine {
         want_logits: bool,
         exec: &mut dyn MatvecExec,
     ) -> Option<Vec<f32>> {
-        let cfg = self.weights.cfg.clone();
-        let pos = self.cache.len();
-        assert!(pos < cfg.max_seq_len, "context overflow");
-        exec.begin_step(phase, pos);
+        self.ubatch_on_slot(0, &[token], phase, want_logits, exec)
+    }
 
-        let mut x = self.weights.embed_token(token);
+    /// The forward pass: `tokens` as one ubatch appended to `slot`'s
+    /// sequence. Token `i` of the chunk sits at position `len + i` and
+    /// attends causally to everything before it, so the arithmetic is
+    /// bit-identical to feeding the chunk one token at a time.
+    fn ubatch_on_slot(
+        &mut self,
+        slot: usize,
+        tokens: &[u32],
+        phase: Phase,
+        want_logits: bool,
+        exec: &mut dyn MatvecExec,
+    ) -> Option<Vec<f32>> {
+        let cfg = self.weights.cfg.clone();
+        let scheme = self.weights.scheme;
+        let n = tokens.len();
+        assert!(n >= 1, "empty ubatch");
+        let base = self.cache.slot_len(slot);
+        assert!(base + n <= cfg.max_seq_len, "context overflow");
+        self.scratch.ensure(&cfg, n);
+        exec.begin_step(phase, base);
+
+        let d = cfg.d_model;
+        let qd = cfg.q_dim();
+        let kvd = cfg.kv_dim();
+        let df = cfg.d_ffn;
         let head_dim = cfg.head_dim;
         let groups = cfg.gqa_groups();
         let scale = 1.0 / (head_dim as f32).sqrt();
 
+        // Residual streams, one per ubatch token.
+        let mut xs: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| self.weights.embed_token(t)).collect();
+
         for layer in 0..cfg.n_layers {
             // ---- attention block ----
-            let lw = &self.weights.layers[layer];
-            let s = &mut self.scratch;
-            ops::rmsnorm(&x, &lw.attn_norm, cfg.rms_eps, &mut s.xn[..cfg.d_model]);
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                for (i, x) in xs.iter().enumerate() {
+                    ops::rmsnorm(x, &lw.attn_norm, cfg.rms_eps, &mut s.xn[i * d..(i + 1) * d]);
+                }
+            }
 
-            // q/k/v projections share one quantized activation.
-            let qkv_ty = lw.wq.ty;
-            let act = ActQuant::for_weight(qkv_ty, &s.xn[..cfg.d_model]);
-            let op_q = self.linear_op(LinearKind::QProj, Some(layer));
-            let op_k = self.linear_op(LinearKind::KProj, Some(layer));
-            let op_v = self.linear_op(LinearKind::VProj, Some(layer));
+            // q/k/v projections share one quantized activation per token.
+            let qkv_ty = self.weights.layers[layer].wq.ty;
+            let acts: Vec<ActQuant> = (0..n)
+                .map(|i| ActQuant::for_weight(qkv_ty, &self.scratch.xn[i * d..(i + 1) * d]))
+                .collect();
+            let op_q = linear_op_for(&cfg, scheme, LinearKind::QProj, Some(layer));
+            let op_k = linear_op_for(&cfg, scheme, LinearKind::KProj, Some(layer));
+            let op_v = linear_op_for(&cfg, scheme, LinearKind::VProj, Some(layer));
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                exec.linear_ubatch(&op_q, &lw.wq, &acts, &mut s.q[..n * qd]);
+            }
             // (wk/wv may differ in type from wq under Q3_K_S: requantize
             // if needed.)
-            let lw = &self.weights.layers[layer];
-            let s = &mut self.scratch;
-            exec.linear(&op_q, &lw.wq, &act, &mut s.q);
-            if lw.wk.ty == qkv_ty {
-                exec.linear(&op_k, &lw.wk, &act, &mut s.k);
+            let wk_ty = self.weights.layers[layer].wk.ty;
+            let acts_k: Vec<ActQuant> = if wk_ty == qkv_ty {
+                Vec::new()
             } else {
-                let act_k = ActQuant::for_weight(lw.wk.ty, &s.xn[..cfg.d_model]);
-                exec.linear(&op_k, &lw.wk, &act_k, &mut s.k);
+                (0..n)
+                    .map(|i| ActQuant::for_weight(wk_ty, &self.scratch.xn[i * d..(i + 1) * d]))
+                    .collect()
+            };
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                let a = if acts_k.is_empty() { &acts } else { &acts_k };
+                exec.linear_ubatch(&op_k, &lw.wk, a, &mut s.k[..n * kvd]);
             }
-            if lw.wv.ty == qkv_ty {
-                exec.linear(&op_v, &lw.wv, &act, &mut s.v);
+            let wv_ty = self.weights.layers[layer].wv.ty;
+            let acts_v: Vec<ActQuant> = if wv_ty == qkv_ty {
+                Vec::new()
             } else {
-                let act_v = ActQuant::for_weight(lw.wv.ty, &s.xn[..cfg.d_model]);
-                exec.linear(&op_v, &lw.wv, &act_v, &mut s.v);
+                (0..n)
+                    .map(|i| ActQuant::for_weight(wv_ty, &self.scratch.xn[i * d..(i + 1) * d]))
+                    .collect()
+            };
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                let a = if acts_v.is_empty() { &acts } else { &acts_v };
+                exec.linear_ubatch(&op_v, &lw.wv, a, &mut s.v[..n * kvd]);
             }
 
-            // QK-Norm (Qwen3) + RoPE, per head.
-            for h in 0..cfg.n_heads {
-                let qh = &mut s.q[h * head_dim..(h + 1) * head_dim];
-                if cfg.qk_norm {
-                    ops::rmsnorm_inplace(qh, &lw.q_norm, cfg.rms_eps);
-                }
-                ops::rope_inplace(qh, pos, cfg.rope_theta);
-            }
-            for h in 0..cfg.n_kv_heads {
-                let kh = &mut s.k[h * head_dim..(h + 1) * head_dim];
-                if cfg.qk_norm {
-                    ops::rmsnorm_inplace(kh, &lw.k_norm, cfg.rms_eps);
-                }
-                ops::rope_inplace(kh, pos, cfg.rope_theta);
-            }
-
-            self.cache.store(layer, &s.k, &s.v);
-            let ctx = pos + 1;
-
-            // Attention (host-computed; instrumented as the FP16 kernels
-            // the paper offloads).
-            exec.attn(&MatvecOp {
-                kind: OpKind::AttnScore,
-                layer: Some(layer),
-                wty: GgmlType::F16,
-                rows: cfg.n_heads * ctx,
-                cols: head_dim,
-            });
-            for h in 0..cfg.n_heads {
-                let kvh = h / groups;
-                let qh = &s.q[h * head_dim..(h + 1) * head_dim];
-                for p in 0..ctx {
-                    let kvec = self.cache.k_at(layer, p, kvh, head_dim);
-                    let mut dot = 0.0f32;
-                    for i in 0..head_dim {
-                        dot += qh[i] * kvec[i];
+            // QK-Norm (Qwen3) + RoPE per head, then store K/V per token.
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                for i in 0..n {
+                    let pos = base + i;
+                    for h in 0..cfg.n_heads {
+                        let off = i * qd + h * head_dim;
+                        let qh = &mut s.q[off..off + head_dim];
+                        if cfg.qk_norm {
+                            ops::rmsnorm_inplace(qh, &lw.q_norm, cfg.rms_eps);
+                        }
+                        ops::rope_inplace(qh, pos, cfg.rope_theta);
                     }
-                    s.scores[p] = dot * scale;
-                }
-                ops::softmax_inplace(&mut s.scores[..ctx]);
-                let out = &mut s.attn_out[h * head_dim..(h + 1) * head_dim];
-                out.fill(0.0);
-                for p in 0..ctx {
-                    let w = s.scores[p];
-                    let vvec = self.cache.v_at(layer, p, kvh, head_dim);
-                    for i in 0..head_dim {
-                        out[i] += w * vvec[i];
+                    for h in 0..cfg.n_kv_heads {
+                        let off = i * kvd + h * head_dim;
+                        let kh = &mut s.k[off..off + head_dim];
+                        if cfg.qk_norm {
+                            ops::rmsnorm_inplace(kh, &lw.k_norm, cfg.rms_eps);
+                        }
+                        ops::rope_inplace(kh, pos, cfg.rope_theta);
                     }
+                    self.cache.store(
+                        slot,
+                        layer,
+                        pos,
+                        &s.k[i * kvd..(i + 1) * kvd],
+                        &s.v[i * kvd..(i + 1) * kvd],
+                    );
                 }
             }
-            exec.attn(&MatvecOp {
-                kind: OpKind::AttnMix,
-                layer: Some(layer),
-                wty: GgmlType::F16,
-                rows: cfg.n_heads * head_dim,
-                cols: ctx,
-            });
+
+            // Attention, one chunk token at a time (host-computed;
+            // instrumented as the FP16 kernels the paper offloads).
+            // Token i attends causally to `base + i + 1` positions.
+            for i in 0..n {
+                let ctx = base + i + 1;
+                exec.attn(&MatvecOp {
+                    kind: OpKind::AttnScore,
+                    layer: Some(layer),
+                    wty: GgmlType::F16,
+                    rows: cfg.n_heads * ctx,
+                    cols: head_dim,
+                });
+                {
+                    let s = &mut self.scratch;
+                    for h in 0..cfg.n_heads {
+                        let kvh = h / groups;
+                        let qh = &s.q[i * qd + h * head_dim..i * qd + (h + 1) * head_dim];
+                        for p in 0..ctx {
+                            let kvec = self.cache.k_at(slot, layer, p, kvh, head_dim);
+                            let mut dot = 0.0f32;
+                            for j in 0..head_dim {
+                                dot += qh[j] * kvec[j];
+                            }
+                            s.scores[p] = dot * scale;
+                        }
+                        ops::softmax_inplace(&mut s.scores[..ctx]);
+                        let out =
+                            &mut s.attn_out[i * qd + h * head_dim..i * qd + (h + 1) * head_dim];
+                        out.fill(0.0);
+                        for p in 0..ctx {
+                            let w = s.scores[p];
+                            let vvec = self.cache.v_at(slot, layer, p, kvh, head_dim);
+                            for j in 0..head_dim {
+                                out[j] += w * vvec[j];
+                            }
+                        }
+                    }
+                }
+                exec.attn(&MatvecOp {
+                    kind: OpKind::AttnMix,
+                    layer: Some(layer),
+                    wty: GgmlType::F16,
+                    rows: cfg.n_heads * head_dim,
+                    cols: ctx,
+                });
+            }
 
             // Output projection + residual.
-            let op_o = self.linear_op(LinearKind::OProj, Some(layer));
-            let lw = &self.weights.layers[layer];
-            let s = &mut self.scratch;
-            let act_o = ActQuant::for_weight(lw.wo.ty, &s.attn_out[..cfg.q_dim()]);
-            exec.linear(&op_o, &lw.wo, &act_o, &mut s.proj);
-            ops::add_inplace(&mut x, &s.proj);
+            let op_o = linear_op_for(&cfg, scheme, LinearKind::OProj, Some(layer));
+            let wo_ty = self.weights.layers[layer].wo.ty;
+            let acts_o: Vec<ActQuant> = (0..n)
+                .map(|i| {
+                    ActQuant::for_weight(wo_ty, &self.scratch.attn_out[i * qd..(i + 1) * qd])
+                })
+                .collect();
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                exec.linear_ubatch(&op_o, &lw.wo, &acts_o, &mut s.proj[..n * d]);
+                for (i, x) in xs.iter_mut().enumerate() {
+                    ops::add_inplace(x, &s.proj[i * d..(i + 1) * d]);
+                }
+            }
 
             // ---- feed-forward block (SwiGLU) ----
-            let lw = &self.weights.layers[layer];
-            let s = &mut self.scratch;
-            ops::rmsnorm(&x, &lw.ffn_norm, cfg.rms_eps, &mut s.xn[..cfg.d_model]);
-            let act_f = ActQuant::for_weight(lw.w_gate.ty, &s.xn[..cfg.d_model]);
-            let op_g = self.linear_op(LinearKind::FfnGate, Some(layer));
-            let op_u = self.linear_op(LinearKind::FfnUp, Some(layer));
-            let op_d = self.linear_op(LinearKind::FfnDown, Some(layer));
-            let lw = &self.weights.layers[layer];
-            let s = &mut self.scratch;
-            exec.linear(&op_g, &lw.w_gate, &act_f, &mut s.gate);
-            exec.linear(&op_u, &lw.w_up, &act_f, &mut s.up);
-            ops::swiglu(&s.gate, &s.up, &mut s.act);
-            let act_d = if lw.w_down.ty == lw.w_gate.ty {
-                ActQuant::for_weight(lw.w_down.ty, &s.act)
-            } else {
-                ActQuant::for_weight(lw.w_down.ty, &s.act)
-            };
-            exec.linear(&op_d, &lw.w_down, &act_d, &mut s.proj);
-            ops::add_inplace(&mut x, &s.proj);
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                for (i, x) in xs.iter().enumerate() {
+                    ops::rmsnorm(x, &lw.ffn_norm, cfg.rms_eps, &mut s.xn[i * d..(i + 1) * d]);
+                }
+            }
+            let gate_ty = self.weights.layers[layer].w_gate.ty;
+            let acts_f: Vec<ActQuant> = (0..n)
+                .map(|i| ActQuant::for_weight(gate_ty, &self.scratch.xn[i * d..(i + 1) * d]))
+                .collect();
+            let op_g = linear_op_for(&cfg, scheme, LinearKind::FfnGate, Some(layer));
+            let op_u = linear_op_for(&cfg, scheme, LinearKind::FfnUp, Some(layer));
+            let op_d = linear_op_for(&cfg, scheme, LinearKind::FfnDown, Some(layer));
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                exec.linear_ubatch(&op_g, &lw.w_gate, &acts_f, &mut s.gate[..n * df]);
+                exec.linear_ubatch(&op_u, &lw.w_up, &acts_f, &mut s.up[..n * df]);
+                for i in 0..n {
+                    ops::swiglu(
+                        &s.gate[i * df..(i + 1) * df],
+                        &s.up[i * df..(i + 1) * df],
+                        &mut s.act[i * df..(i + 1) * df],
+                    );
+                }
+            }
+            let down_ty = self.weights.layers[layer].w_down.ty;
+            let acts_d: Vec<ActQuant> = (0..n)
+                .map(|i| ActQuant::for_weight(down_ty, &self.scratch.act[i * df..(i + 1) * df]))
+                .collect();
+            {
+                let lw = &self.weights.layers[layer];
+                let s = &mut self.scratch;
+                exec.linear_ubatch(&op_d, &lw.w_down, &acts_d, &mut s.proj[..n * d]);
+                for (i, x) in xs.iter_mut().enumerate() {
+                    ops::add_inplace(x, &s.proj[i * d..(i + 1) * d]);
+                }
+            }
         }
 
-        self.cache.advance();
-        self.n_tokens_processed += 1;
+        self.cache.advance(slot, n);
+        self.n_tokens_processed += n;
 
         let out = if want_logits {
-            let s = &mut self.scratch;
+            let mut x = xs.pop().expect("nonempty ubatch");
             ops::rmsnorm_inplace(&mut x, &self.weights.final_norm, cfg.rms_eps);
             let op_h = MatvecOp {
                 kind: OpKind::Linear(LinearKind::LmHead),
@@ -276,18 +550,19 @@ impl Engine {
                 cols: cfg.d_model,
             };
             let act_h = ActQuant::for_weight(self.weights.lm_head.ty, &x);
+            let s = &mut self.scratch;
             exec.linear(&op_h, &self.weights.lm_head, &act_h, &mut s.logits);
             Some(s.logits.clone())
         } else {
             None
         };
-        exec.end_step(phase, pos);
+        exec.end_step(phase, base + n - 1);
         out
     }
 
-    /// Run a full `[prompt : n_out]` request: prefill every prompt token,
-    /// then decode `n_out` tokens with `sampler`. The engine's KV cache is
-    /// reset first.
+    /// Run a full `[prompt : n_out]` request on the implicit slot 0:
+    /// prefill the prompt as ubatch chunks, then decode exactly `n_out`
+    /// tokens with `sampler`. The engine's KV cache is reset first.
     pub fn generate(
         &mut self,
         prompt: &[u32],
@@ -297,20 +572,16 @@ impl Engine {
     ) -> GenerateResult {
         assert!(!prompt.is_empty(), "empty prompt");
         self.reset();
-        let mut logits = None;
-        for (i, &tok) in prompt.iter().enumerate() {
-            let last = i + 1 == prompt.len();
-            logits = self.forward(tok, Phase::Prefill, last, exec);
-        }
+        let mut logits = self.prefill_on_slot(0, prompt, DEFAULT_UBATCH, exec);
         let mut tokens = Vec::with_capacity(n_out);
-        for _ in 0..n_out {
-            let l = logits.as_ref().expect("prefill produced logits");
-            let next = sampler.sample(l);
+        for step in 0..n_out {
+            let next = sampler.sample(&logits);
             tokens.push(next);
-            if tokens.len() == n_out {
-                break;
+            if step + 1 < n_out {
+                logits = self
+                    .ubatch_on_slot(0, &[next], Phase::Decode, true, exec)
+                    .expect("decode produced logits");
             }
-            logits = self.forward(next, Phase::Decode, true, exec);
         }
         GenerateResult {
             tokens,
@@ -375,6 +646,83 @@ mod tests {
     }
 
     #[test]
+    fn ubatch_prefill_bit_identical_to_sequential() {
+        for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS, QuantScheme::F16] {
+            let prompt = [1u32, 5, 9, 2, 11, 3, 7];
+            // Sequential: one token per forward call.
+            let mut seq = tiny_engine(scheme);
+            let mut l_seq = None;
+            for (i, &t) in prompt.iter().enumerate() {
+                l_seq = seq.forward(t, Phase::Prefill, i + 1 == prompt.len(), &mut NativeExec);
+            }
+            // Ubatch: chunks of 3 through a session.
+            let mut ub = tiny_engine(scheme);
+            let sess = ub.open_session(Sampler::greedy()).unwrap();
+            let l_ub = ub.prefill_session(&sess, &prompt, 3, &mut NativeExec);
+            assert_eq!(
+                l_seq.unwrap(),
+                l_ub,
+                "ubatch prefill must be bit-identical ({})",
+                scheme.name()
+            );
+            assert_eq!(ub.session_pos(&sess), prompt.len());
+        }
+    }
+
+    #[test]
+    fn sessions_do_not_cross_contaminate() {
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 42);
+        let pa = [1u32, 5, 9, 2];
+        let pb = [7u32, 3, 3, 8];
+
+        // Two sessions interleaved on one engine.
+        let mut e = Engine::with_slots(weights.clone(), 2);
+        let sa = e.open_session(Sampler::greedy()).unwrap();
+        let sb = e.open_session(Sampler::greedy()).unwrap();
+        let mut la = e.prefill_session(&sa, &pa, 2, &mut NativeExec);
+        let mut lb = e.prefill_session(&sb, &pb, 2, &mut NativeExec);
+        let mut ta = Vec::new();
+        let mut tb = Vec::new();
+        for _ in 0..4 {
+            let na = Sampler::greedy().sample(&la);
+            ta.push(na);
+            la = e
+                .forward_session(&sa, na, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+            let nb = Sampler::greedy().sample(&lb);
+            tb.push(nb);
+            lb = e
+                .forward_session(&sb, nb, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+        }
+
+        // Reference: each prompt alone on a fresh engine.
+        for (prompt, got) in [(pa, &ta), (pb, &tb)] {
+            let mut fresh = Engine::new(weights.clone());
+            let want = fresh.generate(&prompt, 4, &mut Sampler::greedy(), &mut NativeExec);
+            assert_eq!(&want.tokens, got, "interleaved decode must match isolated");
+        }
+    }
+
+    #[test]
+    fn session_slots_recycle() {
+        let cfg = ModelConfig::tiny();
+        let mut e = Engine::with_slots(ModelWeights::random(&cfg, QuantScheme::Q8_0, 1), 2);
+        assert_eq!(e.free_sessions(), 2);
+        let s1 = e.open_session(Sampler::greedy()).unwrap();
+        let _s2 = e.open_session(Sampler::greedy()).unwrap();
+        assert!(e.open_session(Sampler::greedy()).is_none(), "slots exhausted");
+        e.prefill_session(&s1, &[1, 2, 3], 32, &mut NativeExec);
+        assert_eq!(e.session_pos(&s1), 3);
+        let slot = s1.slot();
+        e.close_session(s1);
+        let s3 = e.open_session(Sampler::greedy()).unwrap();
+        assert_eq!(s3.slot(), slot, "slot recycled");
+        assert_eq!(e.session_pos(&s3), 0, "recycled slot starts empty");
+    }
+
+    #[test]
     fn schemes_agree_roughly_on_argmax_distribution() {
         // Q8_0 is a near-lossless quantization: its logits must correlate
         // strongly with the FP16 engine's on the same weights seed.
@@ -405,6 +753,7 @@ mod tests {
     fn exec_hook_sees_all_linear_ops() {
         struct Counter {
             linears: usize,
+            ubatches: usize,
             attns: usize,
             native: NativeExec,
         }
@@ -413,6 +762,18 @@ mod tests {
                 self.linears += 1;
                 self.native.linear(op, w, act, out);
             }
+            fn linear_ubatch(
+                &mut self,
+                op: &MatvecOp,
+                w: &QTensor,
+                acts: &[ActQuant],
+                outs: &mut [f32],
+            ) {
+                self.ubatches += 1;
+                for (act, out) in acts.iter().zip(outs.chunks_mut(op.rows)) {
+                    self.linear(op, w, act, out);
+                }
+            }
             fn attn(&mut self, _op: &MatvecOp) {
                 self.attns += 1;
             }
@@ -420,12 +781,14 @@ mod tests {
         let mut e = tiny_engine(QuantScheme::Q8_0);
         let mut c = Counter {
             linears: 0,
+            ubatches: 0,
             attns: 0,
             native: NativeExec,
         };
         e.forward(1, Phase::Prefill, true, &mut c);
         let n_layers = e.cfg().n_layers;
         assert_eq!(c.linears, n_layers * 7 + 1);
+        assert_eq!(c.ubatches, n_layers * 7, "7 batched dispatches per layer");
         assert_eq!(c.attns, n_layers * 2);
     }
 }

@@ -1,80 +1,135 @@
-//! Per-layer KV cache.
+//! Multi-sequence, slot-indexed KV cache.
 //!
 //! The paper's host CPU owns "KV cache management" (§III.A), and the
 //! decode phase's LOAD-bound behaviour (§V.B) comes from streaming this
-//! cache to the accelerator every step. The functional engine keeps K/V in
-//! f32; the *byte accounting* used by the timing path models the llama.cpp
+//! cache to the accelerator every step. Serving interleaves many
+//! sequences on one engine (continuous batching), so the cache is
+//! organised as `n_slots` independent sequences over one allocation:
+//! each [`crate::model::engine::Session`] owns one slot, and every slot
+//! tracks its own length. The functional engine keeps K/V in f32; the
+//! *byte accounting* used by the timing path models the llama.cpp
 //! default of an FP16 cache (see `MatvecOp::weight_bytes` with
 //! `GgmlType::F16`).
 
 use crate::model::config::ModelConfig;
 
-/// KV cache for all layers: `[n_layers][max_seq][kv_dim]`, row-major.
+/// KV cache for all layers and session slots:
+/// `[n_layers][n_slots][max_seq][kv_dim]`, row-major.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub kv_dim: usize,
+    /// Per-slot context capacity.
     pub max_seq: usize,
-    /// Current number of cached positions (shared across layers).
-    len: usize,
+    /// Number of independent sequences the cache can hold.
+    pub n_slots: usize,
+    /// Current number of cached positions per slot (shared across layers).
+    lens: Vec<usize>,
     k: Vec<f32>,
     v: Vec<f32>,
     n_layers: usize,
 }
 
 impl KvCache {
+    /// Single-sequence cache (the legacy one-request-at-a-time engine).
     pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache::with_slots(cfg, 1)
+    }
+
+    /// Cache holding `n_slots` independent sequences.
+    pub fn with_slots(cfg: &ModelConfig, n_slots: usize) -> KvCache {
+        assert!(n_slots >= 1, "need at least one session slot");
         let kv_dim = cfg.kv_dim();
+        let cells = cfg.n_layers * n_slots * cfg.max_seq_len * kv_dim;
         KvCache {
             kv_dim,
             max_seq: cfg.max_seq_len,
-            len: 0,
-            k: vec![0.0; cfg.n_layers * cfg.max_seq_len * kv_dim],
-            v: vec![0.0; cfg.n_layers * cfg.max_seq_len * kv_dim],
+            n_slots,
+            lens: vec![0; n_slots],
+            k: vec![0.0; cells],
+            v: vec![0.0; cells],
             n_layers: cfg.n_layers,
         }
     }
 
+    /// Length of slot 0 — the single-sequence engine's implicit slot.
     pub fn len(&self) -> usize {
-        self.len
+        self.lens[0]
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.lens.iter().all(|&l| l == 0)
     }
 
-    /// Clear all cached positions (new request on the same engine).
+    /// Current number of cached positions in `slot`.
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// Clear every slot (fresh engine).
     pub fn reset(&mut self) {
-        self.len = 0;
+        self.lens.fill(0);
     }
 
-    /// Append one position's K and V for layer `layer`. Positions must be
-    /// appended for every layer before `advance()` is called.
-    pub fn store(&mut self, layer: usize, k: &[f32], v: &[f32]) {
-        assert!(self.len < self.max_seq, "KV cache full ({})", self.max_seq);
+    /// Clear one slot (session closed / slot reassigned).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+    }
+
+    #[inline]
+    fn base(&self, slot: usize, layer: usize, pos: usize) -> usize {
+        debug_assert!(slot < self.n_slots && layer < self.n_layers);
+        ((layer * self.n_slots + slot) * self.max_seq + pos) * self.kv_dim
+    }
+
+    /// Write one position's K and V for `layer` of `slot`. A ubatch
+    /// stores `pos` values `slot_len(slot)..slot_len(slot)+n` for every
+    /// layer, then calls `advance(slot, n)` once.
+    pub fn store(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.max_seq, "KV cache full ({})", self.max_seq);
         assert_eq!(k.len(), self.kv_dim);
         assert_eq!(v.len(), self.kv_dim);
-        let base = (layer * self.max_seq + self.len) * self.kv_dim;
+        let base = self.base(slot, layer, pos);
         self.k[base..base + self.kv_dim].copy_from_slice(k);
         self.v[base..base + self.kv_dim].copy_from_slice(v);
     }
 
-    /// Advance the shared position counter after all layers stored.
-    pub fn advance(&mut self) {
-        self.len += 1;
+    /// Advance `slot`'s position counter after all layers of a ubatch of
+    /// `n` tokens have been stored.
+    pub fn advance(&mut self, slot: usize, n: usize) {
+        assert!(
+            self.lens[slot] + n <= self.max_seq,
+            "KV cache full ({})",
+            self.max_seq
+        );
+        self.lens[slot] += n;
     }
 
-    /// K vector of head `kv_head` at position `pos` in `layer`.
+    /// K vector of head `kv_head` at position `pos` in `layer` of `slot`.
     #[inline]
-    pub fn k_at(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
-        debug_assert!(pos < self.len || pos < self.max_seq);
-        let base = (layer * self.max_seq + pos) * self.kv_dim + kv_head * head_dim;
+    pub fn k_at(
+        &self,
+        slot: usize,
+        layer: usize,
+        pos: usize,
+        kv_head: usize,
+        head_dim: usize,
+    ) -> &[f32] {
+        debug_assert!(pos < self.max_seq);
+        let base = self.base(slot, layer, pos) + kv_head * head_dim;
         &self.k[base..base + head_dim]
     }
 
-    /// V vector of head `kv_head` at position `pos` in `layer`.
+    /// V vector of head `kv_head` at position `pos` in `layer` of `slot`.
     #[inline]
-    pub fn v_at(&self, layer: usize, pos: usize, kv_head: usize, head_dim: usize) -> &[f32] {
-        let base = (layer * self.max_seq + pos) * self.kv_dim + kv_head * head_dim;
+    pub fn v_at(
+        &self,
+        slot: usize,
+        layer: usize,
+        pos: usize,
+        kv_head: usize,
+        head_dim: usize,
+    ) -> &[f32] {
+        let base = self.base(slot, layer, pos) + kv_head * head_dim;
         &self.v[base..base + head_dim]
     }
 
@@ -85,11 +140,12 @@ impl KvCache {
         2 * ctx * self.kv_dim * 2
     }
 
-    /// Total resident size of the cache at the current length (f16
-    /// accounting, all layers) — the quantity that grows linearly with
-    /// context in the paper's long-context discussion.
+    /// Total resident size of the cache at the current lengths (f16
+    /// accounting, all layers, all live sequences) — the quantity that
+    /// grows linearly with context in the paper's long-context discussion.
     pub fn resident_bytes_f16(&self) -> usize {
-        2 * self.n_layers * self.len * self.kv_dim * 2
+        let live: usize = self.lens.iter().sum();
+        2 * self.n_layers * live * self.kv_dim * 2
     }
 }
 
@@ -105,17 +161,18 @@ mod tests {
         let kv_dim = cfg.kv_dim();
         for pos in 0..3 {
             for layer in 0..cfg.n_layers {
-                let k: Vec<f32> = (0..kv_dim).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
+                let k: Vec<f32> =
+                    (0..kv_dim).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
                 let v: Vec<f32> = k.iter().map(|x| -x).collect();
-                c.store(layer, &k, &v);
+                c.store(0, layer, pos, &k, &v);
             }
-            c.advance();
+            c.advance(0, 1);
         }
         assert_eq!(c.len(), 3);
         let hd = cfg.head_dim;
-        let k = c.k_at(1, 2, 1, hd);
+        let k = c.k_at(0, 1, 2, 1, hd);
         assert_eq!(k[0], (2 * 100 + 10 + hd) as f32);
-        let v = c.v_at(1, 2, 1, hd);
+        let v = c.v_at(0, 1, 2, 1, hd);
         assert_eq!(v[0], -((2 * 100 + 10 + hd) as f32));
     }
 
@@ -124,12 +181,50 @@ mod tests {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::new(&cfg);
         for layer in 0..cfg.n_layers {
-            c.store(layer, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
+            c.store(0, layer, 0, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
         }
-        c.advance();
+        c.advance(0, 1);
         assert_eq!(c.len(), 1);
         c.reset();
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::with_slots(&cfg, 3);
+        let kv_dim = c.kv_dim;
+        // Write distinct data at the same (layer, pos) of two slots.
+        for (slot, fill) in [(0usize, 1.0f32), (2, 7.0)] {
+            for layer in 0..cfg.n_layers {
+                c.store(slot, layer, 0, &vec![fill; kv_dim], &vec![-fill; kv_dim]);
+            }
+            c.advance(slot, 1);
+        }
+        assert_eq!(c.slot_len(0), 1);
+        assert_eq!(c.slot_len(1), 0);
+        assert_eq!(c.slot_len(2), 1);
+        assert_eq!(c.k_at(0, 0, 0, 0, cfg.head_dim)[0], 1.0);
+        assert_eq!(c.k_at(2, 0, 0, 0, cfg.head_dim)[0], 7.0);
+        assert_eq!(c.v_at(2, 1, 0, 1, cfg.head_dim)[0], -7.0);
+        c.reset_slot(2);
+        assert_eq!(c.slot_len(2), 0);
+        assert_eq!(c.slot_len(0), 1, "resetting one slot leaves others");
+    }
+
+    #[test]
+    fn ubatch_advance_by_n() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::with_slots(&cfg, 2);
+        let kv_dim = c.kv_dim;
+        for layer in 0..cfg.n_layers {
+            for pos in 0..5 {
+                c.store(1, layer, pos, &vec![pos as f32; kv_dim], &vec![0.0; kv_dim]);
+            }
+        }
+        c.advance(1, 5);
+        assert_eq!(c.slot_len(1), 5);
+        assert_eq!(c.k_at(1, 0, 3, 0, cfg.head_dim)[0], 3.0);
     }
 
     #[test]
@@ -146,9 +241,9 @@ mod tests {
         let mut cfg = ModelConfig::tiny();
         cfg.max_seq_len = 2;
         let mut c = KvCache::new(&cfg);
-        for _ in 0..3 {
-            c.store(0, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
-            c.advance();
+        for pos in 0..3 {
+            c.store(0, 0, pos, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
+            c.advance(0, 1);
         }
     }
 }

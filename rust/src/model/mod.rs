@@ -8,9 +8,10 @@
 //!   token (shared by the functional engine and the IMAX timing model).
 //! * [`weights`] / [`file`] — quantized tensors; build random-init or
 //!   save/load the crate's binary model format.
-//! * [`kv_cache`] — per-layer KV cache with the byte accounting behind
-//!   the paper's LOAD-bound decode finding.
-//! * [`engine`] — the forward pass and generation loop, with the
+//! * [`kv_cache`] — slot-indexed multi-sequence KV cache with the byte
+//!   accounting behind the paper's LOAD-bound decode finding.
+//! * [`engine`] — the forward pass (per-token and prefill-ubatch) and
+//!   generation loop over per-sequence [`engine::Session`]s, with the
 //!   [`engine::MatvecExec`] hook the hybrid coordinator intercepts.
 //! * [`ops`] — host-side operators (RMSNorm, RoPE, softmax, SwiGLU).
 //! * [`sampler`] — greedy / top-k temperature sampling.
@@ -25,7 +26,8 @@ pub mod sampler;
 pub mod weights;
 
 pub use config::{LinearKind, ModelConfig, QuantScheme};
-pub use engine::{Engine, GenerateResult, MatvecExec, NativeExec};
+pub use engine::{Engine, GenerateResult, MatvecExec, NativeExec, Session, DEFAULT_UBATCH};
+pub use kv_cache::KvCache;
 pub use graph::{MatvecOp, OpKind, Phase};
 pub use sampler::Sampler;
 pub use weights::ModelWeights;

@@ -1,28 +1,337 @@
-//! PJRT-backed kernel execution: a [`MatvecExec`] that routes the tiny
-//! model's Q8_0 linear projections through the AOT-compiled Pallas
-//! kernels instead of the native Rust kernels.
+//! The backend registry: one place that turns a declarative [`ExecSpec`]
+//! into the right [`MatvecExec`] implementation — native Rust kernels,
+//! the instrumented-IMAX cost model, or (feature `pjrt`) the
+//! AOT-compiled Pallas kernels via PJRT.
 //!
-//! This is the composition proof for the three-layer architecture: the
-//! L3 coordinator's engine loop drives L1 Pallas arithmetic (inside the
-//! L2-lowered HLO) through PJRT, with identical packed operands to the
-//! native path. `rust/tests/integration_runtime.rs` asserts the numerics
-//! agree.
+//! Before the registry, every call site hand-wired `&mut NativeExec` or
+//! assembled an `InstrumentedExec` by hand; now `serve`, the CLI, and
+//! the examples all construct backends from one spec (`--backend
+//! native|imax|pjrt`), which is what lets instrumented-IMAX timing run
+//! under the serving loop.
 
-use std::collections::HashMap;
+use anyhow::{bail, Result};
 
-use anyhow::Result;
+use crate::coordinator::offload::OffloadPolicy;
+use crate::coordinator::phases::InstrumentedExec;
+use crate::imax::device::ImaxDevice;
+use crate::imax::dma::TransferMode;
+use crate::imax::lmm::LmmConfig;
+use crate::imax::timing::RunBreakdown;
+use crate::model::engine::{MatvecExec, NativeExec};
+use crate::model::graph::{MatvecOp, Phase};
+use crate::tensor::{ActQuant, QTensor};
 
-use crate::model::engine::MatvecExec;
-use crate::model::graph::MatvecOp;
-use crate::quant::{q8_0, GgmlType};
-use crate::runtime::artifacts::ArtifactDir;
-use crate::runtime::pjrt::{lit, PjrtRuntime};
-use crate::tensor::{ActQuant, QTensor, TensorData};
+/// IMAX instrumentation parameters (which modeled device shadows the
+/// functional run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImaxSpec {
+    /// 28 nm ASIC projection instead of the FPGA prototype.
+    pub asic: bool,
+    pub lanes: usize,
+    pub lmm_kb: usize,
+    pub mode: TransferMode,
+}
+
+impl Default for ImaxSpec {
+    fn default() -> ImaxSpec {
+        // The paper's chosen configuration: FPGA prototype, 2 lanes,
+        // 64 KB LMM, coalesced DMA.
+        ImaxSpec {
+            asic: false,
+            lanes: 2,
+            lmm_kb: 64,
+            mode: TransferMode::Coalesced,
+        }
+    }
+}
+
+impl ImaxSpec {
+    pub fn device(&self) -> ImaxDevice {
+        if self.asic {
+            ImaxDevice::asic28(self.lanes)
+        } else {
+            ImaxDevice::fpga(self.lanes)
+        }
+    }
+}
+
+/// Declarative backend selection, parseable from a CLI flag.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecSpec {
+    /// Pure-Rust kernels, no instrumentation.
+    Native,
+    /// Native kernels shadowed by the IMAX cost model (per-phase
+    /// EXEC/LOAD/HOST/... accounting and offload stats).
+    Imax(ImaxSpec),
+    /// AOT-compiled Pallas kernels through PJRT (requires the `pjrt`
+    /// cargo feature and `make artifacts`).
+    Pjrt,
+}
+
+impl ExecSpec {
+    /// Parse a `--backend` selector: `native`, `pjrt`, `imax`,
+    /// `imax:asic`, `imax:fpga`, optionally with a lane count suffix
+    /// (`imax:fpga4`, `imax:asic2`).
+    pub fn parse(s: &str) -> Result<ExecSpec> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "native" => return Ok(ExecSpec::Native),
+            "pjrt" => return Ok(ExecSpec::Pjrt),
+            "imax" => return Ok(ExecSpec::Imax(ImaxSpec::default())),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("imax:") {
+            let (asic, lanes_str) = if let Some(l) = rest.strip_prefix("asic") {
+                (true, l)
+            } else if let Some(l) = rest.strip_prefix("fpga") {
+                (false, l)
+            } else {
+                bail!("unknown imax variant '{rest}' (use imax:fpga[N] or imax:asic[N])");
+            };
+            let lanes: usize = if lanes_str.is_empty() {
+                2
+            } else {
+                lanes_str
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad lane count '{lanes_str}'"))?
+            };
+            if !(1..=8).contains(&lanes) {
+                bail!("lane count {lanes} out of range (the IMAX carrier has 1..=8 lanes)");
+            }
+            return Ok(ExecSpec::Imax(ImaxSpec {
+                asic,
+                lanes,
+                ..ImaxSpec::default()
+            }));
+        }
+        bail!("unknown backend '{s}' (available: {})", BackendRegistry::available().join("|"));
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ExecSpec::Native => "native".to_string(),
+            ExecSpec::Pjrt => "pjrt".to_string(),
+            ExecSpec::Imax(i) => format!(
+                "imax:{}{}",
+                if i.asic { "asic" } else { "fpga" },
+                i.lanes
+            ),
+        }
+    }
+}
+
+/// Per-backend accounting pulled out after a run; serving aggregates one
+/// of these per worker into the `ServeReport`.
+#[derive(Clone, Debug, Default)]
+pub struct BackendReport {
+    pub backend: String,
+    /// Modeled IMAX per-phase costs (imax backend only).
+    pub modeled: Option<RunBreakdown>,
+    /// Offloaded / total dot-product invocations (imax backend only).
+    pub offload_ratio: Option<f64>,
+    pub offloaded_macs: u64,
+    pub total_macs: u64,
+    /// Measured engine wall time per phase (imax backend only; the
+    /// serving loop measures its own phases for the others).
+    pub wall_prefill_s: f64,
+    pub wall_decode_s: f64,
+}
+
+impl BackendReport {
+    /// Merge per-worker reports into one (sums the additive fields).
+    pub fn merged(reports: &[BackendReport]) -> BackendReport {
+        let mut out = BackendReport::default();
+        let mut modeled = RunBreakdown::default();
+        let mut any_modeled = false;
+        for r in reports {
+            out.backend = r.backend.clone();
+            if let Some(m) = r.modeled {
+                modeled.prefill += m.prefill;
+                modeled.decode += m.decode;
+                any_modeled = true;
+            }
+            out.offloaded_macs += r.offloaded_macs;
+            out.total_macs += r.total_macs;
+            out.wall_prefill_s += r.wall_prefill_s;
+            out.wall_decode_s += r.wall_decode_s;
+        }
+        if any_modeled {
+            out.modeled = Some(modeled);
+        }
+        if out.total_macs > 0 && any_modeled {
+            out.offload_ratio = Some(out.offloaded_macs as f64 / out.total_macs as f64);
+        }
+        out
+    }
+}
+
+/// A constructed backend executor. Closed enum rather than a trait
+/// object so `MatvecExec`'s provided methods (ubatch dispatch) forward
+/// without dynamic upcasting.
+pub enum BackendExec {
+    Native(NativeExec),
+    Imax(Box<InstrumentedExec<NativeExec>>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtExec),
+}
+
+impl BackendExec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendExec::Native(_) => "native",
+            BackendExec::Imax(_) => "imax",
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Offload statistics table source, when the backend tracks one.
+    pub fn offload_stats(&self) -> Option<&crate::coordinator::offload::OffloadStats> {
+        match self {
+            BackendExec::Imax(i) => Some(&i.stats),
+            _ => None,
+        }
+    }
+
+    pub fn report(&self) -> BackendReport {
+        match self {
+            BackendExec::Native(_) => BackendReport {
+                backend: "native".to_string(),
+                ..BackendReport::default()
+            },
+            BackendExec::Imax(i) => BackendReport {
+                backend: "imax".to_string(),
+                modeled: Some(i.modeled),
+                offload_ratio: Some(i.stats.total_ratio()),
+                offloaded_macs: i.stats.offloaded_macs,
+                total_macs: i.stats.total_macs,
+                wall_prefill_s: i.wall_prefill,
+                wall_decode_s: i.wall_decode,
+            },
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(_) => BackendReport {
+                backend: "pjrt".to_string(),
+                ..BackendReport::default()
+            },
+        }
+    }
+}
+
+impl MatvecExec for BackendExec {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        match self {
+            BackendExec::Native(e) => e.linear(op, w, act, out),
+            BackendExec::Imax(e) => e.linear(op, w, act, out),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.linear(op, w, act, out),
+        }
+    }
+
+    fn linear_ubatch(&mut self, op: &MatvecOp, w: &QTensor, acts: &[ActQuant], outs: &mut [f32]) {
+        match self {
+            BackendExec::Native(e) => e.linear_ubatch(op, w, acts, outs),
+            BackendExec::Imax(e) => e.linear_ubatch(op, w, acts, outs),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.linear_ubatch(op, w, acts, outs),
+        }
+    }
+
+    fn attn(&mut self, op: &MatvecOp) {
+        match self {
+            BackendExec::Native(e) => e.attn(op),
+            BackendExec::Imax(e) => e.attn(op),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.attn(op),
+        }
+    }
+
+    fn begin_step(&mut self, phase: Phase, pos: usize) {
+        match self {
+            BackendExec::Native(e) => e.begin_step(phase, pos),
+            BackendExec::Imax(e) => e.begin_step(phase, pos),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.begin_step(phase, pos),
+        }
+    }
+
+    fn end_step(&mut self, phase: Phase, pos: usize) {
+        match self {
+            BackendExec::Native(e) => e.end_step(phase, pos),
+            BackendExec::Imax(e) => e.end_step(phase, pos),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.end_step(phase, pos),
+        }
+    }
+}
+
+/// Constructs [`BackendExec`]s from [`ExecSpec`]s. Stateless — the
+/// registry is the naming + wiring, not a cache.
+pub struct BackendRegistry;
+
+impl BackendRegistry {
+    /// Selector names accepted by [`ExecSpec::parse`].
+    pub fn available() -> Vec<&'static str> {
+        let mut names = vec!["native", "imax", "imax:asic"];
+        if cfg!(feature = "pjrt") {
+            names.push("pjrt");
+        }
+        names
+    }
+
+    /// Cheap validation that `spec` can be built in this binary (used to
+    /// fail fast before spawning worker threads).
+    pub fn validate(spec: &ExecSpec) -> Result<()> {
+        match spec {
+            ExecSpec::Native | ExecSpec::Imax(_) => Ok(()),
+            ExecSpec::Pjrt => {
+                if cfg!(feature = "pjrt") {
+                    Ok(())
+                } else {
+                    bail!(
+                        "backend 'pjrt' requires building with `--features pjrt` \
+                         (the xla crate + `make artifacts`)"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Build an executor for `spec`. Each worker thread builds its own
+    /// (executors are stateful and not shared).
+    pub fn build(spec: &ExecSpec) -> Result<BackendExec> {
+        match spec {
+            ExecSpec::Native => Ok(BackendExec::Native(NativeExec)),
+            ExecSpec::Imax(i) => {
+                let dev = i.device();
+                let policy = OffloadPolicy::new(LmmConfig::new(i.lmm_kb));
+                Ok(BackendExec::Imax(Box::new(InstrumentedExec::new(
+                    NativeExec, dev, policy, i.mode,
+                ))))
+            }
+            ExecSpec::Pjrt => {
+                Self::validate(spec)?;
+                #[cfg(feature = "pjrt")]
+                {
+                    Ok(BackendExec::Pjrt(PjrtExec::new()?))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    unreachable!("validate rejects pjrt without the feature")
+                }
+            }
+        }
+    }
+
+    pub fn build_named(name: &str) -> Result<BackendExec> {
+        Self::build(&ExecSpec::parse(name)?)
+    }
+}
 
 /// Split Q8_0 blocks into the (codes, scales) arrays the Pallas kernel
-/// takes (the paper's "four distinct input arrays", §III.D).
-pub fn split_q8_blocks(blocks: &[q8_0::BlockQ8_0]) -> (Vec<i8>, Vec<f32>) {
-    let mut qs = Vec::with_capacity(blocks.len() * q8_0::QK8_0);
+/// takes (the paper's "four distinct input arrays", §III.D). Shared with
+/// the PJRT parity tests; no xla dependency.
+pub fn split_q8_blocks(blocks: &[crate::quant::q8_0::BlockQ8_0]) -> (Vec<i8>, Vec<f32>) {
+    let mut qs = Vec::with_capacity(blocks.len() * crate::quant::q8_0::QK8_0);
     let mut ds = Vec::with_capacity(blocks.len());
     for b in blocks {
         qs.extend_from_slice(&b.qs);
@@ -31,73 +340,186 @@ pub fn split_q8_blocks(blocks: &[q8_0::BlockQ8_0]) -> (Vec<i8>, Vec<f32>) {
     (qs, ds)
 }
 
-/// MatvecExec that offloads Q8_0 linears to PJRT artifacts, falling back
-/// to native kernels for formats/shapes without an artifact.
-pub struct PjrtExec {
-    pub rt: PjrtRuntime,
-    /// Cached unpacked weight arrays keyed by tensor name (the host-side
-    /// DMA staging buffer analogue).
-    weight_cache: HashMap<String, (Vec<i8>, Vec<f32>)>,
-    /// Kernels executed via PJRT vs native fallback (introspection).
-    pub pjrt_calls: usize,
-    pub native_calls: usize,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_exec::PjrtExec;
 
-impl PjrtExec {
-    pub fn new() -> Result<PjrtExec> {
-        Ok(PjrtExec {
-            rt: PjrtRuntime::new()?,
-            weight_cache: HashMap::new(),
-            pjrt_calls: 0,
-            native_calls: 0,
-        })
+/// PJRT-backed kernel execution: a [`MatvecExec`] that routes the tiny
+/// model's Q8_0 linear projections through the AOT-compiled Pallas
+/// kernels instead of the native Rust kernels.
+///
+/// This is the composition proof for the three-layer architecture: the
+/// L3 coordinator's engine loop drives L1 Pallas arithmetic (inside the
+/// L2-lowered HLO) through PJRT, with identical packed operands to the
+/// native path. `rust/tests/integration_runtime.rs` asserts the numerics
+/// agree.
+#[cfg(feature = "pjrt")]
+mod pjrt_exec {
+    use std::collections::HashMap;
+
+    use anyhow::Result;
+
+    use super::split_q8_blocks;
+    use crate::model::engine::MatvecExec;
+    use crate::model::graph::MatvecOp;
+    use crate::quant::{q8_0, GgmlType};
+    use crate::runtime::artifacts::ArtifactDir;
+    use crate::runtime::pjrt::{lit, PjrtRuntime};
+    use crate::tensor::{ActQuant, QTensor, TensorData};
+
+    /// MatvecExec that offloads Q8_0 linears to PJRT artifacts, falling
+    /// back to native kernels for formats/shapes without an artifact.
+    pub struct PjrtExec {
+        pub rt: PjrtRuntime,
+        /// Cached unpacked weight arrays keyed by tensor name (the
+        /// host-side DMA staging buffer analogue).
+        weight_cache: HashMap<String, (Vec<i8>, Vec<f32>)>,
+        /// Kernels executed via PJRT vs native fallback (introspection).
+        pub pjrt_calls: usize,
+        pub native_calls: usize,
     }
 
-    fn try_pjrt(
-        &mut self,
-        op: &MatvecOp,
-        w: &QTensor,
-        act: &ActQuant,
-        out: &mut [f32],
-    ) -> Result<bool> {
-        if w.ty != GgmlType::Q8_0 {
-            return Ok(false);
+    impl PjrtExec {
+        pub fn new() -> Result<PjrtExec> {
+            Ok(PjrtExec {
+                rt: PjrtRuntime::new()?,
+                weight_cache: HashMap::new(),
+                pjrt_calls: 0,
+                native_calls: 0,
+            })
         }
-        let name = ArtifactDir::q8_dot_name(op.rows, op.cols);
-        if !self.rt.artifacts.has(&name) {
-            return Ok(false);
+
+        fn try_pjrt(
+            &mut self,
+            op: &MatvecOp,
+            w: &QTensor,
+            act: &ActQuant,
+            out: &mut [f32],
+        ) -> Result<bool> {
+            if w.ty != GgmlType::Q8_0 {
+                return Ok(false);
+            }
+            let name = ArtifactDir::q8_dot_name(op.rows, op.cols);
+            if !self.rt.artifacts.has(&name) {
+                return Ok(false);
+            }
+            let (TensorData::Q8_0(blocks), ActQuant::Q8_0(ablocks)) = (&w.data, act) else {
+                return Ok(false);
+            };
+            let nb = op.cols / q8_0::QK8_0;
+            if !self.weight_cache.contains_key(&w.name) {
+                self.weight_cache
+                    .insert(w.name.clone(), split_q8_blocks(blocks));
+            }
+            let (wqv, wdv) = self.weight_cache.get(&w.name).expect("cached");
+            let wq = lit::i8(&[op.rows, op.cols], wqv)?;
+            let wd = lit::f32(&[op.rows, nb], wdv)?;
+            let (aq, ad) = split_q8_blocks(ablocks);
+            let aql = lit::i8(&[op.cols], &aq)?;
+            let adl = lit::f32(&[nb], &ad)?;
+            let result = self.rt.execute_vec1_f32(&name, &[wq, wd, aql, adl])?;
+            out.copy_from_slice(&result);
+            Ok(true)
         }
-        let (TensorData::Q8_0(blocks), ActQuant::Q8_0(ablocks)) = (&w.data, act) else {
-            return Ok(false);
+    }
+
+    impl MatvecExec for PjrtExec {
+        fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+            match self.try_pjrt(op, w, act, out) {
+                Ok(true) => {
+                    self.pjrt_calls += 1;
+                }
+                Ok(false) => {
+                    self.native_calls += 1;
+                    crate::tensor::matvec_into(w, act, out);
+                }
+                Err(e) => panic!("pjrt backend failed on {}: {e:#}", w.name),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{ModelConfig, QuantScheme};
+    use crate::model::engine::Engine;
+    use crate::model::graph::Phase;
+    use crate::model::sampler::Sampler;
+    use crate::model::weights::ModelWeights;
+
+    #[test]
+    fn spec_parsing_roundtrip() {
+        assert_eq!(ExecSpec::parse("native").unwrap(), ExecSpec::Native);
+        assert_eq!(ExecSpec::parse("pjrt").unwrap(), ExecSpec::Pjrt);
+        assert_eq!(
+            ExecSpec::parse("imax").unwrap(),
+            ExecSpec::Imax(ImaxSpec::default())
+        );
+        let asic4 = ExecSpec::parse("imax:asic4").unwrap();
+        match &asic4 {
+            ExecSpec::Imax(i) => {
+                assert!(i.asic);
+                assert_eq!(i.lanes, 4);
+            }
+            other => panic!("expected imax spec, got {other:?}"),
+        }
+        assert_eq!(asic4.name(), "imax:asic4");
+        assert!(ExecSpec::parse("tpu").is_err());
+        assert!(ExecSpec::parse("imax:gpu2").is_err());
+        assert!(ExecSpec::parse("imax:fpga0").is_err(), "0 lanes rejected");
+        assert!(ExecSpec::parse("imax:fpga16").is_err(), "beyond the 8-lane carrier");
+    }
+
+    #[test]
+    fn registry_builds_native_and_imax() {
+        let n = BackendRegistry::build(&ExecSpec::Native).unwrap();
+        assert_eq!(n.name(), "native");
+        assert!(n.report().modeled.is_none());
+        let i = BackendRegistry::build_named("imax").unwrap();
+        assert_eq!(i.name(), "imax");
+        assert!(i.offload_stats().is_some());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_requires_feature() {
+        assert!(BackendRegistry::validate(&ExecSpec::Pjrt).is_err());
+        assert!(BackendRegistry::build(&ExecSpec::Pjrt).is_err());
+        assert!(!BackendRegistry::available().contains(&"pjrt"));
+    }
+
+    #[test]
+    fn imax_backend_accounts_a_real_run() {
+        let cfg = ModelConfig::tiny();
+        let mut engine = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q8_0, 8));
+        let mut native = BackendRegistry::build(&ExecSpec::Native).unwrap();
+        let mut imax = BackendRegistry::build_named("imax").unwrap();
+        let a = engine.generate(&[1, 2, 3], 4, &mut Sampler::greedy(), &mut native);
+        engine.reset();
+        let b = engine.generate(&[1, 2, 3], 4, &mut Sampler::greedy(), &mut imax);
+        assert_eq!(a.tokens, b.tokens, "backend choice must not change tokens");
+        let rep = imax.report();
+        let m = rep.modeled.expect("imax models phases");
+        assert!(m.prefill.total() > 0.0 && m.decode.total() > 0.0);
+        assert!(rep.offload_ratio.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn merged_reports_sum_workers() {
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 8);
+        let run = |seed: u32| {
+            let mut engine = Engine::new(weights.clone());
+            let mut exec = BackendRegistry::build_named("imax").unwrap();
+            engine.forward(seed, Phase::Prefill, true, &mut exec);
+            exec.report()
         };
-        let nb = op.cols / q8_0::QK8_0;
-        if !self.weight_cache.contains_key(&w.name) {
-            self.weight_cache
-                .insert(w.name.clone(), split_q8_blocks(blocks));
-        }
-        let (wqv, wdv) = self.weight_cache.get(&w.name).expect("cached");
-        let wq = lit::i8(&[op.rows, op.cols], wqv)?;
-        let wd = lit::f32(&[op.rows, nb], wdv)?;
-        let (aq, ad) = split_q8_blocks(ablocks);
-        let aql = lit::i8(&[op.cols], &aq)?;
-        let adl = lit::f32(&[nb], &ad)?;
-        let result = self.rt.execute_vec1_f32(&name, &[wq, wd, aql, adl])?;
-        out.copy_from_slice(&result);
-        Ok(true)
-    }
-}
-
-impl MatvecExec for PjrtExec {
-    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
-        match self.try_pjrt(op, w, act, out) {
-            Ok(true) => {
-                self.pjrt_calls += 1;
-            }
-            Ok(false) => {
-                self.native_calls += 1;
-                crate::tensor::matvec_into(w, act, out);
-            }
-            Err(e) => panic!("pjrt backend failed on {}: {e:#}", w.name),
-        }
+        let (r1, r2) = (run(1), run(2));
+        let merged = BackendReport::merged(&[r1.clone(), r2.clone()]);
+        assert_eq!(merged.backend, "imax");
+        assert_eq!(merged.total_macs, r1.total_macs + r2.total_macs);
+        let m = merged.modeled.unwrap();
+        let want = r1.modeled.unwrap().prefill.total() + r2.modeled.unwrap().prefill.total();
+        assert!((m.prefill.total() - want).abs() < 1e-12);
     }
 }

@@ -1,19 +1,30 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
-//! from the Rust request path (Python never runs at inference time).
+//! Execution backends: the [`backend::BackendRegistry`] that constructs a
+//! [`crate::model::MatvecExec`] from a declarative [`backend::ExecSpec`]
+//! (`native` / `imax` / `pjrt`), plus the PJRT runtime that loads and
+//! executes the AOT-compiled JAX/Pallas artifacts from the Rust request
+//! path (Python never runs at inference time).
 //!
+//! * [`backend`] — the registry, the `ExecSpec` selector grammar, the
+//!   per-run [`backend::BackendReport`] accounting, and (feature `pjrt`)
+//!   the [`backend::PjrtExec`] that reroutes Q8_0 linear projections of
+//!   the tiny model through the compiled Pallas kernels.
 //! * [`artifacts`] — locate `artifacts/`, parse `manifest.txt`, validate
 //!   shape signatures against the tiny-model config.
-//! * [`pjrt`] — the `xla`-crate wrapper: HLO text → `HloModuleProto` →
-//!   compile on the PJRT CPU client → execute with packed quantized
-//!   operands.
-//! * [`backend`] — a [`crate::model::MatvecExec`] implementation that
-//!   reroutes Q8_0 linear projections of the tiny model through the
-//!   compiled Pallas kernels, proving the three layers compose.
+//! * [`pjrt`] (feature `pjrt`) — the `xla`-crate wrapper: HLO text →
+//!   `HloModuleProto` → compile on the PJRT CPU client → execute with
+//!   packed quantized operands.
+//!
+//! The `pjrt` feature gates everything that needs the `xla` crate so the
+//! default build carries no native XLA dependency; see `Cargo.toml`.
 
 pub mod artifacts;
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifacts::ArtifactDir;
+pub use backend::{BackendExec, BackendRegistry, BackendReport, ExecSpec, ImaxSpec};
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtExec;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;

@@ -2,7 +2,10 @@
 //! artifacts must agree numerically with the native Rust kernels on the
 //! same packed operands — the three-layer composition proof.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and the
+//! `pjrt` cargo feature (the whole suite is compiled out without it —
+//! the default build carries no xla dependency).
+#![cfg(feature = "pjrt")]
 
 use imax_llm::model::config::{ModelConfig, QuantScheme};
 use imax_llm::model::engine::{Engine, NativeExec};
