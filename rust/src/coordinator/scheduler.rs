@@ -11,12 +11,24 @@
 //! single-threaded and deterministic; `coordinator::serve` runs one per
 //! worker thread over a shared queue.
 //!
+//! **Page-budget admission**: with the paged KV cache the binding
+//! resource is pages, not slots. [`ContinuousBatcher::admit`] commits the
+//! worst case of each request (`prompt + n_out − 1` cached tokens, in
+//! pages) against the pool before admitting, so concurrently live
+//! sequences can never exhaust the pool mid-decode — a request that does
+//! not fit *right now* is [`Admitted::Deferred`] back to the caller for
+//! retry after decode rounds retire sequences, and a request that can
+//! *never* fit (pages above the whole pool, or tokens above the context
+//! window) is rejected with [`AdmitError::TooLarge`] instead of wedging
+//! the queue.
+//!
 //! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
 //! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
 //! two — the scheduler model distributes kernel rows across lanes (EXEC
 //! speedup) while the host-contention factor in [`crate::imax::sim`]
 //! inflates HOST/LOAD issue costs, reproducing the saturation curve.
 
+use std::fmt;
 use std::time::Instant;
 
 use crate::coordinator::hybrid::{simulate, Workload, WorkloadRun};
@@ -26,6 +38,7 @@ use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::model::engine::{Engine, MatvecExec, Session};
 use crate::model::graph::Phase;
+use crate::model::kv_cache::CacheError;
 use crate::model::sampler::Sampler;
 
 /// One generation request.
@@ -54,12 +67,71 @@ pub struct SessionLog {
     pub finished_s: f64,
 }
 
+/// Outcome of a successful [`ContinuousBatcher::admit`] call.
+#[derive(Debug)]
+pub enum Admitted {
+    /// Admitted into a slot; prefill ran and decode rounds will drive it.
+    Active,
+    /// Degenerate `n_out == 0` request: finished at admission.
+    Finished(SessionLog),
+    /// No free slot, or the page budget is committed to live sequences.
+    /// The request is handed back untouched — retry after decode rounds
+    /// retire sequences and release their pages.
+    Deferred(Request),
+}
+
+/// Admission failure: the request itself is unservable on this engine.
+#[derive(Clone, Debug)]
+pub enum AdmitError {
+    /// Worst-case footprint exceeds the whole page pool or the context
+    /// window — no amount of waiting can admit it.
+    TooLarge {
+        id: usize,
+        need_tokens: usize,
+        need_pages: usize,
+        pool_pages: usize,
+        max_seq: usize,
+    },
+    /// The engine's cache failed during prefill (unreachable while
+    /// admission commits worst-case pages, kept for defense in depth).
+    Cache { id: usize, err: CacheError },
+}
+
+impl AdmitError {
+    /// The id of the request that failed admission.
+    pub fn id(&self) -> usize {
+        match *self {
+            AdmitError::TooLarge { id, .. } | AdmitError::Cache { id, .. } => id,
+        }
+    }
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            AdmitError::TooLarge { id, need_tokens, need_pages, pool_pages, max_seq } => write!(
+                f,
+                "request {id} can never be admitted: needs {need_tokens} cached tokens \
+                 ({need_pages} pages) but the pool has {pool_pages} pages and max_seq \
+                 is {max_seq}"
+            ),
+            AdmitError::Cache { id, ref err } => {
+                write!(f, "request {id} failed during prefill: {err}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
 /// One in-flight request: its session, latest logits, and timing.
 struct InFlight {
     req: Request,
     session: Session,
     logits: Vec<f32>,
     tokens: Vec<u32>,
+    /// Pages committed against the pool for this request's worst case.
+    committed_pages: usize,
     queue_s: f64,
     prefill_s: f64,
     decode_s: f64,
@@ -76,6 +148,7 @@ impl InFlight {
             session,
             logits: _,
             tokens,
+            committed_pages: _,
             queue_s,
             prefill_s,
             decode_s,
@@ -104,6 +177,9 @@ pub struct ContinuousBatcher {
     ubatch: usize,
     epoch: Instant,
     active: Vec<InFlight>,
+    /// Pages committed to live sequences' worst cases (≥ pages actually
+    /// allocated, so decode-time growth can never hit an empty pool).
+    committed_pages: usize,
 }
 
 impl ContinuousBatcher {
@@ -116,10 +192,13 @@ impl ContinuousBatcher {
             ubatch,
             epoch,
             active: Vec::new(),
+            committed_pages: 0,
         }
     }
 
-    /// Free session slots (how many more requests can be admitted).
+    /// Free session slots (how many more requests can be admitted, slot
+    /// count permitting — admission additionally gates on the page
+    /// budget; see [`ContinuousBatcher::admit`]).
     pub fn capacity(&self) -> usize {
         self.engine.free_sessions()
     }
@@ -132,31 +211,75 @@ impl ContinuousBatcher {
         &self.engine
     }
 
-    /// Admit one request into a free slot and run its prefill (as ubatch
-    /// chunks). Requires `capacity() > 0`. Returns the finished log
-    /// immediately for degenerate `n_out == 0` requests.
+    /// KV pages committed to live sequences' worst cases.
+    pub fn committed_pages(&self) -> usize {
+        self.committed_pages
+    }
+
+    /// Cached tokens a request needs at its longest: the prompt plus
+    /// every decoded token except the last (which is sampled without a
+    /// further forward pass).
+    fn request_tokens(req: &Request) -> usize {
+        req.prompt.len() + req.n_out.saturating_sub(1)
+    }
+
+    /// Admit one request and run its prefill (as ubatch chunks).
+    ///
+    /// Admission is page-budget-gated: the request's worst case
+    /// (`prompt + n_out − 1` cached tokens) is committed against the
+    /// pool, so a mix of live sequences can never run the pool dry
+    /// mid-decode. Not enough budget or no free slot right now returns
+    /// [`Admitted::Deferred`] with the request handed back; a request
+    /// whose worst case exceeds the whole pool (or the context window)
+    /// returns [`AdmitError::TooLarge`].
     pub fn admit(
         &mut self,
         req: Request,
         sampler: Sampler,
         queue_s: f64,
         exec: &mut dyn MatvecExec,
-    ) -> Option<SessionLog> {
+    ) -> Result<Admitted, AdmitError> {
+        let need_tokens = Self::request_tokens(&req);
+        let need_pages = self.engine.pages_needed(need_tokens);
+        let pool_pages = self.engine.total_pages();
+        let max_seq = self.engine.cfg().max_seq_len;
+        if need_tokens > max_seq || need_pages > pool_pages {
+            return Err(AdmitError::TooLarge {
+                id: req.id,
+                need_tokens,
+                need_pages,
+                pool_pages,
+                max_seq,
+            });
+        }
+        if self.engine.free_sessions() == 0
+            || self.committed_pages + need_pages > pool_pages
+        {
+            return Ok(Admitted::Deferred(req));
+        }
         let session = self
             .engine
             .open_session(sampler)
-            .expect("admit() requires capacity() > 0");
+            .expect("free slot checked above");
         let admitted_s = self.epoch.elapsed().as_secs_f64();
         let tp0 = Instant::now();
-        let logits = self
-            .engine
-            .prefill_session(&session, &req.prompt, self.ubatch, exec);
+        let logits =
+            match self.engine.try_prefill_session(&session, &req.prompt, self.ubatch, exec) {
+                Ok(logits) => logits,
+                Err(err) => {
+                    let id = req.id;
+                    self.engine.close_session(session);
+                    return Err(AdmitError::Cache { id, err });
+                }
+            };
+        self.committed_pages += need_pages;
         let prefill_s = tp0.elapsed().as_secs_f64();
         let inflight = InFlight {
             req,
             session,
             logits,
             tokens: Vec::new(),
+            committed_pages: need_pages,
             queue_s,
             prefill_s,
             decode_s: 0.0,
@@ -165,15 +288,16 @@ impl ContinuousBatcher {
         };
         if inflight.req.n_out == 0 {
             let finished_s = self.epoch.elapsed().as_secs_f64();
+            self.committed_pages -= inflight.committed_pages;
             let (session, mut log) = inflight.finish(finished_s);
             self.engine.close_session(session);
             // A 0-output request never decodes; pin its decode mark to
             // its finish time so interval arithmetic stays well-formed.
             log.decode_start_s = log.finished_s;
-            return Some(log);
+            return Ok(Admitted::Finished(log));
         }
         self.active.push(inflight);
-        None
+        Ok(Admitted::Active)
     }
 
     /// One decode step for every active request, in admission order;
@@ -202,6 +326,7 @@ impl ContinuousBatcher {
             if done {
                 let f = self.active.remove(i);
                 let finished_s = self.epoch.elapsed().as_secs_f64();
+                self.committed_pages -= f.committed_pages;
                 let (session, log) = f.finish(finished_s);
                 self.engine.close_session(session);
                 finished.push(log);
@@ -303,9 +428,13 @@ mod tests {
         );
         let mut exec = NativeExec;
         let req = Request { id: 0, prompt: prompt.clone(), n_out };
-        assert!(b.admit(req, Sampler::greedy(), 0.0, &mut exec).is_none());
+        assert!(matches!(
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
         let logs = b.drain(&mut exec);
         assert_eq!(logs.len(), 1);
+        assert_eq!(b.committed_pages(), 0, "drained batcher holds no budget");
 
         let mut reference = Engine::new(weights);
         let want = reference.generate(&prompt, n_out, &mut Sampler::greedy(), &mut NativeExec);
@@ -326,14 +455,14 @@ mod tests {
         let mut exec = NativeExec;
 
         let r0 = Request { id: 0, prompt: vec![1, 2, 3], n_out: 8 };
-        b.admit(r0, Sampler::greedy(), 0.0, &mut exec);
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
         // r0 decodes a few rounds alone…
         for _ in 0..3 {
             assert!(b.decode_round(&mut exec).is_empty());
         }
         // …then r1 arrives mid-run and joins the same engine.
         let r1 = Request { id: 1, prompt: vec![9, 8], n_out: 2 };
-        b.admit(r1, Sampler::greedy(), 0.0, &mut exec);
+        b.admit(r1, Sampler::greedy(), 0.0, &mut exec).unwrap();
         assert_eq!(b.n_active(), 2);
 
         let mut logs = b.drain(&mut exec);
@@ -357,13 +486,79 @@ mod tests {
         let mut b =
             ContinuousBatcher::new(Engine::with_slots(weights, 1), 32, Instant::now());
         let req = Request { id: 7, prompt: vec![1, 2], n_out: 0 };
-        let log = b
-            .admit(req, Sampler::greedy(), 0.0, &mut NativeExec)
-            .expect("finishes immediately");
+        let log = match b.admit(req, Sampler::greedy(), 0.0, &mut NativeExec) {
+            Ok(Admitted::Finished(log)) => log,
+            other => panic!("expected immediate finish, got {other:?}"),
+        };
         assert_eq!(log.id, 7);
         assert!(log.tokens.is_empty());
         assert_eq!(b.n_active(), 0);
         assert_eq!(b.capacity(), 1, "slot released");
+        assert_eq!(b.committed_pages(), 0, "commitment released at finish");
+    }
+
+    #[test]
+    fn admission_defers_when_page_budget_committed() {
+        let weights = tiny_weights();
+        // 2 slots over a pool of 4 pages × 4 tokens = 16 cached tokens.
+        let engine = Engine::with_paged_slots(weights, 2, 4, Some(4));
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        // Worst case: 5 prompt + 8 − 1 = 12 tokens → 3 pages.
+        let r0 = Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 8 };
+        assert!(matches!(
+            b.admit(r0, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.committed_pages(), 3);
+        // A second identical request needs 3 more pages; 3 + 3 > 4, so it
+        // defers even though a session slot is free.
+        assert!(b.capacity() > 0, "slot-count alone would admit");
+        let r1 = Request { id: 1, prompt: vec![5, 4, 3, 2, 1], n_out: 8 };
+        let deferred = match b.admit(r1, Sampler::greedy(), 0.0, &mut exec) {
+            Ok(Admitted::Deferred(req)) => req,
+            other => panic!("expected deferral, got {other:?}"),
+        };
+        assert_eq!(deferred.id, 1);
+        assert_eq!(b.n_active(), 1, "deferred request took nothing");
+        // Draining r0 releases its commitment and r1 fits.
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 1);
+        assert_eq!(b.committed_pages(), 0);
+        assert!(matches!(
+            b.admit(deferred, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        b.drain(&mut exec);
+        assert_eq!(b.engine().free_pages(), 4, "no page leaked across churn");
+    }
+
+    #[test]
+    fn oversized_request_rejected_with_typed_error() {
+        let weights = tiny_weights();
+        // Pool of 4 pages × 4 tokens = 16 cached tokens.
+        let engine = Engine::with_paged_slots(weights, 2, 4, Some(4));
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        // Worst case 10 + 20 − 1 = 29 tokens → 8 pages > 4-page pool.
+        let req = Request { id: 9, prompt: vec![1; 10], n_out: 20 };
+        let err = b.admit(req, Sampler::greedy(), 0.0, &mut NativeExec).unwrap_err();
+        match err {
+            AdmitError::TooLarge { id, need_tokens, need_pages, pool_pages, .. } => {
+                assert_eq!(id, 9);
+                assert_eq!(need_tokens, 29);
+                assert_eq!(need_pages, 8);
+                assert_eq!(pool_pages, 4);
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        // The rejection wedged nothing: a small request still admits.
+        let small = Request { id: 10, prompt: vec![1, 2], n_out: 2 };
+        assert!(matches!(
+            b.admit(small, Sampler::greedy(), 0.0, &mut NativeExec),
+            Ok(Admitted::Active)
+        ));
+        let logs = b.drain(&mut NativeExec);
+        assert_eq!(logs.len(), 1);
     }
 
     #[test]

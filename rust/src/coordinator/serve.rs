@@ -6,7 +6,11 @@
 //! multi-session engine driven by a [`ContinuousBatcher`] — prefill runs
 //! as ubatch chunks and decode rounds interleave every live request, so
 //! a request admitted mid-run starts decoding while earlier requests are
-//! still generating. The kernel executor comes from the
+//! still generating. Each worker's KV cache is paged
+//! (`--page-size`/`--kv-pages`): admission gates on the free-page budget
+//! rather than slot count alone, deferred requests return to the queue
+//! head, and a request whose worst case can never fit the pool completes
+//! with [`Completion::error`] set instead of wedging the queue. The kernel executor comes from the
 //! [`BackendRegistry`], so the same loop can serve on native kernels,
 //! instrumented-IMAX accounting (per-phase modeled costs in the report),
 //! or PJRT. Reports per-request latency and aggregate throughput, the
@@ -19,10 +23,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::ContinuousBatcher;
+use crate::coordinator::scheduler::{Admitted, ContinuousBatcher};
 pub use crate::coordinator::scheduler::Request;
 use crate::imax::timing::RunBreakdown;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
+use crate::model::kv_cache::DEFAULT_PAGE_SIZE;
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
 use crate::runtime::backend::{BackendRegistry, BackendReport, ExecSpec};
@@ -40,6 +45,14 @@ pub struct ServeOptions {
     pub sampler_seed: u64,
     /// Kernel executor, built per worker via the [`BackendRegistry`].
     pub spec: ExecSpec,
+    /// KV page size in tokens (`--page-size`).
+    pub page_size: usize,
+    /// Per-worker KV page budget (`--kv-pages`). `None` fully backs every
+    /// slot to `max_seq` (admission then only gates on slots); `Some(n)`
+    /// caps resident KV memory and admission gates on free pages, which
+    /// is what lets many short sequences share a budget that fixed-stride
+    /// slots would exhaust.
+    pub kv_pages: Option<usize>,
 }
 
 impl Default for ServeOptions {
@@ -49,6 +62,8 @@ impl Default for ServeOptions {
             ubatch: DEFAULT_UBATCH,
             sampler_seed: 42,
             spec: ExecSpec::Native,
+            page_size: DEFAULT_PAGE_SIZE,
+            kv_pages: None,
         }
     }
 }
@@ -68,6 +83,9 @@ pub struct Completion {
     pub admitted_s: f64,
     pub decode_start_s: f64,
     pub finished_s: f64,
+    /// `Some` when the request was rejected instead of served (e.g. its
+    /// worst-case KV footprint exceeds the worker's page pool).
+    pub error: Option<String>,
 }
 
 /// Aggregate serving statistics.
@@ -86,6 +104,10 @@ pub struct ServeReport {
     pub modeled: Option<RunBreakdown>,
     /// Offloaded / total MACs across the run (imax backend).
     pub offload_ratio: Option<f64>,
+    /// Peak resident KV bytes (f16 accounting, page-granular), summed
+    /// over each worker's own peak — an upper bound on simultaneous
+    /// residency, and the quantity `--kv-pages` caps per worker.
+    pub kv_peak_bytes_f16: usize,
 }
 
 /// Serve a batch of requests over `n_workers` native-kernel workers;
@@ -118,6 +140,12 @@ pub fn serve_with(
     if opts.ubatch == 0 {
         anyhow::bail!("ubatch must be at least 1");
     }
+    if opts.page_size == 0 {
+        anyhow::bail!("page_size must be at least 1");
+    }
+    if opts.kv_pages == Some(0) {
+        anyhow::bail!("kv_pages must be at least 1");
+    }
     BackendRegistry::validate(&opts.spec)?;
     let n_req = requests.len();
     let started = Instant::now();
@@ -134,10 +162,15 @@ pub fn serve_with(
         let tx = tx.clone();
         let weights = weights.clone();
         let opts = opts.clone();
-        handles.push(thread::spawn(move || -> BackendReport {
+        handles.push(thread::spawn(move || -> (BackendReport, usize) {
             let mut exec =
                 BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
-            let engine = Engine::with_slots(weights, opts.slots_per_worker);
+            let engine = Engine::with_paged_slots(
+                weights,
+                opts.slots_per_worker,
+                opts.page_size,
+                opts.kv_pages,
+            );
             let mut batcher = ContinuousBatcher::new(engine, opts.ubatch, started);
             let send = |log: crate::coordinator::scheduler::SessionLog,
                         tx: &mpsc::Sender<Completion>| {
@@ -152,20 +185,57 @@ pub fn serve_with(
                     admitted_s: log.admitted_s,
                     decode_start_s: log.decode_start_s,
                     finished_s: log.finished_s,
+                    error: None,
                 })
                 .ok();
             };
             loop {
-                // Admit new requests into free session slots *between*
-                // decode rounds — the continuous-batching step.
+                // Admit new requests *between* decode rounds — the
+                // continuous-batching step. The batcher gates on both
+                // free session slots and the KV page budget; a request
+                // that does not fit right now goes back to the queue
+                // head until decode rounds retire sequences.
                 while batcher.capacity() > 0 {
                     let item = queue.lock().unwrap().pop_front();
                     let Some((req, enq)) = item else { break };
                     let queue_s = enq.elapsed().as_secs_f64();
                     let sampler =
                         Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
-                    if let Some(log) = batcher.admit(req, sampler, queue_s, &mut exec) {
-                        send(log, &tx);
+                    match batcher.admit(req, sampler, queue_s, &mut exec) {
+                        Ok(Admitted::Active) => {}
+                        Ok(Admitted::Finished(log)) => send(log, &tx),
+                        Ok(Admitted::Deferred(req)) => {
+                            // With nothing active every page is free, so
+                            // a deferral here could never resolve; admit
+                            // gates that case as TooLarge instead.
+                            assert!(
+                                batcher.n_active() > 0,
+                                "deferred with an idle engine: request {} cannot progress",
+                                req.id
+                            );
+                            queue.lock().unwrap().push_front((req, enq));
+                            break;
+                        }
+                        Err(e) => {
+                            // Unservable on this engine (worst case above
+                            // the whole pool): complete it as an error
+                            // instead of wedging the queue.
+                            let now = started.elapsed().as_secs_f64();
+                            tx.send(Completion {
+                                id: e.id(),
+                                tokens: Vec::new(),
+                                queue_s,
+                                prefill_s: 0.0,
+                                decode_s: 0.0,
+                                total_s: queue_s,
+                                worker,
+                                admitted_s: now,
+                                decode_start_s: now,
+                                finished_s: now,
+                                error: Some(e.to_string()),
+                            })
+                            .ok();
+                        }
                     }
                 }
                 if batcher.n_active() == 0 {
@@ -179,35 +249,46 @@ pub fn serve_with(
                     send(log, &tx);
                 }
             }
-            exec.report()
+            // Peak page-granular KV residency on this worker's engine —
+            // the quantity `--kv-pages` budgets.
+            let kv_peak = batcher.engine().cache.peak_resident_bytes_f16();
+            (exec.report(), kv_peak)
         }));
     }
     drop(tx);
 
     let mut completions: Vec<Completion> = rx.iter().collect();
-    let reports: Vec<BackendReport> = handles
+    let (reports, kv_peaks): (Vec<BackendReport>, Vec<usize>) = handles
         .into_iter()
         .map(|h| h.join().expect("worker panicked"))
-        .collect();
+        .unzip();
     completions.sort_by_key(|c| c.id);
     assert_eq!(completions.len(), n_req, "all requests completed");
 
     let wall_s = started.elapsed().as_secs_f64();
     let total_tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
-    let lats: Vec<f64> = completions.iter().map(|c| c.total_s).collect();
+    // Latency statistics cover *served* requests only: a rejection
+    // completes in ~0 s and would deflate the percentiles.
+    let lats: Vec<f64> = completions
+        .iter()
+        .filter(|c| c.error.is_none())
+        .map(|c| c.total_s)
+        .collect();
     let summary = Summary::from_slice(&lats);
     let merged = BackendReport::merged(&reports);
+    let pctl = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
     Ok(ServeReport {
         throughput_tok_s: total_tokens as f64 / wall_s,
-        latency_p50_s: percentile(&lats, 50.0),
-        latency_p95_s: percentile(&lats, 95.0),
-        latency_mean_s: summary.mean(),
+        latency_p50_s: pctl(50.0),
+        latency_p95_s: pctl(95.0),
+        latency_mean_s: if lats.is_empty() { 0.0 } else { summary.mean() },
         completions,
         wall_s,
         total_tokens,
         backend: opts.spec.name(),
         modeled: merged.modeled,
         offload_ratio: merged.offload_ratio,
+        kv_peak_bytes_f16: kv_peaks.iter().sum(),
     })
 }
 
@@ -300,6 +381,65 @@ mod tests {
             overlap,
             "a mid-run admission must decode while an earlier request is still live"
         );
+    }
+
+    #[test]
+    fn page_budget_serving_completes_under_tight_pool() {
+        // 1 worker × 4 slots over 6 pages of 4 tokens = 24 cached tokens:
+        // each request's worst case is 4 + 3 − 1 = 6 tokens (2 pages), so
+        // at most 3 run concurrently and the rest defer — but everything
+        // completes, identically to an unconstrained run.
+        let w = tiny_weights();
+        let opts = ServeOptions {
+            slots_per_worker: 4,
+            page_size: 4,
+            kv_pages: Some(6),
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&w, reqs(6), 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 6);
+        for c in &rep.completions {
+            assert!(c.error.is_none());
+            assert_eq!(c.tokens.len(), 3);
+        }
+        // Page-granular peak residency is reported and stays inside the
+        // configured 6-page budget.
+        let cfg = ModelConfig::tiny();
+        let pool_bytes = 2 * 6 * cfg.n_layers * 4 * cfg.kv_dim() * 2;
+        assert!(rep.kv_peak_bytes_f16 > 0, "peak residency reported");
+        assert!(
+            rep.kv_peak_bytes_f16 <= pool_bytes,
+            "{} exceeds the {pool_bytes}-byte budget",
+            rep.kv_peak_bytes_f16
+        );
+        // Same tokens as a run with a fully backed cache.
+        let free = serve(&w, reqs(6), 1, 42);
+        for (a, b) in rep.completions.iter().zip(&free.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "page budget must not change tokens");
+        }
+    }
+
+    #[test]
+    fn oversized_request_completes_with_error() {
+        let opts = ServeOptions {
+            slots_per_worker: 2,
+            page_size: 4,
+            kv_pages: Some(4), // 16 cached tokens per worker
+            ..ServeOptions::default()
+        };
+        let mut requests = reqs(3);
+        requests.push(Request { id: 3, prompt: vec![1; 10], n_out: 20 });
+        let rep = serve_with(&tiny_weights(), requests, 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 4, "rejected request still completes");
+        let big = rep.completions.iter().find(|c| c.id == 3).unwrap();
+        assert!(big.tokens.is_empty());
+        let msg = big.error.as_ref().expect("rejected with an error");
+        assert!(msg.contains("never be admitted"), "{msg}");
+        for c in rep.completions.iter().filter(|c| c.id != 3) {
+            assert!(c.error.is_none(), "small requests are unaffected");
+            assert_eq!(c.tokens.len(), 3);
+        }
     }
 
     #[test]

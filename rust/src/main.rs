@@ -7,7 +7,7 @@
 //! imax-llm anchors              # calibration vs the paper's numbers
 //! imax-llm kernels              # Fig 5-9 kernel mapping summary
 //! imax-llm run    [--model tiny|110m] [--scheme Q8_0] [--prompt txt] [--n 32]
-//! imax-llm serve  [--requests 16] [--workers 2]
+//! imax-llm serve  [--requests 16] [--workers 2] [--kv-pages 64] [--page-size 16]
 //! imax-llm build-model --out path [--model tiny|110m] [--scheme Q8_0]
 //! ```
 //!
@@ -23,7 +23,9 @@ use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
 use imax_llm::coordinator::{serve_with, Request, ServeOptions};
 use imax_llm::harness::experiments as exp;
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
-use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_UBATCH};
+use imax_llm::model::{
+    Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_PAGE_SIZE, DEFAULT_UBATCH,
+};
 use imax_llm::power;
 use imax_llm::runtime::{BackendRegistry, ExecSpec};
 use imax_llm::tokenizer::Tokenizer;
@@ -276,12 +278,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(DEFAULT_UBATCH);
-    eprintln!(
-        "building {} ({}), backend {}, {workers} workers × {slots} sessions…",
-        cfg.name,
-        scheme.name(),
-        spec.name()
-    );
+    let page_size: usize = flags
+        .get("page-size")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(DEFAULT_PAGE_SIZE);
+    let kv_pages: Option<usize> = flags.get("kv-pages").map(|s| s.parse()).transpose()?;
+    match kv_pages {
+        Some(pages) => eprintln!(
+            "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
+             KV pool {pages} pages × {page_size} tokens…",
+            cfg.name,
+            scheme.name(),
+            spec.name()
+        ),
+        None => eprintln!(
+            "building {} ({}), backend {}, {workers} workers × {slots} sessions \
+             (fully backed KV, {page_size}-token pages)…",
+            cfg.name,
+            scheme.name(),
+            spec.name()
+        ),
+    }
     let weights = ModelWeights::random(&cfg, scheme, 2025);
     let requests: Vec<Request> = (0..n_req)
         .map(|id| Request {
@@ -295,6 +313,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ubatch,
         sampler_seed: 42,
         spec,
+        page_size,
+        kv_pages,
     };
     let rep = serve_with(&weights, requests, workers, &opts)?;
     println!(
@@ -307,6 +327,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         rep.latency_p95_s,
         rep.backend,
     );
+    println!(
+        "peak resident KV (f16, page-granular, summed per worker): {}",
+        imax_llm::util::human_bytes(rep.kv_peak_bytes_f16)
+    );
+    let rejected: Vec<&imax_llm::coordinator::Completion> =
+        rep.completions.iter().filter(|c| c.error.is_some()).collect();
+    for c in &rejected {
+        eprintln!("request {} rejected: {}", c.id, c.error.as_deref().unwrap_or(""));
+    }
+    if !rejected.is_empty() {
+        println!("rejected {} of {} requests (KV budget)", rejected.len(), rep.completions.len());
+    }
     if let Some(modeled) = rep.modeled {
         println!(
             "modeled IMAX per-phase: prefill {:.4}s decode {:.4}s (offload ratio {:.0}%)",
@@ -398,11 +430,16 @@ functional engine (real tiny models, real tokens):
   run         [--model tiny|110m] [--scheme F16|Q8_0|Q3_K_S] [--prompt txt] [--n N]
               [--backend native|imax|imax:asic|pjrt]   (default imax)
   serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
+              [--page-size N] [--kv-pages N]
               [--model tiny|110m] [--scheme S]
               [--backend native|imax|imax:asic|pjrt]   (default native)
               continuous batching: sessions are admitted into free slots
               between decode rounds; --backend imax adds modeled per-phase
-              IMAX accounting to the serve report
+              IMAX accounting to the serve report. The KV cache is paged:
+              --kv-pages caps each worker's pool (admission defers until
+              pages free up; impossible requests are rejected), --page-size
+              sets tokens per page (default 16); omit --kv-pages to fully
+              back every slot
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 ";

@@ -9,17 +9,23 @@
 //! that may offload to IMAX.
 //!
 //! The engine is multi-sequence: a [`Session`] owns one slot of the
-//! slot-indexed [`KvCache`], and [`Engine::forward_ubatch`] processes a
+//! paged [`KvCache`], and [`Engine::forward_ubatch`] processes a
 //! prefill chunk of several tokens in one call (llama.cpp's ubatch),
 //! which is what lets backends amortize weight transfer and
 //! configuration across the chunk — the root of the paper's
 //! prefill-compute-bound vs decode-LOAD-bound duality (§V.B). The
 //! legacy single-sequence [`Engine::forward`] / [`Engine::generate`] API
 //! is a thin wrapper over slot 0.
+//!
+//! Cache growth is fallible: each forward reserves KV pages for its
+//! chunk up front, and the `try_*` variants surface the typed
+//! [`CacheError`] (context overflow / page-pool exhaustion) so the
+//! continuous-batching scheduler can defer work instead of unwinding.
+//! The infallible wrappers panic with the same typed message.
 
 use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
 use crate::model::graph::{MatvecOp, OpKind, Phase};
-use crate::model::kv_cache::KvCache;
+use crate::model::kv_cache::{CacheError, KvCache};
 use crate::model::ops;
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
@@ -182,11 +188,34 @@ impl Engine {
     }
 
     /// Engine holding up to `n_slots` concurrent sequences (continuous
-    /// batching).
+    /// batching), with a fully backed page pool (every slot can reach
+    /// `max_seq`).
     pub fn with_slots(weights: ModelWeights, n_slots: usize) -> Engine {
         let cfg = &weights.cfg;
-        let scratch = Scratch::new(cfg);
         let cache = KvCache::with_slots(cfg, n_slots);
+        Engine::with_cache(weights, cache)
+    }
+
+    /// Engine with an explicit KV page geometry: `n_slots` sequences over
+    /// a shared pool of `page_size`-token pages. `n_pages = None` fully
+    /// backs the slots; `Some(n)` sets a deliberate page budget (serve
+    /// admission then gates on free pages instead of slot count alone).
+    pub fn with_paged_slots(
+        weights: ModelWeights,
+        n_slots: usize,
+        page_size: usize,
+        n_pages: Option<usize>,
+    ) -> Engine {
+        let cfg = &weights.cfg;
+        let pages =
+            n_pages.unwrap_or_else(|| KvCache::full_backing_pages(cfg, n_slots, page_size));
+        let cache = KvCache::paged(cfg, n_slots, page_size, pages);
+        Engine::with_cache(weights, cache)
+    }
+
+    fn with_cache(weights: ModelWeights, cache: KvCache) -> Engine {
+        let scratch = Scratch::new(&weights.cfg);
+        let n_slots = cache.n_slots;
         Engine {
             weights,
             cache,
@@ -211,6 +240,26 @@ impl Engine {
     /// Sessions that can still be opened.
     pub fn free_sessions(&self) -> usize {
         self.free_slots.len()
+    }
+
+    /// Free pages in the shared KV pool.
+    pub fn free_pages(&self) -> usize {
+        self.cache.free_page_count()
+    }
+
+    /// Total pages in the shared KV pool.
+    pub fn total_pages(&self) -> usize {
+        self.cache.n_pages()
+    }
+
+    /// Tokens per KV page.
+    pub fn page_size(&self) -> usize {
+        self.cache.page_size()
+    }
+
+    /// Pages required to hold `n_tokens` cached tokens.
+    pub fn pages_needed(&self, n_tokens: usize) -> usize {
+        self.cache.pages_needed(n_tokens)
     }
 
     /// Claim a free KV-cache slot for a new sequence. `None` when every
@@ -239,6 +288,7 @@ impl Engine {
     }
 
     /// Process one token for `session` at its current position.
+    /// Panics on cache exhaustion; see [`Engine::try_forward_session`].
     pub fn forward_session(
         &mut self,
         session: &Session,
@@ -247,12 +297,28 @@ impl Engine {
         want_logits: bool,
         exec: &mut dyn MatvecExec,
     ) -> Option<Vec<f32>> {
-        self.ubatch_on_slot(session.slot, &[token], phase, want_logits, exec)
+        self.try_forward_session(session, token, phase, want_logits, exec)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible single-token step for `session`: `Err` carries the typed
+    /// [`CacheError`] (slot, length, requirement) on cache exhaustion,
+    /// leaving the sequence unchanged.
+    pub fn try_forward_session(
+        &mut self,
+        session: &Session,
+        token: u32,
+        phase: Phase,
+        want_logits: bool,
+        exec: &mut dyn MatvecExec,
+    ) -> Result<Option<Vec<f32>>, CacheError> {
+        self.try_ubatch_on_slot(session.slot, &[token], phase, want_logits, exec)
     }
 
     /// Process a chunk of `tokens` for `session` in one call (prefill
     /// ubatch). Returns the logits of the chunk's last token if
-    /// `want_logits`.
+    /// `want_logits`. Panics on cache exhaustion; see
+    /// [`Engine::try_forward_ubatch`].
     pub fn forward_ubatch(
         &mut self,
         session: &Session,
@@ -261,11 +327,26 @@ impl Engine {
         want_logits: bool,
         exec: &mut dyn MatvecExec,
     ) -> Option<Vec<f32>> {
-        self.ubatch_on_slot(session.slot, tokens, phase, want_logits, exec)
+        self.try_forward_ubatch(session, tokens, phase, want_logits, exec)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible ubatch step for `session` (typed error on cache
+    /// exhaustion, before any token of the chunk is processed).
+    pub fn try_forward_ubatch(
+        &mut self,
+        session: &Session,
+        tokens: &[u32],
+        phase: Phase,
+        want_logits: bool,
+        exec: &mut dyn MatvecExec,
+    ) -> Result<Option<Vec<f32>>, CacheError> {
+        self.try_ubatch_on_slot(session.slot, tokens, phase, want_logits, exec)
     }
 
     /// Prefill a whole prompt for `session` in chunks of at most
-    /// `ubatch` tokens; returns the last token's logits.
+    /// `ubatch` tokens; returns the last token's logits. Panics on cache
+    /// exhaustion; see [`Engine::try_prefill_session`].
     pub fn prefill_session(
         &mut self,
         session: &Session,
@@ -273,18 +354,31 @@ impl Engine {
         ubatch: usize,
         exec: &mut dyn MatvecExec,
     ) -> Vec<f32> {
-        self.prefill_on_slot(session.slot, prompt, ubatch, exec)
+        self.try_prefill_session(session, prompt, ubatch, exec)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible chunked prefill. On `Err`, chunks before the failing one
+    /// remain cached (the caller decides whether to reset the session).
+    pub fn try_prefill_session(
+        &mut self,
+        session: &Session,
+        prompt: &[u32],
+        ubatch: usize,
+        exec: &mut dyn MatvecExec,
+    ) -> Result<Vec<f32>, CacheError> {
+        self.try_prefill_on_slot(session.slot, prompt, ubatch, exec)
     }
 
     /// Chunked-prefill core shared by the session API and the legacy
     /// `generate` path.
-    fn prefill_on_slot(
+    fn try_prefill_on_slot(
         &mut self,
         slot: usize,
         prompt: &[u32],
         ubatch: usize,
         exec: &mut dyn MatvecExec,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>, CacheError> {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(ubatch >= 1, "ubatch must be at least 1");
         let mut logits = None;
@@ -292,10 +386,11 @@ impl Engine {
         while start < prompt.len() {
             let end = (start + ubatch).min(prompt.len());
             let last = end == prompt.len();
-            logits = self.ubatch_on_slot(slot, &prompt[start..end], Phase::Prefill, last, exec);
+            logits =
+                self.try_ubatch_on_slot(slot, &prompt[start..end], Phase::Prefill, last, exec)?;
             start = end;
         }
-        logits.expect("prefill produced logits")
+        Ok(logits.expect("prefill produced logits"))
     }
 
     /// Process one token at position `pos` (= current cache length) on
@@ -308,27 +403,30 @@ impl Engine {
         want_logits: bool,
         exec: &mut dyn MatvecExec,
     ) -> Option<Vec<f32>> {
-        self.ubatch_on_slot(0, &[token], phase, want_logits, exec)
+        self.try_ubatch_on_slot(0, &[token], phase, want_logits, exec)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// The forward pass: `tokens` as one ubatch appended to `slot`'s
     /// sequence. Token `i` of the chunk sits at position `len + i` and
     /// attends causally to everything before it, so the arithmetic is
-    /// bit-identical to feeding the chunk one token at a time.
-    fn ubatch_on_slot(
+    /// bit-identical to feeding the chunk one token at a time. KV pages
+    /// for the whole chunk are reserved up front: on `Err` nothing was
+    /// executed and the sequence is unchanged.
+    fn try_ubatch_on_slot(
         &mut self,
         slot: usize,
         tokens: &[u32],
         phase: Phase,
         want_logits: bool,
         exec: &mut dyn MatvecExec,
-    ) -> Option<Vec<f32>> {
+    ) -> Result<Option<Vec<f32>>, CacheError> {
         let cfg = self.weights.cfg.clone();
         let scheme = self.weights.scheme;
         let n = tokens.len();
         assert!(n >= 1, "empty ubatch");
         let base = self.cache.slot_len(slot);
-        assert!(base + n <= cfg.max_seq_len, "context overflow");
+        self.cache.try_reserve(slot, n)?;
         self.scratch.ensure(&cfg, n);
         exec.begin_step(phase, base);
 
@@ -536,7 +634,9 @@ impl Engine {
             }
         }
 
-        self.cache.advance(slot, n);
+        self.cache
+            .advance(slot, n)
+            .expect("chunk pages reserved before execution");
         self.n_tokens_processed += n;
 
         let out = if want_logits {
@@ -557,7 +657,7 @@ impl Engine {
             None
         };
         exec.end_step(phase, base + n - 1);
-        out
+        Ok(out)
     }
 
     /// Run a full `[prompt : n_out]` request on the implicit slot 0:
@@ -572,14 +672,17 @@ impl Engine {
     ) -> GenerateResult {
         assert!(!prompt.is_empty(), "empty prompt");
         self.reset();
-        let mut logits = self.prefill_on_slot(0, prompt, DEFAULT_UBATCH, exec);
+        let mut logits = self
+            .try_prefill_on_slot(0, prompt, DEFAULT_UBATCH, exec)
+            .unwrap_or_else(|e| panic!("{e}"));
         let mut tokens = Vec::with_capacity(n_out);
         for step in 0..n_out {
             let next = sampler.sample(&logits);
             tokens.push(next);
             if step + 1 < n_out {
                 logits = self
-                    .ubatch_on_slot(0, &[next], Phase::Decode, true, exec)
+                    .try_ubatch_on_slot(0, &[next], Phase::Decode, true, exec)
+                    .unwrap_or_else(|e| panic!("{e}"))
                     .expect("decode produced logits");
             }
         }
@@ -720,6 +823,62 @@ mod tests {
         let s3 = e.open_session(Sampler::greedy()).unwrap();
         assert_eq!(s3.slot(), slot, "slot recycled");
         assert_eq!(e.session_pos(&s3), 0, "recycled slot starts empty");
+    }
+
+    #[test]
+    fn typed_error_surfaces_through_try_paths() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.max_seq_len = 4;
+        let mut e = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q8_0, 42));
+        let sess = e.open_session(Sampler::greedy()).unwrap();
+        e.try_prefill_session(&sess, &[1, 2, 3, 4], 32, &mut NativeExec)
+            .unwrap();
+        let err = e
+            .try_forward_session(&sess, 5, Phase::Decode, true, &mut NativeExec)
+            .unwrap_err();
+        match err {
+            CacheError::ContextOverflow { slot, len, need, max_seq } => {
+                assert_eq!((slot, len, need, max_seq), (sess.slot(), 4, 1, 4));
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        // The failed step left the sequence unchanged.
+        assert_eq!(e.session_pos(&sess), 4);
+    }
+
+    #[test]
+    fn paged_engine_generates_identically_to_default() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q8_0, 42);
+        let prompt = [1u32, 5, 9, 2];
+        let mut a = Engine::new(w.clone());
+        let ra = a.generate(&prompt, 6, &mut Sampler::greedy(), &mut NativeExec);
+        let mut b = Engine::with_paged_slots(w, 1, 3, None);
+        let rb = b.generate(&prompt, 6, &mut Sampler::greedy(), &mut NativeExec);
+        assert_eq!(ra.tokens, rb.tokens, "page size must not change results");
+    }
+
+    #[test]
+    fn out_of_pages_defers_until_a_session_closes() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::random(&cfg, QuantScheme::Q8_0, 7);
+        // 2 slots but only 2 pages of 4 tokens: the second session
+        // starves once the first holds both pages.
+        let mut e = Engine::with_paged_slots(w, 2, 4, Some(2));
+        let sa = e.open_session(Sampler::greedy()).unwrap();
+        let sb = e.open_session(Sampler::greedy()).unwrap();
+        e.try_prefill_session(&sa, &[1, 2, 3, 4, 5], 32, &mut NativeExec)
+            .unwrap();
+        let err = e
+            .try_prefill_session(&sb, &[9, 8, 7, 6, 5], 32, &mut NativeExec)
+            .unwrap_err();
+        assert!(matches!(err, CacheError::OutOfPages { .. }), "{err:?}");
+        // Closing the first session frees its pages; the second proceeds.
+        e.close_session(sa);
+        assert_eq!(e.free_pages(), 2);
+        e.try_prefill_session(&sb, &[9, 8, 7, 6, 5], 32, &mut NativeExec)
+            .unwrap();
+        assert_eq!(e.session_pos(&sb), 5);
     }
 
     #[test]

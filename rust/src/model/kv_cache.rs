@@ -1,29 +1,133 @@
-//! Multi-sequence, slot-indexed KV cache.
+//! Paged multi-sequence KV cache.
 //!
 //! The paper's host CPU owns "KV cache management" (§III.A), and the
 //! decode phase's LOAD-bound behaviour (§V.B) comes from streaming this
 //! cache to the accelerator every step. Serving interleaves many
 //! sequences on one engine (continuous batching), so the cache is
-//! organised as `n_slots` independent sequences over one allocation:
-//! each [`crate::model::engine::Session`] owns one slot, and every slot
-//! tracks its own length. The functional engine keeps K/V in f32; the
+//! organised vLLM-style as a **shared pool of fixed-size pages** instead
+//! of one fixed-stride slab per slot:
+//!
+//! * A *page* holds `page_size` consecutive token positions of K and V
+//!   for **every layer**: the K (or V) backing store is laid out as
+//!   `[n_pages][n_layers][page_size][kv_dim]`, row-major. One logical
+//!   page allocation therefore covers all layers of a position range,
+//!   which keeps the per-slot block table small and layer-independent.
+//! * Each session slot owns a *block table* — the ordered list of page
+//!   ids backing logical positions `0..slot_len(slot)`. Position `pos`
+//!   of `slot` lives at offset `pos % page_size` inside page
+//!   `table[pos / page_size]`.
+//! * Unowned pages sit on a LIFO *free list*. [`KvCache::try_reserve`]
+//!   pops pages lazily as a slot's sequence crosses page boundaries and
+//!   [`KvCache::reset_slot`] pushes exactly that slot's pages back.
+//!
+//! The practical consequence, and the reason serving wants paging: slot
+//! count no longer reserves `max_seq` tokens of memory per sequence.
+//! A pool of `n_pages` serves any mix of sequences whose *live* tokens
+//! fit, so many short sequences can decode concurrently inside a memory
+//! budget that fixed-stride slots would exhaust after a couple of slots
+//! (the admission logic lives in
+//! [`crate::coordinator::scheduler::ContinuousBatcher`]).
+//!
+//! `page_size = max_seq, n_pages = n_slots` degenerates to exactly the
+//! old contiguous layout — the equivalence suite in
+//! `rust/tests/batching_equiv.rs` pins paged execution bit-identical to
+//! that reference.
+//!
+//! Cache exhaustion is a typed [`CacheError`] (carrying slot, current
+//! length and the failed requirement) so schedulers can defer admission
+//! instead of unwinding. The functional engine keeps K/V in f32; the
 //! *byte accounting* used by the timing path models the llama.cpp
 //! default of an FP16 cache (see `MatvecOp::weight_bytes` with
-//! `GgmlType::F16`).
+//! `GgmlType::F16`) at page granularity.
+
+use std::fmt;
 
 use crate::model::config::ModelConfig;
+use crate::util::ceil_div;
 
-/// KV cache for all layers and session slots:
-/// `[n_layers][n_slots][max_seq][kv_dim]`, row-major.
+/// Default page size in tokens. Small enough that short sequences waste
+/// little slack in their last page, large enough that the block table
+/// indirection stays cold next to the attention arithmetic.
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Typed KV-cache exhaustion/contract error. Every variant carries the
+/// slot, its current length, and what was asked for, so callers (and
+/// panics built from `Display`) can report precisely what ran out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CacheError {
+    /// The slot's sequence would exceed the model's context window.
+    ContextOverflow {
+        slot: usize,
+        len: usize,
+        need: usize,
+        max_seq: usize,
+    },
+    /// The shared page pool has too few free pages for the reservation.
+    OutOfPages {
+        slot: usize,
+        len: usize,
+        need_pages: usize,
+        free_pages: usize,
+        n_pages: usize,
+    },
+    /// `advance` ran past the positions covered by reserved pages
+    /// (missing `try_reserve` call — a scheduling bug, not exhaustion).
+    Unreserved {
+        slot: usize,
+        len: usize,
+        need: usize,
+        reserved: usize,
+    },
+}
+
+impl fmt::Display for CacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            CacheError::ContextOverflow { slot, len, need, max_seq } => write!(
+                f,
+                "KV context overflow: slot {slot} at len {len} needs {need} more \
+                 tokens but max_seq is {max_seq}"
+            ),
+            CacheError::OutOfPages { slot, len, need_pages, free_pages, n_pages } => write!(
+                f,
+                "KV page pool exhausted: slot {slot} at len {len} needs {need_pages} \
+                 more pages but only {free_pages} of {n_pages} are free"
+            ),
+            CacheError::Unreserved { slot, len, need, reserved } => write!(
+                f,
+                "KV advance past reservation: slot {slot} at len {len} advances by \
+                 {need} but pages only cover {reserved} tokens (call try_reserve first)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+/// Paged KV cache for all layers and session slots (see module docs for
+/// the layout).
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub kv_dim: usize,
-    /// Per-slot context capacity.
+    /// Per-slot context capacity (model context window).
     pub max_seq: usize,
     /// Number of independent sequences the cache can hold.
     pub n_slots: usize,
+    /// Tokens per page.
+    page_size: usize,
+    /// Total pages in the shared pool.
+    n_pages: usize,
     /// Current number of cached positions per slot (shared across layers).
     lens: Vec<usize>,
+    /// Per-slot block table: page ids backing positions `0..lens[slot]`
+    /// (the last page may be partially filled).
+    tables: Vec<Vec<u32>>,
+    /// LIFO free list of unowned page ids.
+    free: Vec<u32>,
+    /// Lifetime high-water mark of owned pages (exact peak residency,
+    /// updated at allocation so it can't miss pages freed mid-round).
+    peak_used: usize,
+    /// `[n_pages][n_layers][page_size][kv_dim]`, row-major.
     k: Vec<f32>,
     v: Vec<f32>,
     n_layers: usize,
@@ -35,16 +139,43 @@ impl KvCache {
         KvCache::with_slots(cfg, 1)
     }
 
-    /// Cache holding `n_slots` independent sequences.
+    /// Cache holding `n_slots` independent sequences, fully backed: the
+    /// pool holds enough pages for every slot to reach `max_seq`, so
+    /// reservations can only fail on context overflow (exactly the old
+    /// fixed-stride capacity semantics).
     pub fn with_slots(cfg: &ModelConfig, n_slots: usize) -> KvCache {
+        let pages = KvCache::full_backing_pages(cfg, n_slots, DEFAULT_PAGE_SIZE);
+        KvCache::paged(cfg, n_slots, DEFAULT_PAGE_SIZE, pages)
+    }
+
+    /// Pages needed to fully back `n_slots` sequences of `max_seq` tokens.
+    pub fn full_backing_pages(cfg: &ModelConfig, n_slots: usize, page_size: usize) -> usize {
+        assert!(page_size >= 1, "page_size must be at least 1");
+        n_slots * ceil_div(cfg.max_seq_len, page_size)
+    }
+
+    /// Cache with an explicit page geometry: `n_slots` sequences sharing
+    /// a pool of `n_pages` pages of `page_size` tokens each. The pool may
+    /// deliberately be smaller than `n_slots × max_seq` worth of pages —
+    /// that is the point of paging; admission control keeps concurrent
+    /// sequences inside the budget.
+    pub fn paged(cfg: &ModelConfig, n_slots: usize, page_size: usize, n_pages: usize) -> KvCache {
         assert!(n_slots >= 1, "need at least one session slot");
+        assert!(page_size >= 1, "page_size must be at least 1");
+        assert!(n_pages >= 1, "need at least one page");
         let kv_dim = cfg.kv_dim();
-        let cells = cfg.n_layers * n_slots * cfg.max_seq_len * kv_dim;
+        let cells = n_pages * cfg.n_layers * page_size * kv_dim;
         KvCache {
             kv_dim,
             max_seq: cfg.max_seq_len,
             n_slots,
+            page_size,
+            n_pages,
             lens: vec![0; n_slots],
+            tables: vec![Vec::new(); n_slots],
+            // LIFO: page 0 is handed out first.
+            free: (0..n_pages as u32).rev().collect(),
+            peak_used: 0,
             k: vec![0.0; cells],
             v: vec![0.0; cells],
             n_layers: cfg.n_layers,
@@ -65,27 +196,117 @@ impl KvCache {
         self.lens[slot]
     }
 
-    /// Clear every slot (fresh engine).
-    pub fn reset(&mut self) {
-        self.lens.fill(0);
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
-    /// Clear one slot (session closed / slot reassigned).
+    /// Total pages in the shared pool.
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages currently on the free list.
+    pub fn free_page_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently owned by slots.
+    pub fn used_pages(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// The ordered page ids backing `slot`'s sequence.
+    pub fn slot_pages(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    /// The free list (LIFO; the next page handed out is the *last*
+    /// element). Exposed for diagnostics and the property suite.
+    pub fn free_list(&self) -> &[u32] {
+        &self.free
+    }
+
+    /// Pages required to hold `n_tokens` tokens.
+    pub fn pages_needed(&self, n_tokens: usize) -> usize {
+        ceil_div(n_tokens, self.page_size)
+    }
+
+    /// Clear every slot (fresh engine) and return all pages to the pool.
+    pub fn reset(&mut self) {
+        for slot in 0..self.n_slots {
+            self.reset_slot(slot);
+        }
+    }
+
+    /// Clear one slot (session closed / slot reassigned), returning
+    /// exactly the pages it held to the free list.
     pub fn reset_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
+        // Most-recently-allocated pages go back on top of the LIFO stack.
+        while let Some(page) = self.tables[slot].pop() {
+            self.free.push(page);
+        }
     }
 
+    /// Ensure pages cover positions `slot_len(slot)..slot_len(slot)+n`,
+    /// allocating from the free list as needed. Call before `store`-ing a
+    /// ubatch. Fails atomically: on `Err` no pages were taken.
+    pub fn try_reserve(&mut self, slot: usize, n: usize) -> Result<(), CacheError> {
+        let len = self.lens[slot];
+        if len + n > self.max_seq {
+            return Err(CacheError::ContextOverflow {
+                slot,
+                len,
+                need: n,
+                max_seq: self.max_seq,
+            });
+        }
+        let want = self.pages_needed(len + n);
+        let have = self.tables[slot].len();
+        let need_pages = want.saturating_sub(have);
+        if need_pages > self.free.len() {
+            return Err(CacheError::OutOfPages {
+                slot,
+                len,
+                need_pages,
+                free_pages: self.free.len(),
+                n_pages: self.n_pages,
+            });
+        }
+        for _ in 0..need_pages {
+            let page = self.free.pop().expect("free count checked above");
+            self.tables[slot].push(page);
+        }
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Flat index of `(slot, layer, pos)` through the block table.
     #[inline]
     fn base(&self, slot: usize, layer: usize, pos: usize) -> usize {
         debug_assert!(slot < self.n_slots && layer < self.n_layers);
-        ((layer * self.n_slots + slot) * self.max_seq + pos) * self.kv_dim
+        let page = self.tables[slot][pos / self.page_size] as usize;
+        ((page * self.n_layers + layer) * self.page_size + pos % self.page_size) * self.kv_dim
     }
 
     /// Write one position's K and V for `layer` of `slot`. A ubatch
-    /// stores `pos` values `slot_len(slot)..slot_len(slot)+n` for every
-    /// layer, then calls `advance(slot, n)` once.
+    /// first calls `try_reserve(slot, n)`, then stores `pos` values
+    /// `slot_len(slot)..slot_len(slot)+n` for every layer, then calls
+    /// `advance(slot, n)` once.
     pub fn store(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
-        assert!(pos < self.max_seq, "KV cache full ({})", self.max_seq);
+        assert!(
+            pos < self.max_seq,
+            "KV store past the context window: slot {slot} pos {pos}, max_seq {}",
+            self.max_seq,
+        );
+        let reserved = self.tables[slot].len() * self.page_size;
+        assert!(
+            pos < reserved,
+            "KV store outside reserved pages: slot {slot} pos {pos} but pages cover \
+             only {reserved} tokens (len {}; call try_reserve first)",
+            self.lens[slot],
+        );
         assert_eq!(k.len(), self.kv_dim);
         assert_eq!(v.len(), self.kv_dim);
         let base = self.base(slot, layer, pos);
@@ -94,14 +315,29 @@ impl KvCache {
     }
 
     /// Advance `slot`'s position counter after all layers of a ubatch of
-    /// `n` tokens have been stored.
-    pub fn advance(&mut self, slot: usize, n: usize) {
-        assert!(
-            self.lens[slot] + n <= self.max_seq,
-            "KV cache full ({})",
-            self.max_seq
-        );
-        self.lens[slot] += n;
+    /// `n` tokens have been stored. The positions must already be covered
+    /// by a `try_reserve`.
+    pub fn advance(&mut self, slot: usize, n: usize) -> Result<(), CacheError> {
+        let len = self.lens[slot];
+        if len + n > self.max_seq {
+            return Err(CacheError::ContextOverflow {
+                slot,
+                len,
+                need: n,
+                max_seq: self.max_seq,
+            });
+        }
+        let reserved = self.tables[slot].len() * self.page_size;
+        if len + n > reserved {
+            return Err(CacheError::Unreserved {
+                slot,
+                len,
+                need: n,
+                reserved,
+            });
+        }
+        self.lens[slot] = len + n;
+        Ok(())
     }
 
     /// K vector of head `kv_head` at position `pos` in `layer` of `slot`.
@@ -134,18 +370,32 @@ impl KvCache {
     }
 
     /// Bytes one decode step must stream if the cache lives host-side and
-    /// attention is offloaded (FP16 cache entries, both K and V):
-    /// `2 formats × ctx × kv_dim × 2 bytes` per layer.
+    /// attention is offloaded (FP16 cache entries, both K and V). Paging
+    /// makes the transfer page-granular: whole pages covering `ctx`
+    /// positions move, so `2 formats × pages(ctx) × page_size × kv_dim ×
+    /// 2 bytes` per layer.
     pub fn stream_bytes_per_layer(&self, ctx: usize) -> usize {
-        2 * ctx * self.kv_dim * 2
+        2 * self.pages_needed(ctx) * self.page_size * self.kv_dim * 2
     }
 
-    /// Total resident size of the cache at the current lengths (f16
-    /// accounting, all layers, all live sequences) — the quantity that
-    /// grows linearly with context in the paper's long-context discussion.
+    /// Total resident size of the cache (f16 accounting, all layers, both
+    /// K and V) at the current allocation — the quantity that grows with
+    /// live context in the paper's long-context discussion. Paging makes
+    /// residency page-granular: slack inside a sequence's last page is
+    /// resident even though not yet written.
     pub fn resident_bytes_f16(&self) -> usize {
-        let live: usize = self.lens.iter().sum();
-        2 * self.n_layers * live * self.kv_dim * 2
+        self.bytes_f16_for_pages(self.used_pages())
+    }
+
+    /// Lifetime peak of [`KvCache::resident_bytes_f16`] — tracked at
+    /// allocation time, so it is exact even when pages are freed between
+    /// observations (what the serve report surfaces per worker).
+    pub fn peak_resident_bytes_f16(&self) -> usize {
+        self.bytes_f16_for_pages(self.peak_used)
+    }
+
+    fn bytes_f16_for_pages(&self, pages: usize) -> usize {
+        2 * pages * self.n_layers * self.page_size * self.kv_dim * 2
     }
 }
 
@@ -154,19 +404,30 @@ mod tests {
     use super::*;
     use crate::model::config::ModelConfig;
 
+    /// Reserve + per-layer store + advance for one position.
+    fn put(c: &mut KvCache, slot: usize, pos: usize, n_layers: usize, fill: f32) {
+        c.try_reserve(slot, 1).unwrap();
+        let kv_dim = c.kv_dim;
+        for layer in 0..n_layers {
+            c.store(slot, layer, pos, &vec![fill; kv_dim], &vec![-fill; kv_dim]);
+        }
+        c.advance(slot, 1).unwrap();
+    }
+
     #[test]
     fn store_and_read_roundtrip() {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::new(&cfg);
         let kv_dim = cfg.kv_dim();
         for pos in 0..3 {
+            c.try_reserve(0, 1).unwrap();
             for layer in 0..cfg.n_layers {
                 let k: Vec<f32> =
                     (0..kv_dim).map(|i| (pos * 100 + layer * 10 + i) as f32).collect();
                 let v: Vec<f32> = k.iter().map(|x| -x).collect();
                 c.store(0, layer, pos, &k, &v);
             }
-            c.advance(0, 1);
+            c.advance(0, 1).unwrap();
         }
         assert_eq!(c.len(), 3);
         let hd = cfg.head_dim;
@@ -177,29 +438,25 @@ mod tests {
     }
 
     #[test]
-    fn reset_empties() {
+    fn reset_empties_and_returns_pages() {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::new(&cfg);
-        for layer in 0..cfg.n_layers {
-            c.store(0, layer, 0, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
-        }
-        c.advance(0, 1);
+        let total = c.n_pages();
+        put(&mut c, 0, 0, cfg.n_layers, 0.0);
         assert_eq!(c.len(), 1);
+        assert_eq!(c.used_pages(), 1);
         c.reset();
         assert!(c.is_empty());
+        assert_eq!(c.free_page_count(), total, "all pages back on the free list");
     }
 
     #[test]
     fn slots_are_independent() {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::with_slots(&cfg, 3);
-        let kv_dim = c.kv_dim;
         // Write distinct data at the same (layer, pos) of two slots.
         for (slot, fill) in [(0usize, 1.0f32), (2, 7.0)] {
-            for layer in 0..cfg.n_layers {
-                c.store(slot, layer, 0, &vec![fill; kv_dim], &vec![-fill; kv_dim]);
-            }
-            c.advance(slot, 1);
+            put(&mut c, slot, 0, cfg.n_layers, fill);
         }
         assert_eq!(c.slot_len(0), 1);
         assert_eq!(c.slot_len(1), 0);
@@ -210,6 +467,7 @@ mod tests {
         c.reset_slot(2);
         assert_eq!(c.slot_len(2), 0);
         assert_eq!(c.slot_len(0), 1, "resetting one slot leaves others");
+        assert_eq!(c.used_pages(), 1, "slot 2's page returned");
     }
 
     #[test]
@@ -217,33 +475,138 @@ mod tests {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::with_slots(&cfg, 2);
         let kv_dim = c.kv_dim;
+        c.try_reserve(1, 5).unwrap();
         for layer in 0..cfg.n_layers {
             for pos in 0..5 {
                 c.store(1, layer, pos, &vec![pos as f32; kv_dim], &vec![0.0; kv_dim]);
             }
         }
-        c.advance(1, 5);
+        c.advance(1, 5).unwrap();
         assert_eq!(c.slot_len(1), 5);
         assert_eq!(c.k_at(1, 0, 3, 0, cfg.head_dim)[0], 3.0);
     }
 
     #[test]
-    fn byte_accounting() {
-        let cfg = ModelConfig::qwen3_1_7b();
-        let c = KvCache::new(&cfg);
-        // 1.7B: kv_dim = 8*128 = 1024; per layer per ctx entry: 2*2*1024 B.
-        assert_eq!(c.stream_bytes_per_layer(48), 2 * 48 * 1024 * 2);
+    fn pages_allocate_lazily_across_boundaries() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        c.try_reserve(0, 3).unwrap();
+        assert_eq!(c.slot_pages(0).len(), 1, "3 tokens fit one 4-token page");
+        c.advance(0, 3).unwrap();
+        c.try_reserve(0, 1).unwrap();
+        assert_eq!(c.slot_pages(0).len(), 1, "4th token still fits");
+        c.advance(0, 1).unwrap();
+        c.try_reserve(0, 1).unwrap();
+        assert_eq!(c.slot_pages(0).len(), 2, "5th token crosses the boundary");
+        c.advance(0, 1).unwrap();
+        assert_eq!(c.used_pages(), 2);
+        assert_eq!(c.pages_needed(5), 2);
     }
 
     #[test]
-    #[should_panic(expected = "KV cache full")]
-    fn overflow_detected() {
+    fn contiguous_geometry_is_one_page_per_slot() {
+        // page_size = max_seq, n_pages = n_slots: the old fixed-stride
+        // layout exactly.
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, cfg.max_seq_len, 2);
+        c.try_reserve(0, cfg.max_seq_len).unwrap();
+        c.try_reserve(1, 1).unwrap();
+        assert_eq!(c.slot_pages(0).len(), 1);
+        assert_eq!(c.slot_pages(1).len(), 1);
+        assert_eq!(c.free_page_count(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_is_page_granular() {
+        let cfg = ModelConfig::qwen3_1_7b();
+        // Small pool: accounting depends on geometry, not pool size.
+        let mut c = KvCache::paged(&cfg, 1, 16, 4);
+        // 1.7B: kv_dim = 8*128 = 1024; ctx 48 = 3 pages of 16, so per
+        // layer: 2 formats * 48 * 1024 * 2 bytes.
+        assert_eq!(c.stream_bytes_per_layer(48), 2 * 48 * 1024 * 2);
+        // ctx 40 rounds up to 48 positions' worth of pages.
+        assert_eq!(c.stream_bytes_per_layer(40), 2 * 48 * 1024 * 2);
+        assert_eq!(c.resident_bytes_f16(), 0);
+        c.try_reserve(0, 17).unwrap();
+        c.advance(0, 17).unwrap();
+        // 17 tokens = 2 pages resident, both K and V, f16, all layers.
+        assert_eq!(c.resident_bytes_f16(), 2 * 2 * cfg.n_layers * 16 * 1024 * 2);
+    }
+
+    #[test]
+    fn peak_residency_watermark() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        assert_eq!(c.peak_resident_bytes_f16(), 0);
+        c.try_reserve(0, 9).unwrap(); // 3 pages
+        c.advance(0, 9).unwrap();
+        c.try_reserve(1, 2).unwrap(); // 1 page → peak 4
+        c.advance(1, 2).unwrap();
+        let peak = c.peak_resident_bytes_f16();
+        assert_eq!(peak, 2 * 4 * cfg.n_layers * 4 * cfg.kv_dim() * 2);
+        c.reset_slot(0);
+        assert!(c.resident_bytes_f16() < peak);
+        assert_eq!(c.peak_resident_bytes_f16(), peak, "watermark survives frees");
+    }
+
+    #[test]
+    fn context_overflow_is_typed() {
         let mut cfg = ModelConfig::tiny();
         cfg.max_seq_len = 2;
         let mut c = KvCache::new(&cfg);
-        for pos in 0..3 {
-            c.store(0, 0, pos, &vec![0.0; c.kv_dim], &vec![0.0; c.kv_dim]);
-            c.advance(0, 1);
-        }
+        c.try_reserve(0, 2).unwrap();
+        c.advance(0, 2).unwrap();
+        let err = c.try_reserve(0, 1).unwrap_err();
+        assert_eq!(
+            err,
+            CacheError::ContextOverflow { slot: 0, len: 2, need: 1, max_seq: 2 }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("slot 0") && msg.contains("len 2"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_pages_is_typed_and_atomic() {
+        let cfg = ModelConfig::tiny();
+        // 3 pages of 4 tokens shared by 2 slots.
+        let mut c = KvCache::paged(&cfg, 2, 4, 3);
+        c.try_reserve(0, 8).unwrap();
+        c.advance(0, 8).unwrap();
+        let free_before = c.free_page_count();
+        let err = c.try_reserve(1, 8).unwrap_err();
+        assert_eq!(
+            err,
+            CacheError::OutOfPages { slot: 1, len: 0, need_pages: 2, free_pages: 1, n_pages: 3 }
+        );
+        assert_eq!(c.free_page_count(), free_before, "failed reserve takes nothing");
+        assert!(c.slot_pages(1).is_empty());
+        // Freeing slot 0 makes the same reservation succeed.
+        c.reset_slot(0);
+        c.try_reserve(1, 8).unwrap();
+    }
+
+    #[test]
+    fn advance_without_reserve_is_typed() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 1, 4, 2);
+        let err = c.advance(0, 3).unwrap_err();
+        assert_eq!(err, CacheError::Unreserved { slot: 0, len: 0, need: 3, reserved: 0 });
+    }
+
+    #[test]
+    fn pool_conservation_under_churn() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 3, 2, 9);
+        c.try_reserve(0, 5).unwrap();
+        c.advance(0, 5).unwrap();
+        c.try_reserve(1, 2).unwrap();
+        c.advance(1, 2).unwrap();
+        c.try_reserve(2, 3).unwrap();
+        c.advance(2, 3).unwrap();
+        let owned: usize = (0..3).map(|s| c.slot_pages(s).len()).sum();
+        assert_eq!(owned + c.free_page_count(), c.n_pages());
+        c.reset_slot(1);
+        let owned: usize = (0..3).map(|s| c.slot_pages(s).len()).sum();
+        assert_eq!(owned + c.free_page_count(), c.n_pages());
     }
 }

@@ -8,7 +8,8 @@
 //!   token (shared by the functional engine and the IMAX timing model).
 //! * [`weights`] / [`file`] — quantized tensors; build random-init or
 //!   save/load the crate's binary model format.
-//! * [`kv_cache`] — slot-indexed multi-sequence KV cache with the byte
+//! * [`kv_cache`] — paged multi-sequence KV cache (shared page pool,
+//!   per-slot block tables, typed exhaustion errors) with the byte
 //!   accounting behind the paper's LOAD-bound decode finding.
 //! * [`engine`] — the forward pass (per-token and prefill-ubatch) and
 //!   generation loop over per-sequence [`engine::Session`]s, with the
@@ -27,7 +28,7 @@ pub mod weights;
 
 pub use config::{LinearKind, ModelConfig, QuantScheme};
 pub use engine::{Engine, GenerateResult, MatvecExec, NativeExec, Session, DEFAULT_UBATCH};
-pub use kv_cache::KvCache;
+pub use kv_cache::{CacheError, KvCache, DEFAULT_PAGE_SIZE};
 pub use graph::{MatvecOp, OpKind, Phase};
 pub use sampler::Sampler;
 pub use weights::ModelWeights;

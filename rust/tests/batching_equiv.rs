@@ -4,6 +4,13 @@
 //! optimization, never a numerics change. This is the functional-path
 //! analogue of the cost model's prefill/decode duality: same kernels,
 //! different amortization.
+//!
+//! The same contract covers the paged KV cache: page geometry
+//! (`page_size = max_seq, n_pages = n_slots` *is* the old contiguous
+//! layout) is a memory-layout choice, never a numerics change, so paged
+//! runs must produce bit-identical logits to the contiguous reference
+//! for single-token decode, ubatch prefill, and interleaved multi-slot
+//! decode alike.
 
 use imax_llm::coordinator::{serve, serve_with, Request, ServeOptions};
 use imax_llm::model::engine::{Engine, NativeExec};
@@ -12,6 +19,13 @@ use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
 
 fn weights(scheme: QuantScheme, seed: u64) -> ModelWeights {
     ModelWeights::random(&ModelConfig::tiny(), scheme, seed)
+}
+
+/// Engine whose cache geometry degenerates to the old contiguous layout:
+/// one `max_seq`-sized page per slot.
+fn contiguous_engine(w: &ModelWeights, n_slots: usize) -> Engine {
+    let max_seq = w.cfg.max_seq_len;
+    Engine::with_paged_slots(w.clone(), n_slots, max_seq, None)
 }
 
 /// Sequential reference: one forward call per prompt token, then greedy
@@ -143,5 +157,103 @@ fn serve_results_independent_of_worker_and_slot_topology() {
     }
     for (x, y) in a.completions.iter().zip(&c.completions) {
         assert_eq!(x.tokens, y.tokens, "slot topology must not change tokens");
+    }
+}
+
+#[test]
+fn paged_cache_bit_identical_to_contiguous() {
+    // Page sizes that do (16 vs len 1; 1 vs anything) and don't (3 vs
+    // len 5/7/10) divide the prompt lengths, so last pages are exercised
+    // both full and partial. Prefill runs as ubatch chunks of 4 (its own
+    // misalignment with the page size), decode single-token; the full
+    // logits vector must match the contiguous reference bit for bit at
+    // every step.
+    let w = weights(QuantScheme::Q8_0, 42);
+    let prompts: &[&[u32]] = &[
+        &[1],
+        &[3, 1, 4, 1, 5],
+        &[2, 7, 1, 8, 2, 8, 1],
+        &[9, 8, 7, 6, 5, 4, 3, 2, 1, 9],
+    ];
+    for &page_size in &[1usize, 3, 16] {
+        for prompt in prompts {
+            let mut c = contiguous_engine(&w, 1);
+            let sc = c.open_session(Sampler::greedy()).unwrap();
+            let mut lc = c.prefill_session(&sc, prompt, 4, &mut NativeExec);
+
+            let mut p = Engine::with_paged_slots(w.clone(), 1, page_size, None);
+            let sp = p.open_session(Sampler::greedy()).unwrap();
+            let mut lp = p.prefill_session(&sp, prompt, 4, &mut NativeExec);
+            assert_eq!(
+                lc,
+                lp,
+                "prefill logits (page_size {page_size}, prompt len {})",
+                prompt.len()
+            );
+            for step in 0..6 {
+                let nc = Sampler::greedy().sample(&lc);
+                let np = Sampler::greedy().sample(&lp);
+                assert_eq!(nc, np, "greedy token step {step} (page_size {page_size})");
+                lc = c
+                    .forward_session(&sc, nc, Phase::Decode, true, &mut NativeExec)
+                    .unwrap();
+                lp = p
+                    .forward_session(&sp, np, Phase::Decode, true, &mut NativeExec)
+                    .unwrap();
+                assert_eq!(lc, lp, "decode logits step {step} (page_size {page_size})");
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_interleaved_sessions_match_contiguous_isolated() {
+    // Two sessions growing in lockstep on a 3-token-page engine: their
+    // pages alternate in the shared pool, so every read goes through a
+    // non-trivial block table. Results must match each prompt served
+    // alone on a contiguous-geometry engine.
+    let w = weights(QuantScheme::Q8_0, 7);
+    let pa: Vec<u32> = vec![1, 5, 9, 2, 11, 3, 6];
+    let pb: Vec<u32> = vec![7, 3, 3, 8];
+
+    let mut e = Engine::with_paged_slots(w.clone(), 2, 3, None);
+    let sa = e.open_session(Sampler::greedy()).unwrap();
+    let sb = e.open_session(Sampler::greedy()).unwrap();
+    // Interleave prefill chunks: A[0..4], B[0..2], A[4..7], B[2..4].
+    e.forward_ubatch(&sa, &pa[0..4], Phase::Prefill, false, &mut NativeExec);
+    e.forward_ubatch(&sb, &pb[0..2], Phase::Prefill, false, &mut NativeExec);
+    let mut la = e
+        .forward_ubatch(&sa, &pa[4..7], Phase::Prefill, true, &mut NativeExec)
+        .unwrap();
+    let mut lb = e
+        .forward_ubatch(&sb, &pb[2..4], Phase::Prefill, true, &mut NativeExec)
+        .unwrap();
+    let mut ta = Vec::new();
+    let mut tb = Vec::new();
+    for _ in 0..6 {
+        let na = Sampler::greedy().sample(&la);
+        ta.push(na);
+        la = e.forward_session(&sa, na, Phase::Decode, true, &mut NativeExec).unwrap();
+        let nb = Sampler::greedy().sample(&lb);
+        tb.push(nb);
+        lb = e.forward_session(&sb, nb, Phase::Decode, true, &mut NativeExec).unwrap();
+    }
+    // Both slots hold exactly the pages their live tokens need.
+    for s in [&sa, &sb] {
+        let len = e.session_pos(s);
+        assert_eq!(e.cache.slot_pages(s.slot()).len(), e.pages_needed(len));
+    }
+
+    for (prompt, got) in [(&pa, &ta), (&pb, &tb)] {
+        let mut iso = contiguous_engine(&w, 1);
+        let s = iso.open_session(Sampler::greedy()).unwrap();
+        let mut l = iso.prefill_session(&s, prompt, prompt.len(), &mut NativeExec);
+        let mut want = Vec::new();
+        for _ in 0..6 {
+            let n = Sampler::greedy().sample(&l);
+            want.push(n);
+            l = iso.forward_session(&s, n, Phase::Decode, true, &mut NativeExec).unwrap();
+        }
+        assert_eq!(&want, got, "interleaved paged decode must match isolated");
     }
 }

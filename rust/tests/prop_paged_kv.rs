@@ -1,0 +1,270 @@
+//! Property tests for the paged KV cache (`util::proptest_lite`):
+//! random admit/advance/reset sequences over small page geometries must
+//! preserve the pool invariants the scheduler relies on —
+//!
+//! * the page ids owned by slots plus the free list are always a
+//!   permutation of `0..n_pages` (no page is ever double-allocated or
+//!   lost),
+//! * every slot owns exactly `pages_needed(slot_len)` pages,
+//! * `reset_slot` returns exactly the pages that slot held,
+//! * a failed reservation changes nothing (atomicity), and the error is
+//!   the right kind for the state (`ContextOverflow` vs `OutOfPages`),
+//! * data written through one slot is never clobbered by another slot's
+//!   growth (the functional face of "no double allocation").
+
+use imax_llm::model::{CacheError, KvCache, ModelConfig};
+use imax_llm::util::proptest_lite::Runner;
+use imax_llm::util::rng::Rng;
+
+/// Tiny geometry so each case is microseconds: kv_dim = 4, 2 layers.
+fn mini_cfg(max_seq: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.d_model = 16;
+    cfg.n_heads = 2;
+    cfg.n_kv_heads = 1;
+    cfg.head_dim = 4;
+    cfg.d_ffn = 16;
+    cfg.vocab_size = 32;
+    cfg.max_seq_len = max_seq;
+    cfg
+}
+
+const MAX_SEQ: usize = 32;
+
+#[derive(Clone, Debug)]
+enum Op {
+    /// Reserve + store + advance `n` tokens on `slot`.
+    Grow { slot: usize, n: usize },
+    /// Close `slot`, returning its pages.
+    Reset { slot: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Case {
+    page_size: usize,
+    n_pages: usize,
+    n_slots: usize,
+    ops: Vec<Op>,
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let page_size = 1 + r.below(5);
+    let n_slots = 1 + r.below(4);
+    let n_pages = 1 + r.below(12);
+    let n_ops = r.below(40);
+    let ops = (0..n_ops)
+        .map(|_| {
+            if r.below(4) == 0 {
+                Op::Reset { slot: r.below(n_slots) }
+            } else {
+                Op::Grow { slot: r.below(n_slots), n: 1 + r.below(6) }
+            }
+        })
+        .collect();
+    Case { page_size, n_pages, n_slots, ops }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if !c.ops.is_empty() {
+        let mut half = c.clone();
+        half.ops.truncate(c.ops.len() / 2);
+        out.push(half);
+        let mut minus_one = c.clone();
+        minus_one.ops.pop();
+        out.push(minus_one);
+    }
+    out
+}
+
+/// The distinct marker value written at `(slot, epoch, pos, layer)` —
+/// collision-free for the generator's ranges and exact in f32.
+fn marker(slot: usize, epoch: usize, pos: usize, layer: usize) -> f32 {
+    (slot * 1_000_000 + epoch * 10_000 + pos * 10 + layer) as f32
+}
+
+/// Replay a case, checking every invariant after every operation.
+/// Returns `Err(description)` on the first violation.
+fn check_case(case: &Case) -> Result<(), String> {
+    let cfg = mini_cfg(MAX_SEQ);
+    let kv_dim = cfg.kv_dim();
+    let mut c = KvCache::paged(&cfg, case.n_slots, case.page_size, case.n_pages);
+    // Mirror state: per-slot length and reset epoch.
+    let mut lens = vec![0usize; case.n_slots];
+    let mut epochs = vec![0usize; case.n_slots];
+
+    let pool_is_permutation = |c: &KvCache| -> Result<(), String> {
+        let mut ids: Vec<u32> = c.free_list().to_vec();
+        for slot in 0..case.n_slots {
+            ids.extend_from_slice(c.slot_pages(slot));
+        }
+        ids.sort_unstable();
+        let want: Vec<u32> = (0..case.n_pages as u32).collect();
+        if ids != want {
+            return Err(format!(
+                "owned + free pages are not a permutation of the pool: {ids:?}"
+            ));
+        }
+        Ok(())
+    };
+
+    for (i, op) in case.ops.iter().enumerate() {
+        match *op {
+            Op::Grow { slot, n } => {
+                let free_before = c.free_page_count();
+                let pages_before = c.slot_pages(slot).len();
+                match c.try_reserve(slot, n) {
+                    Ok(()) => {
+                        for pos in lens[slot]..lens[slot] + n {
+                            for layer in 0..cfg.n_layers {
+                                let m = marker(slot, epochs[slot], pos, layer);
+                                c.store(slot, layer, pos, &vec![m; kv_dim], &vec![-m; kv_dim]);
+                            }
+                        }
+                        c.advance(slot, n)
+                            .map_err(|e| format!("op {i}: advance after reserve failed: {e}"))?;
+                        lens[slot] += n;
+                    }
+                    Err(err) => {
+                        // Atomic: nothing changed.
+                        if c.free_page_count() != free_before
+                            || c.slot_pages(slot).len() != pages_before
+                        {
+                            return Err(format!("op {i}: failed reserve mutated state"));
+                        }
+                        // The error kind matches the mirror state.
+                        let over_ctx = lens[slot] + n > MAX_SEQ;
+                        match err {
+                            CacheError::ContextOverflow { .. } if over_ctx => {}
+                            CacheError::OutOfPages { .. } if !over_ctx => {}
+                            other => {
+                                return Err(format!(
+                                    "op {i}: wrong error {other:?} (len {} + {n}, max {MAX_SEQ})",
+                                    lens[slot]
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            Op::Reset { slot } => {
+                let held: Vec<u32> = c.slot_pages(slot).to_vec();
+                let free_before = c.free_page_count();
+                c.reset_slot(slot);
+                lens[slot] = 0;
+                epochs[slot] += 1;
+                if c.free_page_count() != free_before + held.len() {
+                    return Err(format!(
+                        "op {i}: reset returned {} pages, slot held {}",
+                        c.free_page_count() - free_before,
+                        held.len()
+                    ));
+                }
+                // Exactly those pages, pushed LIFO (table order reversed).
+                let tail = &c.free_list()[free_before..];
+                let want: Vec<u32> = held.iter().rev().cloned().collect();
+                if tail != want.as_slice() {
+                    return Err(format!(
+                        "op {i}: reset freed {tail:?}, slot held {held:?}"
+                    ));
+                }
+                if !c.slot_pages(slot).is_empty() || c.slot_len(slot) != 0 {
+                    return Err(format!("op {i}: reset left slot {slot} non-empty"));
+                }
+            }
+        }
+
+        // Global invariants after every op.
+        pool_is_permutation(&c)?;
+        for slot in 0..case.n_slots {
+            if c.slot_len(slot) != lens[slot] {
+                return Err(format!(
+                    "op {i}: slot {slot} len {} != mirror {}",
+                    c.slot_len(slot),
+                    lens[slot]
+                ));
+            }
+            if c.slot_pages(slot).len() != c.pages_needed(lens[slot]) {
+                return Err(format!(
+                    "op {i}: slot {slot} owns {} pages for {} tokens (want {})",
+                    c.slot_pages(slot).len(),
+                    lens[slot],
+                    c.pages_needed(lens[slot])
+                ));
+            }
+        }
+        if c.used_pages() + c.free_page_count() != c.n_pages() {
+            return Err(format!("op {i}: used + free != pool"));
+        }
+    }
+
+    // Data integrity: every live position still holds the marker written
+    // in its slot's current epoch — growth of other slots never clobbered
+    // it through a double-allocated page.
+    for slot in 0..case.n_slots {
+        for pos in 0..lens[slot] {
+            for layer in 0..cfg.n_layers {
+                let want = marker(slot, epochs[slot], pos, layer);
+                let k = c.k_at(slot, layer, pos, 0, cfg.head_dim)[0];
+                let v = c.v_at(slot, layer, pos, 0, cfg.head_dim)[0];
+                if k != want || v != -want {
+                    return Err(format!(
+                        "slot {slot} layer {layer} pos {pos}: k/v = {k}/{v}, want ±{want}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pool_conservation_and_no_double_allocation() {
+    Runner::new("paged-kv-pool-invariants").run(gen_case, check_case, shrink_case);
+}
+
+#[test]
+fn prop_full_pool_recovers_after_reset_all() {
+    // Drive every slot to reservation failure, reset everything, and the
+    // whole pool must be reusable — the leak detector for the free list.
+    Runner::new("paged-kv-drain-recover").cases(64).run_noshrink(gen_case, |case| {
+        let cfg = mini_cfg(MAX_SEQ);
+        let mut c = KvCache::paged(&cfg, case.n_slots, case.page_size, case.n_pages);
+        let mut lens = vec![0usize; case.n_slots];
+        // Greedily grow slots round-robin until nothing fits anywhere.
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for slot in 0..case.n_slots {
+                if c.try_reserve(slot, 1).is_ok() {
+                    c.advance(slot, 1)
+                        .map_err(|e| format!("advance after reserve: {e}"))?;
+                    lens[slot] += 1;
+                    progressed = true;
+                }
+            }
+        }
+        // Fragmentation-free: single-token growth stops only at max_seq
+        // or an empty free list, so leftover free pages mean every slot
+        // hit the context window.
+        if c.free_page_count() > 0 && lens.iter().any(|&l| l < MAX_SEQ) {
+            return Err(format!(
+                "pool has {} free pages but slot lens are {lens:?}",
+                c.free_page_count()
+            ));
+        }
+        c.reset();
+        if c.free_page_count() != c.n_pages() {
+            return Err(format!(
+                "reset recovered {}/{} pages",
+                c.free_page_count(),
+                c.n_pages()
+            ));
+        }
+        // The recovered pool serves a fresh max-size reservation.
+        let fit = (case.n_pages * case.page_size).min(MAX_SEQ);
+        c.try_reserve(0, fit).map_err(|e| format!("post-reset reserve: {e}"))?;
+        Ok(())
+    });
+}

@@ -1,0 +1,153 @@
+//! Scheduler stress suite: randomized request arrivals and lengths
+//! through [`ContinuousBatcher`] under a *tight* page budget. The
+//! page-budget admission contract under test:
+//!
+//! * every feasible request eventually completes (deferral never wedges),
+//! * no pages leak after drain (free list back to the full pool, zero
+//!   committed budget),
+//! * a request whose worst case exceeds the whole pool is rejected with
+//!   a typed error instead of blocking admission forever,
+//! * and the acceptance criterion of the paging work: under the same
+//!   memory budget, page-gated admission runs strictly more concurrent
+//!   short-prompt sequences than the fixed-stride slot-count limit.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use imax_llm::coordinator::{AdmitError, Admitted, ContinuousBatcher, Request};
+use imax_llm::model::engine::{Engine, NativeExec};
+use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::util::rng::Rng;
+
+fn tiny_weights(seed: u64) -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, seed)
+}
+
+#[test]
+fn randomized_arrivals_complete_under_tight_page_budget() {
+    let mut rng = Rng::new(0xBADC0FFE);
+    // 3 slots sharing 10 pages of 4 tokens = 40 cached tokens; worst-case
+    // requests below need up to 5 pages, so admission constantly defers.
+    let engine = Engine::with_paged_slots(tiny_weights(11), 3, 4, Some(10));
+    let total_pages = engine.total_pages();
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+
+    let n_req = 24usize;
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| Request {
+            id,
+            prompt: (0..1 + rng.below(10))
+                .map(|i| 1 + ((id * 31 + i * 7) % 100) as u32)
+                .collect(),
+            n_out: rng.below(9),
+        })
+        .collect();
+    let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+
+    let mut done = Vec::new();
+    let mut rounds = 0usize;
+    while !queue.is_empty() || b.n_active() > 0 {
+        rounds += 1;
+        assert!(
+            rounds < 10_000,
+            "scheduler wedged: {} done, {} queued, {} active",
+            done.len(),
+            queue.len(),
+            b.n_active()
+        );
+        // Admit in arrival order until the budget defers.
+        while let Some(req) = queue.pop_front() {
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {}
+                Ok(Admitted::Finished(log)) => done.push(log),
+                Ok(Admitted::Deferred(req)) => {
+                    assert!(b.n_active() > 0, "deferred on an idle engine");
+                    queue.push_front(req);
+                    break;
+                }
+                Err(e) => panic!("no request here is oversized, got: {e}"),
+            }
+        }
+        // The committed budget never oversubscribes the pool.
+        assert!(b.committed_pages() <= total_pages);
+        done.extend(b.decode_round(&mut exec));
+    }
+
+    let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n_req).collect::<Vec<_>>(), "each request exactly once");
+    for log in &done {
+        assert_eq!(log.tokens.len(), expected_n_out[log.id], "request {}", log.id);
+    }
+    // No leaks after drain.
+    assert_eq!(b.engine().free_pages(), total_pages, "all pages back in the pool");
+    assert_eq!(b.committed_pages(), 0);
+    assert_eq!(b.capacity(), 3, "all slots free");
+}
+
+#[test]
+fn oversized_request_rejected_instead_of_wedging() {
+    // Pool: 5 pages × 4 tokens = 20 cached tokens.
+    let engine = Engine::with_paged_slots(tiny_weights(5), 2, 4, Some(5));
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+    // Worst case 15 + 10 − 1 = 24 tokens → 6 pages > 5-page pool.
+    let big = Request { id: 0, prompt: vec![1; 15], n_out: 10 };
+    match b.admit(big, Sampler::greedy(), 0.0, &mut exec) {
+        Err(AdmitError::TooLarge { need_pages, pool_pages, .. }) => {
+            assert_eq!(need_pages, 6);
+            assert_eq!(pool_pages, 5);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+    // Admission continues: a feasible request admits and completes.
+    let ok = Request { id: 1, prompt: vec![2, 3, 4], n_out: 4 };
+    assert!(matches!(
+        b.admit(ok, Sampler::greedy(), 0.0, &mut exec),
+        Ok(Admitted::Active)
+    ));
+    let logs = b.drain(&mut exec);
+    assert_eq!(logs.len(), 1);
+    assert_eq!(logs[0].tokens.len(), 4);
+    assert_eq!(b.engine().free_pages(), 5, "rejection leaked nothing");
+}
+
+#[test]
+fn page_budget_admits_more_short_sequences_than_fixed_stride() {
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 9);
+    // Memory budget: 2 × max_seq tokens of KV. Fixed-stride slots reserve
+    // max_seq per sequence, so that budget caps out at 2 concurrent
+    // sequences no matter how short they are.
+    let budget_tokens = 2 * cfg.max_seq_len;
+    let fixed_stride_limit = budget_tokens / cfg.max_seq_len;
+    assert_eq!(fixed_stride_limit, 2);
+    // The identical budget as a shared pool of 16-token pages.
+    let page_size = 16;
+    let engine =
+        Engine::with_paged_slots(weights, 8, page_size, Some(budget_tokens / page_size));
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+    for id in 0..8usize {
+        // Worst case 4 + 4 − 1 = 7 tokens → one page each.
+        let req = Request { id, prompt: vec![1 + id as u32, 2, 3, 4], n_out: 4 };
+        assert!(
+            matches!(b.admit(req, Sampler::greedy(), 0.0, &mut exec), Ok(Admitted::Active)),
+            "request {id} must be admitted concurrently"
+        );
+    }
+    assert!(
+        b.n_active() > fixed_stride_limit,
+        "paged admission ({} live) must beat the fixed-stride limit ({})",
+        b.n_active(),
+        fixed_stride_limit
+    );
+    assert_eq!(b.n_active(), 8, "every short sequence decodes concurrently");
+    let logs = b.drain(&mut exec);
+    assert_eq!(logs.len(), 8);
+    for log in &logs {
+        assert_eq!(log.tokens.len(), 4);
+    }
+}
