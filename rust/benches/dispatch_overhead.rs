@@ -1,0 +1,69 @@
+//! Bench: plan/submit dispatch overhead — keeps the cost of the launch
+//! queue abstraction visible next to the eager path. Compares a raw
+//! `LaunchQueue` record/submit cycle and a full single-token forward
+//! step dispatched through (a) bare eager `NativeExec` (submit is a
+//! no-op), (b) the registry's native backend (enum dispatch), and
+//! (c/d) the queued instrumented imax backend with and without the
+//! double-buffered overlap model.
+
+use imax_llm::model::engine::NativeExec;
+use imax_llm::model::graph::{MatvecOp, OpKind, Phase};
+use imax_llm::model::{Engine, LinearKind, ModelConfig, ModelWeights, QuantScheme};
+use imax_llm::quant::GgmlType;
+use imax_llm::runtime::queue::{KernelOp, LaunchQueue};
+use imax_llm::runtime::BackendRegistry;
+use imax_llm::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("dispatch overhead — eager vs queued (plan/submit)");
+
+    // Raw queue mechanics: one layer's worth of descriptors + flush.
+    let op = MatvecOp {
+        kind: OpKind::Linear(LinearKind::QProj),
+        layer: Some(0),
+        wty: GgmlType::Q8_0,
+        rows: 256,
+        cols: 256,
+    };
+    set.bench("launch_queue: record 7 + submit", || {
+        let mut q: LaunchQueue<()> = LaunchQueue::new();
+        for _ in 0..7 {
+            q.record(KernelOp::Linear { op: op.clone(), batch: 1 }, ());
+        }
+        q.submit().len()
+    });
+
+    // Engine-level: a single-token forward step through each dispatch
+    // path (reset keeps the KV cache bounded across iterations).
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 3);
+
+    let mut e1 = Engine::new(weights.clone());
+    set.bench("forward: NativeExec (eager, submit no-op)", || {
+        e1.reset();
+        e1.forward(7, Phase::Prefill, true, &mut NativeExec).is_some()
+    });
+
+    let mut e2 = Engine::new(weights.clone());
+    let mut reg_native = BackendRegistry::build_named("native").expect("native backend");
+    set.bench("forward: registry native (enum dispatch)", || {
+        e2.reset();
+        e2.forward(7, Phase::Prefill, true, &mut reg_native).is_some()
+    });
+
+    let mut e3 = Engine::new(weights.clone());
+    let mut imax = BackendRegistry::build_named("imax").expect("imax backend");
+    set.bench("forward: imax (queued, costed at submit)", || {
+        e3.reset();
+        e3.forward(7, Phase::Prefill, true, &mut imax).is_some()
+    });
+
+    let mut e4 = Engine::new(weights);
+    let mut dbuf = BackendRegistry::build_named("imax:dbuf").expect("imax:dbuf backend");
+    set.bench("forward: imax:dbuf (queued + overlap model)", || {
+        e4.reset();
+        e4.forward(7, Phase::Prefill, true, &mut dbuf).is_some()
+    });
+
+    set.report();
+}

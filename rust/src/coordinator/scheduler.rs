@@ -36,7 +36,7 @@ use crate::coordinator::offload::OffloadPolicy;
 use crate::imax::device::ImaxDevice;
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
-use crate::model::engine::{Engine, MatvecExec, Session};
+use crate::model::engine::{Engine, KernelExec, Session};
 use crate::model::graph::Phase;
 use crate::model::kv_cache::CacheError;
 use crate::model::sampler::Sampler;
@@ -237,7 +237,7 @@ impl ContinuousBatcher {
         req: Request,
         sampler: Sampler,
         queue_s: f64,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Admitted, AdmitError> {
         let need_tokens = Self::request_tokens(&req);
         let need_pages = self.engine.pages_needed(need_tokens);
@@ -304,7 +304,7 @@ impl ContinuousBatcher {
     /// requests that reach their `n_out` are retired and returned. Each
     /// request samples exactly `n_out` tokens over its lifetime (the
     /// final sampled token needs no further forward pass).
-    pub fn decode_round(&mut self, exec: &mut dyn MatvecExec) -> Vec<SessionLog> {
+    pub fn decode_round(&mut self, exec: &mut dyn KernelExec) -> Vec<SessionLog> {
         let mut finished = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
@@ -338,7 +338,7 @@ impl ContinuousBatcher {
     }
 
     /// Drain every active request to completion (no further admissions).
-    pub fn drain(&mut self, exec: &mut dyn MatvecExec) -> Vec<SessionLog> {
+    pub fn drain(&mut self, exec: &mut dyn KernelExec) -> Vec<SessionLog> {
         let mut out = Vec::new();
         while self.n_active() > 0 {
             out.extend(self.decode_round(exec));

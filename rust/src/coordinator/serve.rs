@@ -13,8 +13,13 @@
 //! with [`Completion::error`] set instead of wedging the queue. The kernel executor comes from the
 //! [`BackendRegistry`], so the same loop can serve on native kernels,
 //! instrumented-IMAX accounting (per-phase modeled costs in the report),
-//! or PJRT. Reports per-request latency and aggregate throughput, the
-//! metrics the paper's E2E evaluation is built on.
+//! PJRT, or a heterogeneous per-layer-range placement
+//! (`--backend "0-11:imax:fpga2,12-23:native"`) — placement coverage is
+//! validated against the model's layer count before any worker spawns,
+//! and the report keeps one summed sub-report per distinct backend
+//! ([`ServeReport::per_backend`]). Reports per-request latency and
+//! aggregate throughput, the metrics the paper's E2E evaluation is built
+//! on.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Mutex};
@@ -104,6 +109,9 @@ pub struct ServeReport {
     pub modeled: Option<RunBreakdown>,
     /// Offloaded / total MACs across the run (imax backend).
     pub offload_ratio: Option<f64>,
+    /// One summed sub-report per distinct backend when the run was
+    /// heterogeneous (placement specs); empty for single-backend runs.
+    pub per_backend: Vec<BackendReport>,
     /// Peak resident KV bytes (f16 accounting, page-granular), summed
     /// over each worker's own peak — an upper bound on simultaneous
     /// residency, and the quantity `--kv-pages` caps per worker.
@@ -147,6 +155,11 @@ pub fn serve_with(
         anyhow::bail!("kv_pages must be at least 1");
     }
     BackendRegistry::validate(&opts.spec)?;
+    if let ExecSpec::Placement(p) = &opts.spec {
+        // Fail fast on a placement that leaves layers of *this* model
+        // uncovered — better than a routing panic on a worker thread.
+        p.validate_layers(weights.cfg.n_layers)?;
+    }
     let n_req = requests.len();
     let started = Instant::now();
 
@@ -288,6 +301,7 @@ pub fn serve_with(
         backend: opts.spec.name(),
         modeled: merged.modeled,
         offload_ratio: merged.offload_ratio,
+        per_backend: merged.parts,
         kv_peak_bytes_f16: kv_peaks.iter().sum(),
     })
 }
@@ -455,6 +469,51 @@ mod tests {
         assert!(m.prefill.total() > 0.0, "prefill accounted");
         assert!(m.decode.total() > 0.0, "decode accounted");
         assert!(rep.offload_ratio.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_placement_serves_end_to_end() {
+        // tiny has 4 layers: 0-1 instrumented imax, 2-3 native, across 2
+        // workers — the acceptance path for `serve --backend
+        // "0-N:imax,…:native"`.
+        let w = tiny_weights();
+        let opts = ServeOptions {
+            spec: ExecSpec::parse("0-1:imax,2-3:native").unwrap(),
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&w, reqs(5), 2, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 5);
+        assert_eq!(rep.backend, "0-1:imax:fpga2,2-3:native");
+        // Merged sub-reports: one per distinct backend, correctly labeled.
+        assert_eq!(rep.per_backend.len(), 2);
+        assert_eq!(rep.per_backend[0].backend, "imax:fpga2");
+        assert_eq!(rep.per_backend[1].backend, "native");
+        assert!(rep.per_backend[0].total_macs > 0);
+        let m = rep.modeled.expect("imax share models phases");
+        assert!(m.prefill.total() > 0.0 && m.decode.total() > 0.0);
+        // Placement must not change the served tokens.
+        let native = serve(&w, reqs(5), 1, 42);
+        for (a, b) in rep.completions.iter().zip(&native.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "placement must not change tokens");
+        }
+    }
+
+    #[test]
+    fn placement_must_cover_the_model() {
+        // tiny has 4 layers; a placement stopping at layer 2 fails fast.
+        let opts = ServeOptions {
+            spec: ExecSpec::parse("0-2:native").unwrap(),
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("4 layers"), "{err}");
+    }
+
+    #[test]
+    fn homogeneous_serve_has_no_sub_reports() {
+        let rep = serve(&tiny_weights(), reqs(2), 2, 42);
+        assert!(rep.per_backend.is_empty());
     }
 
     #[test]

@@ -46,6 +46,18 @@ pub fn host_contention(dev: &ImaxDevice) -> f64 {
     }
 }
 
+/// One offloaded kernel's modeled cost plus the overlap metadata a
+/// plan/submit scheduler needs.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCost {
+    pub cost: PhaseCost,
+    /// Streaming (setup-free) portion of `cost.load` — the amount a
+    /// double-buffered LMM prefetch can hide under the *previous* queued
+    /// kernel's EXEC, capped by the [`TransferMode`]'s effective DMA
+    /// bandwidth. Always ≤ `cost.load`.
+    pub load_stream: f64,
+}
+
 /// Cost of one offloaded kernel instance processing `batch` activation
 /// vectors against the same weights (batch > 1 in prefill, where
 /// llama.cpp streams the prompt as one ubatch and the weight transfer is
@@ -59,6 +71,19 @@ pub fn offloaded_cost(
     batch: usize,
     mode: TransferMode,
 ) -> PhaseCost {
+    offloaded_cost_parts(dev, lmm, tracker, op, batch, mode).cost
+}
+
+/// [`offloaded_cost`] plus the prefetch-overlappable LOAD portion (see
+/// [`KernelCost`]); the instrumented plan/submit backend consumes this.
+pub fn offloaded_cost_parts(
+    dev: &ImaxDevice,
+    lmm: &LmmConfig,
+    tracker: &mut ConfTracker,
+    op: &MatvecOp,
+    batch: usize,
+    mode: TransferMode,
+) -> KernelCost {
     debug_assert!(batch >= 1);
     let class = KernelClass::for_type(op.wty);
     let contention = host_contention(dev);
@@ -121,14 +146,19 @@ pub fn offloaded_cost(
     };
     let host = (stage + act_quant + call) * contention;
 
-    PhaseCost {
-        exec,
-        load: load * contention.sqrt(), // DMA issue partially serialized
-        drain,
-        conf,
-        regv,
-        range,
-        host,
+    KernelCost {
+        cost: PhaseCost {
+            exec,
+            load: load * contention.sqrt(), // DMA issue partially serialized
+            drain,
+            conf,
+            regv,
+            range,
+            host,
+        },
+        // Same contention scaling as `load` so the stream portion stays a
+        // lower bound on the final LOAD term.
+        load_stream: dma::load_stream_seconds(dev, load_t, mode) * contention.sqrt(),
     }
 }
 
@@ -207,6 +237,33 @@ mod tests {
         // Decode (batch=1) is LOAD-bound; prefill is compute-bound.
         assert!(c1.load > c1.exec, "decode LOAD-bound");
         assert!(c32.exec > c32.load, "prefill compute-bound");
+    }
+
+    #[test]
+    fn overlappable_load_is_bounded_by_total_load() {
+        let lmm = LmmConfig::new(64);
+        let op = gate_op(&ModelConfig::qwen3_1_7b(), QuantScheme::Q8_0);
+        for dev in [ImaxDevice::fpga(2), ImaxDevice::fpga(8), ImaxDevice::asic28(2)] {
+            for mode in [TransferMode::Coalesced, TransferMode::Naive] {
+                for batch in [1usize, 32] {
+                    let k = offloaded_cost_parts(
+                        &dev,
+                        &lmm,
+                        &mut ConfTracker::new(),
+                        &op,
+                        batch,
+                        mode,
+                    );
+                    assert!(k.load_stream > 0.0);
+                    assert!(
+                        k.load_stream <= k.cost.load,
+                        "stream {} exceeds LOAD {} ({mode:?}, batch {batch})",
+                        k.load_stream,
+                        k.cost.load
+                    );
+                }
+            }
+        }
     }
 
     #[test]

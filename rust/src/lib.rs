@@ -20,8 +20,11 @@
 //!   offload policy (LMM fit), multi-lane scheduling under a host-throughput
 //!   ceiling, per-phase instrumentation (EXEC/LOAD/DRAIN/CONF/REGV/RANGE),
 //!   and a batched serving loop.
-//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
-//!   (HLO text) via the `xla` crate; Python never runs at request time.
+//! * [`runtime`] — the plan/submit backend layer: kernel launch queues,
+//!   the backend registry (`--backend` specs, including heterogeneous
+//!   per-layer-range placements), and PJRT execution of AOT-compiled
+//!   JAX/Pallas artifacts (HLO text) via the `xla` crate; Python never
+//!   runs at request time.
 //! * [`power`] / [`baseline`] — the paper's power model (PDP/EDP) and
 //!   roofline GPU comparators (RTX 4090, GTX 1080 Ti, Jetson AGX Orin).
 //! * [`harness`] — the 54-workload grid and one runner per paper table and

@@ -222,6 +222,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = model_flag(flags)?;
     let scheme = scheme_flag(flags)?;
     let spec = backend_flag(flags, "imax")?;
+    if let ExecSpec::Placement(p) = &spec {
+        p.validate_layers(cfg.n_layers)?;
+    }
     let n_out: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let prompt_text = flags
         .get("prompt")
@@ -347,6 +350,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             100.0 * rep.offload_ratio.unwrap_or(0.0)
         );
     }
+    // Heterogeneous placements: one summed sub-report per backend.
+    for part in &rep.per_backend {
+        match part.modeled {
+            Some(m) => println!(
+                "  [{}] modeled prefill {:.4}s decode {:.4}s (offload ratio {:.0}%)",
+                part.backend,
+                m.prefill.total(),
+                m.decode.total(),
+                100.0 * part.offload_ratio.unwrap_or(0.0)
+            ),
+            None => println!("  [{}] functional only (no modeled costs)", part.backend),
+        }
+    }
     Ok(())
 }
 
@@ -428,13 +444,13 @@ experiments:
 
 functional engine (real tiny models, real tokens):
   run         [--model tiny|110m] [--scheme F16|Q8_0|Q3_K_S] [--prompt txt] [--n N]
-              [--backend native|imax|imax:asic|pjrt]   (default imax)
+              [--backend SPEC]   (default imax)
   serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
               [--page-size N] [--kv-pages N]
               [--model tiny|110m] [--scheme S]
-              [--backend native|imax|imax:asic|pjrt]   (default native)
+              [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
-              between decode rounds; --backend imax adds modeled per-phase
+              between decode rounds; an imax backend adds modeled per-phase
               IMAX accounting to the serve report. The KV cache is paged:
               --kv-pages caps each worker's pool (admission defers until
               pages free up; impossible requests are rejected), --page-size
@@ -442,4 +458,18 @@ functional engine (real tiny models, real tokens):
               back every slot
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
+
+backend SPEC grammar (run/serve --backend):
+  native | pjrt
+  imax[:asic[N]|:fpga[N]][:lmm<KB>][:naive|coalesced][:dbuf]
+      lanes N in 1..=8 (default fpga2); lmm<KB> sets the per-PE LMM
+      capacity in 16..=512 KB (default 64); naive|coalesced selects the
+      DMA transfer mode (default coalesced); dbuf models the
+      double-buffered LMM prefetch (overlaps each queued kernel's LOAD
+      with the previous kernel's EXEC)
+  <first>[-<last>]:<spec>,...   heterogeneous placement: inclusive layer
+      ranges mapped to per-range backends, e.g.
+      --backend \"0-5:imax:fpga2,6-11:native\"; every model layer must be
+      covered, the LM head runs with the highest range, and the serve
+      report keeps one summed sub-report per backend
 ";

@@ -8,6 +8,17 @@
 //! paper's structure where llama.cpp's graph executor calls into a backend
 //! that may offload to IMAX.
 //!
+//! Dispatch follows a **plan/submit** model: the engine drives a
+//! [`KernelExec`], recording kernel launches through the `MatvecExec`
+//! methods and marking every host dependency boundary (the points where
+//! host code consumes kernel results) with [`KernelExec::submit`], plus
+//! one [`KernelExec::sync`] per forward step. Eager backends ignore the
+//! marks (the default `submit` is a no-op — bit-identical to the old
+//! always-eager API); queueing backends flush their
+//! [`crate::runtime::queue::LaunchQueue`] at them, seeing each submission
+//! batch of consecutive kernels at once — the hook for modeling
+//! double-buffered LMM prefetch and other cross-kernel overlap.
+//!
 //! The engine is multi-sequence: a [`Session`] owns one slot of the
 //! paged [`KvCache`], and [`Engine::forward_ubatch`] processes a
 //! prefill chunk of several tokens in one call (llama.cpp's ubatch),
@@ -64,6 +75,30 @@ pub trait MatvecExec {
     fn end_step(&mut self, _phase: Phase, _pos: usize) {}
 }
 
+/// The plan/submit execution API the engine drives: [`MatvecExec`] kernel
+/// recording plus explicit flush points.
+///
+/// The engine calls [`KernelExec::submit`] at every host dependency
+/// boundary — after the q/k/v trio, after attention + o_proj, after
+/// gate/up, after the down projection — and [`KernelExec::sync`] once at
+/// the end of each forward step. Kernels recorded between two submits
+/// have no host dependency separating them, so a backend may plan them
+/// as one launch batch (prefetch the next kernel's operands while the
+/// current one executes). The defaults are no-ops: an eager backend that
+/// executes at record time is already correct, bit-identical to the
+/// pre-queue API.
+pub trait KernelExec: MatvecExec {
+    /// Flush kernels recorded since the last submit to the backend's
+    /// launch stream. Default: no-op (eager backends).
+    fn submit(&mut self) {}
+
+    /// Submit and wait for the launch stream to drain (results are
+    /// host-visible after this returns). Default: `submit`.
+    fn sync(&mut self) {
+        self.submit();
+    }
+}
+
 /// Pure-Rust execution (no instrumentation).
 pub struct NativeExec;
 
@@ -73,6 +108,8 @@ impl MatvecExec for NativeExec {
         matvec_into(w, act, out);
     }
 }
+
+impl KernelExec for NativeExec {}
 
 /// One in-flight sequence: a claimed KV-cache slot plus the sampler state
 /// that decodes it. Obtained from [`Engine::open_session`]; the position
@@ -295,7 +332,7 @@ impl Engine {
         token: u32,
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Option<Vec<f32>> {
         self.try_forward_session(session, token, phase, want_logits, exec)
             .unwrap_or_else(|e| panic!("{e}"))
@@ -310,7 +347,7 @@ impl Engine {
         token: u32,
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Option<Vec<f32>>, CacheError> {
         self.try_ubatch_on_slot(session.slot, &[token], phase, want_logits, exec)
     }
@@ -325,7 +362,7 @@ impl Engine {
         tokens: &[u32],
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Option<Vec<f32>> {
         self.try_forward_ubatch(session, tokens, phase, want_logits, exec)
             .unwrap_or_else(|e| panic!("{e}"))
@@ -339,7 +376,7 @@ impl Engine {
         tokens: &[u32],
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Option<Vec<f32>>, CacheError> {
         self.try_ubatch_on_slot(session.slot, tokens, phase, want_logits, exec)
     }
@@ -352,7 +389,7 @@ impl Engine {
         session: &Session,
         prompt: &[u32],
         ubatch: usize,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Vec<f32> {
         self.try_prefill_session(session, prompt, ubatch, exec)
             .unwrap_or_else(|e| panic!("{e}"))
@@ -365,7 +402,7 @@ impl Engine {
         session: &Session,
         prompt: &[u32],
         ubatch: usize,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Vec<f32>, CacheError> {
         self.try_prefill_on_slot(session.slot, prompt, ubatch, exec)
     }
@@ -377,7 +414,7 @@ impl Engine {
         slot: usize,
         prompt: &[u32],
         ubatch: usize,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Vec<f32>, CacheError> {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(ubatch >= 1, "ubatch must be at least 1");
@@ -401,7 +438,7 @@ impl Engine {
         token: u32,
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Option<Vec<f32>> {
         self.try_ubatch_on_slot(0, &[token], phase, want_logits, exec)
             .unwrap_or_else(|e| panic!("{e}"))
@@ -419,7 +456,7 @@ impl Engine {
         tokens: &[u32],
         phase: Phase,
         want_logits: bool,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> Result<Option<Vec<f32>>, CacheError> {
         let cfg = self.weights.cfg.clone();
         let scheme = self.weights.scheme;
@@ -495,6 +532,9 @@ impl Engine {
                 let a = if acts_v.is_empty() { &acts } else { &acts_v };
                 exec.linear_ubatch(&op_v, &lw.wv, a, &mut s.v[..n * kvd]);
             }
+            // Host consumes q/k/v next (QK-norm, RoPE, cache store): the
+            // q/k/v trio is one submission batch.
+            exec.submit();
 
             // QK-Norm (Qwen3) + RoPE per head, then store K/V per token.
             {
@@ -587,6 +627,9 @@ impl Engine {
                 let lw = &self.weights.layers[layer];
                 let s = &mut self.scratch;
                 exec.linear_ubatch(&op_o, &lw.wo, &acts_o, &mut s.proj[..n * d]);
+                // Residual add consumes the projection: flush the
+                // attention + o_proj batch.
+                exec.submit();
                 for (i, x) in xs.iter_mut().enumerate() {
                     ops::add_inplace(x, &s.proj[i * d..(i + 1) * d]);
                 }
@@ -612,6 +655,8 @@ impl Engine {
                 let s = &mut self.scratch;
                 exec.linear_ubatch(&op_g, &lw.w_gate, &acts_f, &mut s.gate[..n * df]);
                 exec.linear_ubatch(&op_u, &lw.w_up, &acts_f, &mut s.up[..n * df]);
+                // SwiGLU consumes gate and up: the pair is one batch.
+                exec.submit();
                 for i in 0..n {
                     ops::swiglu(
                         &s.gate[i * df..(i + 1) * df],
@@ -628,6 +673,7 @@ impl Engine {
                 let lw = &self.weights.layers[layer];
                 let s = &mut self.scratch;
                 exec.linear_ubatch(&op_d, &lw.w_down, &acts_d, &mut s.proj[..n * d]);
+                exec.submit();
                 for (i, x) in xs.iter_mut().enumerate() {
                     ops::add_inplace(x, &s.proj[i * d..(i + 1) * d]);
                 }
@@ -652,8 +698,11 @@ impl Engine {
             let act_h = ActQuant::for_weight(self.weights.lm_head.ty, &x);
             let s = &mut self.scratch;
             exec.linear(&op_h, &self.weights.lm_head, &act_h, &mut s.logits);
+            // The sampler reads the logits: drain the launch stream.
+            exec.sync();
             Some(s.logits.clone())
         } else {
+            exec.sync();
             None
         };
         exec.end_step(phase, base + n - 1);
@@ -668,7 +717,7 @@ impl Engine {
         prompt: &[u32],
         n_out: usize,
         sampler: &mut Sampler,
-        exec: &mut dyn MatvecExec,
+        exec: &mut dyn KernelExec,
     ) -> GenerateResult {
         assert!(!prompt.is_empty(), "empty prompt");
         self.reset();
@@ -914,7 +963,13 @@ mod tests {
             linears: usize,
             ubatches: usize,
             attns: usize,
+            submits: usize,
             native: NativeExec,
+        }
+        impl KernelExec for Counter {
+            fn submit(&mut self) {
+                self.submits += 1;
+            }
         }
         impl MatvecExec for Counter {
             fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
@@ -942,6 +997,7 @@ mod tests {
             linears: 0,
             ubatches: 0,
             attns: 0,
+            submits: 0,
             native: NativeExec,
         };
         e.forward(1, Phase::Prefill, true, &mut c);
@@ -949,5 +1005,8 @@ mod tests {
         assert_eq!(c.linears, n_layers * 7 + 1);
         assert_eq!(c.ubatches, n_layers * 7, "7 batched dispatches per layer");
         assert_eq!(c.attns, n_layers * 2);
+        // Per layer: qkv, attention+o_proj, gate/up, down — plus the
+        // end-of-step sync (the default sync forwards to submit).
+        assert_eq!(c.submits, n_layers * 4 + 1, "dependency-boundary submits");
     }
 }

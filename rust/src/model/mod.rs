@@ -27,7 +27,9 @@ pub mod sampler;
 pub mod weights;
 
 pub use config::{LinearKind, ModelConfig, QuantScheme};
-pub use engine::{Engine, GenerateResult, MatvecExec, NativeExec, Session, DEFAULT_UBATCH};
+pub use engine::{
+    Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, Session, DEFAULT_UBATCH,
+};
 pub use kv_cache::{CacheError, KvCache, DEFAULT_PAGE_SIZE};
 pub use graph::{MatvecOp, OpKind, Phase};
 pub use sampler::Sampler;

@@ -1,23 +1,45 @@
-//! The backend registry: one place that turns a declarative [`ExecSpec`]
-//! into the right [`MatvecExec`] implementation — native Rust kernels,
-//! the instrumented-IMAX cost model, or (feature `pjrt`) the
-//! AOT-compiled Pallas kernels via PJRT.
+//! The backend registry for the plan/submit execution API: one place
+//! that turns a declarative [`ExecSpec`] into the right
+//! [`crate::model::engine::KernelExec`] implementation — native Rust
+//! kernels, the instrumented-IMAX cost model, an AOT-Pallas PJRT runner
+//! (feature `pjrt`), or a heterogeneous per-layer-range *placement* of
+//! any of those.
 //!
-//! Before the registry, every call site hand-wired `&mut NativeExec` or
-//! assembled an `InstrumentedExec` by hand; now `serve`, the CLI, and
-//! the examples all construct backends from one spec (`--backend
-//! native|imax|pjrt`), which is what lets instrumented-IMAX timing run
-//! under the serving loop.
+//! **Plan/submit.** The engine records kernel launches and marks host
+//! dependency boundaries with `submit()`/`sync()`
+//! ([`crate::model::engine::KernelExec`]); backends built here either
+//! execute eagerly (submit is a no-op — `native`, `pjrt`) or queue
+//! launch descriptors in a [`crate::runtime::queue::LaunchQueue`] and
+//! settle them at the flush (`imax`, whose cost model can then overlap
+//! each queued kernel's DMA LOAD with the previous kernel's EXEC — the
+//! double-buffered LMM, `imax:…:dbuf`).
+//!
+//! **Selector grammar** (the `--backend` flag):
+//!
+//! ```text
+//! native | pjrt
+//! imax[:asic[N]|:fpga[N]][:lmm<KB>][:naive|coalesced][:dbuf]
+//! <first>[-<last>]:<spec>,<first>[-<last>]:<spec>,…   (placement)
+//! ```
+//!
+//! A placement maps inclusive layer ranges to per-range executors
+//! (`0-11:imax:fpga2,12-23:native`): the registry builds one executor
+//! per range and routes each kernel by its layer, so prefill/decode can
+//! shard across heterogeneous devices in one run. The LM head runs on
+//! the executor owning the highest range. [`BackendReport::merged`]
+//! joins the distinct backend names (`imax:fpga2+native`) and keeps
+//! per-backend sub-reports, so heterogeneous runs stay correctly
+//! labeled all the way up to the serve report.
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::offload::OffloadPolicy;
 use crate::coordinator::phases::InstrumentedExec;
-use crate::imax::device::ImaxDevice;
+use crate::imax::device::{ImaxDevice, ImaxImpl};
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::imax::timing::RunBreakdown;
-use crate::model::engine::{MatvecExec, NativeExec};
+use crate::model::engine::{KernelExec, MatvecExec, NativeExec};
 use crate::model::graph::{MatvecOp, Phase};
 use crate::tensor::{ActQuant, QTensor};
 
@@ -28,19 +50,25 @@ pub struct ImaxSpec {
     /// 28 nm ASIC projection instead of the FPGA prototype.
     pub asic: bool,
     pub lanes: usize,
+    /// LMM capacity per PE in KB (`:lmm<KB>`, 16..=512).
     pub lmm_kb: usize,
+    /// DMA coalescing mode (`:naive` / `:coalesced`).
     pub mode: TransferMode,
+    /// Model the double-buffered LMM prefetch (`:dbuf`): overlap queued
+    /// kernels' streaming LOAD with the previous kernel's EXEC.
+    pub overlap: bool,
 }
 
 impl Default for ImaxSpec {
     fn default() -> ImaxSpec {
         // The paper's chosen configuration: FPGA prototype, 2 lanes,
-        // 64 KB LMM, coalesced DMA.
+        // 64 KB LMM, coalesced DMA, no prefetch-overlap modeling.
         ImaxSpec {
             asic: false,
             lanes: 2,
             lmm_kb: 64,
             mode: TransferMode::Coalesced,
+            overlap: false,
         }
     }
 }
@@ -55,6 +83,106 @@ impl ImaxSpec {
     }
 }
 
+/// One placement rule: an inclusive layer range mapped to a
+/// (non-placement) backend spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementRule {
+    /// First layer (inclusive).
+    pub first: usize,
+    /// Last layer (inclusive).
+    pub last: usize,
+    pub spec: ExecSpec,
+}
+
+/// Heterogeneous multi-backend placement: disjoint layer ranges, each
+/// executed by its own backend (`0-11:imax:fpga2,12-23:native`). Rules
+/// are kept sorted by first layer; ranges may extend beyond a smaller
+/// model's layer count, but every layer of the model that runs must be
+/// covered ([`PlacementSpec::validate_layers`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementSpec {
+    pub rules: Vec<PlacementRule>,
+}
+
+impl PlacementSpec {
+    /// Parse `<first>[-<last>]:<spec>` rules separated by commas.
+    pub fn parse(s: &str) -> Result<PlacementSpec> {
+        let mut rules = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let Some((range, spec_str)) = part.split_once(':') else {
+                bail!("placement rule '{part}' must be '<first>[-<last>]:<backend>'");
+            };
+            let (first, last) = match range.split_once('-') {
+                Some((a, b)) => (
+                    a.parse().map_err(|_| anyhow::anyhow!("bad layer '{a}' in rule '{part}'"))?,
+                    b.parse().map_err(|_| anyhow::anyhow!("bad layer '{b}' in rule '{part}'"))?,
+                ),
+                None => {
+                    let n: usize = range
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad layer '{range}' in rule '{part}'"))?;
+                    (n, n)
+                }
+            };
+            if last < first {
+                bail!("empty layer range {first}-{last} in rule '{part}'");
+            }
+            let spec = ExecSpec::parse(spec_str)?;
+            if matches!(spec, ExecSpec::Placement(_)) {
+                bail!("nested placement in rule '{part}'");
+            }
+            rules.push(PlacementRule { first, last, spec });
+        }
+        rules.sort_by_key(|r| r.first);
+        for w in rules.windows(2) {
+            if w[1].first <= w[0].last {
+                bail!(
+                    "overlapping layer ranges {}-{} and {}-{}",
+                    w[0].first,
+                    w[0].last,
+                    w[1].first,
+                    w[1].last
+                );
+            }
+        }
+        Ok(PlacementSpec { rules })
+    }
+
+    /// Check that layers `0..n_layers` are all covered (no gaps below the
+    /// model's layer count; ranges reaching beyond it are fine).
+    pub fn validate_layers(&self, n_layers: usize) -> Result<()> {
+        let mut next = 0usize;
+        for r in &self.rules {
+            if next >= n_layers {
+                break;
+            }
+            if r.first > next {
+                bail!("placement leaves layer {next} uncovered (model has {n_layers} layers)");
+            }
+            next = r.last + 1;
+        }
+        if next < n_layers {
+            bail!("placement covers layers 0..{next} but the model has {n_layers} layers");
+        }
+        Ok(())
+    }
+
+    pub fn name(&self) -> String {
+        self.rules
+            .iter()
+            .map(|r| {
+                if r.first == r.last {
+                    format!("{}:{}", r.first, r.spec.name())
+                } else {
+                    format!("{}-{}:{}", r.first, r.last, r.spec.name())
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
 /// Declarative backend selection, parseable from a CLI flag.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ExecSpec {
@@ -66,14 +194,26 @@ pub enum ExecSpec {
     /// AOT-compiled Pallas kernels through PJRT (requires the `pjrt`
     /// cargo feature and `make artifacts`).
     Pjrt,
+    /// Heterogeneous per-layer-range placement of the above.
+    Placement(PlacementSpec),
 }
 
 impl ExecSpec {
-    /// Parse a `--backend` selector: `native`, `pjrt`, `imax`,
-    /// `imax:asic`, `imax:fpga`, optionally with a lane count suffix
-    /// (`imax:fpga4`, `imax:asic2`).
+    /// Parse a `--backend` selector (see the module docs for the full
+    /// grammar): `native`, `pjrt`, `imax` with optional `:`-separated
+    /// options — device variant (`asic[N]`/`fpga[N]`), LMM size
+    /// (`lmm<KB>`), DMA mode (`naive`/`coalesced`), prefetch overlap
+    /// (`dbuf`) — or a comma-separated layer-range placement
+    /// (`0-11:imax:fpga2,12-23:native`).
     pub fn parse(s: &str) -> Result<ExecSpec> {
         let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() {
+            bail!("empty backend spec");
+        }
+        // A leading digit can only start a layer-range placement rule.
+        if s.as_bytes()[0].is_ascii_digit() {
+            return Ok(ExecSpec::Placement(PlacementSpec::parse(&s)?));
+        }
         match s.as_str() {
             "native" => return Ok(ExecSpec::Native),
             "pjrt" => return Ok(ExecSpec::Pjrt),
@@ -81,41 +221,105 @@ impl ExecSpec {
             _ => {}
         }
         if let Some(rest) = s.strip_prefix("imax:") {
-            let (asic, lanes_str) = if let Some(l) = rest.strip_prefix("asic") {
-                (true, l)
-            } else if let Some(l) = rest.strip_prefix("fpga") {
-                (false, l)
-            } else {
-                bail!("unknown imax variant '{rest}' (use imax:fpga[N] or imax:asic[N])");
-            };
-            let lanes: usize = if lanes_str.is_empty() {
-                2
-            } else {
-                lanes_str
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad lane count '{lanes_str}'"))?
-            };
-            if !(1..=8).contains(&lanes) {
-                bail!("lane count {lanes} out of range (the IMAX carrier has 1..=8 lanes)");
+            let mut spec = ImaxSpec::default();
+            let mut saw_variant = false;
+            let mut saw_lmm = false;
+            let mut saw_mode = false;
+            let mut saw_dbuf = false;
+            for seg in rest.split(':') {
+                if seg.is_empty() {
+                    bail!("empty option segment in '{s}'");
+                }
+                let variant = seg
+                    .strip_prefix("asic")
+                    .map(|l| (true, l))
+                    .or_else(|| seg.strip_prefix("fpga").map(|l| (false, l)));
+                if let Some((asic, lanes_str)) = variant {
+                    if saw_variant {
+                        bail!("duplicate device variant in '{s}'");
+                    }
+                    saw_variant = true;
+                    spec.asic = asic;
+                    spec.lanes = if lanes_str.is_empty() {
+                        2
+                    } else {
+                        lanes_str
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad lane count '{lanes_str}'"))?
+                    };
+                    if !(1..=8).contains(&spec.lanes) {
+                        bail!(
+                            "lane count {} out of range (the IMAX carrier has 1..=8 lanes)",
+                            spec.lanes
+                        );
+                    }
+                } else if let Some(kb) = seg.strip_prefix("lmm") {
+                    if saw_lmm {
+                        bail!("duplicate LMM size in '{s}'");
+                    }
+                    saw_lmm = true;
+                    spec.lmm_kb = kb.parse().map_err(|_| {
+                        anyhow::anyhow!("bad LMM size '{kb}' (use lmm<KB>, e.g. lmm128)")
+                    })?;
+                    if !(16..=512).contains(&spec.lmm_kb) {
+                        bail!(
+                            "LMM size {} KB out of range (the LMM is configurable 16..=512 KB)",
+                            spec.lmm_kb
+                        );
+                    }
+                } else if seg == "naive" || seg == "coalesced" {
+                    if saw_mode {
+                        bail!("duplicate DMA mode in '{s}'");
+                    }
+                    saw_mode = true;
+                    spec.mode = if seg == "naive" {
+                        TransferMode::Naive
+                    } else {
+                        TransferMode::Coalesced
+                    };
+                } else if seg == "dbuf" {
+                    if saw_dbuf {
+                        bail!("duplicate dbuf option in '{s}'");
+                    }
+                    saw_dbuf = true;
+                    spec.overlap = true;
+                } else {
+                    bail!(
+                        "unknown imax option '{seg}' \
+                         (use asic[N]|fpga[N], lmm<KB>, naive|coalesced, dbuf)"
+                    );
+                }
             }
-            return Ok(ExecSpec::Imax(ImaxSpec {
-                asic,
-                lanes,
-                ..ImaxSpec::default()
-            }));
+            return Ok(ExecSpec::Imax(spec));
         }
-        bail!("unknown backend '{s}' (available: {})", BackendRegistry::available().join("|"));
+        bail!(
+            "unknown backend '{s}' (available: {}; imax takes :asic[N]|:fpga[N], :lmm<KB>, \
+             :naive|:coalesced, :dbuf options, and layer-range placements look like \
+             '0-5:imax,6-11:native' — see `imax-llm help`)",
+            BackendRegistry::available().join("|")
+        );
     }
 
+    /// Canonical selector string; [`ExecSpec::parse`] round-trips it
+    /// (non-default imax options are emitted, defaults elided).
     pub fn name(&self) -> String {
         match self {
             ExecSpec::Native => "native".to_string(),
             ExecSpec::Pjrt => "pjrt".to_string(),
-            ExecSpec::Imax(i) => format!(
-                "imax:{}{}",
-                if i.asic { "asic" } else { "fpga" },
-                i.lanes
-            ),
+            ExecSpec::Imax(i) => {
+                let mut n = format!("imax:{}{}", if i.asic { "asic" } else { "fpga" }, i.lanes);
+                if i.lmm_kb != 64 {
+                    n.push_str(&format!(":lmm{}", i.lmm_kb));
+                }
+                if i.mode == TransferMode::Naive {
+                    n.push_str(":naive");
+                }
+                if i.overlap {
+                    n.push_str(":dbuf");
+                }
+                n
+            }
+            ExecSpec::Placement(p) => p.name(),
         }
     }
 }
@@ -132,19 +336,62 @@ pub struct BackendReport {
     pub offloaded_macs: u64,
     pub total_macs: u64,
     /// Measured engine wall time per phase (imax backend only; the
-    /// serving loop measures its own phases for the others).
+    /// serving loop measures its own phases for the others). Under a
+    /// placement every part observes the *whole* shared step, so a
+    /// per-part wall covers the full model (including other parts'
+    /// layers), and summed walls count each step once per instrumented
+    /// part — treat these as step-coverage times, not per-backend
+    /// attribution.
     pub wall_prefill_s: f64,
     pub wall_decode_s: f64,
+    /// Per-backend sub-reports when the merge spanned distinct backends
+    /// (heterogeneous placements / mixed fleets); empty for a
+    /// single-backend report.
+    pub parts: Vec<BackendReport>,
 }
 
 impl BackendReport {
-    /// Merge per-worker reports into one (sums the additive fields).
+    /// Merge reports into one. Distinct backend names are joined
+    /// (`imax:fpga2+native`) rather than mislabeled after the last
+    /// report, and when more than one distinct backend contributed the
+    /// merged report keeps one summed sub-report per backend in
+    /// [`BackendReport::parts`].
     pub fn merged(reports: &[BackendReport]) -> BackendReport {
-        let mut out = BackendReport::default();
+        // Flatten: a report that is itself a merge (placement) stands in
+        // for its parts.
+        let mut leaves: Vec<&BackendReport> = Vec::new();
+        for r in reports {
+            if r.parts.is_empty() {
+                leaves.push(r);
+            } else {
+                leaves.extend(r.parts.iter());
+            }
+        }
+        let mut names: Vec<String> = Vec::new();
+        for l in &leaves {
+            if !names.contains(&l.backend) {
+                names.push(l.backend.clone());
+            }
+        }
+        let mut out = Self::sum(leaves.iter().copied(), names.join("+"));
+        if names.len() > 1 {
+            out.parts = names
+                .iter()
+                .map(|n| Self::sum(leaves.iter().filter(|l| &l.backend == n).copied(), n.clone()))
+                .collect();
+        }
+        out
+    }
+
+    /// Sum additive fields over reports under one label (no grouping).
+    fn sum<'a>(reports: impl Iterator<Item = &'a BackendReport>, backend: String) -> BackendReport {
+        let mut out = BackendReport {
+            backend,
+            ..BackendReport::default()
+        };
         let mut modeled = RunBreakdown::default();
         let mut any_modeled = false;
         for r in reports {
-            out.backend = r.backend.clone();
             if let Some(m) = r.modeled {
                 modeled.prefill += m.prefill;
                 modeled.decode += m.decode;
@@ -157,11 +404,104 @@ impl BackendReport {
         }
         if any_modeled {
             out.modeled = Some(modeled);
-        }
-        if out.total_macs > 0 && any_modeled {
-            out.offload_ratio = Some(out.offloaded_macs as f64 / out.total_macs as f64);
+            if out.total_macs > 0 {
+                out.offload_ratio = Some(out.offloaded_macs as f64 / out.total_macs as f64);
+            }
         }
         out
+    }
+}
+
+/// One range of a [`PlacementExec`]: the layers it owns and the executor
+/// serving them.
+pub struct PlacementPart {
+    pub first: usize,
+    pub last: usize,
+    pub exec: BackendExec,
+}
+
+/// Heterogeneous executor resolved from a [`PlacementSpec`]: kernels
+/// route by `op.layer` to the part owning that layer; the LM head
+/// (`layer: None`) runs on the part owning the highest range. Step
+/// boundaries and submits fan out to every part, so each keeps coherent
+/// per-phase accounting for its share of the model.
+pub struct PlacementExec {
+    parts: Vec<PlacementPart>,
+    /// Index of the part owning the highest layer range (LM head home).
+    head: usize,
+}
+
+impl PlacementExec {
+    fn new(parts: Vec<PlacementPart>) -> PlacementExec {
+        assert!(!parts.is_empty(), "placement needs at least one rule");
+        let head = parts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, p)| p.last)
+            .map(|(i, _)| i)
+            .expect("nonempty parts");
+        PlacementExec { parts, head }
+    }
+
+    pub fn parts(&self) -> &[PlacementPart] {
+        &self.parts
+    }
+
+    fn part_for(&mut self, layer: Option<usize>) -> &mut BackendExec {
+        let idx = match layer {
+            None => self.head,
+            Some(l) => self
+                .parts
+                .iter()
+                .position(|p| p.first <= l && l <= p.last)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "layer {l} not covered by the placement \
+                         (validate the spec against the model's n_layers)"
+                    )
+                }),
+        };
+        &mut self.parts[idx].exec
+    }
+}
+
+impl MatvecExec for PlacementExec {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        self.part_for(op.layer).linear(op, w, act, out);
+    }
+
+    fn linear_ubatch(&mut self, op: &MatvecOp, w: &QTensor, acts: &[ActQuant], outs: &mut [f32]) {
+        self.part_for(op.layer).linear_ubatch(op, w, acts, outs);
+    }
+
+    fn attn(&mut self, op: &MatvecOp) {
+        self.part_for(op.layer).attn(op);
+    }
+
+    fn begin_step(&mut self, phase: Phase, pos: usize) {
+        for p in &mut self.parts {
+            p.exec.begin_step(phase, pos);
+        }
+    }
+
+    fn end_step(&mut self, phase: Phase, pos: usize) {
+        for p in &mut self.parts {
+            p.exec.end_step(phase, pos);
+        }
+    }
+}
+
+impl KernelExec for PlacementExec {
+    fn submit(&mut self) {
+        for p in &mut self.parts {
+            p.exec.submit();
+        }
+    }
+
+    fn sync(&mut self) {
+        for p in &mut self.parts {
+            p.exec.sync();
+        }
     }
 }
 
@@ -171,6 +511,7 @@ impl BackendReport {
 pub enum BackendExec {
     Native(NativeExec),
     Imax(Box<InstrumentedExec<NativeExec>>),
+    Placement(PlacementExec),
     #[cfg(feature = "pjrt")]
     Pjrt(PjrtExec),
 }
@@ -180,15 +521,18 @@ impl BackendExec {
         match self {
             BackendExec::Native(_) => "native",
             BackendExec::Imax(_) => "imax",
+            BackendExec::Placement(_) => "placement",
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(_) => "pjrt",
         }
     }
 
-    /// Offload statistics table source, when the backend tracks one.
+    /// Offload statistics table source, when the backend tracks one
+    /// (under a placement: the first part that does).
     pub fn offload_stats(&self) -> Option<&crate::coordinator::offload::OffloadStats> {
         match self {
             BackendExec::Imax(i) => Some(&i.stats),
+            BackendExec::Placement(p) => p.parts.iter().find_map(|part| part.exec.offload_stats()),
             _ => None,
         }
     }
@@ -199,15 +543,34 @@ impl BackendExec {
                 backend: "native".to_string(),
                 ..BackendReport::default()
             },
-            BackendExec::Imax(i) => BackendReport {
-                backend: "imax".to_string(),
-                modeled: Some(i.modeled),
-                offload_ratio: Some(i.stats.total_ratio()),
-                offloaded_macs: i.stats.offloaded_macs,
-                total_macs: i.stats.total_macs,
-                wall_prefill_s: i.wall_prefill,
-                wall_decode_s: i.wall_decode,
-            },
+            BackendExec::Imax(i) => {
+                // Reconstruct the canonical selector from the executor's
+                // actual configuration so heterogeneous merges stay
+                // labeled with the concrete device (`imax:fpga2`), not a
+                // generic family name.
+                let spec = ImaxSpec {
+                    asic: i.dev.imp == ImaxImpl::Asic28,
+                    lanes: i.dev.lanes,
+                    lmm_kb: i.policy.lmm.size_kb,
+                    mode: i.mode,
+                    overlap: i.overlap,
+                };
+                BackendReport {
+                    backend: ExecSpec::Imax(spec).name(),
+                    modeled: Some(i.modeled),
+                    offload_ratio: Some(i.stats.total_ratio()),
+                    offloaded_macs: i.stats.offloaded_macs,
+                    total_macs: i.stats.total_macs,
+                    wall_prefill_s: i.wall_prefill,
+                    wall_decode_s: i.wall_decode,
+                    ..BackendReport::default()
+                }
+            }
+            BackendExec::Placement(p) => {
+                let reports: Vec<BackendReport> =
+                    p.parts.iter().map(|part| part.exec.report()).collect();
+                BackendReport::merged(&reports)
+            }
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(_) => BackendReport {
                 backend: "pjrt".to_string(),
@@ -222,6 +585,7 @@ impl MatvecExec for BackendExec {
         match self {
             BackendExec::Native(e) => e.linear(op, w, act, out),
             BackendExec::Imax(e) => e.linear(op, w, act, out),
+            BackendExec::Placement(e) => e.linear(op, w, act, out),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.linear(op, w, act, out),
         }
@@ -231,6 +595,7 @@ impl MatvecExec for BackendExec {
         match self {
             BackendExec::Native(e) => e.linear_ubatch(op, w, acts, outs),
             BackendExec::Imax(e) => e.linear_ubatch(op, w, acts, outs),
+            BackendExec::Placement(e) => e.linear_ubatch(op, w, acts, outs),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.linear_ubatch(op, w, acts, outs),
         }
@@ -240,6 +605,7 @@ impl MatvecExec for BackendExec {
         match self {
             BackendExec::Native(e) => e.attn(op),
             BackendExec::Imax(e) => e.attn(op),
+            BackendExec::Placement(e) => e.attn(op),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.attn(op),
         }
@@ -249,6 +615,7 @@ impl MatvecExec for BackendExec {
         match self {
             BackendExec::Native(e) => e.begin_step(phase, pos),
             BackendExec::Imax(e) => e.begin_step(phase, pos),
+            BackendExec::Placement(e) => e.begin_step(phase, pos),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.begin_step(phase, pos),
         }
@@ -258,8 +625,31 @@ impl MatvecExec for BackendExec {
         match self {
             BackendExec::Native(e) => e.end_step(phase, pos),
             BackendExec::Imax(e) => e.end_step(phase, pos),
+            BackendExec::Placement(e) => e.end_step(phase, pos),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.end_step(phase, pos),
+        }
+    }
+}
+
+impl KernelExec for BackendExec {
+    fn submit(&mut self) {
+        match self {
+            BackendExec::Native(e) => e.submit(),
+            BackendExec::Imax(e) => e.submit(),
+            BackendExec::Placement(e) => e.submit(),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.submit(),
+        }
+    }
+
+    fn sync(&mut self) {
+        match self {
+            BackendExec::Native(e) => e.sync(),
+            BackendExec::Imax(e) => e.sync(),
+            BackendExec::Placement(e) => e.sync(),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.sync(),
         }
     }
 }
@@ -269,7 +659,9 @@ impl MatvecExec for BackendExec {
 pub struct BackendRegistry;
 
 impl BackendRegistry {
-    /// Selector names accepted by [`ExecSpec::parse`].
+    /// Base selector names accepted by [`ExecSpec::parse`] (the imax
+    /// option grammar and layer-range placements are documented in the
+    /// module docs and `imax-llm help`).
     pub fn available() -> Vec<&'static str> {
         let mut names = vec!["native", "imax", "imax:asic"];
         if cfg!(feature = "pjrt") {
@@ -283,6 +675,12 @@ impl BackendRegistry {
     pub fn validate(spec: &ExecSpec) -> Result<()> {
         match spec {
             ExecSpec::Native | ExecSpec::Imax(_) => Ok(()),
+            ExecSpec::Placement(p) => {
+                for r in &p.rules {
+                    Self::validate(&r.spec)?;
+                }
+                Ok(())
+            }
             ExecSpec::Pjrt => {
                 if cfg!(feature = "pjrt") {
                     Ok(())
@@ -302,11 +700,25 @@ impl BackendRegistry {
         match spec {
             ExecSpec::Native => Ok(BackendExec::Native(NativeExec)),
             ExecSpec::Imax(i) => {
-                let dev = i.device();
+                // Keep the modeled device consistent with a CLI LMM
+                // override (the policy's LmmConfig drives tiling/fit; the
+                // device's lmm_kb drives static power).
+                let dev = i.device().with_lmm_kb(i.lmm_kb);
                 let policy = OffloadPolicy::new(LmmConfig::new(i.lmm_kb));
-                Ok(BackendExec::Imax(Box::new(InstrumentedExec::new(
-                    NativeExec, dev, policy, i.mode,
-                ))))
+                Ok(BackendExec::Imax(Box::new(
+                    InstrumentedExec::new(NativeExec, dev, policy, i.mode).with_overlap(i.overlap),
+                )))
+            }
+            ExecSpec::Placement(p) => {
+                let mut parts = Vec::with_capacity(p.rules.len());
+                for r in &p.rules {
+                    parts.push(PlacementPart {
+                        first: r.first,
+                        last: r.last,
+                        exec: Self::build(&r.spec)?,
+                    });
+                }
+                Ok(BackendExec::Placement(PlacementExec::new(parts)))
             }
             ExecSpec::Pjrt => {
                 Self::validate(spec)?;
@@ -359,7 +771,7 @@ mod pjrt_exec {
     use anyhow::Result;
 
     use super::split_q8_blocks;
-    use crate::model::engine::MatvecExec;
+    use crate::model::engine::{KernelExec, MatvecExec};
     use crate::model::graph::MatvecOp;
     use crate::quant::{q8_0, GgmlType};
     use crate::runtime::artifacts::ArtifactDir;
@@ -436,6 +848,8 @@ mod pjrt_exec {
             }
         }
     }
+
+    impl KernelExec for PjrtExec {}
 }
 
 #[cfg(test)]
@@ -471,6 +885,99 @@ mod tests {
     }
 
     #[test]
+    fn imax_option_grammar_roundtrips() {
+        // Every option settable from the CLI, in any order.
+        let spec = ExecSpec::parse("imax:fpga4:lmm128:naive:dbuf").unwrap();
+        match &spec {
+            ExecSpec::Imax(i) => {
+                assert!(!i.asic);
+                assert_eq!(i.lanes, 4);
+                assert_eq!(i.lmm_kb, 128);
+                assert_eq!(i.mode, TransferMode::Naive);
+                assert!(i.overlap);
+            }
+            other => panic!("expected imax spec, got {other:?}"),
+        }
+        assert_eq!(spec.name(), "imax:fpga4:lmm128:naive:dbuf");
+        assert_eq!(ExecSpec::parse(&spec.name()).unwrap(), spec);
+        // Options without an explicit variant keep the default device.
+        let d = ExecSpec::parse("imax:dbuf").unwrap();
+        assert_eq!(d.name(), "imax:fpga2:dbuf");
+        assert_eq!(ExecSpec::parse(&d.name()).unwrap(), d);
+        let lmm = ExecSpec::parse("imax:lmm256").unwrap();
+        assert_eq!(lmm.name(), "imax:fpga2:lmm256");
+        // Order-insensitive.
+        assert_eq!(
+            ExecSpec::parse("imax:naive:fpga4:dbuf:lmm128").unwrap(),
+            ExecSpec::parse("imax:fpga4:lmm128:naive:dbuf").unwrap()
+        );
+        // Defaults elide: coalesced and lmm64 never appear in the name.
+        assert_eq!(ExecSpec::parse("imax:coalesced:lmm64").unwrap().name(), "imax:fpga2");
+    }
+
+    #[test]
+    fn imax_option_grammar_rejects_nonsense() {
+        // LmmConfig asserts 16..=512 — the parser must reject out-of-range
+        // sizes rather than panic at build time.
+        assert!(ExecSpec::parse("imax:lmm0").is_err());
+        assert!(ExecSpec::parse("imax:lmm8").is_err());
+        assert!(ExecSpec::parse("imax:lmm1024").is_err());
+        assert!(ExecSpec::parse("imax:lmmx").is_err());
+        assert!(ExecSpec::parse("imax:bogus").is_err());
+        assert!(ExecSpec::parse("imax:").is_err(), "empty option segment");
+        assert!(ExecSpec::parse("imax:fpga2:asic2").is_err(), "duplicate variant");
+        assert!(ExecSpec::parse("imax:naive:coalesced").is_err(), "duplicate mode");
+        assert!(ExecSpec::parse("imax:lmm64:lmm128").is_err(), "duplicate lmm");
+        assert!(ExecSpec::parse("imax:dbuf:dbuf").is_err(), "duplicate dbuf");
+        assert!(ExecSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn placement_spec_parses_and_roundtrips() {
+        let spec = ExecSpec::parse("0-11:imax:fpga2,12-23:native").unwrap();
+        let ExecSpec::Placement(p) = &spec else {
+            panic!("expected placement, got {spec:?}");
+        };
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!((p.rules[0].first, p.rules[0].last), (0, 11));
+        assert_eq!(p.rules[0].spec, ExecSpec::Imax(ImaxSpec::default()));
+        assert_eq!((p.rules[1].first, p.rules[1].last), (12, 23));
+        assert_eq!(p.rules[1].spec, ExecSpec::Native);
+        assert_eq!(spec.name(), "0-11:imax:fpga2,12-23:native");
+        assert_eq!(ExecSpec::parse(&spec.name()).unwrap(), spec);
+        // Single-layer rules and out-of-order input normalize.
+        let s = ExecSpec::parse("3:native,0-2:imax").unwrap();
+        assert_eq!(s.name(), "0-2:imax:fpga2,3:native");
+        assert_eq!(ExecSpec::parse(&s.name()).unwrap(), s);
+    }
+
+    #[test]
+    fn placement_spec_rejects_bad_rules() {
+        assert!(ExecSpec::parse("0-3:imax,2-5:native").is_err(), "overlap");
+        assert!(ExecSpec::parse("5-3:native").is_err(), "inverted range");
+        assert!(ExecSpec::parse("0-3:tpu").is_err(), "unknown inner backend");
+        assert!(ExecSpec::parse("0-3").is_err(), "missing backend");
+        assert!(ExecSpec::parse("0-x:native").is_err(), "bad layer bound");
+        // Nested placement cannot be expressed (a comma splits rules
+        // first), but a digit-leading inner spec must not recurse.
+        assert!(ExecSpec::parse("0-1:2-3:native").is_err());
+    }
+
+    #[test]
+    fn placement_layer_coverage_validates() {
+        let ExecSpec::Placement(p) = ExecSpec::parse("0-1:imax,2-3:native").unwrap() else {
+            unreachable!()
+        };
+        assert!(p.validate_layers(4).is_ok());
+        assert!(p.validate_layers(3).is_ok(), "ranges may extend beyond");
+        assert!(p.validate_layers(5).is_err(), "layer 4 uncovered");
+        let ExecSpec::Placement(gap) = ExecSpec::parse("0-1:imax,3:native").unwrap() else {
+            unreachable!()
+        };
+        assert!(gap.validate_layers(4).is_err(), "layer 2 uncovered");
+    }
+
+    #[test]
     fn registry_builds_native_and_imax() {
         let n = BackendRegistry::build(&ExecSpec::Native).unwrap();
         assert_eq!(n.name(), "native");
@@ -486,6 +993,9 @@ mod tests {
         assert!(BackendRegistry::validate(&ExecSpec::Pjrt).is_err());
         assert!(BackendRegistry::build(&ExecSpec::Pjrt).is_err());
         assert!(!BackendRegistry::available().contains(&"pjrt"));
+        // …including behind a placement rule.
+        let spec = ExecSpec::parse("0-1:pjrt,2-3:native").unwrap();
+        assert!(BackendRegistry::validate(&spec).is_err());
     }
 
     #[test]
@@ -505,6 +1015,73 @@ mod tests {
     }
 
     #[test]
+    fn dbuf_overlap_lowers_modeled_time_end_to_end() {
+        // Acceptance: the instrumented imax model shows strictly lower
+        // modeled decode time with double-buffered overlap enabled than
+        // disabled on the same run.
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 5);
+        let run = |name: &str| {
+            let mut engine = Engine::new(weights.clone());
+            let mut exec = BackendRegistry::build_named(name).unwrap();
+            let res = engine.generate(&[1, 2, 3, 4], 6, &mut Sampler::greedy(), &mut exec);
+            (res.tokens, exec.report())
+        };
+        let (t0, r0) = run("imax");
+        let (t1, r1) = run("imax:dbuf");
+        assert_eq!(t0, t1, "overlap modeling must not change tokens");
+        let (m0, m1) = (r0.modeled.unwrap(), r1.modeled.unwrap());
+        assert!(
+            m1.decode.total() < m0.decode.total(),
+            "dbuf decode {} !< {}",
+            m1.decode.total(),
+            m0.decode.total()
+        );
+        assert!(m1.prefill.total() < m0.prefill.total());
+        assert_eq!(m1.decode.exec, m0.decode.exec, "overlap hides LOAD, never EXEC");
+        assert!(m1.decode.load < m0.decode.load);
+    }
+
+    #[test]
+    fn placement_routes_layers_and_merges_reports() {
+        // tiny has 4 layers: 0-1 on instrumented imax, 2-3 native. The
+        // run must match a homogeneous native run token-for-token, and
+        // the merged report must label both backends and model only the
+        // imax share.
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 21);
+        let spec = ExecSpec::parse("0-1:imax,2-3:native").unwrap();
+        if let ExecSpec::Placement(p) = &spec {
+            p.validate_layers(cfg.n_layers).unwrap();
+        }
+        let mut hetero = BackendRegistry::build(&spec).unwrap();
+        let mut engine = Engine::new(weights.clone());
+        let got = engine.generate(&[1, 2, 3], 5, &mut Sampler::greedy(), &mut hetero);
+        let mut reference = Engine::new(weights);
+        let want = reference.generate(&[1, 2, 3], 5, &mut Sampler::greedy(), &mut NativeExec);
+        assert_eq!(got.tokens, want.tokens, "placement must not change tokens");
+
+        assert_eq!(hetero.name(), "placement");
+        assert!(hetero.offload_stats().is_some(), "imax part tracks offload");
+        let rep = hetero.report();
+        assert_eq!(rep.backend, "imax:fpga2+native", "joined, not last-wins");
+        assert_eq!(rep.parts.len(), 2);
+        assert_eq!(rep.parts[0].backend, "imax:fpga2");
+        assert_eq!(rep.parts[1].backend, "native");
+        let m = rep.modeled.expect("imax part models phases");
+        assert!(m.prefill.total() > 0.0 && m.decode.total() > 0.0);
+        assert!(rep.parts[0].total_macs > 0);
+        assert_eq!(rep.parts[1].total_macs, 0, "native part tracks no macs");
+
+        // The imax part saw only layers 0-1 (+ nothing else): its MACs
+        // are strictly below a full-model imax run's.
+        let mut full = BackendRegistry::build_named("imax").unwrap();
+        let mut e2 = Engine::new(reference.weights.clone());
+        e2.generate(&[1, 2, 3], 5, &mut Sampler::greedy(), &mut full);
+        assert!(rep.parts[0].total_macs < full.report().total_macs);
+    }
+
+    #[test]
     fn merged_reports_sum_workers() {
         let cfg = ModelConfig::tiny();
         let weights = ModelWeights::random(&cfg, QuantScheme::Q8_0, 8);
@@ -516,10 +1093,42 @@ mod tests {
         };
         let (r1, r2) = (run(1), run(2));
         let merged = BackendReport::merged(&[r1.clone(), r2.clone()]);
-        assert_eq!(merged.backend, "imax");
+        assert_eq!(merged.backend, "imax:fpga2");
+        assert!(merged.parts.is_empty(), "single backend needs no parts");
         assert_eq!(merged.total_macs, r1.total_macs + r2.total_macs);
         let m = merged.modeled.unwrap();
         let want = r1.modeled.unwrap().prefill.total() + r2.modeled.unwrap().prefill.total();
         assert!((m.prefill.total() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_reports_join_distinct_backends() {
+        // Satellite fix: heterogeneous merges used to take the *last*
+        // report's name, silently mislabeling the sums.
+        let imax = BackendReport {
+            backend: "imax:fpga2".to_string(),
+            modeled: Some(RunBreakdown::default()),
+            offloaded_macs: 10,
+            total_macs: 20,
+            ..BackendReport::default()
+        };
+        let native = BackendReport {
+            backend: "native".to_string(),
+            total_macs: 0,
+            ..BackendReport::default()
+        };
+        let merged = BackendReport::merged(&[imax.clone(), native.clone(), imax.clone()]);
+        assert_eq!(merged.backend, "imax:fpga2+native");
+        assert_eq!(merged.total_macs, 40);
+        assert_eq!(merged.parts.len(), 2);
+        assert_eq!(merged.parts[0].backend, "imax:fpga2");
+        assert_eq!(merged.parts[0].total_macs, 40);
+        assert_eq!(merged.parts[1].backend, "native");
+        assert_eq!(merged.parts[1].total_macs, 0);
+        // Merging pre-merged reports flattens to the same leaves.
+        let again = BackendReport::merged(&[merged.clone(), native]);
+        assert_eq!(again.backend, "imax:fpga2+native");
+        assert_eq!(again.parts.len(), 2);
+        assert_eq!(again.parts[0].total_macs, 40);
     }
 }

@@ -1,13 +1,22 @@
-//! Execution backends: the [`backend::BackendRegistry`] that constructs a
-//! [`crate::model::MatvecExec`] from a declarative [`backend::ExecSpec`]
-//! (`native` / `imax` / `pjrt`), plus the PJRT runtime that loads and
-//! executes the AOT-compiled JAX/Pallas artifacts from the Rust request
-//! path (Python never runs at inference time).
+//! Execution backends behind the plan/submit API: the
+//! [`backend::BackendRegistry`] that constructs a
+//! [`crate::model::KernelExec`] from a declarative [`backend::ExecSpec`]
+//! (`native` / `imax[:opts]` / `pjrt` / a per-layer-range placement),
+//! the [`queue::LaunchQueue`] that queueing backends flush at the
+//! engine's submit points, plus the PJRT runtime that loads and executes
+//! the AOT-compiled JAX/Pallas artifacts from the Rust request path
+//! (Python never runs at inference time).
 //!
-//! * [`backend`] — the registry, the `ExecSpec` selector grammar, the
-//!   per-run [`backend::BackendReport`] accounting, and (feature `pjrt`)
-//!   the [`backend::PjrtExec`] that reroutes Q8_0 linear projections of
-//!   the tiny model through the compiled Pallas kernels.
+//! * [`backend`] — the registry, the `ExecSpec` selector grammar
+//!   (including heterogeneous `0-11:imax:fpga2,12-23:native`
+//!   placements), the per-run [`backend::BackendReport`] accounting with
+//!   per-backend sub-reports, and (feature `pjrt`) the
+//!   [`backend::PjrtExec`] that reroutes Q8_0 linear projections of the
+//!   tiny model through the compiled Pallas kernels.
+//! * [`queue`] — [`queue::KernelOp`] launch descriptors and the FIFO
+//!   [`queue::LaunchQueue`] with explicit submission batches (the window
+//!   cross-kernel optimizations such as double-buffered LMM prefetch are
+//!   modeled over).
 //! * [`artifacts`] — locate `artifacts/`, parse `manifest.txt`, validate
 //!   shape signatures against the tiny-model config.
 //! * [`pjrt`] (feature `pjrt`) — the `xla`-crate wrapper: HLO text →
@@ -21,10 +30,15 @@ pub mod artifacts;
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod queue;
 
 pub use artifacts::ArtifactDir;
-pub use backend::{BackendExec, BackendRegistry, BackendReport, ExecSpec, ImaxSpec};
+pub use backend::{
+    BackendExec, BackendRegistry, BackendReport, ExecSpec, ImaxSpec, PlacementExec, PlacementRule,
+    PlacementSpec,
+};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtExec;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+pub use queue::{KernelOp, Launch, LaunchQueue};

@@ -1,0 +1,212 @@
+//! Kernel launch queues — the plan half of the plan/submit backend API.
+//!
+//! The engine no longer assumes a backend consumes kernels eagerly: every
+//! dispatch is *recorded* as a data-free [`KernelOp`] descriptor, and the
+//! engine marks host dependency boundaries with
+//! [`crate::model::engine::KernelExec::submit`] /
+//! [`crate::model::engine::KernelExec::sync`]. A queueing backend pushes
+//! descriptors into a [`LaunchQueue`] and drains them at submit points,
+//! which is what lets it reason about *consecutive* kernels as one
+//! submission batch — e.g. the instrumented IMAX model overlapping each
+//! queued kernel's DMA LOAD with the previous kernel's EXEC
+//! (double-buffered LMM prefetch), something per-kernel eager accounting
+//! cannot express.
+//!
+//! The queue is strictly FIFO: `submit()` drains pending launches in
+//! record order, so replaying a drained stream is bit-identical to eager
+//! execution. Schedulers built on top may *model* concurrency across a
+//! submission batch but must never reorder launches within a dependency
+//! chain — `rust/tests/batching_equiv.rs` holds a property test to that
+//! contract.
+
+use crate::model::graph::{MatvecOp, Phase};
+
+/// One recorded backend operation: the shape/format metadata of a kernel
+/// launch (no operand data — the functional buffers stay owned by the
+/// engine) or a step boundary marker.
+#[derive(Clone, Debug)]
+pub enum KernelOp {
+    /// A linear projection processing `batch` activation vectors against
+    /// one weight matrix (`batch > 1` for prefill ubatches).
+    Linear { op: MatvecOp, batch: usize },
+    /// An attention kernel (score or mix) over the KV cache.
+    Attn { op: MatvecOp },
+    /// Forward-step start marker (one per engine forward call).
+    BeginStep { phase: Phase, pos: usize },
+    /// Forward-step end marker.
+    EndStep { phase: Phase, pos: usize },
+}
+
+impl KernelOp {
+    /// Whether this descriptor is an actual kernel launch (vs a marker).
+    pub fn is_kernel(&self) -> bool {
+        matches!(self, KernelOp::Linear { .. } | KernelOp::Attn { .. })
+    }
+
+    /// The layer the launch belongs to (`None` for step markers and the
+    /// LM head). Launches on one layer form a dependency chain.
+    pub fn layer(&self) -> Option<usize> {
+        match self {
+            KernelOp::Linear { op, .. } | KernelOp::Attn { op } => op.layer,
+            _ => None,
+        }
+    }
+}
+
+/// One queued launch: the descriptor, a backend-chosen payload (e.g. the
+/// modeled cost), and its position in the queue's launch stream.
+#[derive(Clone, Debug)]
+pub struct Launch<P> {
+    pub op: KernelOp,
+    pub payload: P,
+    /// Global record order, monotonic per queue.
+    pub seq: u64,
+    /// Index of the submission batch this launch was flushed in.
+    pub submission: u64,
+}
+
+/// FIFO launch queue with explicit submission batches.
+///
+/// `record` appends; `submit` drains everything recorded since the last
+/// submit, in record order, stamped with a monotonically increasing
+/// submission index. Launches in one submission batch are known to the
+/// backend *together* (no host dependency separates them), which is the
+/// window cross-kernel optimizations may model over.
+pub struct LaunchQueue<P = ()> {
+    pending: Vec<Launch<P>>,
+    next_seq: u64,
+    n_submissions: u64,
+    n_launched: u64,
+}
+
+impl<P> LaunchQueue<P> {
+    pub fn new() -> LaunchQueue<P> {
+        LaunchQueue {
+            pending: Vec::new(),
+            next_seq: 0,
+            n_submissions: 0,
+            n_launched: 0,
+        }
+    }
+
+    /// Record one launch; returns its sequence number.
+    pub fn record(&mut self, op: KernelOp, payload: P) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push(Launch { op, payload, seq, submission: self.n_submissions });
+        seq
+    }
+
+    /// Flush: drain every pending launch in record (FIFO) order as one
+    /// submission batch. An empty queue yields an empty batch and does
+    /// not consume a submission index.
+    pub fn submit(&mut self) -> Vec<Launch<P>> {
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let mut batch = std::mem::take(&mut self.pending);
+        for l in &mut batch {
+            l.submission = self.n_submissions;
+        }
+        self.n_submissions += 1;
+        self.n_launched += batch.len() as u64;
+        batch
+    }
+
+    /// Launches recorded but not yet submitted.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Non-empty submission batches flushed so far.
+    pub fn submissions(&self) -> u64 {
+        self.n_submissions
+    }
+
+    /// Total launches flushed so far.
+    pub fn launched(&self) -> u64 {
+        self.n_launched
+    }
+}
+
+impl<P> Default for LaunchQueue<P> {
+    fn default() -> LaunchQueue<P> {
+        LaunchQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::LinearKind;
+    use crate::model::graph::OpKind;
+    use crate::quant::GgmlType;
+
+    fn lop(layer: usize) -> KernelOp {
+        KernelOp::Linear {
+            op: MatvecOp {
+                kind: OpKind::Linear(LinearKind::QProj),
+                layer: Some(layer),
+                wty: GgmlType::Q8_0,
+                rows: 8,
+                cols: 32,
+            },
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn submit_drains_in_fifo_order() {
+        let mut q: LaunchQueue<usize> = LaunchQueue::new();
+        for i in 0..5 {
+            q.record(lop(i), i);
+        }
+        assert_eq!(q.pending_len(), 5);
+        let batch = q.submit();
+        assert!(q.is_empty());
+        let payloads: Vec<usize> = batch.iter().map(|l| l.payload).collect();
+        assert_eq!(payloads, vec![0, 1, 2, 3, 4], "FIFO replay order");
+        for (i, l) in batch.iter().enumerate() {
+            assert_eq!(l.seq, i as u64, "seq is record order");
+            assert_eq!(l.submission, 0);
+        }
+    }
+
+    #[test]
+    fn submission_indices_are_monotonic() {
+        let mut q: LaunchQueue<()> = LaunchQueue::new();
+        q.record(lop(0), ());
+        let a = q.submit();
+        q.record(lop(1), ());
+        q.record(lop(1), ());
+        let b = q.submit();
+        assert_eq!(a[0].submission, 0);
+        assert!(b.iter().all(|l| l.submission == 1));
+        assert_eq!(q.submissions(), 2);
+        assert_eq!(q.launched(), 3);
+    }
+
+    #[test]
+    fn empty_submit_is_free() {
+        let mut q: LaunchQueue<()> = LaunchQueue::new();
+        assert!(q.submit().is_empty());
+        assert_eq!(q.submissions(), 0, "no submission index consumed");
+        q.record(lop(0), ());
+        q.submit();
+        assert!(q.submit().is_empty());
+        assert_eq!(q.submissions(), 1);
+    }
+
+    #[test]
+    fn markers_are_not_kernels() {
+        assert!(lop(0).is_kernel());
+        assert_eq!(lop(3).layer(), Some(3));
+        let b = KernelOp::BeginStep { phase: Phase::Decode, pos: 4 };
+        assert!(!b.is_kernel());
+        assert_eq!(b.layer(), None);
+    }
+}

@@ -11,11 +11,21 @@
 //! runs must produce bit-identical logits to the contiguous reference
 //! for single-token decode, ubatch prefill, and interleaved multi-slot
 //! decode alike.
+//!
+//! And it covers the plan/submit backend API: queueing backends that
+//! flush a `LaunchQueue` at the engine's submit points (imax, with or
+//! without double-buffered prefetch modeling, and heterogeneous
+//! placements) must be bit-identical to the eager native path, and the
+//! queue itself must never reorder launches within a dependency chain.
 
 use imax_llm::coordinator::{serve, serve_with, Request, ServeOptions};
 use imax_llm::model::engine::{Engine, NativeExec};
-use imax_llm::model::graph::Phase;
-use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::model::graph::{MatvecOp, OpKind, Phase};
+use imax_llm::model::{LinearKind, ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::quant::GgmlType;
+use imax_llm::runtime::queue::{KernelOp, LaunchQueue};
+use imax_llm::runtime::{BackendRegistry, ExecSpec};
+use imax_llm::util::proptest_lite::Runner;
 
 fn weights(scheme: QuantScheme, seed: u64) -> ModelWeights {
     ModelWeights::random(&ModelConfig::tiny(), scheme, seed)
@@ -158,6 +168,134 @@ fn serve_results_independent_of_worker_and_slot_topology() {
     for (x, y) in a.completions.iter().zip(&c.completions) {
         assert_eq!(x.tokens, y.tokens, "slot topology must not change tokens");
     }
+}
+
+#[test]
+fn queued_replay_bit_identical_to_eager_across_backends() {
+    // The plan/submit replay path (registry backends flushing their
+    // launch queues at the engine's submit()/sync() points) vs the old
+    // eager path (plain NativeExec, submit is a no-op): tokens AND the
+    // full logits vector at every step must be bit-identical, for the
+    // native and imax backends, with and without double-buffered
+    // prefetch modeling, and under a heterogeneous placement.
+    let w = weights(QuantScheme::Q8_0, 42);
+    let prompt: Vec<u32> = vec![1, 5, 9, 2, 11];
+    let n_out = 6;
+
+    // Eager reference: prefill + greedy decode, tracing every logits.
+    let mut eager = Engine::new(w.clone());
+    let se = eager.open_session(Sampler::greedy()).unwrap();
+    let mut trace = vec![eager.prefill_session(&se, &prompt, 3, &mut NativeExec)];
+    let mut want_toks = Vec::new();
+    for _ in 0..n_out {
+        let next = Sampler::greedy().sample(trace.last().unwrap());
+        want_toks.push(next);
+        let l = eager.forward_session(&se, next, Phase::Decode, true, &mut NativeExec).unwrap();
+        trace.push(l);
+    }
+
+    for backend in ["native", "imax", "imax:dbuf", "imax:naive", "0-1:imax,2-3:native"] {
+        let mut exec = BackendRegistry::build(&ExecSpec::parse(backend).unwrap()).unwrap();
+        let mut e = Engine::new(w.clone());
+        let s = e.open_session(Sampler::greedy()).unwrap();
+        let mut got = vec![e.prefill_session(&s, &prompt, 3, &mut exec)];
+        let mut toks = Vec::new();
+        for _ in 0..n_out {
+            let next = Sampler::greedy().sample(got.last().unwrap());
+            toks.push(next);
+            let l = e.forward_session(&s, next, Phase::Decode, true, &mut exec).unwrap();
+            got.push(l);
+        }
+        assert_eq!(want_toks, toks, "tokens ({backend})");
+        for (step, (a, b)) in trace.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "logits at step {step} ({backend})");
+        }
+    }
+}
+
+#[test]
+fn launch_queue_never_reorders_within_a_dependency_chain() {
+    // Property: over random record/submit interleavings, the flushed
+    // launch stream preserves record order — globally (FIFO) and hence
+    // within every per-layer dependency chain — with monotonically
+    // non-decreasing submission stamps and no launch lost or duplicated.
+    fn lop(layer: usize) -> KernelOp {
+        KernelOp::Linear {
+            op: MatvecOp {
+                kind: OpKind::Linear(LinearKind::QProj),
+                layer: Some(layer),
+                wty: GgmlType::Q8_0,
+                rows: 4,
+                cols: 32,
+            },
+            batch: 1,
+        }
+    }
+    Runner::new("launch_queue_fifo").cases(128).run(
+        |rng| {
+            let n = 1 + (rng.next_u64() % 48) as usize;
+            // 0..=3: record a launch on that layer's chain; 4: submit.
+            (0..n).map(|_| (rng.next_u64() % 5) as u8).collect::<Vec<u8>>()
+        },
+        |actions| {
+            let mut q: LaunchQueue<usize> = LaunchQueue::new();
+            let mut recorded: Vec<(u64, usize)> = Vec::new(); // (seq, chain)
+            let mut flushed = Vec::new();
+            let mut idx = 0usize;
+            for &a in actions {
+                if a == 4 {
+                    flushed.extend(q.submit());
+                } else {
+                    let seq = q.record(lop(a as usize), idx);
+                    recorded.push((seq, a as usize));
+                    idx += 1;
+                }
+            }
+            flushed.extend(q.submit());
+            if flushed.len() != recorded.len() {
+                return Err(format!(
+                    "lost launches: {} flushed of {} recorded",
+                    flushed.len(),
+                    recorded.len()
+                ));
+            }
+            for (i, l) in flushed.iter().enumerate() {
+                if l.payload != i {
+                    return Err(format!("reorder at {i}: payload {}", l.payload));
+                }
+                if l.seq != recorded[i].0 {
+                    return Err(format!("seq mismatch at {i}"));
+                }
+                if l.op.layer() != Some(recorded[i].1) {
+                    return Err(format!("chain mismatch at {i}"));
+                }
+                if i > 0 && l.submission < flushed[i - 1].submission {
+                    return Err(format!("submission stamp went backwards at {i}"));
+                }
+            }
+            // Per-chain subsequence explicitly (the dependency-chain
+            // contract, should global FIFO ever be relaxed).
+            for chain in 0..4usize {
+                let seqs: Vec<u64> = flushed
+                    .iter()
+                    .filter(|l| l.op.layer() == Some(chain))
+                    .map(|l| l.seq)
+                    .collect();
+                if seqs.windows(2).any(|w| w[1] <= w[0]) {
+                    return Err(format!("chain {chain} reordered: {seqs:?}"));
+                }
+            }
+            Ok(())
+        },
+        |v| {
+            let mut shrinks = Vec::new();
+            if v.len() > 1 {
+                shrinks.push(v[..v.len() - 1].to_vec());
+                shrinks.push(v[1..].to_vec());
+            }
+            shrinks
+        },
+    );
 }
 
 #[test]
