@@ -25,5 +25,5 @@ pub mod serve;
 pub use hybrid::{simulate, Workload, WorkloadRun};
 pub use offload::{OffloadPolicy, OffloadStats};
 pub use phases::InstrumentedExec;
-pub use scheduler::{AdmitError, Admitted, ContinuousBatcher, Request, SessionLog};
-pub use serve::{serve, serve_with, Completion, ServeOptions, ServeReport};
+pub use scheduler::{AdmitError, Admitted, ContinuousBatcher, Request, SchedPolicy, SessionLog};
+pub use serve::{serve, serve_with, Completion, ServeOptions, ServeReport, ADMIT_SCAN_WINDOW};

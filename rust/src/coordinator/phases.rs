@@ -32,7 +32,7 @@ use crate::imax::pio::ConfTracker;
 use crate::imax::sim;
 use crate::imax::timing::{PhaseCost, RunBreakdown};
 use crate::model::engine::{KernelExec, MatvecExec};
-use crate::model::graph::{MatvecOp, OpKind, Phase};
+use crate::model::graph::{KvSwapDir, MatvecOp, OpKind, Phase};
 use crate::runtime::queue::{KernelOp, LaunchQueue};
 use crate::tensor::{ActQuant, QTensor};
 
@@ -64,6 +64,19 @@ pub struct InstrumentedExec<E: MatvecExec> {
     /// Modeled LOAD seconds recovered by prefetch overlap (0 with
     /// `overlap` off).
     pub overlap_saved_s: f64,
+    /// KV page swap traffic observed through [`MatvecExec::kv_transfer`]
+    /// (prefix-cache eviction/restore), in f16 cache bytes. The modeled
+    /// seconds are already folded into `modeled` via
+    /// [`sim::kv_swap_cost`].
+    pub kv_swap_bytes: u64,
+    /// Modeled seconds the swap traffic cost (LOAD + DRAIN + HOST).
+    pub kv_swap_s: f64,
+    /// Operand bytes (weights + activations) the offloaded kernels
+    /// streamed host→LMM — the paper's bottleneck quantity. Prefix hits
+    /// shrink this directly: skipped prefill tokens never dispatch, so
+    /// their kernels' bytes never stream (`benches/prefix_reuse.rs`
+    /// reports the reduction).
+    pub streamed_bytes: u64,
     pub wall_prefill: f64,
     pub wall_decode: f64,
     tracker: ConfTracker,
@@ -83,6 +96,9 @@ impl<E: MatvecExec> InstrumentedExec<E> {
             modeled: RunBreakdown::default(),
             stats: OffloadStats::default(),
             overlap_saved_s: 0.0,
+            kv_swap_bytes: 0,
+            kv_swap_s: 0.0,
+            streamed_bytes: 0,
             wall_prefill: 0.0,
             wall_decode: 0.0,
             tracker: ConfTracker::new(),
@@ -104,6 +120,9 @@ impl<E: MatvecExec> InstrumentedExec<E> {
     /// next flush.
     fn account(&mut self, op: &MatvecOp, batch: usize) {
         let offloaded = self.policy.should_offload(&self.dev, op);
+        if offloaded {
+            self.streamed_bytes += (op.weight_bytes() + op.act_bytes() * batch) as u64;
+        }
         let (cost, load_stream) = if offloaded {
             let k = sim::offloaded_cost_parts(
                 &self.dev,
@@ -168,6 +187,18 @@ impl<E: MatvecExec> MatvecExec for InstrumentedExec<E> {
     fn attn(&mut self, op: &MatvecOp) {
         self.account(op, 1);
         self.inner.attn(op);
+    }
+
+    fn kv_transfer(&mut self, phase: Phase, dir: KvSwapDir, bytes: usize) {
+        // Swap traffic is host-issued DMA outside the kernel launch
+        // stream: charge it straight into the modeled totals through the
+        // same TransferMode the kernels use, so oversubscribed serving
+        // shows up in the LOAD/DRAIN bottleneck it actually stresses.
+        let cost = sim::kv_swap_cost(&self.dev, bytes, dir, self.mode);
+        self.kv_swap_bytes += bytes as u64;
+        self.kv_swap_s += cost.total();
+        self.modeled.add(phase, cost);
+        self.inner.kv_transfer(phase, dir, bytes);
     }
 
     fn begin_step(&mut self, phase: Phase, pos: usize) {

@@ -22,6 +22,26 @@
 //! window) is rejected with [`AdmitError::TooLarge`] instead of wedging
 //! the queue.
 //!
+//! **Prefix-aware, dedup-exact accounting**: when the engine's prefix
+//! cache is on, admission first aliases the cached page-aligned prefix
+//! of the prompt ([`crate::model::Engine::adopt_prefix`]), then gates on
+//! the *exact distinct* worst-case demand of the live set: every
+//! request's fresh pages (worst case minus its aliased pages — the pages
+//! it will allocate itself) plus one unit per distinct aliased page that
+//! no live request self-allocated. A page shared by N live sequences is
+//! therefore committed exactly once — never double-counted against its
+//! allocator — and when an allocator finishes while sharers live, the
+//! recomputation transfers its coverage to the shared unit. Unpinned
+//! cached pages are excluded entirely: the cache reclaims them on demand
+//! (evicting to the host swap arena when configured), which is how
+//! oversubscription beyond the physical pool stays safe.
+//!
+//! **Admission policy** ([`SchedPolicy`]): the serving queue scan admits
+//! FIFO by default, or shortest-job-first by *prefix-aware effective
+//! cost* ([`ContinuousBatcher::effective_cost_pages`]) — worst-case
+//! pages minus the currently cached prefix — which drops p95 latency
+//! under mixed prompt lengths.
+//!
 //! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
 //! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
 //! two — the scheduler model distributes kernel rows across lanes (EXEC
@@ -38,8 +58,35 @@ use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::model::engine::{Engine, KernelExec, Session};
 use crate::model::graph::Phase;
-use crate::model::kv_cache::CacheError;
+use crate::model::kv_cache::{CacheError, KvReuseStats};
 use crate::model::sampler::Sampler;
+
+/// Queue admission order for the serving loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Arrival order (a deferred head is retried first).
+    Fifo,
+    /// Shortest job first within the scan window, by prefix-aware
+    /// effective cost (worst-case pages minus the cached prefix).
+    Sjf,
+}
+
+impl SchedPolicy {
+    pub fn by_name(name: &str) -> Option<SchedPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "sjf" => Some(SchedPolicy::Sjf),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::Sjf => "sjf",
+        }
+    }
+}
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -130,8 +177,12 @@ struct InFlight {
     session: Session,
     logits: Vec<f32>,
     tokens: Vec<u32>,
-    /// Pages committed against the pool for this request's worst case.
-    committed_pages: usize,
+    /// Fresh worst-case pages committed against the pool (worst case
+    /// minus aliased prefix pages; the aliased pages enter the distinct
+    /// demand via the batcher's shared-page union).
+    fresh_pages: usize,
+    /// Cached prefix pages this request aliased at admission.
+    aliased: Vec<u32>,
     queue_s: f64,
     prefill_s: f64,
     decode_s: f64,
@@ -148,7 +199,8 @@ impl InFlight {
             session,
             logits: _,
             tokens,
-            committed_pages: _,
+            fresh_pages: _,
+            aliased: _,
             queue_s,
             prefill_s,
             decode_s,
@@ -178,8 +230,15 @@ pub struct ContinuousBatcher {
     epoch: Instant,
     active: Vec<InFlight>,
     /// Pages committed to live sequences' worst cases (≥ pages actually
-    /// allocated, so decode-time growth can never hit an empty pool).
+    /// allocated, so decode-time growth can never hit an empty pool):
+    /// the exact distinct demand — every live request's fresh pages plus
+    /// one unit per distinct aliased page no live request self-allocated.
+    /// Recomputed from live state on every admit/finish.
     committed_pages: usize,
+    /// Admissions that aliased at least one cached page, and the prompt
+    /// tokens those admissions skipped.
+    prefix_hits: usize,
+    prefix_hit_tokens: usize,
 }
 
 impl ContinuousBatcher {
@@ -193,6 +252,8 @@ impl ContinuousBatcher {
             epoch,
             active: Vec::new(),
             committed_pages: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
         }
     }
 
@@ -211,9 +272,19 @@ impl ContinuousBatcher {
         &self.engine
     }
 
-    /// KV pages committed to live sequences' worst cases.
+    /// KV pages committed to live sequences' worst cases (fresh pages
+    /// plus distinct pinned shared pages).
     pub fn committed_pages(&self) -> usize {
         self.committed_pages
+    }
+
+    /// Sharing/eviction counters: the engine cache's CoW/evict/swap
+    /// tallies plus this batcher's admission-level prefix-hit counts.
+    pub fn reuse_stats(&self) -> KvReuseStats {
+        let mut s = self.engine.cache.reuse_stats().clone();
+        s.prefix_hits = self.prefix_hits;
+        s.prefix_hit_tokens = self.prefix_hit_tokens;
+        s
     }
 
     /// Cached tokens a request needs at its longest: the prompt plus
@@ -223,12 +294,62 @@ impl ContinuousBatcher {
         req.prompt.len() + req.n_out.saturating_sub(1)
     }
 
-    /// Admit one request and run its prefill (as ubatch chunks).
+    /// What admitting `req` would cost the pool *right now*, prefix
+    /// discount included: worst-case pages minus the currently cached
+    /// page-aligned prefix. The shortest-job-first policy sorts the scan
+    /// window by this.
+    pub fn effective_cost_pages(&self, req: &Request) -> usize {
+        let need = self.engine.pages_needed(Self::request_tokens(req));
+        let (cached_tokens, _, _) = self.engine.peek_prefix(&req.prompt);
+        need.saturating_sub(self.engine.pages_needed(cached_tokens))
+    }
+
+    /// Exact distinct worst-case page demand of the live set, with
+    /// `extra` standing in for a candidate admission `(fresh pages,
+    /// aliased pages)` not yet in `active`: Σ fresh + |aliased pages no
+    /// live request self-allocated|. Shared pages count exactly once —
+    /// an aliased page whose allocator is still live is already inside
+    /// that allocator's fresh term; once the allocator finishes, the
+    /// union term picks the page up.
+    fn distinct_demand(&self, extra: Option<(usize, &[u32])>) -> usize {
+        let mut total = 0usize;
+        let mut self_alloc: Vec<u32> = Vec::new();
+        let mut aliased: Vec<u32> = Vec::new();
+        let mut visit = |fresh: usize, alias: &[u32], table: &[u32]| {
+            total += fresh;
+            // Pages beyond the aliased prefix were allocated by this
+            // request itself (prompt tail + decode growth).
+            self_alloc.extend_from_slice(&table[alias.len().min(table.len())..]);
+            aliased.extend_from_slice(alias);
+        };
+        for f in &self.active {
+            visit(f.fresh_pages, &f.aliased, self.engine.cache.slot_pages(f.session.slot()));
+        }
+        if let Some((fresh, alias)) = extra {
+            // The candidate's table holds exactly its aliased pages.
+            visit(fresh, alias, alias);
+        }
+        aliased.sort_unstable();
+        aliased.dedup();
+        total + aliased.iter().filter(|p| !self_alloc.contains(p)).count()
+    }
+
+    /// Refresh the cached commitment after the live set changed.
+    fn recompute_committed(&mut self) {
+        self.committed_pages = self.distinct_demand(None);
+    }
+
+    /// Admit one request and run its prefill (as ubatch chunks),
+    /// skipping the prompt span served by the prefix cache.
     ///
-    /// Admission is page-budget-gated: the request's worst case
-    /// (`prompt + n_out − 1` cached tokens) is committed against the
-    /// pool, so a mix of live sequences can never run the pool dry
-    /// mid-decode. Not enough budget or no free slot right now returns
+    /// Admission is page-budget-gated on the live set's exact distinct
+    /// demand (the `distinct_demand` invariant):
+    /// the request's worst case (`prompt + n_out − 1` cached tokens)
+    /// minus its aliased prefix pages, with each distinct shared page
+    /// counted once across the whole live set — so a mix of live
+    /// sequences can never run the pool dry mid-decode, and unpinned
+    /// cached pages don't count at all (the cache evicts them on
+    /// demand). Not enough budget or no free slot right now returns
     /// [`Admitted::Deferred`] with the request handed back; a request
     /// whose worst case exceeds the whole pool (or the context window)
     /// returns [`AdmitError::TooLarge`].
@@ -252,34 +373,55 @@ impl ContinuousBatcher {
                 max_seq,
             });
         }
-        if self.engine.free_sessions() == 0
-            || self.committed_pages + need_pages > pool_pages
-        {
+        if self.engine.free_sessions() == 0 {
             return Ok(Admitted::Deferred(req));
         }
         let session = self
             .engine
             .open_session(sampler)
             .expect("free slot checked above");
+        // Alias the cached prompt prefix (swapping evicted pages back in)
+        // *before* gating, so the commitment is exact for what this
+        // request can still demand. On deferral the aliases are undone;
+        // any swap-ins stay cached, so the retry is cheaper.
+        let adopted = self.engine.adopt_prefix(&session, &req.prompt, exec);
+        let fresh_pages = need_pages - adopted.pages.len();
+        let demand = self.distinct_demand(Some((fresh_pages, &adopted.pages)));
+        if demand > pool_pages {
+            self.engine.close_session(session);
+            return Ok(Admitted::Deferred(req));
+        }
+        self.committed_pages = demand;
         let admitted_s = self.epoch.elapsed().as_secs_f64();
         let tp0 = Instant::now();
-        let logits =
-            match self.engine.try_prefill_session(&session, &req.prompt, self.ubatch, exec) {
-                Ok(logits) => logits,
-                Err(err) => {
-                    let id = req.id;
-                    self.engine.close_session(session);
-                    return Err(AdmitError::Cache { id, err });
-                }
-            };
-        self.committed_pages += need_pages;
+        let logits = match self.engine.try_prefill_session(
+            &session,
+            &req.prompt[adopted.tokens..],
+            self.ubatch,
+            exec,
+        ) {
+            Ok(logits) => logits,
+            Err(err) => {
+                let id = req.id;
+                self.engine.close_session(session);
+                self.recompute_committed();
+                return Err(AdmitError::Cache { id, err });
+            }
+        };
+        // Publish the committed prompt pages for future sharing.
+        self.engine.register_prefix(&session, &req.prompt);
+        if adopted.tokens > 0 {
+            self.prefix_hits += 1;
+            self.prefix_hit_tokens += adopted.tokens;
+        }
         let prefill_s = tp0.elapsed().as_secs_f64();
         let inflight = InFlight {
             req,
             session,
             logits,
             tokens: Vec::new(),
-            committed_pages: need_pages,
+            fresh_pages,
+            aliased: adopted.pages,
             queue_s,
             prefill_s,
             decode_s: 0.0,
@@ -288,9 +430,9 @@ impl ContinuousBatcher {
         };
         if inflight.req.n_out == 0 {
             let finished_s = self.epoch.elapsed().as_secs_f64();
-            self.committed_pages -= inflight.committed_pages;
             let (session, mut log) = inflight.finish(finished_s);
             self.engine.close_session(session);
+            self.recompute_committed();
             // A 0-output request never decodes; pin its decode mark to
             // its finish time so interval arithmetic stays well-formed.
             log.decode_start_s = log.finished_s;
@@ -326,13 +468,18 @@ impl ContinuousBatcher {
             if done {
                 let f = self.active.remove(i);
                 let finished_s = self.epoch.elapsed().as_secs_f64();
-                self.committed_pages -= f.committed_pages;
                 let (session, log) = f.finish(finished_s);
                 self.engine.close_session(session);
                 finished.push(log);
             } else {
                 i += 1;
             }
+        }
+        if !finished.is_empty() {
+            // One recomputation covers every retirement this round (the
+            // admission gate recomputes its own demand, so the cached
+            // value is only read between rounds).
+            self.recompute_committed();
         }
         finished
     }
@@ -559,6 +706,78 @@ mod tests {
         ));
         let logs = b.drain(&mut NativeExec);
         assert_eq!(logs.len(), 1);
+    }
+
+    #[test]
+    fn prefix_sharing_discounts_admission_budget() {
+        let weights = tiny_weights();
+        // 3 slots over 6 pages × 4 tokens = 24 cached tokens.
+        let mut engine = Engine::with_paged_slots(weights, 3, 4, Some(6));
+        engine.enable_prefix_cache();
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        // 9-token prompt: two full pages to share. Worst case per
+        // request: 9 + 4 − 1 = 12 tokens → 3 pages, so *without* sharing
+        // three of these (9 pages) could never be live together.
+        let prompt: Vec<u32> = (1..=9).collect();
+        let r0 = Request { id: 0, prompt: prompt.clone(), n_out: 4 };
+        assert!(matches!(
+            b.admit(r0, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.committed_pages(), 3);
+        // Same prompt again: both full prompt pages alias r0's live
+        // pages, so the commitment grows only by the fresh worst case —
+        // shared pages are never double-counted against their allocator.
+        let r1 = Request { id: 1, prompt: prompt.clone(), n_out: 4 };
+        assert!(matches!(
+            b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.committed_pages(), 4, "aliased pages not double-counted");
+        let s = b.reuse_stats();
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_hit_tokens, 8, "two full pages skipped");
+        let r2 = Request { id: 2, prompt: prompt.clone(), n_out: 4 };
+        assert!(matches!(
+            b.admit(r2, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.committed_pages(), 5, "three live in a 6-page pool");
+        let mut logs = b.drain(&mut exec);
+        logs.sort_by_key(|l| l.id);
+        assert_eq!(logs.len(), 3);
+        // Shared-prefix decode is bit-identical across the three.
+        assert_eq!(logs[0].tokens, logs[1].tokens);
+        assert_eq!(logs[1].tokens, logs[2].tokens);
+        assert_eq!(b.committed_pages(), 0, "drain releases the whole budget");
+    }
+
+    #[test]
+    fn finished_prefix_reuse_commits_shared_pages_once() {
+        let weights = tiny_weights();
+        let mut engine = Engine::with_paged_slots(weights, 2, 4, Some(6));
+        engine.enable_prefix_cache();
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        let prompt: Vec<u32> = (10..19).collect();
+        let r0 = Request { id: 0, prompt: prompt.clone(), n_out: 4 };
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        b.drain(&mut exec);
+        assert_eq!(b.committed_pages(), 0);
+        // r0 finished but its two full prompt pages stay cached.
+        assert_eq!(b.engine().cache.cached_resident_pages(), 2);
+        // A warm hit with no live allocator: the shared pages are pinned
+        // into the commitment exactly once, next to the fresh page.
+        let r1 = Request { id: 1, prompt: prompt.clone(), n_out: 4 };
+        assert!(matches!(
+            b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.committed_pages(), 3, "1 fresh + 2 pinned shared");
+        assert_eq!(b.reuse_stats().prefix_hits, 1);
+        b.drain(&mut exec);
+        assert_eq!(b.committed_pages(), 0);
     }
 
     #[test]

@@ -8,9 +8,23 @@
 //! a request admitted mid-run starts decoding while earlier requests are
 //! still generating. Each worker's KV cache is paged
 //! (`--page-size`/`--kv-pages`): admission gates on the free-page budget
-//! rather than slot count alone, deferred requests return to the queue
-//! head, and a request whose worst case can never fit the pool completes
-//! with [`Completion::error`] set instead of wedging the queue. The kernel executor comes from the
+//! rather than slot count alone, deferred requests return to the queue,
+//! and a request whose worst case can never fit the pool completes
+//! with [`Completion::error`] set instead of wedging the queue.
+//!
+//! Admission scans a **bounded window** past the queue head
+//! ([`ADMIT_SCAN_WINDOW`]) so one deferred large request cannot block
+//! later requests that still fit the remaining pages, and the window
+//! order is a [`SchedPolicy`]: FIFO, or shortest-job-first by
+//! prefix-aware worst-case pages (`--sched sjf`). With `--prefix-cache`
+//! each worker shares committed prompt pages across requests
+//! (admissions alias page-aligned cached prefixes and skip their
+//! prefill), and `--swap-pages N` backs eviction with a host swap arena
+//! so the pool can oversubscribe; [`ServeReport::reuse`] carries the
+//! hit/evict/swap counters and [`ServeReport::kv_swap_bytes`] the swap
+//! traffic the imax cost model charged through the DMA transfer mode.
+//!
+//! The kernel executor comes from the
 //! [`BackendRegistry`], so the same loop can serve on native kernels,
 //! instrumented-IMAX accounting (per-phase modeled costs in the report),
 //! PJRT, or a heterogeneous per-layer-range placement
@@ -28,15 +42,21 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::{Admitted, ContinuousBatcher};
+use crate::coordinator::scheduler::{Admitted, ContinuousBatcher, SchedPolicy};
 pub use crate::coordinator::scheduler::Request;
 use crate::imax::timing::RunBreakdown;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
-use crate::model::kv_cache::DEFAULT_PAGE_SIZE;
+use crate::model::kv_cache::{KvReuseStats, DEFAULT_PAGE_SIZE};
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
 use crate::runtime::backend::{BackendRegistry, BackendReport, ExecSpec};
 use crate::util::stats::{percentile, Summary};
+
+/// How many queued requests admission may scan past a deferred head per
+/// round. Bounded so a worker never starves decode rounds walking a long
+/// queue, but deep enough that one oversized head doesn't idle free
+/// pages (the head-of-line fix).
+pub const ADMIT_SCAN_WINDOW: usize = 8;
 
 /// Serving configuration beyond the request list.
 #[derive(Clone, Debug)]
@@ -58,6 +78,16 @@ pub struct ServeOptions {
     /// is what lets many short sequences share a budget that fixed-stride
     /// slots would exhaust.
     pub kv_pages: Option<usize>,
+    /// Share committed prompt-prefix pages across requests on each
+    /// worker (`--prefix-cache`): warm admissions alias cached pages and
+    /// skip the aliased span's prefill.
+    pub prefix_cache: bool,
+    /// Host swap-arena capacity in pages per worker (`--swap-pages`;
+    /// 0 disables). Evicted cached pages move host-side and swap back in
+    /// on demand instead of being dropped. Requires `prefix_cache`.
+    pub swap_pages: usize,
+    /// Admission order within the scan window (`--sched fifo|sjf`).
+    pub sched: SchedPolicy,
 }
 
 impl Default for ServeOptions {
@@ -69,6 +99,9 @@ impl Default for ServeOptions {
             spec: ExecSpec::Native,
             page_size: DEFAULT_PAGE_SIZE,
             kv_pages: None,
+            prefix_cache: false,
+            swap_pages: 0,
+            sched: SchedPolicy::Fifo,
         }
     }
 }
@@ -116,6 +149,12 @@ pub struct ServeReport {
     /// over each worker's own peak — an upper bound on simultaneous
     /// residency, and the quantity `--kv-pages` caps per worker.
     pub kv_peak_bytes_f16: usize,
+    /// Prefix-hit / CoW / eviction / swap counters, merged over workers.
+    pub reuse: KvReuseStats,
+    /// KV swap traffic charged through the imax DMA cost model (f16
+    /// bytes, both directions; 0 for functional backends, which move no
+    /// modeled bytes).
+    pub kv_swap_bytes: u64,
 }
 
 /// Serve a batch of requests over `n_workers` native-kernel workers;
@@ -154,6 +193,12 @@ pub fn serve_with(
     if opts.kv_pages == Some(0) {
         anyhow::bail!("kv_pages must be at least 1");
     }
+    if opts.swap_pages > 0 && !opts.prefix_cache {
+        anyhow::bail!(
+            "swap_pages requires prefix_cache: only indexed prefix pages are ever \
+             evicted to the host arena (pass --prefix-cache)"
+        );
+    }
     BackendRegistry::validate(&opts.spec)?;
     if let ExecSpec::Placement(p) = &opts.spec {
         // Fail fast on a placement that leaves layers of *this* model
@@ -175,15 +220,21 @@ pub fn serve_with(
         let tx = tx.clone();
         let weights = weights.clone();
         let opts = opts.clone();
-        handles.push(thread::spawn(move || -> (BackendReport, usize) {
+        handles.push(thread::spawn(move || -> (BackendReport, usize, KvReuseStats) {
             let mut exec =
                 BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
-            let engine = Engine::with_paged_slots(
+            let mut engine = Engine::with_paged_slots(
                 weights,
                 opts.slots_per_worker,
                 opts.page_size,
                 opts.kv_pages,
             );
+            if opts.prefix_cache {
+                engine.enable_prefix_cache();
+                if opts.swap_pages > 0 {
+                    engine.set_kv_swap_capacity(opts.swap_pages);
+                }
+            }
             let mut batcher = ContinuousBatcher::new(engine, opts.ubatch, started);
             let send = |log: crate::coordinator::scheduler::SessionLog,
                         tx: &mpsc::Sender<Completion>| {
@@ -205,50 +256,89 @@ pub fn serve_with(
             loop {
                 // Admit new requests *between* decode rounds — the
                 // continuous-batching step. The batcher gates on both
-                // free session slots and the KV page budget; a request
-                // that does not fit right now goes back to the queue
-                // head until decode rounds retire sequences.
-                while batcher.capacity() > 0 {
-                    let item = queue.lock().unwrap().pop_front();
-                    let Some((req, enq)) = item else { break };
-                    let queue_s = enq.elapsed().as_secs_f64();
-                    let sampler =
-                        Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
-                    match batcher.admit(req, sampler, queue_s, &mut exec) {
-                        Ok(Admitted::Active) => {}
-                        Ok(Admitted::Finished(log)) => send(log, &tx),
-                        Ok(Admitted::Deferred(req)) => {
-                            // With nothing active every page is free, so
-                            // a deferral here could never resolve; admit
-                            // gates that case as TooLarge instead.
-                            assert!(
-                                batcher.n_active() > 0,
-                                "deferred with an idle engine: request {} cannot progress",
-                                req.id
-                            );
-                            queue.lock().unwrap().push_front((req, enq));
+                // free session slots and the KV page budget; admission
+                // scans a bounded window past the head, so one deferred
+                // large request does not block later requests that fit
+                // the remaining pages. Everything not admitted returns
+                // to the queue front in arrival order.
+                loop {
+                    if batcher.capacity() == 0 {
+                        break;
+                    }
+                    let window: Vec<(Request, Instant)> = {
+                        let mut q = queue.lock().unwrap();
+                        let take = q.len().min(ADMIT_SCAN_WINDOW);
+                        q.drain(..take).collect()
+                    };
+                    if window.is_empty() {
+                        break;
+                    }
+                    let mut order: Vec<usize> = (0..window.len()).collect();
+                    if opts.sched == SchedPolicy::Sjf {
+                        // Shortest job first by prefix-aware effective
+                        // cost; stable, so ties keep arrival order.
+                        order.sort_by_key(|&i| batcher.effective_cost_pages(&window[i].0));
+                    }
+                    let mut kept: Vec<Option<(Request, Instant)>> =
+                        window.into_iter().map(Some).collect();
+                    let mut admitted_any = false;
+                    for idx in order {
+                        if batcher.capacity() == 0 {
                             break;
                         }
-                        Err(e) => {
-                            // Unservable on this engine (worst case above
-                            // the whole pool): complete it as an error
-                            // instead of wedging the queue.
-                            let now = started.elapsed().as_secs_f64();
-                            tx.send(Completion {
-                                id: e.id(),
-                                tokens: Vec::new(),
-                                queue_s,
-                                prefill_s: 0.0,
-                                decode_s: 0.0,
-                                total_s: queue_s,
-                                worker,
-                                admitted_s: now,
-                                decode_start_s: now,
-                                finished_s: now,
-                                error: Some(e.to_string()),
-                            })
-                            .ok();
+                        let (req, enq) = kept[idx].take().expect("each index visited once");
+                        let queue_s = enq.elapsed().as_secs_f64();
+                        let sampler =
+                            Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
+                        match batcher.admit(req, sampler, queue_s, &mut exec) {
+                            Ok(Admitted::Active) => admitted_any = true,
+                            Ok(Admitted::Finished(log)) => {
+                                admitted_any = true;
+                                send(log, &tx);
+                            }
+                            Ok(Admitted::Deferred(req)) => kept[idx] = Some((req, enq)),
+                            Err(e) => {
+                                // Unservable on this engine (worst case
+                                // above the whole pool): complete it as
+                                // an error instead of wedging the queue.
+                                admitted_any = true;
+                                let now = started.elapsed().as_secs_f64();
+                                tx.send(Completion {
+                                    id: e.id(),
+                                    tokens: Vec::new(),
+                                    queue_s,
+                                    prefill_s: 0.0,
+                                    decode_s: 0.0,
+                                    total_s: queue_s,
+                                    worker,
+                                    admitted_s: now,
+                                    decode_start_s: now,
+                                    finished_s: now,
+                                    error: Some(e.to_string()),
+                                })
+                                .ok();
+                            }
                         }
+                    }
+                    let deferred_all = {
+                        let mut q = queue.lock().unwrap();
+                        let mut any = false;
+                        for item in kept.into_iter().flatten().rev() {
+                            q.push_front(item);
+                            any = true;
+                        }
+                        any
+                    };
+                    if !admitted_any {
+                        // With nothing active every page is free and no
+                        // shared page is pinned, so a whole-window
+                        // deferral could never resolve; admit gates that
+                        // case as TooLarge instead.
+                        assert!(
+                            !deferred_all || batcher.n_active() > 0,
+                            "deferred with an idle engine: nothing can progress"
+                        );
+                        break;
                     }
                 }
                 if batcher.n_active() == 0 {
@@ -265,16 +355,22 @@ pub fn serve_with(
             // Peak page-granular KV residency on this worker's engine —
             // the quantity `--kv-pages` budgets.
             let kv_peak = batcher.engine().cache.peak_resident_bytes_f16();
-            (exec.report(), kv_peak)
+            let reuse = batcher.reuse_stats();
+            (exec.report(), kv_peak, reuse)
         }));
     }
     drop(tx);
 
     let mut completions: Vec<Completion> = rx.iter().collect();
-    let (reports, kv_peaks): (Vec<BackendReport>, Vec<usize>) = handles
-        .into_iter()
-        .map(|h| h.join().expect("worker panicked"))
-        .unzip();
+    let mut reports = Vec::new();
+    let mut kv_peak_total = 0usize;
+    let mut reuse = KvReuseStats::default();
+    for h in handles {
+        let (report, kv_peak, worker_reuse) = h.join().expect("worker panicked");
+        reports.push(report);
+        kv_peak_total += kv_peak;
+        reuse.merge(&worker_reuse);
+    }
     completions.sort_by_key(|c| c.id);
     assert_eq!(completions.len(), n_req, "all requests completed");
 
@@ -301,8 +397,10 @@ pub fn serve_with(
         backend: opts.spec.name(),
         modeled: merged.modeled,
         offload_ratio: merged.offload_ratio,
+        kv_swap_bytes: merged.kv_swap_bytes,
         per_backend: merged.parts,
-        kv_peak_bytes_f16: kv_peaks.iter().sum(),
+        kv_peak_bytes_f16: kv_peak_total,
+        reuse,
     })
 }
 
@@ -454,6 +552,88 @@ mod tests {
             assert!(c.error.is_none(), "small requests are unaffected");
             assert_eq!(c.tokens.len(), 3);
         }
+    }
+
+    #[test]
+    fn deferred_head_does_not_block_fitting_requests() {
+        // Head-of-line fix: pool of 4 pages × 4 tokens per worker. The
+        // queue is [medium (3 pages), big (4 pages), small (1 page)]:
+        // medium admits, big defers — and small, which fits next to
+        // medium, must be admitted *past* the deferred big instead of
+        // waiting for it.
+        let opts = ServeOptions {
+            slots_per_worker: 2,
+            page_size: 4,
+            kv_pages: Some(4),
+            ..ServeOptions::default()
+        };
+        let requests = vec![
+            Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 5 }, // 9 tok → 3 pages
+            Request { id: 1, prompt: vec![9; 8], n_out: 6 },          // 13 tok → 4 pages
+            Request { id: 2, prompt: vec![7, 7], n_out: 2 },          // 3 tok → 1 page
+        ];
+        let rep = serve_with(&tiny_weights(), requests, 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        for c in &rep.completions {
+            assert!(c.error.is_none(), "request {} rejected: {:?}", c.id, c.error);
+        }
+        let medium = &rep.completions[0];
+        let big = &rep.completions[1];
+        let small = &rep.completions[2];
+        assert!(
+            small.admitted_s < big.admitted_s,
+            "small ({}) must jump the deferred big ({})",
+            small.admitted_s,
+            big.admitted_s
+        );
+        assert!(
+            big.admitted_s >= small.finished_s,
+            "big only fits after earlier work retires pages"
+        );
+        assert!(medium.admitted_s <= small.admitted_s);
+    }
+
+    #[test]
+    fn sjf_admits_short_jobs_first() {
+        // One slot: whichever request is admitted first fully serializes
+        // the other behind it. SJF must pick the short one even though
+        // the long one arrived first.
+        let mk_opts = |sched| ServeOptions {
+            slots_per_worker: 1,
+            sched,
+            ..ServeOptions::default()
+        };
+        let mk_reqs = || {
+            vec![
+                Request { id: 0, prompt: vec![3; 12], n_out: 10 },
+                Request { id: 1, prompt: vec![5, 6], n_out: 2 },
+            ]
+        };
+        let sjf = serve_with(&tiny_weights(), mk_reqs(), 1, &mk_opts(SchedPolicy::Sjf)).unwrap();
+        let (long, short) = (&sjf.completions[0], &sjf.completions[1]);
+        assert!(
+            short.admitted_s < long.admitted_s,
+            "sjf admits the short job first ({} vs {})",
+            short.admitted_s,
+            long.admitted_s
+        );
+        let fifo = serve_with(&tiny_weights(), mk_reqs(), 1, &mk_opts(SchedPolicy::Fifo)).unwrap();
+        let (long, short) = (&fifo.completions[0], &fifo.completions[1]);
+        assert!(long.admitted_s < short.admitted_s, "fifo keeps arrival order");
+        // Policy changes order, never tokens.
+        for (a, b) in sjf.completions.iter().zip(&fifo.completions) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn swap_without_prefix_cache_is_rejected() {
+        let opts = ServeOptions {
+            swap_pages: 8,
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("prefix_cache"), "{err}");
     }
 
     #[test]

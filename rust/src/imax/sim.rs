@@ -182,6 +182,31 @@ pub fn host_cost(dev: &ImaxDevice, op: &MatvecOp, batch: usize) -> PhaseCost {
     }
 }
 
+/// Modeled cost of moving evicted KV pages across the host↔accelerator
+/// DMA path (prefix-cache swap traffic). Swap-ins ride the LOAD path,
+/// swap-outs the DRAIN path, both under the active [`TransferMode`] — so
+/// naive mode's fragmentation penalty applies to oversubscription exactly
+/// as it does to kernel operands, and the paper's transfer bottleneck
+/// stays visible when serving swaps. K and V move as two operand arrays;
+/// staging the block through the host-side DMA buffer is charged to HOST.
+pub fn kv_swap_cost(
+    dev: &ImaxDevice,
+    bytes: usize,
+    dir: crate::model::graph::KvSwapDir,
+    mode: TransferMode,
+) -> PhaseCost {
+    let t = Transfer { bytes, n_arrays: 2 };
+    let mut c = PhaseCost {
+        host: dma::stage_seconds(dev, bytes),
+        ..PhaseCost::ZERO
+    };
+    match dir {
+        crate::model::graph::KvSwapDir::In => c.load = dma::load_seconds(dev, t, mode),
+        crate::model::graph::KvSwapDir::Out => c.drain = dma::drain_seconds(dev, t, mode),
+    }
+    c
+}
+
 /// Host-side per-token work that is never offloaded (paper Fig 4's blue
 /// boxes): RMSNorms, RoPE, softmaxes, residuals, sampling scan.
 pub fn host_token_overhead(
@@ -324,5 +349,26 @@ mod tests {
         let a = host_token_overhead(&dev, 1024, 28, 16, 8, Some(151936));
         let b = host_token_overhead(&dev, 1024, 28, 16, 4096, Some(151936));
         assert!(b.host > a.host);
+    }
+
+    #[test]
+    fn kv_swap_cost_rides_the_dma_transfer_mode() {
+        use crate::model::graph::KvSwapDir;
+        let dev = ImaxDevice::fpga(2);
+        let bytes = 256 * 1024;
+        let cin = kv_swap_cost(&dev, bytes, KvSwapDir::In, TransferMode::Coalesced);
+        let cout = kv_swap_cost(&dev, bytes, KvSwapDir::Out, TransferMode::Coalesced);
+        // Direction maps to the matching DMA component, nothing else.
+        assert!(cin.load > 0.0 && cin.drain == 0.0 && cin.exec == 0.0);
+        assert!(cout.drain > 0.0 && cout.load == 0.0 && cout.exec == 0.0);
+        assert!(cin.host > 0.0, "staging memcpy charged to HOST");
+        // The transfer mode's coalescing penalty carries over to swaps.
+        let nin = kv_swap_cost(&dev, bytes, KvSwapDir::In, TransferMode::Naive);
+        let nout = kv_swap_cost(&dev, bytes, KvSwapDir::Out, TransferMode::Naive);
+        assert!(nin.load > cin.load, "naive swap-in pays fragmentation");
+        assert!(nout.drain > cout.drain, "naive swap-out pays fragmentation");
+        // More bytes, more seconds.
+        let big = kv_swap_cost(&dev, 2 * bytes, KvSwapDir::In, TransferMode::Coalesced);
+        assert!(big.load > cin.load);
     }
 }

@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 use imax_llm::baseline::calibration as cal;
 use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
-use imax_llm::coordinator::{serve_with, Request, ServeOptions};
+use imax_llm::coordinator::{serve_with, Request, SchedPolicy, ServeOptions};
 use imax_llm::harness::experiments as exp;
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
 use imax_llm::model::{
@@ -287,6 +287,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .transpose()?
         .unwrap_or(DEFAULT_PAGE_SIZE);
     let kv_pages: Option<usize> = flags.get("kv-pages").map(|s| s.parse()).transpose()?;
+    let prefix_cache = flags.get("prefix-cache").map(|v| v == "true").unwrap_or(false);
+    let swap_pages: usize = flags.get("swap-pages").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let sched = match flags.get("sched") {
+        Some(s) => SchedPolicy::by_name(s)
+            .with_context(|| format!("unknown admission policy '{s}' (use fifo|sjf)"))?,
+        None => SchedPolicy::Fifo,
+    };
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -305,10 +312,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     let weights = ModelWeights::random(&cfg, scheme, 2025);
     let requests: Vec<Request> = (0..n_req)
-        .map(|id| Request {
-            id,
-            prompt: (0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32).collect(),
-            n_out: 16,
+        .map(|id| {
+            // With the prefix cache on, serve a templated workload: a
+            // shared system-prompt prefix of two full pages plus a short
+            // unique user suffix — the shape prefix sharing targets.
+            let mut prompt: Vec<u32> = if prefix_cache {
+                (0..2 * page_size).map(|i| 2 + (i % 97) as u32).collect()
+            } else {
+                Vec::new()
+            };
+            prompt.extend((0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32));
+            Request { id, prompt, n_out: 16 }
         })
         .collect();
     let opts = ServeOptions {
@@ -318,6 +332,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         spec,
         page_size,
         kv_pages,
+        prefix_cache,
+        swap_pages,
+        sched,
     };
     let rep = serve_with(&weights, requests, workers, &opts)?;
     println!(
@@ -334,6 +351,27 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "peak resident KV (f16, page-granular, summed per worker): {}",
         imax_llm::util::human_bytes(rep.kv_peak_bytes_f16)
     );
+    if prefix_cache {
+        let r = &rep.reuse;
+        println!(
+            "prefix cache: {} hits / {} prefill tokens skipped; CoW {}; evicted {} \
+             pages ({} swapped out, {} dropped), {} swapped in; swap traffic {}",
+            r.prefix_hits,
+            r.prefix_hit_tokens,
+            r.cow_pages,
+            r.evicted_pages(),
+            r.swap_out_pages,
+            r.dropped_pages,
+            r.swap_in_pages,
+            imax_llm::util::human_bytes(r.swap_bytes),
+        );
+    }
+    if rep.kv_swap_bytes > 0 {
+        println!(
+            "modeled KV swap traffic charged through the DMA transfer mode: {}",
+            imax_llm::util::human_bytes(rep.kv_swap_bytes as usize)
+        );
+    }
     let rejected: Vec<&imax_llm::coordinator::Completion> =
         rep.completions.iter().filter(|c| c.error.is_some()).collect();
     for c in &rejected {
@@ -447,6 +485,7 @@ functional engine (real tiny models, real tokens):
               [--backend SPEC]   (default imax)
   serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
               [--page-size N] [--kv-pages N]
+              [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
@@ -455,7 +494,14 @@ functional engine (real tiny models, real tokens):
               --kv-pages caps each worker's pool (admission defers until
               pages free up; impossible requests are rejected), --page-size
               sets tokens per page (default 16); omit --kv-pages to fully
-              back every slot
+              back every slot. --prefix-cache shares committed prompt-prefix
+              pages across requests (refcounted copy-on-write pages; warm
+              admissions skip the aliased span's prefill and the report
+              prints hit counters); --swap-pages N backs eviction with a
+              host swap arena of N pages per worker (swap traffic is charged
+              through the imax DMA transfer mode; requires --prefix-cache);
+              --sched picks admission order: fifo (default) or sjf
+              (shortest job first by prefix-aware worst-case pages)
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 

@@ -33,10 +33,20 @@
 //! [`CacheError`] (context overflow / page-pool exhaustion) so the
 //! continuous-batching scheduler can defer work instead of unwinding.
 //! The infallible wrappers panic with the same typed message.
+//!
+//! With the prefix cache enabled ([`Engine::enable_prefix_cache`]),
+//! prefill is **prefix-aware**: [`Engine::try_prefill_session_shared`]
+//! aliases the cached page-aligned prefix of the prompt into the
+//! session's block table and executes only the uncached tail — the
+//! aliased K/V bytes are bit-identical to what a cold prefill would
+//! compute, so generation matches token-for-token while skipping the
+//! aliased span's kernels entirely. Host↔device page swap traffic
+//! (eviction under pressure, swap-in on a hit) is charged to the
+//! executor through [`MatvecExec::kv_transfer`].
 
 use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
-use crate::model::graph::{MatvecOp, OpKind, Phase};
-use crate::model::kv_cache::{CacheError, KvCache};
+use crate::model::graph::{KvSwapDir, MatvecOp, OpKind, Phase};
+use crate::model::kv_cache::{AdoptedPrefix, CacheError, KvCache};
 use crate::model::ops;
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
@@ -73,6 +83,13 @@ pub trait MatvecExec {
     /// as one step spanning `pos..pos+n`). Default: no-op.
     fn begin_step(&mut self, _phase: Phase, _pos: usize) {}
     fn end_step(&mut self, _phase: Phase, _pos: usize) {}
+
+    /// Observe a host↔device KV page swap (prefix-cache eviction or
+    /// restore) of `bytes` f16 cache bytes. Instrumented backends charge
+    /// this through the DMA transfer-mode cost model; the default ignores
+    /// it (functional backends move no real bytes — the cache is
+    /// host-resident).
+    fn kv_transfer(&mut self, _phase: Phase, _dir: KvSwapDir, _bytes: usize) {}
 }
 
 /// The plan/submit execution API the engine drives: [`MatvecExec`] kernel
@@ -217,6 +234,17 @@ pub struct GenerateResult {
     pub n_prefill: usize,
 }
 
+/// Result of a prefix-aware prefill ([`Engine::try_prefill_session_shared`]).
+#[derive(Clone, Debug)]
+pub struct SharedPrefill {
+    /// Logits of the prompt's last token.
+    pub logits: Vec<f32>,
+    /// Prompt tokens served by aliased cached pages (no forward pass).
+    pub cached_tokens: usize,
+    /// Prompt tokens actually executed (`prompt.len() − cached_tokens`).
+    pub executed_tokens: usize,
+}
+
 impl Engine {
     /// Single-sequence engine (legacy API; slot 0 is the implicit
     /// sequence).
@@ -297,6 +325,83 @@ impl Engine {
     /// Pages required to hold `n_tokens` cached tokens.
     pub fn pages_needed(&self, n_tokens: usize) -> usize {
         self.cache.pages_needed(n_tokens)
+    }
+
+    /// Fingerprint of the model configuration + quantization scheme,
+    /// seeding the prefix cache's chain keys so cached pages can never
+    /// alias across incompatible engines.
+    pub fn kv_fingerprint(&self) -> u64 {
+        crate::model::kv_cache::model_fingerprint(&self.weights.cfg, self.weights.scheme)
+    }
+
+    /// Turn on prompt-prefix sharing: committed prompt pages are indexed
+    /// by content and aliased into later sessions with the same
+    /// page-aligned prefix ([`Engine::adopt_prefix`] /
+    /// [`Engine::register_prefix`]).
+    pub fn enable_prefix_cache(&mut self) {
+        let fp = self.kv_fingerprint();
+        self.cache.enable_prefix_cache(fp);
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.cache.prefix_cache_enabled()
+    }
+
+    /// Size the host swap arena backing prefix-cache eviction (pages).
+    /// Requires [`Engine::enable_prefix_cache`] first.
+    pub fn set_kv_swap_capacity(&mut self, pages: usize) {
+        self.cache.set_swap_capacity(pages);
+    }
+
+    /// The cached page-aligned span of `prompt` without mutating the
+    /// cache: `(cached_tokens, resident_pages, swapped_pages)`, capped so
+    /// at least one prompt token always executes (the last token's
+    /// logits must be computed fresh).
+    pub fn peek_prefix(&self, prompt: &[u32]) -> (usize, usize, usize) {
+        if prompt.len() <= 1 {
+            return (0, 0, 0);
+        }
+        self.cache.peek_prefix(prompt, prompt.len() - 1)
+    }
+
+    /// Alias the cached prefix of `prompt` into `session`'s slot (must be
+    /// fresh), swapping evicted pages back in from the host arena as
+    /// needed; swap traffic is charged to `exec` through
+    /// [`MatvecExec::kv_transfer`]. Prefill may then start at
+    /// `AdoptedPrefix::tokens`. At least one prompt token is always left
+    /// to execute.
+    pub fn adopt_prefix(
+        &mut self,
+        session: &Session,
+        prompt: &[u32],
+        exec: &mut dyn KernelExec,
+    ) -> AdoptedPrefix {
+        if prompt.len() <= 1 || !self.cache.prefix_cache_enabled() {
+            return AdoptedPrefix::default();
+        }
+        let adopted = self.cache.adopt_prefix(session.slot, prompt, prompt.len() - 1);
+        self.charge_pending_swaps(Phase::Prefill, exec);
+        adopted
+    }
+
+    /// Register `session`'s committed prompt pages in the prefix index
+    /// (call after a successful prefill); later sessions with the same
+    /// page-aligned prefix alias them instead of re-computing.
+    pub fn register_prefix(&mut self, session: &Session, prompt: &[u32]) {
+        self.cache.register_prefix(session.slot, prompt);
+    }
+
+    /// Drain swap bytes the cache accumulated (evictions during
+    /// reservations, swap-ins during adoption) into the executor's DMA
+    /// accounting.
+    fn charge_pending_swaps(&mut self, phase: Phase, exec: &mut dyn KernelExec) {
+        let (in_bytes, out_bytes) = self.cache.take_pending_swap_bytes();
+        if in_bytes > 0 {
+            exec.kv_transfer(phase, KvSwapDir::In, in_bytes);
+        }
+        if out_bytes > 0 {
+            exec.kv_transfer(phase, KvSwapDir::Out, out_bytes);
+        }
     }
 
     /// Claim a free KV-cache slot for a new sequence. `None` when every
@@ -407,6 +512,33 @@ impl Engine {
         self.try_prefill_on_slot(session.slot, prompt, ubatch, exec)
     }
 
+    /// Prefix-aware prefill for a fresh session: alias the cached
+    /// page-aligned prefix of `prompt` ([`Engine::adopt_prefix`]), run
+    /// prefill only for the uncached tail, then register the committed
+    /// prompt pages for future sharing. With the prefix cache disabled
+    /// this is exactly [`Engine::try_prefill_session`]. The aliased pages
+    /// hold bit-identical K/V to a cold prefill, so generation after a
+    /// warm hit matches a cold run token-for-token while executing
+    /// strictly fewer prefill tokens.
+    pub fn try_prefill_session_shared(
+        &mut self,
+        session: &Session,
+        prompt: &[u32],
+        ubatch: usize,
+        exec: &mut dyn KernelExec,
+    ) -> Result<SharedPrefill, CacheError> {
+        let adopted = self.adopt_prefix(session, prompt, exec);
+        debug_assert!(adopted.tokens < prompt.len(), "at least one token executes");
+        let logits =
+            self.try_prefill_on_slot(session.slot, &prompt[adopted.tokens..], ubatch, exec)?;
+        self.register_prefix(session, prompt);
+        Ok(SharedPrefill {
+            logits,
+            cached_tokens: adopted.tokens,
+            executed_tokens: prompt.len() - adopted.tokens,
+        })
+    }
+
     /// Chunked-prefill core shared by the session API and the legacy
     /// `generate` path.
     fn try_prefill_on_slot(
@@ -466,6 +598,9 @@ impl Engine {
         self.cache.try_reserve(slot, n)?;
         self.scratch.ensure(&cfg, n);
         exec.begin_step(phase, base);
+        // The reservation may have evicted cold cached pages to the host
+        // arena: charge that swap traffic to this step's phase.
+        self.charge_pending_swaps(phase, exec);
 
         let d = cfg.d_model;
         let qd = cfg.q_dim();

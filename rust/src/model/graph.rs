@@ -31,6 +31,27 @@ impl Phase {
     }
 }
 
+/// Direction of a host↔device KV page transfer (prefix-cache swap
+/// eviction / restore). The instrumented backend charges these through
+/// the DMA [`crate::imax::dma::TransferMode`] cost model so oversubscribed
+/// serving keeps the paper's transfer bottleneck visible.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum KvSwapDir {
+    /// Host arena → device pool (swap-in on a prefix hit).
+    In,
+    /// Device pool → host arena (eviction under page pressure).
+    Out,
+}
+
+impl KvSwapDir {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvSwapDir::In => "swap-in",
+            KvSwapDir::Out => "swap-out",
+        }
+    }
+}
+
 /// What a dot-product kernel instance computes.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum OpKind {

@@ -1,4 +1,5 @@
-//! Paged multi-sequence KV cache.
+//! Paged multi-sequence KV cache with refcounted copy-on-write pages,
+//! prefix sharing, and host-swap eviction.
 //!
 //! The paper's host CPU owns "KV cache management" (§III.A), and the
 //! decode phase's LOAD-bound behaviour (§V.B) comes from streaming this
@@ -16,9 +17,39 @@
 //!   ids backing logical positions `0..slot_len(slot)`. Position `pos`
 //!   of `slot` lives at offset `pos % page_size` inside page
 //!   `table[pos / page_size]`.
-//! * Unowned pages sit on a LIFO *free list*. [`KvCache::try_reserve`]
-//!   pops pages lazily as a slot's sequence crosses page boundaries and
-//!   [`KvCache::reset_slot`] pushes exactly that slot's pages back.
+//! * Pages are **refcounted**: a page's count is the number of block-table
+//!   entries referencing it, plus one if the prefix index holds it (see
+//!   below). Pages at count zero sit on a LIFO *free list*.
+//!   [`KvCache::try_reserve`] pops pages lazily as a slot's sequence
+//!   crosses page boundaries and [`KvCache::reset_slot`] releases exactly
+//!   that slot's references — a page returns to the free list only when
+//!   its last reference drops.
+//! * A shared page is immutable through any one table: [`KvCache::store`]
+//!   to a page with more than one reference triggers **copy-on-write**,
+//!   so writers can never clobber bytes another reader (or the prefix
+//!   index) still sees.
+//!
+//! Two subsystems build on the refcounts (both opt-in; with neither
+//! enabled every page has exactly one reference and behaviour is
+//! bit-identical to exclusive ownership):
+//!
+//! * **Prefix cache** ([`KvCache::enable_prefix_cache`]) — a
+//!   content-addressed index over *full* pages of committed prompt
+//!   tokens. Keys are chain hashes of `(model fingerprint, parent key,
+//!   the page's token ids)`, verified against the stored token span, so
+//!   a lookup for a new prompt walks page-aligned spans and
+//!   [`KvCache::adopt_prefix`] aliases every consecutively cached page
+//!   into the new slot's block table — the engine then skips prefill for
+//!   the aliased span. Registered pages carry the index's reference, so
+//!   they survive the owning sequence finishing ("recently-finished"
+//!   reuse) until evicted.
+//! * **Host-swap arena** ([`KvCache::set_swap_capacity`]) — when the pool
+//!   runs dry, the coldest *unpinned* cached pages (held only by the
+//!   index, LRU by last touch) are evicted to a host-side arena instead
+//!   of being dropped, and swapped back in on a later prefix hit. Swap
+//!   traffic is surfaced through [`KvCache::take_pending_swap_bytes`] so
+//!   the engine can charge it through the DMA transfer cost model — the
+//!   paper's transfer bottleneck stays visible in reports.
 //!
 //! The practical consequence, and the reason serving wants paging: slot
 //! count no longer reserves `max_seq` tokens of memory per sequence.
@@ -31,18 +62,25 @@
 //! `page_size = max_seq, n_pages = n_slots` degenerates to exactly the
 //! old contiguous layout — the equivalence suite in
 //! `rust/tests/batching_equiv.rs` pins paged execution bit-identical to
-//! that reference.
+//! that reference, and `rust/tests/prefix_reuse.rs` pins warm prefix hits
+//! output-identical to cold prefill.
 //!
 //! Cache exhaustion is a typed [`CacheError`] (carrying slot, current
 //! length and the failed requirement) so schedulers can defer admission
 //! instead of unwinding. The functional engine keeps K/V in f32; the
 //! *byte accounting* used by the timing path models the llama.cpp
 //! default of an FP16 cache (see `MatvecOp::weight_bytes` with
-//! `GgmlType::F16`) at page granularity.
+//! `GgmlType::F16`) at page granularity — and is **dedup-aware**:
+//! [`KvCache::resident_bytes_f16`] counts each physical page once however
+//! many block tables alias it, while
+//! [`KvCache::logical_resident_bytes_f16`] counts per-slot references
+//! (what exclusive ownership would cost), so the difference is the bytes
+//! prefix sharing keeps off the device.
 
+use std::collections::HashMap;
 use std::fmt;
 
-use crate::model::config::ModelConfig;
+use crate::model::config::{ModelConfig, QuantScheme};
 use crate::util::ceil_div;
 
 /// Default page size in tokens. Small enough that short sequences waste
@@ -62,7 +100,9 @@ pub enum CacheError {
         need: usize,
         max_seq: usize,
     },
-    /// The shared page pool has too few free pages for the reservation.
+    /// The shared page pool has too few free pages for the reservation
+    /// (`free_pages` includes cached pages that could have been
+    /// reclaimed/evicted — the reservation is short even after eviction).
     OutOfPages {
         slot: usize,
         len: usize,
@@ -104,8 +144,159 @@ impl fmt::Display for CacheError {
 
 impl std::error::Error for CacheError {}
 
+/// Counters for the sharing/eviction machinery, merged across workers
+/// into the serve report. All byte quantities use the f16 cache
+/// accounting (the same basis as [`KvCache::resident_bytes_f16`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KvReuseStats {
+    /// Admissions that aliased at least one cached prefix page.
+    pub prefix_hits: usize,
+    /// Prompt tokens served from aliased pages (prefill skipped).
+    pub prefix_hit_tokens: usize,
+    /// Copy-on-write page splits.
+    pub cow_pages: usize,
+    /// Cached pages evicted without swap (arena full or disabled).
+    pub dropped_pages: usize,
+    /// Cached pages evicted to the host swap arena.
+    pub swap_out_pages: usize,
+    /// Pages swapped back in from the arena on a prefix hit.
+    pub swap_in_pages: usize,
+    /// Modeled f16 bytes moved host↔device by swap traffic (both
+    /// directions).
+    pub swap_bytes: usize,
+}
+
+impl KvReuseStats {
+    /// Cached pages evicted from the device pool (dropped + swapped out).
+    pub fn evicted_pages(&self) -> usize {
+        self.dropped_pages + self.swap_out_pages
+    }
+
+    /// Accumulate another worker's counters.
+    pub fn merge(&mut self, other: &KvReuseStats) {
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.cow_pages += other.cow_pages;
+        self.dropped_pages += other.dropped_pages;
+        self.swap_out_pages += other.swap_out_pages;
+        self.swap_in_pages += other.swap_in_pages;
+        self.swap_bytes += other.swap_bytes;
+    }
+}
+
+/// Result of [`KvCache::adopt_prefix`]: the page-aligned cached span
+/// aliased into the slot.
+#[derive(Clone, Debug, Default)]
+pub struct AdoptedPrefix {
+    /// Prompt tokens covered by aliased pages (a multiple of
+    /// `page_size`); prefill may start at this offset.
+    pub tokens: usize,
+    /// The aliased page ids, in block-table order (the scheduler tracks
+    /// these for its dedup-aware admission accounting).
+    pub pages: Vec<u32>,
+}
+
+/// Where a cached page's bytes currently live.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum PageLoc {
+    /// In the device pool, holding one index reference.
+    Resident(u32),
+    /// Evicted to the host swap arena (no device page).
+    Swapped,
+}
+
+/// One content-addressed index entry: a full page of committed prompt
+/// tokens. `prev` chains entries so a prefix hit is exact by
+/// construction (the parent span was verified before this one).
+#[derive(Clone, Debug)]
+struct PrefixEntry {
+    prev: u64,
+    tokens: Vec<u32>,
+    loc: PageLoc,
+    last_touch: u64,
+}
+
+/// Host-side copy of one evicted page (all layers, K and V).
+#[derive(Clone, Debug)]
+struct SwapPage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The prefix-sharing state: content-addressed index + host swap arena.
+#[derive(Clone, Debug)]
+struct PrefixState {
+    /// Model fingerprint mixed into every chain key, so caches never
+    /// alias across incompatible configurations.
+    fingerprint: u64,
+    index: HashMap<u64, PrefixEntry>,
+    arena: HashMap<u64, SwapPage>,
+    /// Maximum pages the host arena may hold (0 = drop on eviction).
+    swap_capacity: usize,
+    /// Logical last-touch clock for LRU eviction.
+    clock: u64,
+}
+
+impl PrefixState {
+    fn touch(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a accumulation of `bytes` into `h` — the one hash the prefix
+/// cache's chain keys and the model fingerprint both build on.
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// FNV-1a over the chain parent key and a token span, seeded with the
+/// model fingerprint. Collisions are tolerated (entries verify the full
+/// token span and parent key on lookup); the hash only buckets.
+fn chain_key(fingerprint: u64, prev: u64, tokens: &[u32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv1a(&mut h, &fingerprint.to_le_bytes());
+    fnv1a(&mut h, &prev.to_le_bytes());
+    for &t in tokens {
+        fnv1a(&mut h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// Fingerprint of a model configuration + quantization scheme. Seeds
+/// every chain key (via [`KvCache::enable_prefix_cache`]) so cached
+/// pages can never alias across incompatible engines.
+pub fn model_fingerprint(cfg: &ModelConfig, scheme: QuantScheme) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv1a(&mut h, cfg.name.as_bytes());
+    for d in [
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        cfg.d_ffn,
+        cfg.vocab_size,
+        cfg.max_seq_len,
+    ] {
+        fnv1a(&mut h, &(d as u64).to_le_bytes());
+    }
+    let scheme_tag: u8 = match scheme {
+        QuantScheme::F16 => 1,
+        QuantScheme::Q8_0 => 2,
+        QuantScheme::Q3KS => 3,
+    };
+    fnv1a(&mut h, &[scheme_tag]);
+    h
+}
+
 /// Paged KV cache for all layers and session slots (see module docs for
-/// the layout).
+/// the layout and the sharing model).
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub kv_dim: usize,
@@ -122,8 +313,11 @@ pub struct KvCache {
     /// Per-slot block table: page ids backing positions `0..lens[slot]`
     /// (the last page may be partially filled).
     tables: Vec<Vec<u32>>,
-    /// LIFO free list of unowned page ids.
+    /// LIFO free list of pages with zero references.
     free: Vec<u32>,
+    /// Per-page reference counts: block-table entries + one for a
+    /// resident prefix-index entry. Zero ⇔ on the free list.
+    refs: Vec<u32>,
     /// Lifetime high-water mark of owned pages (exact peak residency,
     /// updated at allocation so it can't miss pages freed mid-round).
     peak_used: usize,
@@ -131,6 +325,14 @@ pub struct KvCache {
     k: Vec<f32>,
     v: Vec<f32>,
     n_layers: usize,
+    /// Prefix index + swap arena (None: plain exclusive paging).
+    prefix: Option<PrefixState>,
+    /// Sharing/eviction counters (live even without the index, for CoW).
+    stats: KvReuseStats,
+    /// Swap bytes accumulated since the engine last drained them into the
+    /// executor's DMA accounting.
+    pending_swap_in_bytes: usize,
+    pending_swap_out_bytes: usize,
 }
 
 impl KvCache {
@@ -175,10 +377,15 @@ impl KvCache {
             tables: vec![Vec::new(); n_slots],
             // LIFO: page 0 is handed out first.
             free: (0..n_pages as u32).rev().collect(),
+            refs: vec![0; n_pages],
             peak_used: 0,
             k: vec![0.0; cells],
             v: vec![0.0; cells],
             n_layers: cfg.n_layers,
+            prefix: None,
+            stats: KvReuseStats::default(),
+            pending_swap_in_bytes: 0,
+            pending_swap_out_bytes: 0,
         }
     }
 
@@ -211,7 +418,7 @@ impl KvCache {
         self.free.len()
     }
 
-    /// Pages currently owned by slots.
+    /// Pages currently referenced (by block tables or the prefix index).
     pub fn used_pages(&self) -> usize {
         self.n_pages - self.free.len()
     }
@@ -227,31 +434,430 @@ impl KvCache {
         &self.free
     }
 
+    /// Reference count of `page` (block-table entries + a resident index
+    /// entry). Zero means the page is on the free list.
+    pub fn page_ref(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
     /// Pages required to hold `n_tokens` tokens.
     pub fn pages_needed(&self, n_tokens: usize) -> usize {
         ceil_div(n_tokens, self.page_size)
     }
 
-    /// Clear every slot (fresh engine) and return all pages to the pool.
+    /// Clear every slot (fresh engine) and release their page
+    /// references. Cached prefix pages survive (use
+    /// [`KvCache::clear_prefix_cache`] for a full flush).
     pub fn reset(&mut self) {
         for slot in 0..self.n_slots {
             self.reset_slot(slot);
         }
     }
 
-    /// Clear one slot (session closed / slot reassigned), returning
-    /// exactly the pages it held to the free list.
+    /// Clear one slot (session closed / slot reassigned), releasing
+    /// exactly the page references it held. A page returns to the free
+    /// list only when its last reference drops — pages shared with other
+    /// slots or pinned by the prefix index live on.
     pub fn reset_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
         // Most-recently-allocated pages go back on top of the LIFO stack.
         while let Some(page) = self.tables[slot].pop() {
+            self.release_ref(page);
+        }
+    }
+
+    /// Drop one reference to `page`, freeing it when the count reaches
+    /// zero.
+    fn release_ref(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        debug_assert!(*r > 0, "releasing an unreferenced page {page}");
+        *r -= 1;
+        if *r == 0 {
             self.free.push(page);
         }
     }
 
+    /// Take one page off the free list (refcount 1 for the caller),
+    /// evicting cold cached pages if the list is empty. `protect` names
+    /// chain keys that must not be evicted (an in-progress adoption's
+    /// remaining chain). `None` when nothing can be obtained.
+    fn obtain_page(&mut self, protect: &[u64]) -> Option<u32> {
+        if self.free.is_empty() && !self.evict_coldest_unpinned(protect) {
+            return None;
+        }
+        let page = self.free.pop()?;
+        debug_assert_eq!(self.refs[page as usize], 0);
+        self.refs[page as usize] = 1;
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Some(page)
+    }
+
+    // ---- prefix cache & swap arena ----
+
+    /// Turn on the content-addressed prefix index. `fingerprint`
+    /// identifies the model/quantization configuration; it seeds every
+    /// chain key so lookups can never alias across configurations.
+    pub fn enable_prefix_cache(&mut self, fingerprint: u64) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixState {
+                fingerprint,
+                index: HashMap::new(),
+                arena: HashMap::new(),
+                swap_capacity: 0,
+                clock: 0,
+            });
+        }
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Size the host swap arena (pages). Evictions beyond the capacity
+    /// drop the page instead of swapping. Requires the prefix cache —
+    /// only indexed pages are ever evicted.
+    pub fn set_swap_capacity(&mut self, pages: usize) {
+        let p = self
+            .prefix
+            .as_mut()
+            .expect("swap arena requires the prefix cache (enable_prefix_cache first)");
+        p.swap_capacity = pages;
+    }
+
+    /// Sharing/eviction counters so far (prefix-hit counters are filled
+    /// by the scheduler, which knows admissions; see
+    /// [`crate::coordinator::scheduler::ContinuousBatcher::reuse_stats`]).
+    pub fn reuse_stats(&self) -> &KvReuseStats {
+        &self.stats
+    }
+
+    /// Cached (index-resident) pages currently occupying device pages.
+    pub fn cached_resident_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| {
+            p.index.values().filter(|e| matches!(e.loc, PageLoc::Resident(_))).count()
+        })
+    }
+
+    /// Pages currently held by the host swap arena.
+    pub fn swapped_out_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.arena.len())
+    }
+
+    /// The device page ids the prefix index currently holds resident
+    /// (diagnostics and the property suite's refcount accounting).
+    pub fn cached_page_ids(&self) -> Vec<u32> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| {
+            p.index
+                .values()
+                .filter_map(|e| match e.loc {
+                    PageLoc::Resident(page) => Some(page),
+                    PageLoc::Swapped => None,
+                })
+                .collect()
+        })
+    }
+
+    /// Swap traffic (f16 bytes in, bytes out) accumulated since the last
+    /// call — the engine drains this into the executor's DMA accounting
+    /// so modeled reports keep the transfer bottleneck visible.
+    pub fn take_pending_swap_bytes(&mut self) -> (usize, usize) {
+        let out = (self.pending_swap_in_bytes, self.pending_swap_out_bytes);
+        self.pending_swap_in_bytes = 0;
+        self.pending_swap_out_bytes = 0;
+        out
+    }
+
+    /// Drop the whole prefix index and swap arena, releasing the index's
+    /// page references (the full-flush companion of [`KvCache::reset`]).
+    pub fn clear_prefix_cache(&mut self) {
+        let Some(p) = self.prefix.as_mut() else { return };
+        let resident: Vec<u32> = p
+            .index
+            .values()
+            .filter_map(|e| match e.loc {
+                PageLoc::Resident(page) => Some(page),
+                PageLoc::Swapped => None,
+            })
+            .collect();
+        p.index.clear();
+        p.arena.clear();
+        for page in resident {
+            self.release_ref(page);
+        }
+    }
+
+    /// Cached pages that could be evicted right now (resident, held only
+    /// by the index — not aliased by any live block table).
+    pub fn reclaimable_pages(&self) -> usize {
+        let Some(p) = self.prefix.as_ref() else { return 0 };
+        p.index
+            .values()
+            .filter(|e| match e.loc {
+                PageLoc::Resident(page) => self.refs[page as usize] == 1,
+                PageLoc::Swapped => false,
+            })
+            .count()
+    }
+
+    /// Evict the coldest unpinned cached page (LRU by last touch; ties
+    /// break on the chain key for determinism) to the swap arena — or
+    /// drop it when the arena is full/disabled — returning whether a
+    /// page was freed.
+    fn evict_coldest_unpinned(&mut self, protect: &[u64]) -> bool {
+        let Some(p) = self.prefix.as_ref() else { return false };
+        let victim = p
+            .index
+            .iter()
+            .filter_map(|(&key, e)| match e.loc {
+                PageLoc::Resident(page)
+                    if self.refs[page as usize] == 1 && !protect.contains(&key) =>
+                {
+                    Some((e.last_touch, key, page))
+                }
+                _ => None,
+            })
+            .min();
+        let Some((_, key, page)) = victim else { return false };
+        let page_bytes = self.page_bytes_f16();
+        let p = self.prefix.as_mut().expect("checked above");
+        if p.arena.len() < p.swap_capacity {
+            let (k, v) = {
+                // Export the page's cells (all layers, K and V).
+                let cells = self.n_layers * self.page_size * self.kv_dim;
+                let base = page as usize * cells;
+                (self.k[base..base + cells].to_vec(), self.v[base..base + cells].to_vec())
+            };
+            p.arena.insert(key, SwapPage { k, v });
+            p.index.get_mut(&key).expect("victim exists").loc = PageLoc::Swapped;
+            self.stats.swap_out_pages += 1;
+            self.stats.swap_bytes += page_bytes;
+            self.pending_swap_out_bytes += page_bytes;
+        } else {
+            p.index.remove(&key);
+            self.stats.dropped_pages += 1;
+        }
+        self.release_ref(page);
+        true
+    }
+
+    /// Verified index lookup: the entry at `key` whose token span and
+    /// parent chain match exactly (hash collisions read as misses).
+    fn verified_entry<'a>(
+        index: &'a HashMap<u64, PrefixEntry>,
+        key: u64,
+        prev: u64,
+        span: &[u32],
+    ) -> Option<&'a PrefixEntry> {
+        index.get(&key).filter(|e| e.prev == prev && e.tokens == span)
+    }
+
+    /// The page-aligned cached span of `prompt` (capped at `max_tokens`)
+    /// without mutating anything: `(cached_tokens, resident_pages,
+    /// swapped_pages)`. Used by schedulers to cost admissions.
+    pub fn peek_prefix(&self, prompt: &[u32], max_tokens: usize) -> (usize, usize, usize) {
+        let Some(p) = self.prefix.as_ref() else { return (0, 0, 0) };
+        let ps = self.page_size;
+        let mut prev = p.fingerprint;
+        let (mut tokens, mut resident, mut swapped) = (0usize, 0usize, 0usize);
+        let limit = max_tokens.min(prompt.len()).min(self.max_seq);
+        while tokens + ps <= limit {
+            let span = &prompt[tokens..tokens + ps];
+            let key = chain_key(p.fingerprint, prev, span);
+            let Some(e) = Self::verified_entry(&p.index, key, prev, span) else { break };
+            match e.loc {
+                PageLoc::Resident(_) => resident += 1,
+                PageLoc::Swapped => swapped += 1,
+            }
+            tokens += ps;
+            prev = key;
+        }
+        (tokens, resident, swapped)
+    }
+
+    /// Alias every consecutively cached full page of `prompt` (capped at
+    /// `max_tokens`) into `slot`'s block table, swapping pages back in
+    /// from the host arena as needed. The slot must be empty. Stops at
+    /// the first uncached page, or when a swapped page cannot obtain a
+    /// device page. Swap-in bytes accumulate for
+    /// [`KvCache::take_pending_swap_bytes`].
+    pub fn adopt_prefix(
+        &mut self,
+        slot: usize,
+        prompt: &[u32],
+        max_tokens: usize,
+    ) -> AdoptedPrefix {
+        assert!(
+            self.lens[slot] == 0 && self.tables[slot].is_empty(),
+            "adopt_prefix requires an empty slot (slot {slot} has {} tokens)",
+            self.lens[slot]
+        );
+        if self.prefix.is_none() {
+            return AdoptedPrefix::default();
+        }
+        let ps = self.page_size;
+        let limit = max_tokens.min(prompt.len()).min(self.max_seq);
+        // Pre-compute the chain keys of the cached span so eviction never
+        // cannibalizes pages this adoption is about to use.
+        let chain = {
+            let p = self.prefix.as_ref().expect("checked above");
+            let mut chain = Vec::new();
+            let mut prev = p.fingerprint;
+            let mut tokens = 0usize;
+            while tokens + ps <= limit {
+                let span = &prompt[tokens..tokens + ps];
+                let key = chain_key(p.fingerprint, prev, span);
+                if Self::verified_entry(&p.index, key, prev, span).is_none() {
+                    break;
+                }
+                chain.push(key);
+                tokens += ps;
+                prev = key;
+            }
+            chain
+        };
+        let mut out = AdoptedPrefix::default();
+        for (i, &key) in chain.iter().enumerate() {
+            let loc = {
+                let p = self.prefix.as_ref().expect("enabled");
+                p.index.get(&key).expect("chain verified").loc.clone()
+            };
+            let page = match loc {
+                PageLoc::Resident(page) => {
+                    self.refs[page as usize] += 1;
+                    page
+                }
+                PageLoc::Swapped => {
+                    // Bring the page home; the remaining chain is
+                    // protected from eviction.
+                    let Some(page) = self.obtain_page(&chain[i..]) else { break };
+                    let cells = self.n_layers * self.page_size * self.kv_dim;
+                    let base = page as usize * cells;
+                    let page_bytes = self.page_bytes_f16();
+                    let p = self.prefix.as_mut().expect("enabled");
+                    let sp = p.arena.remove(&key).expect("swapped entry has arena bytes");
+                    self.k[base..base + cells].copy_from_slice(&sp.k);
+                    self.v[base..base + cells].copy_from_slice(&sp.v);
+                    p.index.get_mut(&key).expect("chain verified").loc = PageLoc::Resident(page);
+                    // One ref for the index (obtain_page granted one to
+                    // the caller) plus one for the adopting slot.
+                    self.refs[page as usize] += 1;
+                    self.stats.swap_in_pages += 1;
+                    self.stats.swap_bytes += page_bytes;
+                    self.pending_swap_in_bytes += page_bytes;
+                    page
+                }
+            };
+            let p = self.prefix.as_mut().expect("enabled");
+            let touch = p.touch();
+            p.index.get_mut(&key).expect("chain verified").last_touch = touch;
+            self.tables[slot].push(page);
+            self.lens[slot] += ps;
+            out.pages.push(page);
+            out.tokens += ps;
+        }
+        self.peak_used = self.peak_used.max(self.used_pages());
+        out
+    }
+
+    /// Register every committed full page of `slot`'s prompt `tokens`
+    /// into the prefix index (pinning each with an index reference).
+    /// Pages already indexed just refresh their LRU stamp; a swapped
+    /// entry whose content this slot re-computed is resurrected as
+    /// resident. Call after prefill commits the prompt.
+    pub fn register_prefix(&mut self, slot: usize, tokens: &[u32]) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let ps = self.page_size;
+        let full = (tokens.len().min(self.lens[slot])) / ps;
+        let fingerprint = self.prefix.as_ref().expect("enabled").fingerprint;
+        let mut prev = fingerprint;
+        for i in 0..full {
+            let span = &tokens[i * ps..(i + 1) * ps];
+            let key = chain_key(fingerprint, prev, span);
+            let page = self.tables[slot][i];
+            let p = self.prefix.as_mut().expect("enabled");
+            let touch = p.touch();
+            let existing = p.index.get(&key).map(|e| e.prev == prev && e.tokens == span);
+            match existing {
+                Some(true) => {
+                    let was_swapped = {
+                        let e = p.index.get_mut(&key).expect("present");
+                        e.last_touch = touch;
+                        let swapped = e.loc == PageLoc::Swapped;
+                        if swapped {
+                            // The slot holds a fresh resident copy of
+                            // bytes we evicted earlier: resurrect the
+                            // entry onto this page.
+                            e.loc = PageLoc::Resident(page);
+                        }
+                        swapped
+                    };
+                    if was_swapped {
+                        p.arena.remove(&key);
+                        self.refs[page as usize] += 1;
+                    }
+                }
+                Some(false) => {
+                    // Hash collision with a different chain: replace.
+                    let old = p.index.remove(&key).expect("present");
+                    p.arena.remove(&key);
+                    p.index.insert(
+                        key,
+                        PrefixEntry {
+                            prev,
+                            tokens: span.to_vec(),
+                            loc: PageLoc::Resident(page),
+                            last_touch: touch,
+                        },
+                    );
+                    self.refs[page as usize] += 1;
+                    if let PageLoc::Resident(op) = old.loc {
+                        self.release_ref(op);
+                    }
+                }
+                None => {
+                    p.index.insert(
+                        key,
+                        PrefixEntry {
+                            prev,
+                            tokens: span.to_vec(),
+                            loc: PageLoc::Resident(page),
+                            last_touch: touch,
+                        },
+                    );
+                    self.refs[page as usize] += 1;
+                }
+            }
+            prev = key;
+        }
+    }
+
+    /// Append one already-owned full page to `slot`'s block table,
+    /// sharing it (refcount +1). The slot's length must be page-aligned.
+    /// This is the aliasing primitive under [`KvCache::adopt_prefix`],
+    /// exposed for the property suite.
+    pub fn alias_page(&mut self, slot: usize, page: u32) {
+        assert!(self.refs[page as usize] > 0, "aliasing unowned page {page}");
+        assert_eq!(
+            self.lens[slot] % self.page_size,
+            0,
+            "alias requires a page-aligned slot length"
+        );
+        assert!(
+            self.lens[slot] + self.page_size <= self.max_seq,
+            "alias would exceed the context window"
+        );
+        self.refs[page as usize] += 1;
+        self.tables[slot].push(page);
+        self.lens[slot] += self.page_size;
+    }
+
     /// Ensure pages cover positions `slot_len(slot)..slot_len(slot)+n`,
-    /// allocating from the free list as needed. Call before `store`-ing a
-    /// ubatch. Fails atomically: on `Err` no pages were taken.
+    /// allocating from the free list — and evicting cold cached pages
+    /// when it runs dry — as needed. Call before `store`-ing a ubatch.
+    /// Fails atomically: on `Err` no pages were taken and nothing was
+    /// evicted.
     pub fn try_reserve(&mut self, slot: usize, n: usize) -> Result<(), CacheError> {
         let len = self.lens[slot];
         if len + n > self.max_seq {
@@ -265,17 +871,18 @@ impl KvCache {
         let want = self.pages_needed(len + n);
         let have = self.tables[slot].len();
         let need_pages = want.saturating_sub(have);
-        if need_pages > self.free.len() {
+        let obtainable = self.free.len() + self.reclaimable_pages();
+        if need_pages > obtainable {
             return Err(CacheError::OutOfPages {
                 slot,
                 len,
                 need_pages,
-                free_pages: self.free.len(),
+                free_pages: obtainable,
                 n_pages: self.n_pages,
             });
         }
         for _ in 0..need_pages {
-            let page = self.free.pop().expect("free count checked above");
+            let page = self.obtain_page(&[]).expect("obtainable count checked above");
             self.tables[slot].push(page);
         }
         self.peak_used = self.peak_used.max(self.used_pages());
@@ -290,10 +897,29 @@ impl KvCache {
         ((page * self.n_layers + layer) * self.page_size + pos % self.page_size) * self.kv_dim
     }
 
+    /// Replace `slot`'s shared page at table index `idx` with a private
+    /// copy (copy-on-write): the new page clones every layer's cells, the
+    /// old page keeps its other references untouched.
+    fn cow_page(&mut self, slot: usize, idx: usize) {
+        let old = self.tables[slot][idx];
+        let new = self
+            .obtain_page(&[])
+            .unwrap_or_else(|| panic!("copy-on-write needs a free page (slot {slot})"));
+        let cells = self.n_layers * self.page_size * self.kv_dim;
+        let (ob, nb) = (old as usize * cells, new as usize * cells);
+        self.k.copy_within(ob..ob + cells, nb);
+        self.v.copy_within(ob..ob + cells, nb);
+        self.tables[slot][idx] = new;
+        self.release_ref(old);
+        self.stats.cow_pages += 1;
+    }
+
     /// Write one position's K and V for `layer` of `slot`. A ubatch
     /// first calls `try_reserve(slot, n)`, then stores `pos` values
     /// `slot_len(slot)..slot_len(slot)+n` for every layer, then calls
-    /// `advance(slot, n)` once.
+    /// `advance(slot, n)` once. Storing into a page other readers still
+    /// reference triggers copy-on-write — the other readers' bytes are
+    /// never mutated.
     pub fn store(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(
             pos < self.max_seq,
@@ -309,6 +935,10 @@ impl KvCache {
         );
         assert_eq!(k.len(), self.kv_dim);
         assert_eq!(v.len(), self.kv_dim);
+        let idx = pos / self.page_size;
+        if self.refs[self.tables[slot][idx] as usize] > 1 {
+            self.cow_page(slot, idx);
+        }
         let base = self.base(slot, layer, pos);
         self.k[base..base + self.kv_dim].copy_from_slice(k);
         self.v[base..base + self.kv_dim].copy_from_slice(v);
@@ -378,13 +1008,30 @@ impl KvCache {
         2 * self.pages_needed(ctx) * self.page_size * self.kv_dim * 2
     }
 
+    /// f16 bytes of one whole page, all layers, both K and V — the unit
+    /// the swap-traffic accounting charges per eviction/swap-in.
+    pub fn page_bytes_f16(&self) -> usize {
+        2 * self.n_layers * self.page_size * self.kv_dim * 2
+    }
+
     /// Total resident size of the cache (f16 accounting, all layers, both
     /// K and V) at the current allocation — the quantity that grows with
     /// live context in the paper's long-context discussion. Paging makes
-    /// residency page-granular: slack inside a sequence's last page is
-    /// resident even though not yet written.
+    /// residency page-granular (slack inside a sequence's last page is
+    /// resident even though not yet written), and refcounting makes it
+    /// **dedup-aware**: a page aliased by several block tables counts
+    /// once.
     pub fn resident_bytes_f16(&self) -> usize {
         self.bytes_f16_for_pages(self.used_pages())
+    }
+
+    /// What the current block tables would cost under exclusive
+    /// ownership: per-slot page references counted with multiplicity.
+    /// `logical − resident` (clamped at the index-only pages) is the
+    /// memory prefix sharing saves.
+    pub fn logical_resident_bytes_f16(&self) -> usize {
+        let refs: usize = self.tables.iter().map(Vec::len).sum();
+        self.bytes_f16_for_pages(refs)
     }
 
     /// Lifetime peak of [`KvCache::resident_bytes_f16`] — tracked at
@@ -395,7 +1042,7 @@ impl KvCache {
     }
 
     fn bytes_f16_for_pages(&self, pages: usize) -> usize {
-        2 * pages * self.n_layers * self.page_size * self.kv_dim * 2
+        pages * self.page_bytes_f16()
     }
 }
 
@@ -412,6 +1059,24 @@ mod tests {
             c.store(slot, layer, pos, &vec![fill; kv_dim], &vec![-fill; kv_dim]);
         }
         c.advance(slot, 1).unwrap();
+    }
+
+    /// Fill `n` page-aligned tokens of `slot` with distinct values and
+    /// commit them.
+    fn fill_tokens(c: &mut KvCache, slot: usize, tokens: &[u32]) {
+        let kv_dim = c.kv_dim;
+        let n_layers = {
+            let cfg = ModelConfig::tiny();
+            cfg.n_layers
+        };
+        c.try_reserve(slot, tokens.len()).unwrap();
+        for (pos, &t) in tokens.iter().enumerate() {
+            for layer in 0..n_layers {
+                let fill = (t as f32) * 100.0 + layer as f32;
+                c.store(slot, layer, pos, &vec![fill; kv_dim], &vec![-fill; kv_dim]);
+            }
+        }
+        c.advance(slot, tokens.len()).unwrap();
     }
 
     #[test]
@@ -608,5 +1273,217 @@ mod tests {
         c.reset_slot(1);
         let owned: usize = (0..3).map(|s| c.slot_pages(s).len()).sum();
         assert_eq!(owned + c.free_page_count(), c.n_pages());
+    }
+
+    // ---- refcounts, CoW, prefix index, swap ----
+
+    #[test]
+    fn alias_shares_and_reset_releases_last_ref() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 4);
+        fill_tokens(&mut c, 0, &[1, 2, 3, 4]);
+        let page = c.slot_pages(0)[0];
+        assert_eq!(c.page_ref(page), 1);
+        c.alias_page(1, page);
+        assert_eq!(c.page_ref(page), 2);
+        assert_eq!(c.slot_len(1), 4);
+        assert_eq!(c.used_pages(), 1, "sharing allocates nothing");
+        // The reader sees the writer's bytes through its own table.
+        assert_eq!(
+            c.k_at(1, 0, 0, 0, cfg.head_dim)[0],
+            c.k_at(0, 0, 0, 0, cfg.head_dim)[0]
+        );
+        c.reset_slot(0);
+        assert_eq!(c.page_ref(page), 1, "slot 1 still holds the page");
+        assert_eq!(c.free_page_count(), 3);
+        c.reset_slot(1);
+        assert_eq!(c.page_ref(page), 0);
+        assert_eq!(c.free_page_count(), 4, "last release frees");
+    }
+
+    #[test]
+    fn store_on_shared_page_copies_on_write() {
+        let cfg = ModelConfig::tiny();
+        let kv_dim = cfg.kv_dim();
+        let mut c = KvCache::paged(&cfg, 2, 4, 4);
+        fill_tokens(&mut c, 0, &[1, 2, 3, 4]);
+        let shared = c.slot_pages(0)[0];
+        c.alias_page(1, shared);
+        let before = c.k_at(0, 0, 2, 0, cfg.head_dim)[0];
+        // Slot 1 overwrites position 2: must split, not clobber slot 0.
+        c.store(1, 0, 2, &vec![999.0; kv_dim], &vec![-999.0; kv_dim]);
+        assert_ne!(c.slot_pages(1)[0], shared, "writer got a private copy");
+        assert_eq!(c.page_ref(shared), 1, "reader keeps the original");
+        assert_eq!(c.k_at(0, 0, 2, 0, cfg.head_dim)[0], before, "reader bytes intact");
+        assert_eq!(c.k_at(1, 0, 2, 0, cfg.head_dim)[0], 999.0);
+        // Untouched cells of the copy match the original (whole-page copy).
+        assert_eq!(
+            c.k_at(1, 1, 0, 0, cfg.head_dim)[0],
+            c.k_at(0, 1, 0, 0, cfg.head_dim)[0]
+        );
+        assert_eq!(c.reuse_stats().cow_pages, 1);
+    }
+
+    #[test]
+    fn prefix_register_adopt_roundtrip() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        c.enable_prefix_cache(42);
+        let prompt = [10u32, 11, 12, 13, 14, 15, 16, 17, 99, 98];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        // Two full pages registered (last two tokens are a partial page).
+        assert_eq!(c.cached_resident_pages(), 2);
+        let p0 = c.slot_pages(0)[0];
+        assert_eq!(c.page_ref(p0), 2, "slot + index");
+
+        // A second slot with the same prompt prefix adopts both pages.
+        let adopted = c.adopt_prefix(1, &prompt, prompt.len() - 1);
+        assert_eq!(adopted.tokens, 8);
+        assert_eq!(adopted.pages, c.slot_pages(0)[..2].to_vec());
+        assert_eq!(c.slot_len(1), 8);
+        assert_eq!(c.page_ref(p0), 3);
+        // Bytes visible through the adopting slot match the original.
+        assert_eq!(
+            c.k_at(1, 2, 5, 0, cfg.head_dim)[0],
+            c.k_at(0, 2, 5, 0, cfg.head_dim)[0]
+        );
+
+        // A diverging prompt only matches the first page.
+        c.reset_slot(1);
+        let diverged = [10u32, 11, 12, 13, 77, 77, 77, 77, 78, 79, 80, 81];
+        let adopted = c.adopt_prefix(1, &diverged, diverged.len() - 1);
+        assert_eq!(adopted.tokens, 4, "chain stops at the first mismatch");
+
+        // Finished-but-cached: the creator resets, pages survive.
+        c.reset_slot(1);
+        c.reset_slot(0);
+        assert_eq!(c.cached_resident_pages(), 2, "index keeps the pages");
+        assert_eq!(c.page_ref(p0), 1);
+        let adopted = c.adopt_prefix(0, &prompt, prompt.len() - 1);
+        assert_eq!(adopted.tokens, 8, "recently-finished prefix still hits");
+    }
+
+    #[test]
+    fn peek_matches_adopt_and_respects_caps() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        c.enable_prefix_cache(7);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        let (tokens, resident, swapped) = c.peek_prefix(&prompt, prompt.len() - 1);
+        assert_eq!((tokens, resident, swapped), (4, 1, 0), "cap excludes the last page");
+        let (tokens, ..) = c.peek_prefix(&prompt, prompt.len());
+        assert_eq!(tokens, 8);
+        let adopted = c.adopt_prefix(1, &prompt, prompt.len() - 1);
+        assert_eq!(adopted.tokens, 4, "adopt honors the same cap");
+    }
+
+    #[test]
+    fn eviction_reclaims_cached_pages_for_reservations() {
+        let cfg = ModelConfig::tiny();
+        // 3 pages of 4: one sequence of 8 registers 2 cached pages.
+        let mut c = KvCache::paged(&cfg, 2, 4, 3);
+        c.enable_prefix_cache(1);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        c.reset_slot(0);
+        assert_eq!(c.free_page_count(), 1);
+        assert_eq!(c.reclaimable_pages(), 2);
+        // A 12-token reservation needs all 3 pages: the two cached pages
+        // are evicted (dropped — no swap arena).
+        c.try_reserve(1, 12).unwrap();
+        assert_eq!(c.slot_pages(1).len(), 3);
+        assert_eq!(c.cached_resident_pages(), 0);
+        assert_eq!(c.reuse_stats().dropped_pages, 2);
+        // Over-asking is still a typed error even counting reclaimables.
+        c.reset_slot(1);
+        fill_tokens(&mut c, 0, &prompt);
+        let err = c.try_reserve(1, 12).unwrap_err();
+        assert!(matches!(err, CacheError::OutOfPages { free_pages: 1, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn swap_out_and_swap_in_roundtrip_is_bit_exact() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 3);
+        c.enable_prefix_cache(9);
+        c.set_swap_capacity(4);
+        let prompt = [21u32, 22, 23, 24, 25, 26, 27, 28];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        // Snapshot the cached bytes before eviction.
+        let want_k = c.k_at(0, 1, 5, 0, cfg.head_dim)[0];
+        let want_v = c.v_at(0, 1, 5, 0, cfg.head_dim)[0];
+        c.reset_slot(0);
+        // Force both cached pages out via a full reservation…
+        c.try_reserve(1, 12).unwrap();
+        assert_eq!(c.swapped_out_pages(), 2, "evictions went to the arena");
+        assert_eq!(c.reuse_stats().swap_out_pages, 2);
+        assert_eq!(c.reuse_stats().dropped_pages, 0);
+        let (in_b, out_b) = c.take_pending_swap_bytes();
+        assert_eq!(in_b, 0);
+        assert_eq!(out_b, 2 * c.page_bytes_f16());
+        // …then release and adopt: pages swap back in, bit-exact.
+        c.reset_slot(1);
+        let adopted = c.adopt_prefix(0, &prompt, prompt.len());
+        assert_eq!(adopted.tokens, 8);
+        assert_eq!(c.reuse_stats().swap_in_pages, 2);
+        assert_eq!(c.swapped_out_pages(), 0);
+        assert_eq!(c.k_at(0, 1, 5, 0, cfg.head_dim)[0], want_k);
+        assert_eq!(c.v_at(0, 1, 5, 0, cfg.head_dim)[0], want_v);
+        let (in_b, out_b) = c.take_pending_swap_bytes();
+        assert_eq!(in_b, 2 * c.page_bytes_f16());
+        assert_eq!(out_b, 0);
+    }
+
+    #[test]
+    fn clear_prefix_cache_releases_everything() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 1, 4, 4);
+        c.enable_prefix_cache(3);
+        c.set_swap_capacity(2);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        c.reset_slot(0);
+        assert!(c.free_page_count() < c.n_pages());
+        c.clear_prefix_cache();
+        assert_eq!(c.free_page_count(), c.n_pages(), "full flush frees the pool");
+        assert_eq!(c.cached_resident_pages(), 0);
+        assert_eq!(c.swapped_out_pages(), 0);
+    }
+
+    #[test]
+    fn resident_bytes_are_dedup_aware() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 3, 4, 8);
+        c.enable_prefix_cache(5);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        c.adopt_prefix(1, &prompt, prompt.len());
+        c.adopt_prefix(2, &prompt, prompt.len());
+        // Three block tables reference the same two pages: physical
+        // residency counts them once, logical counts per reference.
+        assert_eq!(c.used_pages(), 2);
+        assert_eq!(c.resident_bytes_f16(), 2 * c.page_bytes_f16());
+        assert_eq!(c.logical_resident_bytes_f16(), 6 * c.page_bytes_f16());
+    }
+
+    #[test]
+    fn fingerprint_separates_incompatible_caches() {
+        let cfg = ModelConfig::tiny();
+        let prompt = [1u32, 2, 3, 4];
+        let key_a = chain_key(1, 1, &prompt);
+        let key_b = chain_key(2, 2, &prompt);
+        assert_ne!(key_a, key_b, "fingerprint must split chain keys");
+        let mut c = KvCache::paged(&cfg, 2, 4, 4);
+        c.enable_prefix_cache(1);
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        assert_eq!(c.peek_prefix(&prompt, 4).0, 4);
     }
 }

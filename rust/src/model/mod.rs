@@ -28,9 +28,10 @@ pub mod weights;
 
 pub use config::{LinearKind, ModelConfig, QuantScheme};
 pub use engine::{
-    Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, Session, DEFAULT_UBATCH,
+    Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, Session, SharedPrefill,
+    DEFAULT_UBATCH,
 };
-pub use kv_cache::{CacheError, KvCache, DEFAULT_PAGE_SIZE};
-pub use graph::{MatvecOp, OpKind, Phase};
+pub use kv_cache::{AdoptedPrefix, CacheError, KvCache, KvReuseStats, DEFAULT_PAGE_SIZE};
+pub use graph::{KvSwapDir, MatvecOp, OpKind, Phase};
 pub use sampler::Sampler;
 pub use weights::ModelWeights;

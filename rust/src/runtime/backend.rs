@@ -40,7 +40,7 @@ use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::imax::timing::RunBreakdown;
 use crate::model::engine::{KernelExec, MatvecExec, NativeExec};
-use crate::model::graph::{MatvecOp, Phase};
+use crate::model::graph::{KvSwapDir, MatvecOp, Phase};
 use crate::tensor::{ActQuant, QTensor};
 
 /// IMAX instrumentation parameters (which modeled device shadows the
@@ -335,6 +335,10 @@ pub struct BackendReport {
     pub offload_ratio: Option<f64>,
     pub offloaded_macs: u64,
     pub total_macs: u64,
+    /// KV page swap traffic charged through the DMA cost model (imax
+    /// backend; f16 cache bytes, both directions). Nonzero only when the
+    /// serving layer oversubscribes the page pool with `--swap-pages`.
+    pub kv_swap_bytes: u64,
     /// Measured engine wall time per phase (imax backend only; the
     /// serving loop measures its own phases for the others). Under a
     /// placement every part observes the *whole* shared step, so a
@@ -399,6 +403,7 @@ impl BackendReport {
             }
             out.offloaded_macs += r.offloaded_macs;
             out.total_macs += r.total_macs;
+            out.kv_swap_bytes += r.kv_swap_bytes;
             out.wall_prefill_s += r.wall_prefill_s;
             out.wall_decode_s += r.wall_decode_s;
         }
@@ -476,6 +481,12 @@ impl MatvecExec for PlacementExec {
 
     fn attn(&mut self, op: &MatvecOp) {
         self.part_for(op.layer).attn(op);
+    }
+
+    fn kv_transfer(&mut self, phase: Phase, dir: KvSwapDir, bytes: usize) {
+        // One physical transfer — charge it once, to the part owning the
+        // highest range (the LM-head home), not to every part.
+        self.parts[self.head].exec.kv_transfer(phase, dir, bytes);
     }
 
     fn begin_step(&mut self, phase: Phase, pos: usize) {
@@ -561,6 +572,7 @@ impl BackendExec {
                     offload_ratio: Some(i.stats.total_ratio()),
                     offloaded_macs: i.stats.offloaded_macs,
                     total_macs: i.stats.total_macs,
+                    kv_swap_bytes: i.kv_swap_bytes,
                     wall_prefill_s: i.wall_prefill,
                     wall_decode_s: i.wall_decode,
                     ..BackendReport::default()
@@ -608,6 +620,16 @@ impl MatvecExec for BackendExec {
             BackendExec::Placement(e) => e.attn(op),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.attn(op),
+        }
+    }
+
+    fn kv_transfer(&mut self, phase: Phase, dir: KvSwapDir, bytes: usize) {
+        match self {
+            BackendExec::Native(e) => e.kv_transfer(phase, dir, bytes),
+            BackendExec::Imax(e) => e.kv_transfer(phase, dir, bytes),
+            BackendExec::Placement(e) => e.kv_transfer(phase, dir, bytes),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.kv_transfer(phase, dir, bytes),
         }
     }
 

@@ -1,0 +1,270 @@
+//! Prefix-sharing / host-swap acceptance suite.
+//!
+//! The contracts under test, per the refcounted-CoW KV refactor:
+//!
+//! * a **warm prefix hit** generates bit-identically to a cold prefill
+//!   while executing strictly fewer prefill tokens (the aliased span's
+//!   kernels never run),
+//! * with `--prefix-cache` off and `--swap-pages 0` nothing changes
+//!   (the refcount refactor is invisible — also pinned by the untouched
+//!   batching/stress suites),
+//! * serve surfaces nonzero prefix-hit / evict / swap counters, and the
+//!   modeled swap bytes are charged through the imax DMA transfer mode
+//!   (`ServeReport::kv_swap_bytes` > 0 under an imax backend when the
+//!   pool oversubscribes).
+
+use imax_llm::coordinator::{serve_with, Request, ServeOptions};
+use imax_llm::model::engine::{Engine, NativeExec};
+use imax_llm::model::{ModelConfig, ModelWeights, Phase, QuantScheme, Sampler, Session};
+use imax_llm::runtime::ExecSpec;
+
+fn tiny_weights() -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 23)
+}
+
+/// Greedy-decode `n` tokens for `sess` starting from `logits`.
+fn decode_greedy(
+    engine: &mut Engine,
+    sess: &Session,
+    mut logits: Vec<f32>,
+    n: usize,
+) -> Vec<u32> {
+    let mut out = Vec::new();
+    for step in 0..n {
+        let next = Sampler::greedy().sample(&logits);
+        out.push(next);
+        if step + 1 < n {
+            logits = engine
+                .forward_session(sess, next, Phase::Decode, true, &mut NativeExec)
+                .expect("decode produced logits");
+        }
+    }
+    out
+}
+
+#[test]
+fn warm_hit_is_bit_identical_with_strictly_fewer_prefill_tokens() {
+    let mut engine = Engine::with_paged_slots(tiny_weights(), 2, 4, None);
+    engine.enable_prefix_cache();
+    let prompt: Vec<u32> = (1..=13).collect(); // 3 full 4-token pages + 1
+
+    // Cold run: everything executes, prompt pages get registered.
+    let s0 = engine.open_session(Sampler::greedy()).unwrap();
+    let cold = engine.try_prefill_session_shared(&s0, &prompt, 3, &mut NativeExec).unwrap();
+    assert_eq!(cold.cached_tokens, 0);
+    assert_eq!(cold.executed_tokens, prompt.len());
+    let cold_tokens = decode_greedy(&mut engine, &s0, cold.logits.clone(), 6);
+    engine.close_session(s0);
+
+    // Warm run: the three full prompt pages alias; only the last token
+    // executes.
+    let executed_before = engine.n_tokens_processed;
+    let s1 = engine.open_session(Sampler::greedy()).unwrap();
+    let warm = engine.try_prefill_session_shared(&s1, &prompt, 3, &mut NativeExec).unwrap();
+    assert_eq!(warm.cached_tokens, 12, "three full pages served from cache");
+    assert_eq!(warm.executed_tokens, 1, "only the uncached tail executes");
+    assert_eq!(
+        engine.n_tokens_processed - executed_before,
+        1,
+        "strictly fewer prefill tokens executed on the warm path"
+    );
+    assert_eq!(
+        warm.logits, cold.logits,
+        "aliased KV is bit-identical: last-token logits match exactly"
+    );
+    let warm_tokens = decode_greedy(&mut engine, &s1, warm.logits, 6);
+    assert_eq!(warm_tokens, cold_tokens, "generation identical after a warm hit");
+    engine.close_session(s1);
+}
+
+#[test]
+fn prefix_cache_enabled_cold_run_matches_disabled_engine() {
+    // The refactor must be invisible until a prefix actually repeats: a
+    // single cold request through a prefix-enabled engine matches a
+    // plain engine token-for-token.
+    let weights = tiny_weights();
+    let prompt: Vec<u32> = vec![4, 9, 1, 7, 7, 2, 8, 8, 3];
+
+    let mut plain = Engine::with_paged_slots(weights.clone(), 2, 4, None);
+    let sp = plain.open_session(Sampler::greedy()).unwrap();
+    let lp = plain.try_prefill_session(&sp, &prompt, 3, &mut NativeExec).unwrap();
+    let want = decode_greedy(&mut plain, &sp, lp, 5);
+
+    let mut cached = Engine::with_paged_slots(weights, 2, 4, None);
+    cached.enable_prefix_cache();
+    let sc = cached.open_session(Sampler::greedy()).unwrap();
+    let res = cached.try_prefill_session_shared(&sc, &prompt, 3, &mut NativeExec).unwrap();
+    assert_eq!(res.cached_tokens, 0, "nothing cached yet");
+    let got = decode_greedy(&mut cached, &sc, res.logits, 5);
+    assert_eq!(got, want, "prefix cache must not change a cold run");
+}
+
+#[test]
+fn partial_prefix_hit_diverging_suffix_still_identical() {
+    // Two prompts sharing one full page then diverging: the second
+    // request aliases only the shared page and its output must match a
+    // fresh engine's.
+    let weights = tiny_weights();
+    let a: Vec<u32> = vec![5, 6, 7, 8, 1, 2, 3];
+    let b: Vec<u32> = vec![5, 6, 7, 8, 9, 9, 4];
+
+    let mut engine = Engine::with_paged_slots(weights.clone(), 2, 4, None);
+    engine.enable_prefix_cache();
+    let sa = engine.open_session(Sampler::greedy()).unwrap();
+    let ra = engine.try_prefill_session_shared(&sa, &a, 32, &mut NativeExec).unwrap();
+    decode_greedy(&mut engine, &sa, ra.logits, 3);
+    engine.close_session(sa);
+
+    let sb = engine.open_session(Sampler::greedy()).unwrap();
+    let rb = engine.try_prefill_session_shared(&sb, &b, 32, &mut NativeExec).unwrap();
+    assert_eq!(rb.cached_tokens, 4, "only the shared first page aliases");
+    let got = decode_greedy(&mut engine, &sb, rb.logits, 4);
+
+    let mut fresh = Engine::with_paged_slots(weights, 1, 4, None);
+    let sf = fresh.open_session(Sampler::greedy()).unwrap();
+    let rf = fresh.try_prefill_session(&sf, &b, 32, &mut NativeExec).unwrap();
+    let want = decode_greedy(&mut fresh, &sf, rf, 4);
+    assert_eq!(got, want, "partial hit must not perturb the diverging suffix");
+}
+
+fn templated_requests(n: usize) -> Vec<Request> {
+    // Shared two-page template + a short unique suffix per request.
+    (0..n)
+        .map(|id| {
+            let mut prompt: Vec<u32> = (100..108).collect(); // 2 pages of 4
+            prompt.extend([3 + id as u32, 7]);
+            Request { id, prompt, n_out: 4 }
+        })
+        .collect()
+}
+
+#[test]
+fn serve_reports_hits_and_identical_completions() {
+    let w = tiny_weights();
+    let base = ServeOptions {
+        slots_per_worker: 2,
+        page_size: 4,
+        ..ServeOptions::default()
+    };
+    let off = serve_with(&w, templated_requests(6), 1, &base).unwrap();
+    assert_eq!(off.reuse.prefix_hits, 0, "sharing off: no hits counted");
+
+    let on_opts = ServeOptions {
+        prefix_cache: true,
+        ..base
+    };
+    let on = serve_with(&w, templated_requests(6), 1, &on_opts).unwrap();
+    assert_eq!(on.completions.len(), 6);
+    // Identical completions for the repeated-prefix workload.
+    for (a, b) in on.completions.iter().zip(&off.completions) {
+        assert_eq!(a.id, b.id);
+        assert!(a.error.is_none());
+        assert_eq!(a.tokens, b.tokens, "prefix sharing must not change tokens");
+    }
+    // ≥1 page-aligned prefix hit, with real prefill work skipped.
+    assert!(on.reuse.prefix_hits >= 1, "hits: {:?}", on.reuse);
+    assert!(
+        on.reuse.prefix_hit_tokens >= 8,
+        "the shared two-page template is skipped at least once: {:?}",
+        on.reuse
+    );
+}
+
+#[test]
+fn oversubscribed_serve_swaps_and_charges_dma_bytes() {
+    // Tight pool (4 pages of 4 tokens) + a host arena: serving three
+    // 9-token prompts — the third repeating the first — forces cached
+    // pages out to the arena and back. Under the imax backend the swap
+    // traffic must land in the modeled report.
+    let w = tiny_weights();
+    let mk_reqs = || {
+        let a: Vec<u32> = (20..29).collect();
+        let b: Vec<u32> = (40..49).collect();
+        vec![
+            Request { id: 0, prompt: a.clone(), n_out: 3 },
+            Request { id: 1, prompt: b, n_out: 3 },
+            Request { id: 2, prompt: a, n_out: 3 },
+        ]
+    };
+    // One slot serializes the three requests, so the A→B→A order forces
+    // A's cached pages out under B's reservation and back in on the
+    // repeat.
+    let opts = ServeOptions {
+        slots_per_worker: 1,
+        page_size: 4,
+        kv_pages: Some(4),
+        prefix_cache: true,
+        swap_pages: 8,
+        spec: ExecSpec::parse("imax").unwrap(),
+        ..ServeOptions::default()
+    };
+    let rep = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+    assert_eq!(rep.completions.len(), 3);
+    for c in &rep.completions {
+        assert!(c.error.is_none(), "request {} errored: {:?}", c.id, c.error);
+    }
+    let r = &rep.reuse;
+    assert!(r.swap_out_pages >= 1, "pressure evicted to the arena: {r:?}");
+    assert!(r.swap_in_pages >= 1, "a repeat prompt swapped back in: {r:?}");
+    assert_eq!(r.dropped_pages, 0, "the arena had room for every eviction");
+    assert!(r.prefix_hits >= 1, "the repeated prompt hit: {r:?}");
+    assert!(r.swap_bytes > 0);
+    // The imax cost model charged exactly the swapped bytes through the
+    // DMA transfer mode.
+    assert_eq!(rep.kv_swap_bytes as usize, r.swap_bytes);
+    let m = rep.modeled.expect("imax backend models phases");
+    assert!(m.prefill.total() > 0.0 && m.decode.total() > 0.0);
+
+    // Same workload, sharing off: identical tokens (the baseline the
+    // acceptance criterion pins), and no swap bytes charged.
+    let off = serve_with(
+        &w,
+        mk_reqs(),
+        1,
+        &ServeOptions {
+            slots_per_worker: 1,
+            page_size: 4,
+            kv_pages: Some(4),
+            spec: ExecSpec::parse("imax").unwrap(),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(off.kv_swap_bytes, 0);
+    for (a, b) in rep.completions.iter().zip(&off.completions) {
+        assert_eq!(a.tokens, b.tokens, "swap/oversubscription must not change tokens");
+    }
+}
+
+#[test]
+fn swap_roundtrip_preserves_generation_across_eviction() {
+    // Engine-level: register a prompt, force its pages to swap out via
+    // pool pressure, then readmit the same prompt — the swapped-in pages
+    // must reproduce the cold generation exactly.
+    let weights = tiny_weights();
+    let mut engine = Engine::with_paged_slots(weights, 2, 4, Some(4));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(8);
+    let prompt: Vec<u32> = (60..69).collect();
+
+    let s0 = engine.open_session(Sampler::greedy()).unwrap();
+    let cold = engine.try_prefill_session_shared(&s0, &prompt, 32, &mut NativeExec).unwrap();
+    let want = decode_greedy(&mut engine, &s0, cold.logits, 4);
+    engine.close_session(s0);
+
+    // Pressure: a different 13-token sequence needs all 4 pages, so the
+    // two cached pages must swap out.
+    let filler: Vec<u32> = (80..93).collect();
+    let s1 = engine.open_session(Sampler::greedy()).unwrap();
+    engine.try_prefill_session(&s1, &filler, 32, &mut NativeExec).unwrap();
+    assert_eq!(engine.cache.swapped_out_pages(), 2, "cached pages went host-side");
+    engine.close_session(s1);
+
+    // Warm readmit: pages swap back in bit-exact.
+    let s2 = engine.open_session(Sampler::greedy()).unwrap();
+    let warm = engine.try_prefill_session_shared(&s2, &prompt, 32, &mut NativeExec).unwrap();
+    assert_eq!(warm.cached_tokens, 8, "both swapped pages restored");
+    assert_eq!(engine.cache.reuse_stats().swap_in_pages, 2);
+    let got = decode_greedy(&mut engine, &s2, warm.logits, 4);
+    assert_eq!(got, want, "swap-out/swap-in roundtrip is bit-exact end to end");
+}

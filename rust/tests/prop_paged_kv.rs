@@ -224,6 +224,272 @@ fn prop_pool_conservation_and_no_double_allocation() {
     Runner::new("paged-kv-pool-invariants").run(gen_case, check_case, shrink_case);
 }
 
+// ---- refcounted sharing / CoW / eviction property suite ----
+
+/// Ops for the refcounted pool: exclusive growth plus the sharing
+/// machinery (register, adopt, in-place overwrite → CoW).
+#[derive(Clone, Debug)]
+enum ShareOp {
+    /// Reserve + store + advance `n` content-derived tokens on `slot`.
+    Grow { slot: usize, n: usize },
+    /// Close `slot`, releasing its references.
+    Reset { slot: usize },
+    /// Register `slot`'s committed full pages in the prefix index
+    /// (skipped when the slot holds overwritten positions).
+    Register { slot: usize },
+    /// Adopt a previously registered prompt into an empty slot.
+    Adopt { slot: usize, pick: usize },
+    /// Overwrite one committed position in place (CoW on shared pages).
+    Overwrite { slot: usize, pos_seed: usize },
+}
+
+#[derive(Clone, Debug)]
+struct ShareCase {
+    page_size: usize,
+    n_pages: usize,
+    n_slots: usize,
+    /// Host swap arena capacity (0: evictions drop).
+    swap_pages: usize,
+    ops: Vec<ShareOp>,
+}
+
+fn gen_share_case(r: &mut Rng) -> ShareCase {
+    let page_size = 1 + r.below(4);
+    let n_slots = 1 + r.below(3);
+    let n_pages = 2 + r.below(10);
+    let swap_pages = r.below(6);
+    let n_ops = r.below(48);
+    let ops = (0..n_ops)
+        .map(|_| match r.below(8) {
+            0 => ShareOp::Reset { slot: r.below(n_slots) },
+            1 | 2 => ShareOp::Register { slot: r.below(n_slots) },
+            3 | 4 => ShareOp::Adopt { slot: r.below(n_slots), pick: r.below(8) },
+            5 => ShareOp::Overwrite { slot: r.below(n_slots), pos_seed: r.below(64) },
+            _ => ShareOp::Grow { slot: r.below(n_slots), n: 1 + r.below(5) },
+        })
+        .collect();
+    ShareCase { page_size, n_pages, n_slots, swap_pages, ops }
+}
+
+fn shrink_share_case(c: &ShareCase) -> Vec<ShareCase> {
+    let mut out = Vec::new();
+    if !c.ops.is_empty() {
+        let mut half = c.clone();
+        half.ops.truncate(c.ops.len() / 2);
+        out.push(half);
+        let mut minus_one = c.clone();
+        minus_one.ops.pop();
+        out.push(minus_one);
+    }
+    out
+}
+
+/// Content-derived value at `(token, pos)` — what every clean cell of a
+/// committed position holds (layer adds a small offset). Exact in f32
+/// for the generator's ranges.
+fn content_val(token: u32, pos: usize) -> f32 {
+    (token as f32) * 1000.0 + (pos as f32) * 10.0
+}
+
+fn check_share_case(case: &ShareCase) -> Result<(), String> {
+    let cfg = mini_cfg(MAX_SEQ);
+    let kv_dim = cfg.kv_dim();
+    let ps = case.page_size;
+    let mut c = KvCache::paged(&cfg, case.n_slots, ps, case.n_pages);
+    c.enable_prefix_cache(0xF00D);
+    if case.swap_pages > 0 {
+        c.set_swap_capacity(case.swap_pages);
+    }
+
+    // Mirror: committed token ids, expected cell values (layer 0 basis),
+    // and dirty flags per slot; plus the prompts registered so far.
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); case.n_slots];
+    let mut vals: Vec<Vec<f32>> = vec![Vec::new(); case.n_slots];
+    let mut dirty: Vec<Vec<bool>> = vec![Vec::new(); case.n_slots];
+    let mut registered: Vec<Vec<u32>> = Vec::new();
+
+    let write_pos = |c: &mut KvCache, slot: usize, pos: usize, val: f32| {
+        for layer in 0..cfg.n_layers {
+            let v = val + layer as f32;
+            c.store(slot, layer, pos, &vec![v; kv_dim], &vec![-v; kv_dim]);
+        }
+    };
+
+    for (i, op) in case.ops.iter().enumerate() {
+        match *op {
+            ShareOp::Grow { slot, n } => {
+                if c.try_reserve(slot, n).is_ok() {
+                    for k in 0..n {
+                        let pos = tokens[slot].len();
+                        let tok = ((i * 7 + pos * 3 + k) % 13) as u32;
+                        let val = content_val(tok, pos);
+                        write_pos(&mut c, slot, pos, val);
+                        tokens[slot].push(tok);
+                        vals[slot].push(val);
+                        dirty[slot].push(false);
+                        c.advance(slot, 1)
+                            .map_err(|e| format!("op {i}: advance after reserve: {e}"))?;
+                    }
+                }
+            }
+            ShareOp::Reset { slot } => {
+                c.reset_slot(slot);
+                tokens[slot].clear();
+                vals[slot].clear();
+                dirty[slot].clear();
+            }
+            ShareOp::Register { slot } => {
+                let full = tokens[slot].len() / ps;
+                // Only register content-clean spans (mirrors the engine:
+                // prompts are written once, never patched).
+                if full > 0 && !dirty[slot][..full * ps].iter().any(|&d| d) {
+                    c.register_prefix(slot, &tokens[slot]);
+                    registered.push(tokens[slot][..full * ps].to_vec());
+                }
+            }
+            ShareOp::Adopt { slot, pick } => {
+                if tokens[slot].is_empty() && !registered.is_empty() {
+                    let prompt = &registered[pick % registered.len()];
+                    let adopted = c.adopt_prefix(slot, prompt, prompt.len());
+                    if adopted.tokens % ps != 0 || adopted.tokens > prompt.len() {
+                        return Err(format!(
+                            "op {i}: adopted {} tokens (page size {ps}, prompt {})",
+                            adopted.tokens,
+                            prompt.len()
+                        ));
+                    }
+                    if adopted.pages.len() * ps != adopted.tokens {
+                        return Err(format!("op {i}: pages/tokens mismatch: {adopted:?}"));
+                    }
+                    for (pos, &tok) in prompt[..adopted.tokens].iter().enumerate() {
+                        tokens[slot].push(tok);
+                        vals[slot].push(content_val(tok, pos));
+                        dirty[slot].push(false);
+                    }
+                }
+            }
+            ShareOp::Overwrite { slot, pos_seed } => {
+                if !tokens[slot].is_empty() {
+                    let pos = pos_seed % tokens[slot].len();
+                    // A write to a shared page splits it (CoW), which
+                    // needs an obtainable page; skip states where the
+                    // pool is fully pinned (the engine never writes into
+                    // shared spans, so CoW exhaustion is unreachable in
+                    // real flows — the guard keeps the generator inside
+                    // satisfiable states).
+                    let page = c.slot_pages(slot)[pos / ps];
+                    let shared = c.page_ref(page) > 1;
+                    if !shared || c.free_page_count() + c.reclaimable_pages() > 0 {
+                        // Distinct from every clean value (exact in f32).
+                        let val = vals[slot][pos] + 0.5;
+                        write_pos(&mut c, slot, pos, val);
+                        vals[slot][pos] = val;
+                        dirty[slot][pos] = true;
+                    }
+                }
+            }
+        }
+
+        // ---- invariants after every op ----
+        // Refcounts: block-table references + resident index entries.
+        let mut want_refs = vec![0u32; case.n_pages];
+        for s in 0..case.n_slots {
+            for &p in c.slot_pages(s) {
+                want_refs[p as usize] += 1;
+            }
+        }
+        for p in c.cached_page_ids() {
+            want_refs[p as usize] += 1;
+        }
+        for page in 0..case.n_pages as u32 {
+            if c.page_ref(page) != want_refs[page as usize] {
+                return Err(format!(
+                    "op {i}: page {page} refcount {} != table+index references {}",
+                    c.page_ref(page),
+                    want_refs[page as usize]
+                ));
+            }
+        }
+        // Free list: exactly the zero-ref pages, each once.
+        let mut free: Vec<u32> = c.free_list().to_vec();
+        free.sort_unstable();
+        if free.windows(2).any(|w| w[0] == w[1]) {
+            return Err(format!("op {i}: duplicate page on the free list: {free:?}"));
+        }
+        let want_free: Vec<u32> =
+            (0..case.n_pages as u32).filter(|&p| want_refs[p as usize] == 0).collect();
+        if free != want_free {
+            return Err(format!("op {i}: free list {free:?} != zero-ref pages {want_free:?}"));
+        }
+        // Arena stays inside its capacity.
+        if c.swapped_out_pages() > case.swap_pages {
+            return Err(format!(
+                "op {i}: arena holds {} pages over capacity {}",
+                c.swapped_out_pages(),
+                case.swap_pages
+            ));
+        }
+        // Slot shapes match the mirror.
+        for s in 0..case.n_slots {
+            if c.slot_len(s) != tokens[s].len() {
+                return Err(format!(
+                    "op {i}: slot {s} len {} != mirror {}",
+                    c.slot_len(s),
+                    tokens[s].len()
+                ));
+            }
+            if c.slot_pages(s).len() != c.pages_needed(tokens[s].len()) {
+                return Err(format!(
+                    "op {i}: slot {s} owns {} pages for {} tokens",
+                    c.slot_pages(s).len(),
+                    tokens[s].len()
+                ));
+            }
+        }
+        // Data integrity: every live cell reads back the mirrored value —
+        // CoW never leaks a writer's bytes into another reader, adoption
+        // serves exactly the registered content, swap roundtrips are
+        // bit-exact.
+        for s in 0..case.n_slots {
+            for pos in 0..vals[s].len() {
+                for layer in 0..cfg.n_layers {
+                    let want = vals[s][pos] + layer as f32;
+                    let k = c.k_at(s, layer, pos, 0, cfg.head_dim)[0];
+                    let v = c.v_at(s, layer, pos, 0, cfg.head_dim)[0];
+                    if k != want || v != -want {
+                        return Err(format!(
+                            "op {i}: slot {s} layer {layer} pos {pos}: k/v {k}/{v}, want ±{want}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // No leaks: dropping every slot and the index recovers the pool.
+    for s in 0..case.n_slots {
+        c.reset_slot(s);
+    }
+    c.clear_prefix_cache();
+    if c.free_page_count() != c.n_pages() {
+        return Err(format!(
+            "teardown recovered {}/{} pages",
+            c.free_page_count(),
+            c.n_pages()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_refcounted_pool_share_cow_evict_invariants() {
+    Runner::new("refcounted-kv-share-invariants").run(
+        gen_share_case,
+        check_share_case,
+        shrink_share_case,
+    );
+}
+
 #[test]
 fn prop_full_pool_recovers_after_reset_all() {
     // Drive every slot to reservation failure, reset everything, and the

@@ -151,3 +151,83 @@ fn page_budget_admits_more_short_sequences_than_fixed_stride() {
         assert_eq!(log.tokens.len(), 4);
     }
 }
+
+#[test]
+fn templated_stress_with_prefix_sharing_and_swap_completes_cleanly() {
+    let mut rng = Rng::new(0x5EED_CAFE);
+    // Tight pool: 3 slots sharing 8 pages of 4 tokens, with prefix
+    // sharing on and a 6-page host swap arena — the oversubscribed
+    // serving shape. Every request must still complete, the budget must
+    // never oversubscribe the pool, and nothing may leak.
+    let mut engine = Engine::with_paged_slots(tiny_weights(3), 3, 4, Some(8));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(6);
+    let total_pages = engine.total_pages();
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+
+    // Templated workload: three two-page prompt templates with short
+    // random unique suffixes (the prefix cache's target shape).
+    let n_req = 30usize;
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let tpl = id % 3;
+            let mut prompt: Vec<u32> = (0..8).map(|i| (100 * (tpl + 1) + i) as u32).collect();
+            prompt.extend((0..rng.below(4)).map(|i| 1 + ((id * 13 + i * 5) % 50) as u32));
+            Request { id, prompt, n_out: 1 + rng.below(6) }
+        })
+        .collect();
+    let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+
+    let mut done = Vec::new();
+    let mut rounds = 0usize;
+    while !queue.is_empty() || b.n_active() > 0 {
+        rounds += 1;
+        assert!(
+            rounds < 10_000,
+            "scheduler wedged: {} done, {} queued, {} active",
+            done.len(),
+            queue.len(),
+            b.n_active()
+        );
+        while let Some(req) = queue.pop_front() {
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {}
+                Ok(Admitted::Finished(log)) => done.push(log),
+                Ok(Admitted::Deferred(req)) => {
+                    assert!(b.n_active() > 0, "deferred on an idle engine");
+                    queue.push_front(req);
+                    break;
+                }
+                Err(e) => panic!("no request here is oversized, got: {e}"),
+            }
+        }
+        assert!(
+            b.committed_pages() <= total_pages,
+            "commitment {} oversubscribes the {total_pages}-page pool",
+            b.committed_pages()
+        );
+        done.extend(b.decode_round(&mut exec));
+    }
+
+    let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n_req).collect::<Vec<_>>(), "each request exactly once");
+    for log in &done {
+        assert_eq!(log.tokens.len(), expected_n_out[log.id], "request {}", log.id);
+    }
+    // No leaks after drain: every page is free or a resident cached
+    // prefix page; commitment and slots fully released.
+    assert_eq!(b.committed_pages(), 0);
+    assert_eq!(b.capacity(), 3, "all slots free");
+    let cache = &b.engine().cache;
+    assert_eq!(
+        cache.free_page_count() + cache.cached_resident_pages(),
+        total_pages,
+        "pages are either free or cached — none leaked"
+    );
+    let s = b.reuse_stats();
+    assert!(s.prefix_hits > 0, "templated workload must share prefixes: {s:?}");
+    assert!(s.prefix_hit_tokens >= 4 * s.prefix_hits, "every hit spans ≥1 page: {s:?}");
+}
