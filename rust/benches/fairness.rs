@@ -1,0 +1,228 @@
+//! Bench: chunked-prefill fairness — what the token-budget iteration
+//! scheduler buys when a long prompt arrives mid-serve.
+//!
+//! Three short requests are decoding when a 96-token prompt is admitted.
+//! Phase-segregated, its whole prefill runs at admission and every live
+//! decode stalls behind it; token-budgeted (budget 8, chunk 4), it
+//! streams in as bounded chunks riding along the decode rounds. Both
+//! schedules are served through a [`ContinuousBatcher`] under the
+//! instrumented IMAX cost model and compared on:
+//!
+//! * decode time-between-tokens p99/max over the short requests (wall
+//!   clock, the tail-latency metric serving stacks are judged on),
+//! * the worst modeled gap between decode rounds and the modeled bytes
+//!   streamed host→LMM — the paper's transfer-bottleneck quantities,
+//!   per round via [`InstrumentedExec::rounds`],
+//! * prefill tokens per round (the fairness bound itself).
+//!
+//! With `BENCH_JSON=path` a machine-readable summary is written for the
+//! CI `bench-smoke` job (`scripts/check_bench_regression.py` gates the
+//! deterministic counters against `BENCH_baseline.json`).
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{
+    Admitted, ContinuousBatcher, InstrumentedExec, OffloadPolicy, Request, RoundStats,
+    SessionLog,
+};
+use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
+use imax_llm::model::engine::NativeExec;
+use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::util::bench::JsonMetrics;
+use imax_llm::util::report::Table;
+use imax_llm::util::stats::percentile;
+
+const LONG_PROMPT: usize = 96;
+const TOKEN_BUDGET: usize = 8;
+const PREFILL_CHUNK: usize = 4;
+const N_SHORT: usize = 3;
+const SHORT_N_OUT: usize = 16;
+
+fn weights() -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 23)
+}
+
+struct RunStats {
+    tokens: Vec<Vec<u32>>,
+    /// TBT gaps of the short requests (wall seconds).
+    short_gaps_s: Vec<f64>,
+    /// Worst modeled seconds between consecutive decode-round
+    /// completions (admission prefill lands in the following gap).
+    worst_modeled_gap_s: f64,
+    /// Modeled operand bytes streamed host→LMM over the whole run.
+    streamed_bytes: u64,
+    /// Largest modeled byte volume any one round streamed (0 when the
+    /// scheduler never marked a round, i.e. nothing was budgeted).
+    max_round_streamed_bytes: u64,
+    rounds: RoundStats,
+}
+
+/// One settled round plus a modeled-timeline mark: the gap between
+/// consecutive marks is the modeled time a live decode waited for its
+/// next token (admission-time prefill lands in the following gap).
+fn settle_round(
+    b: &mut ContinuousBatcher,
+    exec: &mut InstrumentedExec<NativeExec>,
+    logs: &mut Vec<SessionLog>,
+    worst_gap: &mut f64,
+    modeled_mark: &mut f64,
+) {
+    logs.extend(b.decode_round(exec));
+    let cum = exec.modeled.total().total();
+    *worst_gap = (*worst_gap).max(cum - *modeled_mark);
+    *modeled_mark = cum;
+}
+
+fn run(budgeted: bool) -> RunStats {
+    let mut exec = InstrumentedExec::new(
+        NativeExec,
+        ImaxDevice::fpga(2),
+        OffloadPolicy::new(LmmConfig::new(64)),
+        TransferMode::Coalesced,
+    );
+    let mut b = ContinuousBatcher::new(Engine::with_slots(weights(), 4), 32, Instant::now());
+    if budgeted {
+        b = b.with_token_budget(TOKEN_BUDGET).with_prefill_chunk(PREFILL_CHUNK);
+    }
+    let mut modeled_mark = 0.0f64;
+    let mut worst_gap = 0.0f64;
+    let mut logs = Vec::new();
+    for id in 0..N_SHORT {
+        let req = Request {
+            id,
+            prompt: vec![1 + id as u32, 2, 3, 4],
+            n_out: SHORT_N_OUT,
+        };
+        assert!(matches!(
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+    }
+    for _ in 0..3 {
+        settle_round(&mut b, &mut exec, &mut logs, &mut worst_gap, &mut modeled_mark);
+    }
+    let long = Request {
+        id: N_SHORT,
+        prompt: (0..LONG_PROMPT).map(|i| 1 + (i % 100) as u32).collect(),
+        n_out: 2,
+    };
+    assert!(matches!(
+        b.admit(long, Sampler::greedy(), 0.0, &mut exec),
+        Ok(Admitted::Active)
+    ));
+    while b.n_active() > 0 {
+        settle_round(&mut b, &mut exec, &mut logs, &mut worst_gap, &mut modeled_mark);
+    }
+    logs.sort_by_key(|l| l.id);
+    RunStats {
+        tokens: logs.iter().map(|l| l.tokens.clone()).collect(),
+        short_gaps_s: logs
+            .iter()
+            .filter(|l| l.id < N_SHORT)
+            .flat_map(|l| l.tbt_gaps_s())
+            .collect(),
+        worst_modeled_gap_s: worst_gap,
+        streamed_bytes: exec.streamed_bytes,
+        max_round_streamed_bytes: exec
+            .rounds
+            .iter()
+            .map(|r| r.streamed_bytes)
+            .max()
+            .unwrap_or(0),
+        rounds: b.round_stats(),
+    }
+}
+
+fn main() {
+    let seg = run(false);
+    let bud = run(true);
+    assert_eq!(seg.tokens, bud.tokens, "scheduling must not change tokens");
+    assert!(
+        bud.rounds.max_prefill_tokens_decode_round <= PREFILL_CHUNK,
+        "fairness bound violated: {:?}",
+        bud.rounds
+    );
+
+    let p99 = |xs: &[f64]| percentile(xs, 99.0);
+    let max = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
+    let mut t = Table::new(
+        "chunked-prefill fairness: long prompt arriving over live decodes \
+         (modeled imax:fpga2)",
+        &["metric", "segregated", "token-budget"],
+    );
+    t.row(vec![
+        "decode TBT p99, shorts (wall s)".to_string(),
+        format!("{:.6}", p99(&seg.short_gaps_s)),
+        format!("{:.6}", p99(&bud.short_gaps_s)),
+    ]);
+    t.row(vec![
+        "decode TBT max, shorts (wall s)".to_string(),
+        format!("{:.6}", max(&seg.short_gaps_s)),
+        format!("{:.6}", max(&bud.short_gaps_s)),
+    ]);
+    t.row(vec![
+        "worst modeled gap between decode rounds (s)".to_string(),
+        format!("{:.6}", seg.worst_modeled_gap_s),
+        format!("{:.6}", bud.worst_modeled_gap_s),
+    ]);
+    t.row(vec![
+        "modeled bytes streamed host->LMM".to_string(),
+        seg.streamed_bytes.to_string(),
+        bud.streamed_bytes.to_string(),
+    ]);
+    t.row(vec![
+        "max bytes streamed in one round".to_string(),
+        "-".to_string(),
+        bud.max_round_streamed_bytes.to_string(),
+    ]);
+    t.row(vec![
+        "chunked prefill tokens (per round / max)".to_string(),
+        "0 (prefill at admission)".to_string(),
+        format!(
+            "{} ({:.1} per prefill round, max {})",
+            bud.rounds.chunked_prefill_tokens,
+            bud.rounds.prefill_tokens_per_round(),
+            bud.rounds.max_prefill_tokens_round
+        ),
+    ]);
+    t.print();
+
+    let mut json = JsonMetrics::new("fairness");
+    json.push("tbt_p99_wall_s_segregated", p99(&seg.short_gaps_s), "lower", false);
+    json.push("tbt_p99_wall_s_budgeted", p99(&bud.short_gaps_s), "lower", false);
+    json.push("tbt_max_wall_s_budgeted", max(&bud.short_gaps_s), "lower", false);
+    json.push("worst_modeled_gap_s_segregated", seg.worst_modeled_gap_s, "lower", true);
+    json.push("worst_modeled_gap_s_budgeted", bud.worst_modeled_gap_s, "lower", true);
+    json.push(
+        "modeled_gap_ratio_seg_over_budget",
+        seg.worst_modeled_gap_s / bud.worst_modeled_gap_s,
+        "higher",
+        true,
+    );
+    json.push(
+        "max_prefill_tokens_round_budgeted",
+        bud.rounds.max_prefill_tokens_round as f64,
+        "lower",
+        true,
+    );
+    json.push(
+        "max_prefill_tokens_decode_round_budgeted",
+        bud.rounds.max_prefill_tokens_decode_round as f64,
+        "lower",
+        true,
+    );
+    json.push(
+        "chunked_prefill_tokens_budgeted",
+        bud.rounds.chunked_prefill_tokens as f64,
+        "higher",
+        true,
+    );
+    json.push("streamed_bytes_budgeted", bud.streamed_bytes as f64, "lower", true);
+    json.push(
+        "max_round_streamed_bytes_budgeted",
+        bud.max_round_streamed_bytes as f64,
+        "lower",
+        true,
+    );
+    json.write_if_requested().expect("BENCH_JSON path writable");
+}

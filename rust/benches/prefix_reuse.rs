@@ -22,7 +22,7 @@ use imax_llm::coordinator::{
 use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
 use imax_llm::model::engine::NativeExec;
 use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, Sampler};
-use imax_llm::util::bench::BenchSet;
+use imax_llm::util::bench::{BenchSet, JsonMetrics};
 use imax_llm::util::report::Table;
 
 const PAGE_SIZE: usize = 16;
@@ -147,6 +147,35 @@ fn main() {
         format!("{:.0}%", pct(cold.prefill_total_s, warm.prefill_total_s)),
     ]);
     t.print();
+
+    // CI bench-smoke summary: the token counts are deterministic for a
+    // fixed shape (the baseline pins the quick shape), the byte/LOAD
+    // reductions seed the perf trajectory.
+    let shape = if set.is_quick() { "quick" } else { "full" };
+    let mut json = JsonMetrics::new(&format!("prefix_reuse_{shape}"));
+    json.push(
+        "prefill_tokens_executed_cold",
+        cold.prefill_tokens_executed as f64,
+        "lower",
+        set.is_quick(),
+    );
+    json.push(
+        "prefill_tokens_executed_warm",
+        warm.prefill_tokens_executed as f64,
+        "lower",
+        set.is_quick(),
+    );
+    json.push("prefix_hits_warm", warm.prefix_hits as f64, "higher", set.is_quick());
+    json.push("streamed_bytes_cold", cold.streamed_bytes as f64, "lower", true);
+    json.push("streamed_bytes_warm", warm.streamed_bytes as f64, "lower", true);
+    json.push(
+        "streamed_bytes_reduction_pct",
+        pct(cold.streamed_bytes as f64, warm.streamed_bytes as f64),
+        "higher",
+        true,
+    );
+    json.push("prefill_load_s_warm", warm.prefill_load_s, "lower", true);
+    json.write_if_requested().expect("BENCH_JSON path writable");
 
     // Wall-clock: cold vs warm prefill of one templated prompt (warm
     // re-admissions alias the template pages; the engine is rebuilt per

@@ -24,6 +24,9 @@ pub mod serve;
 
 pub use hybrid::{simulate, Workload, WorkloadRun};
 pub use offload::{OffloadPolicy, OffloadStats};
-pub use phases::InstrumentedExec;
-pub use scheduler::{AdmitError, Admitted, ContinuousBatcher, Request, SchedPolicy, SessionLog};
+pub use phases::{InstrumentedExec, RoundCost};
+pub use scheduler::{
+    AdmitError, Admitted, ContinuousBatcher, Request, RoundStats, RoundTokens, SchedPolicy,
+    SessionLog,
+};
 pub use serve::{serve, serve_with, Completion, ServeOptions, ServeReport, ADMIT_SCAN_WINDOW};

@@ -46,6 +46,20 @@ struct LaunchCost {
     load_stream: f64,
 }
 
+/// Per-round modeled cost delta, snapshotted at each
+/// [`KernelExec::round_boundary`] the iteration scheduler marks: what
+/// one token-budgeted round (live decode tokens + resumable prefill
+/// chunks) added to the modeled totals. The streamed bytes are the
+/// paper's transfer-bottleneck quantity — a round that carries a large
+/// prefill chunk shows up directly as a byte/LOAD spike here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundCost {
+    /// Modeled seconds the round added (all phases, LOAD/EXEC/HOST/…).
+    pub modeled_s: f64,
+    /// Operand bytes the round's offloaded kernels streamed host→LMM.
+    pub streamed_bytes: u64,
+}
+
 /// A [`MatvecExec`] that runs kernels through an inner executor while
 /// accumulating modeled IMAX costs, offload statistics, and measured
 /// wall time per phase. Costs queue per launch and settle at the
@@ -79,10 +93,19 @@ pub struct InstrumentedExec<E: MatvecExec> {
     pub streamed_bytes: u64,
     pub wall_prefill: f64,
     pub wall_decode: f64,
+    /// Modeled cost deltas per scheduler round
+    /// ([`KernelExec::round_boundary`]); empty unless an iteration
+    /// scheduler marks rounds on this executor (the continuous batcher
+    /// marks every settled round, budgeted or not).
+    pub rounds: Vec<RoundCost>,
     tracker: ConfTracker,
     queue: LaunchQueue<LaunchCost>,
     current_phase: Phase,
     step_start: Option<Instant>,
+    /// Cumulative modeled seconds at the last round boundary.
+    round_mark_modeled_s: f64,
+    /// Cumulative streamed bytes at the last round boundary.
+    round_mark_bytes: u64,
 }
 
 impl<E: MatvecExec> InstrumentedExec<E> {
@@ -101,10 +124,13 @@ impl<E: MatvecExec> InstrumentedExec<E> {
             streamed_bytes: 0,
             wall_prefill: 0.0,
             wall_decode: 0.0,
+            rounds: Vec::new(),
             tracker: ConfTracker::new(),
             queue: LaunchQueue::new(),
             current_phase: Phase::Prefill,
             step_start: None,
+            round_mark_modeled_s: 0.0,
+            round_mark_bytes: 0,
         }
     }
 
@@ -234,6 +260,20 @@ impl<E: MatvecExec> KernelExec for InstrumentedExec<E> {
     fn submit(&mut self) {
         self.flush();
     }
+
+    fn round_boundary(&mut self) {
+        // Settle anything still queued, then snapshot what this round
+        // added to the modeled totals — the per-round view of the
+        // transfer bottleneck.
+        self.flush();
+        let cum = self.modeled.total().total();
+        self.rounds.push(RoundCost {
+            modeled_s: cum - self.round_mark_modeled_s,
+            streamed_bytes: self.streamed_bytes - self.round_mark_bytes,
+        });
+        self.round_mark_modeled_s = cum;
+        self.round_mark_bytes = self.streamed_bytes;
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +355,29 @@ mod tests {
         assert!(b.total() < s.total(), "batched prefill cheaper overall");
         // Same kernels were executed either way.
         assert!((exec_b.stats.total_ratio() - exec_s.stats.total_ratio()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_boundary_snapshots_cost_deltas() {
+        // Two marked rounds: the per-round deltas must reconcile exactly
+        // with the cumulative modeled totals and streamed bytes.
+        let cfg = ModelConfig::tiny();
+        let mut engine = Engine::new(ModelWeights::random(&cfg, QuantScheme::Q8_0, 3));
+        let mut exec = fpga_instrumented();
+        engine.forward(1, Phase::Prefill, true, &mut exec);
+        exec.round_boundary();
+        engine.forward(2, Phase::Decode, true, &mut exec);
+        engine.forward(3, Phase::Decode, true, &mut exec);
+        exec.round_boundary();
+        assert_eq!(exec.rounds.len(), 2);
+        assert!(exec.rounds.iter().all(|r| r.modeled_s > 0.0 && r.streamed_bytes > 0));
+        let total: f64 = exec.rounds.iter().map(|r| r.modeled_s).sum();
+        assert!(
+            (total - exec.modeled.total().total()).abs() < 1e-12,
+            "round deltas reconcile with the cumulative totals"
+        );
+        let bytes: u64 = exec.rounds.iter().map(|r| r.streamed_bytes).sum();
+        assert_eq!(bytes, exec.streamed_bytes);
     }
 
     #[test]

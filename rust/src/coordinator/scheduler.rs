@@ -42,6 +42,26 @@
 //! pages minus the currently cached prefix — which drops p95 latency
 //! under mixed prompt lengths.
 //!
+//! **Token-budget iteration scheduling**
+//! ([`ContinuousBatcher::with_token_budget`]): by default admission runs
+//! a request's whole prefill before the next decode round, so one long
+//! prompt stalls every live decode (the head-of-line pathology the
+//! paper's host-bound serving loop is most exposed to). With a token
+//! budget set, every round instead assembles a *mixed batch* of at most
+//! `token_budget` tokens: all live decode tokens first — the
+//! decode-starvation guarantee, a round with any live decode always
+//! carries every one of them — then resumable prefill chunks
+//! ([`PrefillCursor`], at most `prefill_chunk` tokens each, capped by
+//! the remaining budget) from admitted-but-unprefilled slots. Long
+//! prompts therefore interleave with live decodes, bounding the
+//! worst-case gap between a request's tokens (p99 time-between-tokens)
+//! by one chunk instead of one whole prompt, while staying bit-identical
+//! to the phase-segregated schedule (chunk boundaries are an execution
+//! schedule, not a numerics change). Per-round token counts are kept in
+//! [`RoundTokens`] / [`RoundStats`], and each settled round is marked on
+//! the executor via [`KernelExec::round_boundary`] so the instrumented
+//! cost model keeps the modeled transfer bottleneck visible per round.
+//!
 //! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
 //! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
 //! two — the scheduler model distributes kernel rows across lanes (EXEC
@@ -56,7 +76,7 @@ use crate::coordinator::offload::OffloadPolicy;
 use crate::imax::device::ImaxDevice;
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
-use crate::model::engine::{Engine, KernelExec, Session};
+use crate::model::engine::{Engine, KernelExec, PrefillCursor, Session};
 use crate::model::graph::Phase;
 use crate::model::kv_cache::{CacheError, KvReuseStats};
 use crate::model::sampler::Sampler;
@@ -112,14 +132,96 @@ pub struct SessionLog {
     pub admitted_s: f64,
     pub decode_start_s: f64,
     pub finished_s: f64,
+    /// Epoch-relative emission instant of each sampled token (same
+    /// length as `tokens`): the first entry against `admitted_s` gives
+    /// time-to-first-token, successive gaps give time-between-tokens —
+    /// the tail-latency quantities serving stacks are judged on.
+    pub token_marks_s: Vec<f64>,
+}
+
+impl SessionLog {
+    /// Enqueue → first sampled token (queue time included); `None` when
+    /// the request produced no tokens.
+    pub fn ttft_s(&self) -> Option<f64> {
+        self.token_marks_s
+            .first()
+            .map(|&t| self.queue_s + (t - self.admitted_s))
+    }
+
+    /// Gaps between successive sampled tokens (empty below two tokens).
+    pub fn tbt_gaps_s(&self) -> Vec<f64> {
+        self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+}
+
+/// Token counts of one settled scheduler round: how many live decode
+/// tokens it carried and how many resumable prefill-chunk tokens it
+/// spent the remaining budget on.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTokens {
+    pub decode_tokens: usize,
+    pub prefill_tokens: usize,
+}
+
+/// Aggregate round accounting for one batcher (merged across workers by
+/// the serving layer): how token-budgeted rounds actually composed.
+#[derive(Clone, Debug, Default)]
+pub struct RoundStats {
+    /// Rounds that processed at least one token.
+    pub rounds: usize,
+    /// Rounds that mixed live decode tokens with prefill chunks.
+    pub mixed_rounds: usize,
+    /// Rounds that carried at least one prefill-chunk token.
+    pub prefill_rounds: usize,
+    pub decode_tokens: usize,
+    /// Prompt tokens executed as in-round resumable chunks (0 on the
+    /// phase-segregated path, which prefills at admission).
+    pub chunked_prefill_tokens: usize,
+    /// Largest prefill share any single round carried, bounded by the
+    /// token budget (several admitted prompts may each contribute a
+    /// chunk to one round).
+    pub max_prefill_tokens_round: usize,
+    /// Largest prefill share of any round that also carried live decode
+    /// tokens — the worst-case decode delay in tokens; with one prompt
+    /// streaming it is bounded by the prefill chunk size (the fairness
+    /// guarantee).
+    pub max_prefill_tokens_decode_round: usize,
+}
+
+impl RoundStats {
+    pub fn merge(&mut self, other: &RoundStats) {
+        self.rounds += other.rounds;
+        self.mixed_rounds += other.mixed_rounds;
+        self.prefill_rounds += other.prefill_rounds;
+        self.decode_tokens += other.decode_tokens;
+        self.chunked_prefill_tokens += other.chunked_prefill_tokens;
+        self.max_prefill_tokens_round =
+            self.max_prefill_tokens_round.max(other.max_prefill_tokens_round);
+        self.max_prefill_tokens_decode_round = self
+            .max_prefill_tokens_decode_round
+            .max(other.max_prefill_tokens_decode_round);
+    }
+
+    /// Mean prefill tokens per round over rounds that carried any.
+    pub fn prefill_tokens_per_round(&self) -> f64 {
+        if self.prefill_rounds == 0 {
+            0.0
+        } else {
+            self.chunked_prefill_tokens as f64 / self.prefill_rounds as f64
+        }
+    }
 }
 
 /// Outcome of a successful [`ContinuousBatcher::admit`] call.
 #[derive(Debug)]
 pub enum Admitted {
-    /// Admitted into a slot; prefill ran and decode rounds will drive it.
+    /// Admitted into a slot; rounds will drive it. On the
+    /// phase-segregated path its prefill already ran; under a token
+    /// budget the prompt streams in as in-round chunks instead.
     Active,
-    /// Degenerate `n_out == 0` request: finished at admission.
+    /// Degenerate `n_out == 0` request: finished at admission
+    /// (phase-segregated path only — under a token budget it retires
+    /// from the round that completes its prefill).
     Finished(SessionLog),
     /// No free slot, or the page budget is committed to live sequences.
     /// The request is handed back untouched — retry after decode rounds
@@ -171,12 +273,24 @@ impl fmt::Display for AdmitError {
 
 impl std::error::Error for AdmitError {}
 
+/// Where an in-flight request is in its lifecycle.
+enum FlightState {
+    /// Admitted under a token budget but the prompt is not fully cached:
+    /// prefill advances chunk-by-chunk across rounds.
+    Prefilling(PrefillCursor),
+    /// Prompt fully cached; `logits` holds the next sampling input.
+    Decoding,
+}
+
 /// One in-flight request: its session, latest logits, and timing.
 struct InFlight {
     req: Request,
     session: Session,
+    state: FlightState,
     logits: Vec<f32>,
     tokens: Vec<u32>,
+    /// Epoch-relative emission instant of each sampled token.
+    token_marks_s: Vec<f64>,
     /// Fresh worst-case pages committed against the pool (worst case
     /// minus aliased prefix pages; the aliased pages enter the distinct
     /// demand via the batcher's shared-page union).
@@ -197,8 +311,10 @@ impl InFlight {
         let InFlight {
             req,
             session,
+            state: _,
             logits: _,
             tokens,
+            token_marks_s,
             fresh_pages: _,
             aliased: _,
             queue_s,
@@ -217,6 +333,7 @@ impl InFlight {
             admitted_s,
             decode_start_s,
             finished_s,
+            token_marks_s,
         };
         (session, log)
     }
@@ -228,6 +345,14 @@ pub struct ContinuousBatcher {
     engine: Engine,
     ubatch: usize,
     epoch: Instant,
+    /// Per-round token cap for the mixed iteration scheduler. `None`
+    /// keeps the phase-segregated schedule (whole prefill at admission).
+    token_budget: Option<usize>,
+    /// Largest resumable prefill chunk one round may carry per request
+    /// (further capped by the remaining budget).
+    prefill_chunk: usize,
+    /// Token counts of every settled round, in order.
+    rounds: Vec<RoundTokens>,
     active: Vec<InFlight>,
     /// Pages committed to live sequences' worst cases (≥ pages actually
     /// allocated, so decode-time growth can never hit an empty pool):
@@ -250,11 +375,62 @@ impl ContinuousBatcher {
             engine,
             ubatch,
             epoch,
+            token_budget: None,
+            prefill_chunk: ubatch,
+            rounds: Vec::new(),
             active: Vec::new(),
             committed_pages: 0,
             prefix_hits: 0,
             prefix_hit_tokens: 0,
         }
+    }
+
+    /// Switch to token-budget iteration scheduling: every round carries
+    /// at most `budget` tokens — all live decode tokens first, then
+    /// resumable prefill chunks — and admission no longer runs prefill
+    /// inline (see the module docs).
+    pub fn with_token_budget(mut self, budget: usize) -> ContinuousBatcher {
+        assert!(budget >= 1, "token budget must be at least 1");
+        self.token_budget = Some(budget);
+        self
+    }
+
+    /// Cap each request's per-round prefill chunk (default: the ubatch
+    /// size). Only meaningful with a token budget set.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> ContinuousBatcher {
+        assert!(chunk >= 1, "prefill chunk must be at least 1");
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// The configured per-round token budget (`None` = phase-segregated).
+    pub fn token_budget(&self) -> Option<usize> {
+        self.token_budget
+    }
+
+    /// Token counts of every settled round, in order.
+    pub fn rounds(&self) -> &[RoundTokens] {
+        &self.rounds
+    }
+
+    /// Aggregate round composition (token-budget scheduling telemetry).
+    pub fn round_stats(&self) -> RoundStats {
+        let mut s = RoundStats::default();
+        for r in &self.rounds {
+            s.rounds += 1;
+            s.decode_tokens += r.decode_tokens;
+            s.chunked_prefill_tokens += r.prefill_tokens;
+            if r.prefill_tokens > 0 {
+                s.prefill_rounds += 1;
+            }
+            if r.decode_tokens > 0 && r.prefill_tokens > 0 {
+                s.mixed_rounds += 1;
+                s.max_prefill_tokens_decode_round =
+                    s.max_prefill_tokens_decode_round.max(r.prefill_tokens);
+            }
+            s.max_prefill_tokens_round = s.max_prefill_tokens_round.max(r.prefill_tokens);
+        }
+        s
     }
 
     /// Free session slots (how many more requests can be admitted, slot
@@ -339,8 +515,11 @@ impl ContinuousBatcher {
         self.committed_pages = self.distinct_demand(None);
     }
 
-    /// Admit one request and run its prefill (as ubatch chunks),
-    /// skipping the prompt span served by the prefix cache.
+    /// Admit one request, skipping the prompt span served by the prefix
+    /// cache. On the phase-segregated path (no token budget) its whole
+    /// prefill runs here as ubatch chunks; under a token budget the
+    /// request enters the prefilling state and its prompt streams in as
+    /// bounded in-round chunks instead.
     ///
     /// Admission is page-budget-gated on the live set's exact distinct
     /// demand (the `distinct_demand` invariant):
@@ -393,6 +572,34 @@ impl ContinuousBatcher {
         }
         self.committed_pages = demand;
         let admitted_s = self.epoch.elapsed().as_secs_f64();
+        if self.token_budget.is_some() {
+            // Token-budget path: the prompt prefills chunk-by-chunk in
+            // later rounds (interleaved with live decodes) instead of
+            // monopolizing the engine here. Its worst-case pages are
+            // already committed, so in-round chunk reservations cannot
+            // fail.
+            if adopted.tokens > 0 {
+                self.prefix_hits += 1;
+                self.prefix_hit_tokens += adopted.tokens;
+            }
+            let cursor = PrefillCursor::with_adopted(req.prompt.clone(), adopted.tokens);
+            self.active.push(InFlight {
+                req,
+                session,
+                state: FlightState::Prefilling(cursor),
+                logits: Vec::new(),
+                tokens: Vec::new(),
+                token_marks_s: Vec::new(),
+                fresh_pages,
+                aliased: adopted.pages,
+                queue_s,
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                admitted_s,
+                decode_start_s: admitted_s,
+            });
+            return Ok(Admitted::Active);
+        }
         let tp0 = Instant::now();
         let logits = match self.engine.try_prefill_session(
             &session,
@@ -418,8 +625,10 @@ impl ContinuousBatcher {
         let inflight = InFlight {
             req,
             session,
+            state: FlightState::Decoding,
             logits,
             tokens: Vec::new(),
+            token_marks_s: Vec::new(),
             fresh_pages,
             aliased: adopted.pages,
             queue_s,
@@ -442,14 +651,31 @@ impl ContinuousBatcher {
         Ok(Admitted::Active)
     }
 
-    /// One decode step for every active request, in admission order;
-    /// requests that reach their `n_out` are retired and returned. Each
-    /// request samples exactly `n_out` tokens over its lifetime (the
-    /// final sampled token needs no further forward pass).
+    /// One token-budgeted round, in admission order; requests that reach
+    /// their `n_out` are retired and returned. Each request samples
+    /// exactly `n_out` tokens over its lifetime (the final sampled token
+    /// needs no further forward pass).
+    ///
+    /// The round runs two passes. First the *decode pass*: one decode
+    /// step for **every** live decoding request — the decode-starvation
+    /// guarantee; live decodes are never displaced by prefill work, even
+    /// when they alone exceed the budget. Then the *prefill pass*: the
+    /// remaining budget (`token_budget − decode tokens`) feeds resumable
+    /// prefill chunks (at most `prefill_chunk` tokens per request) to
+    /// admitted-but-unprefilled slots; a request whose cursor completes
+    /// registers its prompt pages for prefix sharing and decodes from
+    /// the next round on. Without a token budget the prefill pass is
+    /// idle (admission prefills inline) and this is exactly the classic
+    /// phase-segregated decode round.
     pub fn decode_round(&mut self, exec: &mut dyn KernelExec) -> Vec<SessionLog> {
         let mut finished = Vec::new();
+        let mut decoded = 0usize;
         let mut i = 0;
         while i < self.active.len() {
+            if matches!(self.active[i].state, FlightState::Prefilling(_)) {
+                i += 1;
+                continue;
+            }
             let td0 = Instant::now();
             let f = &mut self.active[i];
             if f.tokens.is_empty() {
@@ -457,6 +683,8 @@ impl ContinuousBatcher {
             }
             let next = f.session.sampler.sample(&f.logits);
             f.tokens.push(next);
+            f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
+            decoded += 1;
             let done = f.tokens.len() == f.req.n_out;
             if !done {
                 f.logits = self
@@ -474,6 +702,58 @@ impl ContinuousBatcher {
             } else {
                 i += 1;
             }
+        }
+        // Prefill pass: spend what the decodes left of the budget on
+        // resumable chunks, in admission order.
+        let budget = self.token_budget.unwrap_or(usize::MAX);
+        let mut spent = decoded;
+        let mut prefilled = 0usize;
+        let mut i = 0;
+        while i < self.active.len() && spent < budget {
+            if !matches!(self.active[i].state, FlightState::Prefilling(_)) {
+                i += 1;
+                continue;
+            }
+            let tp0 = Instant::now();
+            let max = self.prefill_chunk.min(budget - spent);
+            let f = &mut self.active[i];
+            let FlightState::Prefilling(cursor) = &mut f.state else {
+                unreachable!("checked above");
+            };
+            let before = cursor.pos();
+            let logits = self
+                .engine
+                .prefill_partial(&f.session, cursor, max, exec)
+                .expect("chunk pages committed at admission");
+            let executed = cursor.pos() - before;
+            spent += executed;
+            prefilled += executed;
+            f.prefill_s += tp0.elapsed().as_secs_f64();
+            if let Some(logits) = logits {
+                // Prompt fully cached: publish its pages for sharing and
+                // decode from the next round on.
+                self.engine.register_prefix(&f.session, &f.req.prompt);
+                f.logits = logits;
+                f.state = FlightState::Decoding;
+                if f.req.n_out == 0 {
+                    let f = self.active.remove(i);
+                    let finished_s = self.epoch.elapsed().as_secs_f64();
+                    let (session, mut log) = f.finish(finished_s);
+                    self.engine.close_session(session);
+                    // Never decodes; pin the mark (see `admit`).
+                    log.decode_start_s = log.finished_s;
+                    finished.push(log);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        if decoded + prefilled > 0 {
+            self.rounds.push(RoundTokens {
+                decode_tokens: decoded,
+                prefill_tokens: prefilled,
+            });
+            exec.round_boundary();
         }
         if !finished.is_empty() {
             // One recomputation covers every retirement this round (the
@@ -778,6 +1058,129 @@ mod tests {
         assert_eq!(b.reuse_stats().prefix_hits, 1);
         b.drain(&mut exec);
         assert_eq!(b.committed_pages(), 0);
+    }
+
+    #[test]
+    fn token_budget_schedule_is_bit_identical_to_segregated() {
+        // The same request mix through the phase-segregated and the
+        // token-budget schedulers: identical tokens (chunk boundaries
+        // are an execution schedule, not a numerics change), with the
+        // budgeted run actually mixing prefill chunks into decode
+        // rounds under the chunk bound.
+        let mk_reqs = || {
+            vec![
+                Request { id: 0, prompt: vec![1, 2, 3], n_out: 6 },
+                Request { id: 1, prompt: (1..=17).collect(), n_out: 4 },
+                Request { id: 2, prompt: vec![9, 8], n_out: 5 },
+            ]
+        };
+        let run = |budget: Option<usize>| {
+            let mut b = ContinuousBatcher::new(
+                Engine::with_slots(tiny_weights(), 3),
+                32,
+                Instant::now(),
+            );
+            if let Some(n) = budget {
+                b = b.with_token_budget(n).with_prefill_chunk(4);
+            }
+            let mut exec = NativeExec;
+            for req in mk_reqs() {
+                assert!(matches!(
+                    b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+                    Ok(Admitted::Active)
+                ));
+            }
+            let mut logs = b.drain(&mut exec);
+            logs.sort_by_key(|l| l.id);
+            (logs, b.round_stats())
+        };
+        let (seg, seg_stats) = run(None);
+        let (bud, bud_stats) = run(Some(6));
+        for (a, b) in seg.iter().zip(&bud) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "token budget must not change tokens");
+        }
+        assert_eq!(
+            seg_stats.chunked_prefill_tokens, 0,
+            "segregated path prefills at admission"
+        );
+        assert_eq!(
+            bud_stats.chunked_prefill_tokens,
+            3 + 17 + 2,
+            "every prompt token streamed in as an in-round chunk"
+        );
+        assert!(
+            bud_stats.max_prefill_tokens_round <= 6,
+            "rounds respect the token budget: {bud_stats:?}"
+        );
+        assert!(bud_stats.mixed_rounds > 0, "prefill chunks rode along live decodes");
+        // Per-token emission marks are complete and monotone.
+        for log in &bud {
+            assert_eq!(log.token_marks_s.len(), log.tokens.len());
+            assert!(log.token_marks_s.windows(2).all(|w| w[1] >= w[0]));
+            if !log.tokens.is_empty() {
+                assert!(log.ttft_s().unwrap() >= 0.0);
+                assert_eq!(log.tbt_gaps_s().len(), log.tokens.len() - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn token_budget_decode_pass_never_starves() {
+        // Two live decodes alone fill a 2-token budget, yet every round
+        // still carries both (the decode-starvation guarantee); the
+        // prefill pass only ever spends what the decodes left.
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(tiny_weights(), 3),
+            32,
+            Instant::now(),
+        )
+        .with_token_budget(2)
+        .with_prefill_chunk(2);
+        let mut exec = NativeExec;
+        let r0 = Request { id: 0, prompt: vec![1], n_out: 4 };
+        let r1 = Request { id: 1, prompt: vec![2], n_out: 4 };
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        b.admit(r1, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        // Round 1 prefills both one-token prompts.
+        assert!(b.decode_round(&mut exec).is_empty());
+        let long = Request { id: 2, prompt: (1..=9).collect(), n_out: 1 };
+        b.admit(long, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 3, "the long prompt completes despite decode priority");
+        for r in b.rounds() {
+            assert!(
+                r.prefill_tokens <= 2usize.saturating_sub(r.decode_tokens),
+                "prefill may only spend what decodes left of the budget: {r:?}"
+            );
+        }
+        let both_live: Vec<_> =
+            b.rounds().iter().filter(|r| r.decode_tokens == 2).collect();
+        assert!(!both_live.is_empty(), "rounds carried both live decodes");
+    }
+
+    #[test]
+    fn zero_output_request_retires_from_prefill_round_under_budget() {
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(tiny_weights(), 1),
+            32,
+            Instant::now(),
+        )
+        .with_token_budget(8);
+        let mut exec = NativeExec;
+        let req = Request { id: 7, prompt: vec![1, 2], n_out: 0 };
+        assert!(matches!(
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        assert_eq!(b.n_active(), 1, "admission no longer prefills inline");
+        let logs = b.decode_round(&mut exec);
+        assert_eq!(logs.len(), 1, "retired by the round that finished its prefill");
+        assert!(logs[0].tokens.is_empty());
+        assert_eq!(logs[0].decode_start_s, logs[0].finished_s);
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.capacity(), 1, "slot released");
+        assert_eq!(b.committed_pages(), 0, "commitment released at finish");
     }
 
     #[test]

@@ -12,11 +12,20 @@
 //! and a request whose worst case can never fit the pool completes
 //! with [`Completion::error`] set instead of wedging the queue.
 //!
+//! With `--token-budget` each worker runs the **token-budget iteration
+//! scheduler** instead of the phase-segregated loop: every round carries
+//! all live decode tokens first, then resumable prefill chunks
+//! (`--prefill-chunk`) up to the budget, so one long prompt interleaves
+//! with live decodes instead of stalling them; [`ServeReport`] carries
+//! the time-to-first-token and time-between-tokens p50/p99 that bound
+//! quantifies, plus the per-round composition ([`RoundStats`]).
+//!
 //! Admission scans a **bounded window** past the queue head
-//! ([`ADMIT_SCAN_WINDOW`]) so one deferred large request cannot block
-//! later requests that still fit the remaining pages, and the window
-//! order is a [`SchedPolicy`]: FIFO, or shortest-job-first by
-//! prefix-aware worst-case pages (`--sched sjf`). With `--prefix-cache`
+//! (`--admit-window`, default [`ADMIT_SCAN_WINDOW`], 0 = unbounded) so
+//! one deferred large request cannot block later requests that still fit
+//! the remaining pages, and the window order is a [`SchedPolicy`]: FIFO,
+//! or shortest-job-first by prefix-aware worst-case pages
+//! (`--sched sjf`). With `--prefix-cache`
 //! each worker shares committed prompt pages across requests
 //! (admissions alias page-aligned cached prefixes and skip their
 //! prefill), and `--swap-pages N` backs eviction with a host swap arena
@@ -42,7 +51,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::{Admitted, ContinuousBatcher, SchedPolicy};
+use crate::coordinator::scheduler::{Admitted, ContinuousBatcher, RoundStats, SchedPolicy};
 pub use crate::coordinator::scheduler::Request;
 use crate::imax::timing::RunBreakdown;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
@@ -52,11 +61,15 @@ use crate::model::weights::ModelWeights;
 use crate::runtime::backend::{BackendRegistry, BackendReport, ExecSpec};
 use crate::util::stats::{percentile, Summary};
 
-/// How many queued requests admission may scan past a deferred head per
-/// round. Bounded so a worker never starves decode rounds walking a long
-/// queue, but deep enough that one oversized head doesn't idle free
-/// pages (the head-of-line fix).
+/// Default admission scan depth past a deferred head per round
+/// (`ServeOptions::admit_window`). Bounded so a worker never starves
+/// decode rounds walking a long queue, but deep enough that one
+/// oversized head doesn't idle free pages (the head-of-line fix).
 pub const ADMIT_SCAN_WINDOW: usize = 8;
+
+/// What each worker thread hands back when it drains: its backend
+/// report, peak resident KV bytes, reuse counters, and round stats.
+type WorkerStats = (BackendReport, usize, KvReuseStats, RoundStats);
 
 /// Serving configuration beyond the request list.
 #[derive(Clone, Debug)]
@@ -88,6 +101,20 @@ pub struct ServeOptions {
     pub swap_pages: usize,
     /// Admission order within the scan window (`--sched fifo|sjf`).
     pub sched: SchedPolicy,
+    /// Per-round token budget (`--token-budget`). `None` keeps the
+    /// phase-segregated loop (whole prefill at admission); `Some(n)`
+    /// switches each worker to token-budget iteration scheduling: every
+    /// round carries all live decode tokens first, then resumable
+    /// prefill chunks up to the budget, so a long prompt never stalls
+    /// live decodes.
+    pub token_budget: Option<usize>,
+    /// Largest resumable prefill chunk one round may carry per request
+    /// (`--prefill-chunk`; default = the ubatch size). Only meaningful
+    /// with `token_budget` set.
+    pub prefill_chunk: Option<usize>,
+    /// How many queued requests admission may scan past a deferred head
+    /// per round (`--admit-window`; 0 = unbounded).
+    pub admit_window: usize,
 }
 
 impl Default for ServeOptions {
@@ -102,6 +129,9 @@ impl Default for ServeOptions {
             prefix_cache: false,
             swap_pages: 0,
             sched: SchedPolicy::Fifo,
+            token_budget: None,
+            prefill_chunk: None,
+            admit_window: ADMIT_SCAN_WINDOW,
         }
     }
 }
@@ -121,9 +151,24 @@ pub struct Completion {
     pub admitted_s: f64,
     pub decode_start_s: f64,
     pub finished_s: f64,
+    /// Enqueue → first sampled token (queue time included); `None` for
+    /// rejected or zero-output requests.
+    pub ttft_s: Option<f64>,
+    /// Per-request p99 gap between successive sampled tokens (`None`
+    /// below two tokens).
+    pub tbt_p99_s: Option<f64>,
+    /// Epoch-relative emission instant of each sampled token.
+    pub token_marks_s: Vec<f64>,
     /// `Some` when the request was rejected instead of served (e.g. its
     /// worst-case KV footprint exceeds the worker's page pool).
     pub error: Option<String>,
+}
+
+impl Completion {
+    /// Gaps between successive sampled tokens (empty below two tokens).
+    pub fn tbt_gaps_s(&self) -> Vec<f64> {
+        self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
 }
 
 /// Aggregate serving statistics.
@@ -136,6 +181,19 @@ pub struct ServeReport {
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_mean_s: f64,
+    /// Time-to-first-token percentiles over served requests that
+    /// produced tokens (enqueue → first sampled token).
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    /// Time-between-tokens percentiles over every gap between
+    /// successive sampled tokens of every served request — the
+    /// tail-latency metric accelerator serving stacks are judged on,
+    /// and what the token-budget scheduler bounds.
+    pub tbt_p50_s: f64,
+    pub tbt_p99_s: f64,
+    /// Round composition merged over workers (how token-budgeted rounds
+    /// actually mixed decode tokens with prefill chunks).
+    pub rounds: RoundStats,
     /// Which backend served the run.
     pub backend: String,
     /// Modeled IMAX per-phase costs summed over workers (imax backend).
@@ -193,6 +251,18 @@ pub fn serve_with(
     if opts.kv_pages == Some(0) {
         anyhow::bail!("kv_pages must be at least 1");
     }
+    if opts.token_budget == Some(0) {
+        anyhow::bail!("token_budget must be at least 1");
+    }
+    if opts.prefill_chunk == Some(0) {
+        anyhow::bail!("prefill_chunk must be at least 1");
+    }
+    if opts.prefill_chunk.is_some() && opts.token_budget.is_none() {
+        anyhow::bail!(
+            "prefill_chunk only applies to the token-budget scheduler \
+             (pass --token-budget)"
+        );
+    }
     if opts.swap_pages > 0 && !opts.prefix_cache {
         anyhow::bail!(
             "swap_pages requires prefix_cache: only indexed prefix pages are ever \
@@ -220,7 +290,7 @@ pub fn serve_with(
         let tx = tx.clone();
         let weights = weights.clone();
         let opts = opts.clone();
-        handles.push(thread::spawn(move || -> (BackendReport, usize, KvReuseStats) {
+        handles.push(thread::spawn(move || -> WorkerStats {
             let mut exec =
                 BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
             let mut engine = Engine::with_paged_slots(
@@ -236,8 +306,18 @@ pub fn serve_with(
                 }
             }
             let mut batcher = ContinuousBatcher::new(engine, opts.ubatch, started);
+            if let Some(budget) = opts.token_budget {
+                batcher = batcher.with_token_budget(budget);
+                if let Some(chunk) = opts.prefill_chunk {
+                    batcher = batcher.with_prefill_chunk(chunk);
+                }
+            }
             let send = |log: crate::coordinator::scheduler::SessionLog,
                         tx: &mpsc::Sender<Completion>| {
+                let ttft_s = log.ttft_s();
+                let gaps = log.tbt_gaps_s();
+                let tbt_p99_s =
+                    if gaps.is_empty() { None } else { Some(percentile(&gaps, 99.0)) };
                 tx.send(Completion {
                     id: log.id,
                     total_s: log.queue_s + (log.finished_s - log.admitted_s),
@@ -249,6 +329,9 @@ pub fn serve_with(
                     admitted_s: log.admitted_s,
                     decode_start_s: log.decode_start_s,
                     finished_s: log.finished_s,
+                    ttft_s,
+                    tbt_p99_s,
+                    token_marks_s: log.token_marks_s,
                     error: None,
                 })
                 .ok();
@@ -267,7 +350,11 @@ pub fn serve_with(
                     }
                     let window: Vec<(Request, Instant)> = {
                         let mut q = queue.lock().unwrap();
-                        let take = q.len().min(ADMIT_SCAN_WINDOW);
+                        let take = if opts.admit_window == 0 {
+                            q.len()
+                        } else {
+                            q.len().min(opts.admit_window)
+                        };
                         q.drain(..take).collect()
                     };
                     if window.is_empty() {
@@ -314,6 +401,9 @@ pub fn serve_with(
                                     admitted_s: now,
                                     decode_start_s: now,
                                     finished_s: now,
+                                    ttft_s: None,
+                                    tbt_p99_s: None,
+                                    token_marks_s: Vec::new(),
                                     error: Some(e.to_string()),
                                 })
                                 .ok();
@@ -356,7 +446,8 @@ pub fn serve_with(
             // the quantity `--kv-pages` budgets.
             let kv_peak = batcher.engine().cache.peak_resident_bytes_f16();
             let reuse = batcher.reuse_stats();
-            (exec.report(), kv_peak, reuse)
+            let rounds = batcher.round_stats();
+            (exec.report(), kv_peak, reuse, rounds)
         }));
     }
     drop(tx);
@@ -365,11 +456,14 @@ pub fn serve_with(
     let mut reports = Vec::new();
     let mut kv_peak_total = 0usize;
     let mut reuse = KvReuseStats::default();
+    let mut rounds = RoundStats::default();
     for h in handles {
-        let (report, kv_peak, worker_reuse) = h.join().expect("worker panicked");
+        let (report, kv_peak, worker_reuse, worker_rounds) =
+            h.join().expect("worker panicked");
         reports.push(report);
         kv_peak_total += kv_peak;
         reuse.merge(&worker_reuse);
+        rounds.merge(&worker_rounds);
     }
     completions.sort_by_key(|c| c.id);
     assert_eq!(completions.len(), n_req, "all requests completed");
@@ -384,13 +478,31 @@ pub fn serve_with(
         .map(|c| c.total_s)
         .collect();
     let summary = Summary::from_slice(&lats);
+    // TTFT and time-between-tokens over served requests (a rejection
+    // emits no tokens and contributes to neither).
+    let ttfts: Vec<f64> = completions
+        .iter()
+        .filter(|c| c.error.is_none())
+        .filter_map(|c| c.ttft_s)
+        .collect();
+    let gaps: Vec<f64> = completions
+        .iter()
+        .filter(|c| c.error.is_none())
+        .flat_map(|c| c.tbt_gaps_s())
+        .collect();
     let merged = BackendReport::merged(&reports);
     let pctl = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
+    let pctl_of = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
     Ok(ServeReport {
         throughput_tok_s: total_tokens as f64 / wall_s,
         latency_p50_s: pctl(50.0),
         latency_p95_s: pctl(95.0),
         latency_mean_s: if lats.is_empty() { 0.0 } else { summary.mean() },
+        ttft_p50_s: pctl_of(&ttfts, 50.0),
+        ttft_p99_s: pctl_of(&ttfts, 99.0),
+        tbt_p50_s: pctl_of(&gaps, 50.0),
+        tbt_p99_s: pctl_of(&gaps, 99.0),
+        rounds,
         completions,
         wall_s,
         total_tokens,
@@ -556,41 +668,65 @@ mod tests {
 
     #[test]
     fn deferred_head_does_not_block_fitting_requests() {
-        // Head-of-line fix: pool of 4 pages × 4 tokens per worker. The
-        // queue is [medium (3 pages), big (4 pages), small (1 page)]:
-        // medium admits, big defers — and small, which fits next to
-        // medium, must be admitted *past* the deferred big instead of
-        // waiting for it.
+        // Head-of-line fix, parameterized over the admission scan window:
+        // pool of 4 pages × 4 tokens per worker. The queue is [medium
+        // (3 pages), big (4 pages), small (1 page)]: medium admits, big
+        // defers — and small, which fits next to medium, must be admitted
+        // *past* the deferred big whenever the window reaches it
+        // (explicit depth ≥ 2 or 0 = unbounded).
+        let mk_reqs = || {
+            vec![
+                Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 5 }, // 9 tok → 3 pages
+                Request { id: 1, prompt: vec![9; 8], n_out: 6 },          // 13 tok → 4 pages
+                Request { id: 2, prompt: vec![7, 7], n_out: 2 },          // 3 tok → 1 page
+            ]
+        };
+        for admit_window in [2usize, ADMIT_SCAN_WINDOW, 0] {
+            let opts = ServeOptions {
+                slots_per_worker: 2,
+                page_size: 4,
+                kv_pages: Some(4),
+                admit_window,
+                ..ServeOptions::default()
+            };
+            let rep = serve_with(&tiny_weights(), mk_reqs(), 1, &opts).unwrap();
+            assert_eq!(rep.completions.len(), 3);
+            for c in &rep.completions {
+                assert!(c.error.is_none(), "request {} rejected: {:?}", c.id, c.error);
+            }
+            let medium = &rep.completions[0];
+            let big = &rep.completions[1];
+            let small = &rep.completions[2];
+            assert!(
+                small.admitted_s < big.admitted_s,
+                "small ({}) must jump the deferred big ({}) at window {admit_window}",
+                small.admitted_s,
+                big.admitted_s
+            );
+            assert!(
+                big.admitted_s >= small.finished_s,
+                "big only fits after earlier work retires pages"
+            );
+            assert!(medium.admitted_s <= small.admitted_s);
+        }
+        // A window of 1 sees only the deferred head, so small cannot
+        // jump: it is admitted after big (the pre-fix behavior, kept
+        // reachable for apples-to-apples scheduling comparisons).
         let opts = ServeOptions {
             slots_per_worker: 2,
             page_size: 4,
             kv_pages: Some(4),
+            admit_window: 1,
             ..ServeOptions::default()
         };
-        let requests = vec![
-            Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 5 }, // 9 tok → 3 pages
-            Request { id: 1, prompt: vec![9; 8], n_out: 6 },          // 13 tok → 4 pages
-            Request { id: 2, prompt: vec![7, 7], n_out: 2 },          // 3 tok → 1 page
-        ];
-        let rep = serve_with(&tiny_weights(), requests, 1, &opts).unwrap();
+        let rep = serve_with(&tiny_weights(), mk_reqs(), 1, &opts).unwrap();
         assert_eq!(rep.completions.len(), 3);
-        for c in &rep.completions {
-            assert!(c.error.is_none(), "request {} rejected: {:?}", c.id, c.error);
-        }
-        let medium = &rep.completions[0];
         let big = &rep.completions[1];
         let small = &rep.completions[2];
         assert!(
-            small.admitted_s < big.admitted_s,
-            "small ({}) must jump the deferred big ({})",
-            small.admitted_s,
-            big.admitted_s
+            small.admitted_s > big.admitted_s,
+            "window 1 cannot scan past the deferred head"
         );
-        assert!(
-            big.admitted_s >= small.finished_s,
-            "big only fits after earlier work retires pages"
-        );
-        assert!(medium.admitted_s <= small.admitted_s);
     }
 
     #[test]
@@ -624,6 +760,73 @@ mod tests {
         for (a, b) in sjf.completions.iter().zip(&fifo.completions) {
             assert_eq!(a.tokens, b.tokens);
         }
+    }
+
+    #[test]
+    fn token_budget_serving_matches_segregated_tokens() {
+        // The token-budget scheduler is an execution schedule, not a
+        // numerics change: same completions, token for token, as the
+        // phase-segregated loop — while its rounds actually interleave
+        // prefill chunks with decodes.
+        let w = tiny_weights();
+        let mk_reqs = || {
+            (0..6)
+                .map(|id| Request {
+                    id,
+                    prompt: (0..3 + 4 * id).map(|i| 1 + (i % 50) as u32).collect(),
+                    n_out: 4,
+                })
+                .collect::<Vec<Request>>()
+        };
+        let seg = serve(&w, mk_reqs(), 1, 42);
+        let opts = ServeOptions {
+            token_budget: Some(8),
+            prefill_chunk: Some(3),
+            ..ServeOptions::default()
+        };
+        let bud = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+        assert_eq!(bud.completions.len(), 6);
+        for (a, b) in seg.completions.iter().zip(&bud.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "token budget must not change tokens");
+        }
+        assert_eq!(seg.rounds.chunked_prefill_tokens, 0);
+        let total_prompt: usize = mk_reqs().iter().map(|r| r.prompt.len()).sum();
+        assert_eq!(
+            bud.rounds.chunked_prefill_tokens, total_prompt,
+            "every prompt token streamed through in-round chunks"
+        );
+        assert!(
+            bud.rounds.max_prefill_tokens_round <= 8,
+            "rounds respect the budget: {:?}",
+            bud.rounds
+        );
+        assert!(bud.rounds.mixed_rounds > 0, "rounds mixed decodes with chunks");
+    }
+
+    #[test]
+    fn serve_reports_ttft_and_tbt_percentiles() {
+        let rep = serve(&tiny_weights(), reqs(8), 2, 9);
+        assert!(rep.ttft_p50_s > 0.0);
+        assert!(rep.ttft_p50_s <= rep.ttft_p99_s);
+        assert!(rep.tbt_p50_s > 0.0);
+        assert!(rep.tbt_p50_s <= rep.tbt_p99_s);
+        for c in &rep.completions {
+            let ttft = c.ttft_s.expect("every served request emitted tokens");
+            assert!(ttft > 0.0 && ttft <= c.total_s + 1e-9);
+            assert_eq!(c.token_marks_s.len(), c.tokens.len());
+            assert!(c.tbt_p99_s.expect("3 tokens → 2 gaps") >= 0.0);
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_without_budget_is_rejected() {
+        let opts = ServeOptions {
+            prefill_chunk: Some(4),
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("token-budget"), "{err}");
     }
 
     #[test]

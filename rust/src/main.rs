@@ -294,6 +294,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             .with_context(|| format!("unknown admission policy '{s}' (use fifo|sjf)"))?,
         None => SchedPolicy::Fifo,
     };
+    let token_budget: Option<usize> =
+        flags.get("token-budget").map(|s| s.parse()).transpose()?;
+    let prefill_chunk: Option<usize> =
+        flags.get("prefill-chunk").map(|s| s.parse()).transpose()?;
+    let admit_window: usize = flags
+        .get("admit-window")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(imax_llm::coordinator::ADMIT_SCAN_WINDOW);
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -335,6 +344,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         prefix_cache,
         swap_pages,
         sched,
+        token_budget,
+        prefill_chunk,
+        admit_window,
     };
     let rep = serve_with(&weights, requests, workers, &opts)?;
     println!(
@@ -347,6 +359,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         rep.latency_p95_s,
         rep.backend,
     );
+    println!(
+        "TTFT p50 {:.4}s p99 {:.4}s; TBT p50 {:.5}s p99 {:.5}s",
+        rep.ttft_p50_s, rep.ttft_p99_s, rep.tbt_p50_s, rep.tbt_p99_s,
+    );
+    if token_budget.is_some() {
+        let r = &rep.rounds;
+        println!(
+            "token-budget rounds: {} total ({} mixed), {} decode tokens, {} chunked \
+             prefill tokens ({:.1} per prefill round, max {} in one round)",
+            r.rounds,
+            r.mixed_rounds,
+            r.decode_tokens,
+            r.chunked_prefill_tokens,
+            r.prefill_tokens_per_round(),
+            r.max_prefill_tokens_round,
+        );
+    }
     println!(
         "peak resident KV (f16, page-granular, summed per worker): {}",
         imax_llm::util::human_bytes(rep.kv_peak_bytes_f16)
@@ -486,6 +515,7 @@ functional engine (real tiny models, real tokens):
   serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
               [--page-size N] [--kv-pages N]
               [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
+              [--token-budget N] [--prefill-chunk N] [--admit-window N]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
@@ -501,7 +531,16 @@ functional engine (real tiny models, real tokens):
               host swap arena of N pages per worker (swap traffic is charged
               through the imax DMA transfer mode; requires --prefix-cache);
               --sched picks admission order: fifo (default) or sjf
-              (shortest job first by prefix-aware worst-case pages)
+              (shortest job first by prefix-aware worst-case pages).
+              --token-budget N switches each worker to token-budget
+              iteration scheduling: every round carries all live decode
+              tokens first, then resumable prefill chunks of at most
+              --prefill-chunk tokens (default: the ubatch size) up to the
+              budget, so a long prompt interleaves with live decodes
+              instead of stalling them (the report prints TTFT/TBT
+              percentiles and the per-round mix). --admit-window N bounds
+              how many queued requests admission scans past a deferred
+              head per round (default 8; 0 = unbounded)
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 

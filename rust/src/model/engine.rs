@@ -114,6 +114,13 @@ pub trait KernelExec: MatvecExec {
     fn sync(&mut self) {
         self.submit();
     }
+
+    /// Round boundary notification from an iteration scheduler: one
+    /// token-budgeted round (live decode tokens + resumable prefill
+    /// chunks) just settled. Instrumented backends snapshot per-round
+    /// cost deltas here so the modeled transfer bottleneck stays visible
+    /// round by round; the default is a no-op.
+    fn round_boundary(&mut self) {}
 }
 
 /// Pure-Rust execution (no instrumentation).
@@ -243,6 +250,61 @@ pub struct SharedPrefill {
     pub cached_tokens: usize,
     /// Prompt tokens actually executed (`prompt.len() − cached_tokens`).
     pub executed_tokens: usize,
+}
+
+/// Resumable prefill state for one session: the prompt plus how far the
+/// cache has advanced through it. A cursor lets a long prompt prefill
+/// chunk-by-chunk *across* scheduler rounds ([`Engine::prefill_partial`])
+/// instead of monopolizing the engine until it completes — the
+/// token-budget scheduler interleaves cursor chunks with live decode
+/// tokens. Chunk boundaries are an execution schedule, never a numerics
+/// change: any sequence of cursor advances is bit-identical to a
+/// one-shot prefill of the same prompt.
+#[derive(Clone, Debug)]
+pub struct PrefillCursor {
+    prompt: Vec<u32>,
+    /// Prompt tokens already in the cache (adopted prefix + executed
+    /// chunks).
+    pos: usize,
+}
+
+impl PrefillCursor {
+    /// Cursor over a whole prompt (nothing cached yet).
+    pub fn new(prompt: Vec<u32>) -> PrefillCursor {
+        PrefillCursor::with_adopted(prompt, 0)
+    }
+
+    /// Cursor whose first `adopted_tokens` prompt tokens are already
+    /// cached (a prefix-cache adoption — see [`Engine::adopt_prefix`]);
+    /// execution starts at that offset.
+    pub fn with_adopted(prompt: Vec<u32>, adopted_tokens: usize) -> PrefillCursor {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(
+            adopted_tokens < prompt.len(),
+            "at least one prompt token must execute"
+        );
+        PrefillCursor { prompt, pos: adopted_tokens }
+    }
+
+    /// Prompt tokens already in the cache.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Prompt tokens still to execute.
+    pub fn remaining(&self) -> usize {
+        self.prompt.len() - self.pos
+    }
+
+    /// Whether the whole prompt is cached.
+    pub fn done(&self) -> bool {
+        self.pos == self.prompt.len()
+    }
+
+    /// The full prompt the cursor walks.
+    pub fn prompt(&self) -> &[u32] {
+        &self.prompt
+    }
 }
 
 impl Engine {
@@ -536,6 +598,44 @@ impl Engine {
             logits,
             cached_tokens: adopted.tokens,
             executed_tokens: prompt.len() - adopted.tokens,
+        })
+    }
+
+    /// Advance `cursor` by at most `max_tokens` prompt tokens on
+    /// `session`, as one ubatch call. Returns `Ok(Some(logits))` — the
+    /// prompt's last-token logits — when the cursor completes, `Ok(None)`
+    /// while prompt tokens remain. On `Err` nothing was executed and the
+    /// cursor is unchanged (the chunk's pages are reserved up front).
+    ///
+    /// This is the resumable core of the token-budget scheduler: a long
+    /// prompt advances one bounded chunk per round, interleaved with live
+    /// decode tokens, and the result is bit-identical to a one-shot
+    /// prefill of the same prompt (chunk boundaries are an execution
+    /// schedule, not a numerics change — pinned by
+    /// `rust/tests/chunked_prefill.rs`).
+    pub fn prefill_partial(
+        &mut self,
+        session: &Session,
+        cursor: &mut PrefillCursor,
+        max_tokens: usize,
+        exec: &mut dyn KernelExec,
+    ) -> Result<Option<Vec<f32>>, CacheError> {
+        assert!(max_tokens >= 1, "max_tokens must be at least 1");
+        assert!(!cursor.done(), "cursor already complete");
+        let end = (cursor.pos + max_tokens).min(cursor.prompt.len());
+        let last = end == cursor.prompt.len();
+        let logits = self.try_ubatch_on_slot(
+            session.slot,
+            &cursor.prompt[cursor.pos..end],
+            Phase::Prefill,
+            last,
+            exec,
+        )?;
+        cursor.pos = end;
+        Ok(if last {
+            Some(logits.expect("final prefill chunk produced logits"))
+        } else {
+            None
         })
     }
 
@@ -954,6 +1054,33 @@ mod tests {
             );
             assert_eq!(ub.session_pos(&sess), prompt.len());
         }
+    }
+
+    #[test]
+    fn prefill_partial_resumes_bit_identically() {
+        let w = ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 42);
+        let prompt = [1u32, 5, 9, 2, 11, 3, 7];
+        let mut one = Engine::new(w.clone());
+        let s1 = one.open_session(Sampler::greedy()).unwrap();
+        let want = one.prefill_session(&s1, &prompt, prompt.len(), &mut NativeExec);
+
+        let mut chunked = Engine::new(w);
+        let s2 = chunked.open_session(Sampler::greedy()).unwrap();
+        let mut cursor = PrefillCursor::new(prompt.to_vec());
+        assert_eq!(cursor.remaining(), prompt.len());
+        let mut got = None;
+        for max in [2usize, 1, 3, 16] {
+            assert!(got.is_none(), "logits only arrive on the final chunk");
+            got = chunked
+                .prefill_partial(&s2, &mut cursor, max, &mut NativeExec)
+                .unwrap();
+            if cursor.done() {
+                break;
+            }
+        }
+        assert_eq!(want, got.expect("cursor completed"), "resumed prefill bit-identical");
+        assert_eq!(chunked.session_pos(&s2), prompt.len());
+        assert_eq!(cursor.remaining(), 0);
     }
 
     #[test]

@@ -514,6 +514,12 @@ impl KernelExec for PlacementExec {
             p.exec.sync();
         }
     }
+
+    fn round_boundary(&mut self) {
+        for p in &mut self.parts {
+            p.exec.round_boundary();
+        }
+    }
 }
 
 /// A constructed backend executor. Closed enum rather than a trait
@@ -672,6 +678,16 @@ impl KernelExec for BackendExec {
             BackendExec::Placement(e) => e.sync(),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.sync(),
+        }
+    }
+
+    fn round_boundary(&mut self) {
+        match self {
+            BackendExec::Native(e) => e.round_boundary(),
+            BackendExec::Imax(e) => e.round_boundary(),
+            BackendExec::Placement(e) => e.round_boundary(),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.round_boundary(),
         }
     }
 }

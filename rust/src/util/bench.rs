@@ -156,6 +156,85 @@ impl BenchSet {
     }
 }
 
+/// One named scalar a bench exports to the CI perf trajectory.
+#[derive(Clone, Debug)]
+pub struct JsonMetric {
+    pub name: String,
+    pub value: f64,
+    /// `"lower"` or `"higher"` — which direction is an improvement.
+    pub better: &'static str,
+    /// Whether the regression checker should gate on this metric
+    /// (deterministic counters / modeled costs: yes; wall-clock: no —
+    /// those seed the trajectory informationally).
+    pub check: bool,
+}
+
+/// Machine-readable bench summary for the CI `bench-smoke` job: metrics
+/// collect during the run and, when the `BENCH_JSON` env var names a
+/// path, serialize there as
+/// `{"bench": .., "metrics": {name: {value, better, check}}}` —
+/// `scripts/check_bench_regression.py` merges these files into
+/// `BENCH_PR.json` and gates on the committed `BENCH_baseline.json`.
+/// (Hand-rolled serialization: the offline vendor set has no serde.)
+pub struct JsonMetrics {
+    bench: String,
+    metrics: Vec<JsonMetric>,
+}
+
+impl JsonMetrics {
+    pub fn new(bench: &str) -> JsonMetrics {
+        JsonMetrics {
+            bench: bench.to_string(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Record one metric. Non-finite values are clamped to 0 so the
+    /// output stays valid JSON.
+    pub fn push(&mut self, name: &str, value: f64, better: &'static str, check: bool) {
+        assert!(better == "lower" || better == "higher", "better: lower|higher");
+        self.metrics.push(JsonMetric {
+            name: name.to_string(),
+            value: if value.is_finite() { value } else { 0.0 },
+            better,
+            check,
+        });
+    }
+
+    pub fn metrics(&self) -> &[JsonMetric] {
+        &self.metrics
+    }
+
+    fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
+        out.push_str("  \"metrics\": {\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            let comma = if i + 1 < self.metrics.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    \"{}\": {{\"value\": {:e}, \"better\": \"{}\", \"check\": {}}}{}\n",
+                m.name, m.value, m.better, m.check, comma
+            ));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the summary to the path named by `BENCH_JSON`, if set.
+    /// Returns whether a file was written.
+    pub fn write_if_requested(&self) -> std::io::Result<bool> {
+        match std::env::var("BENCH_JSON") {
+            Ok(path) if !path.is_empty() => {
+                std::fs::write(&path, self.to_json())?;
+                eprintln!("wrote bench summary to {path}");
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +248,23 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.min_s > 0.0);
         assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn json_metrics_serialize_valid_shape() {
+        let mut m = JsonMetrics::new("unit");
+        m.push("a", 1.5, "lower", true);
+        m.push("b", f64::NAN, "higher", false);
+        let s = m.to_json();
+        assert!(s.contains("\"bench\": \"unit\""), "{s}");
+        assert!(
+            s.contains("\"a\": {\"value\": 1.5e0, \"better\": \"lower\", \"check\": true},"),
+            "{s}"
+        );
+        assert!(
+            s.contains("\"b\": {\"value\": 0e0, \"better\": \"higher\", \"check\": false}"),
+            "{s}"
+        );
     }
 
     #[test]

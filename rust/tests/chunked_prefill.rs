@@ -1,0 +1,219 @@
+//! Chunked-prefill equivalence suite: a prompt advanced chunk-by-chunk
+//! through a resumable [`PrefillCursor`] (the token-budget scheduler's
+//! prefill primitive) must be *bit-identical* to a one-shot prefill of
+//! the same prompt — chunk boundaries are an execution schedule, never a
+//! numerics change. Covers chunk sizes 1, `page_size − 1`, `page_size`,
+//! and whole-prompt, a prefix-cache warm hit that lands mid-chunk, and
+//! the token-budget batcher composing both with admission-time prefix
+//! adoption.
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{Admitted, ContinuousBatcher, Request};
+use imax_llm::model::engine::{Engine, NativeExec, PrefillCursor};
+use imax_llm::model::{ModelConfig, ModelWeights, Phase, QuantScheme, Sampler};
+
+const PAGE_SIZE: usize = 4;
+
+fn weights(seed: u64) -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, seed)
+}
+
+/// One-shot reference: whole-prompt prefill then `n_out` greedy decode
+/// steps; returns (prefill logits, every decode logits, tokens).
+fn one_shot(
+    w: &ModelWeights,
+    prompt: &[u32],
+    n_out: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<u32>) {
+    let mut e = Engine::with_paged_slots(w.clone(), 1, PAGE_SIZE, None);
+    let s = e.open_session(Sampler::greedy()).unwrap();
+    let mut logits = e.prefill_session(&s, prompt, prompt.len(), &mut NativeExec);
+    let prefill_logits = logits.clone();
+    let mut trace = Vec::new();
+    let mut toks = Vec::new();
+    for step in 0..n_out {
+        let next = Sampler::greedy().sample(&logits);
+        toks.push(next);
+        if step + 1 < n_out {
+            logits = e
+                .forward_session(&s, next, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+            trace.push(logits.clone());
+        }
+    }
+    (prefill_logits, trace, toks)
+}
+
+#[test]
+fn cursor_chunks_bit_identical_across_chunk_sizes() {
+    // Chunk sizes 1, page_size−1, page_size, and whole-prompt, over
+    // prompts whose lengths do and don't align with pages and chunks.
+    let w = weights(42);
+    let prompts: &[&[u32]] = &[
+        &[5],
+        &[1, 5, 9, 2, 11],
+        &[2, 7, 1, 8, 2, 8, 1, 8],
+        &[9, 8, 7, 6, 5, 4, 3, 2, 1, 9, 8, 7, 6],
+    ];
+    for prompt in prompts {
+        let (want_prefill, want_trace, want_toks) = one_shot(&w, prompt, 6);
+        for chunk in [1usize, PAGE_SIZE - 1, PAGE_SIZE, prompt.len()] {
+            let mut e = Engine::with_paged_slots(w.clone(), 1, PAGE_SIZE, None);
+            let s = e.open_session(Sampler::greedy()).unwrap();
+            let mut cursor = PrefillCursor::new(prompt.to_vec());
+            let mut got = None;
+            let mut steps = 0usize;
+            while !cursor.done() {
+                got = e
+                    .prefill_partial(&s, &mut cursor, chunk, &mut NativeExec)
+                    .unwrap();
+                steps += 1;
+            }
+            assert_eq!(steps, prompt.len().div_ceil(chunk), "chunk count (chunk {chunk})");
+            let mut logits = got.expect("cursor completed with logits");
+            assert_eq!(
+                want_prefill,
+                logits,
+                "prefill logits (chunk {chunk}, prompt len {})",
+                prompt.len()
+            );
+            let mut toks = Vec::new();
+            for step in 0..6 {
+                let next = Sampler::greedy().sample(&logits);
+                toks.push(next);
+                if step + 1 < 6 {
+                    logits = e
+                        .forward_session(&s, next, Phase::Decode, true, &mut NativeExec)
+                        .unwrap();
+                    assert_eq!(
+                        want_trace[step], logits,
+                        "decode logits step {step} (chunk {chunk})"
+                    );
+                }
+            }
+            assert_eq!(want_toks, toks, "greedy decode after chunked prefill");
+        }
+    }
+}
+
+#[test]
+fn warm_prefix_hit_mid_chunk_bit_identical_with_fewer_executed_tokens() {
+    // A cached two-page prefix adopted at admission starts the cursor
+    // mid-prompt; the chunk size (5) straddles the adoption boundary, so
+    // the first resumed chunk is *not* page- or chunk-aligned. Results
+    // must match a cold one-shot run bit for bit while executing
+    // strictly fewer prompt tokens.
+    let w = weights(7);
+    let prompt: Vec<u32> = (1..=12).collect();
+    let (want_prefill, _, want_toks) = one_shot(&w, &prompt, 5);
+
+    let mut e = Engine::with_paged_slots(w.clone(), 2, PAGE_SIZE, None);
+    e.enable_prefix_cache();
+    // Warm the cache: one full shared-prefill pass commits and registers
+    // the prompt's pages, which survive the session as cached entries.
+    let warmer = e.open_session(Sampler::greedy()).unwrap();
+    let cold = e
+        .try_prefill_session_shared(&warmer, &prompt, 32, &mut NativeExec)
+        .unwrap();
+    assert_eq!(cold.cached_tokens, 0, "first pass is cold");
+    assert_eq!(want_prefill, cold.logits, "shared prefill matches one-shot");
+    e.close_session(warmer);
+
+    // Warm hit: adoption covers the two full pages (8 of 12 tokens), and
+    // the cursor resumes from there in chunks of 5 → one chunk of 4.
+    let sess = e.open_session(Sampler::greedy()).unwrap();
+    let adopted = e.adopt_prefix(&sess, &prompt, &mut NativeExec);
+    assert_eq!(adopted.tokens, 2 * PAGE_SIZE, "page-aligned adoption");
+    let mut cursor = PrefillCursor::with_adopted(prompt.clone(), adopted.tokens);
+    assert_eq!(cursor.remaining(), prompt.len() - 2 * PAGE_SIZE);
+    let mut executed = 0usize;
+    let mut got = None;
+    while !cursor.done() {
+        let before = cursor.pos();
+        got = e.prefill_partial(&sess, &mut cursor, 5, &mut NativeExec).unwrap();
+        executed += cursor.pos() - before;
+    }
+    let mut logits = got.expect("cursor completed");
+    assert_eq!(want_prefill, logits, "warm chunked prefill bit-identical");
+    assert_eq!(executed, 4, "strictly fewer tokens executed than the cold 12");
+    let mut toks = Vec::new();
+    for step in 0..5 {
+        let next = Sampler::greedy().sample(&logits);
+        toks.push(next);
+        if step + 1 < 5 {
+            logits = e
+                .forward_session(&sess, next, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+        }
+    }
+    assert_eq!(want_toks, toks, "decode after a mid-chunk warm hit");
+}
+
+#[test]
+fn token_budget_batcher_composes_with_prefix_adoption() {
+    // Templated prompts through the token-budget batcher with the prefix
+    // cache on: warm admissions adopt the shared two-page template and
+    // stream only their tails through in-round chunks. Tokens must match
+    // the phase-segregated prefix-cache run, with strictly fewer chunked
+    // prefill tokens than the total prompt length.
+    let mk_reqs = || {
+        (0..4)
+            .map(|id| {
+                let mut prompt: Vec<u32> = (100..100 + 2 * PAGE_SIZE as u32).collect();
+                prompt.extend([7 + id as u32, 3]);
+                Request { id: id as usize, prompt, n_out: 4 }
+            })
+            .collect::<Vec<Request>>()
+    };
+    let run = |budget: Option<usize>| {
+        let mut engine = Engine::with_paged_slots(weights(11), 4, PAGE_SIZE, None);
+        engine.enable_prefix_cache();
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        if let Some(n) = budget {
+            b = b.with_token_budget(n).with_prefill_chunk(3);
+        }
+        let mut exec = NativeExec;
+        let mut reqs = mk_reqs().into_iter();
+        assert!(matches!(
+            b.admit(reqs.next().unwrap(), Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        if budget.is_some() {
+            // Stream the cold template in: ceil(10 / 3) = 4 rounds
+            // completes request 0's prefill and registers its pages (on
+            // the segregated path admission already did both inline).
+            for _ in 0..4 {
+                assert!(b.decode_round(&mut exec).is_empty());
+            }
+            assert_eq!(b.reuse_stats().prefix_hits, 0, "cold so far");
+        }
+        for req in reqs {
+            assert!(matches!(
+                b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+                Ok(Admitted::Active)
+            ));
+        }
+        let mut logs = b.drain(&mut exec);
+        logs.sort_by_key(|l| l.id);
+        let reuse = b.reuse_stats();
+        (logs, b.round_stats(), reuse)
+    };
+    let (seg, _, seg_reuse) = run(None);
+    let (bud, bud_stats, bud_reuse) = run(Some(6));
+    for (a, b) in seg.iter().zip(&bud) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "budget + prefix cache must not change tokens");
+    }
+    // Same sharing either way: requests 1..4 adopt the template…
+    assert_eq!(seg_reuse.prefix_hits, 3);
+    assert_eq!(bud_reuse.prefix_hits, 3);
+    assert_eq!(bud_reuse.prefix_hit_tokens, 3 * 2 * PAGE_SIZE);
+    // …so the budgeted run streams only the cold prompt plus three tails.
+    let total_prompt: usize = mk_reqs().iter().map(|r| r.prompt.len()).sum();
+    assert_eq!(
+        bud_stats.chunked_prefill_tokens,
+        total_prompt - 3 * 2 * PAGE_SIZE,
+        "adopted spans never stream through chunks"
+    );
+}

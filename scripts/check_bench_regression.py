@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Merge bench JSON summaries and gate them against a committed baseline.
+
+Each bench binary (run with BENCH_JSON=<path>) writes::
+
+    {"bench": "<name>", "metrics": {"<metric>": {"value": .., "better":
+     "lower"|"higher", "check": true|false}}}
+
+This script namespaces every metric as ``<bench>/<metric>``, merges the
+given files into one summary (``--out``, uploaded as the CI artifact that
+seeds the perf trajectory), then compares against the baseline:
+
+* a metric is *gated* only when both the baseline entry and the current
+  entry have ``check: true`` (wall-clock metrics ride along as
+  informational trajectory points);
+* ``better: lower`` fails when current > baseline * (1 + tolerance),
+  ``better: higher`` fails when current < baseline * (1 - tolerance);
+* metrics present on only one side are reported but never fail — a new
+  bench starts recording before it starts gating. A baseline value of
+  null likewise records without gating (used to stage metrics whose
+  first real value is measured by CI itself).
+
+Exit status 1 on any regression, 0 otherwise. Stdlib only.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_metrics(path):
+    """Return {namespaced_name: entry} for one bench summary file."""
+    with open(path) as f:
+        doc = json.load(f)
+    bench = doc.get("bench", "unknown")
+    out = {}
+    for name, entry in doc.get("metrics", {}).items():
+        out[f"{bench}/{name}"] = entry
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_baseline.json")
+    ap.add_argument("--current", nargs="+", required=True, help="bench summary files")
+    ap.add_argument("--out", help="write the merged current summary here")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.20,
+        help="relative regression allowed before failing (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    current = {}
+    for path in args.current:
+        for name, entry in load_metrics(path).items():
+            if name in current:
+                print(f"warning: duplicate metric {name} (keeping the first)")
+                continue
+            current[name] = entry
+
+    # Write the merged summary first so the artifact survives a failing
+    # gate (the trajectory should record regressions too).
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"metrics": current}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote merged summary to {args.out}")
+
+    with open(args.baseline) as f:
+        baseline = json.load(f).get("metrics", {})
+
+    failures = []
+    width = max((len(n) for n in set(current) | set(baseline)), default=10)
+    print(f"\n{'metric':<{width}}  {'baseline':>14}  {'current':>14}  verdict")
+    for name in sorted(set(current) | set(baseline)):
+        cur = current.get(name)
+        base = baseline.get(name)
+        if cur is None:
+            print(f"{name:<{width}}  {base['value']!s:>14}  {'-':>14}  missing from run")
+            continue
+        if base is None or base.get("value") is None:
+            print(f"{name:<{width}}  {'-':>14}  {cur['value']:>14.6g}  recorded (no gate)")
+            continue
+        bval, cval = float(base["value"]), float(cur["value"])
+        gated = base.get("check", False) and cur.get("check", False)
+        better = base.get("better", cur.get("better", "lower"))
+        if not gated:
+            print(f"{name:<{width}}  {bval:>14.6g}  {cval:>14.6g}  informational")
+            continue
+        if better == "lower":
+            bad = cval > bval * (1.0 + args.tolerance)
+        else:
+            bad = cval < bval * (1.0 - args.tolerance)
+        verdict = "REGRESSION" if bad else "ok"
+        print(f"{name:<{width}}  {bval:>14.6g}  {cval:>14.6g}  {verdict}")
+        if bad:
+            failures.append((name, bval, cval, better))
+
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed beyond {args.tolerance:.0%}:")
+        for name, bval, cval, better in failures:
+            print(f"  {name}: baseline {bval:.6g} -> current {cval:.6g} (better: {better})")
+        return 1
+    print("\nno gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
