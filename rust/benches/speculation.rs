@@ -1,0 +1,196 @@
+//! Bench: speculative decoding — what the draft/verify loop buys on the
+//! paper's LOAD-bound decode regime.
+//!
+//! Vanilla decode streams every offloaded weight for one token of useful
+//! work. With `--speculate k`, a prompt-lookup n-gram drafter proposes
+//! up to k continuation tokens and one batched verify ubatch prices the
+//! whole draft at a single weight stream, so every accepted token
+//! divides the per-round streamed bytes. This bench serves a templated
+//! workload (repetitive prompt spans, the shape where prompt-lookup
+//! drafting wins) through a [`ContinuousBatcher`] twice — speculation
+//! off and k=4 — under the instrumented IMAX cost model and compares:
+//!
+//! * decode-phase modeled bytes streamed host→LMM per emitted token
+//!   (the tentpole metric: strictly lower with speculation),
+//! * decode rounds to drain the same workload,
+//! * acceptance: accepted tokens per verify pass and the draft accept
+//!   rate.
+//!
+//! Greedy verification is bit-identical to vanilla decode, so the token
+//! streams must match exactly. The shape is already quick (2-layer
+//! 16-vocab model, 3 requests), so `IMAX_BENCH_QUICK` changes nothing.
+//!
+//! With `BENCH_JSON=path` a machine-readable summary is written for the
+//! CI `bench-smoke` job (`scripts/check_bench_regression.py` gates the
+//! deterministic counters against `BENCH_baseline.json`).
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{
+    Admitted, ContinuousBatcher, InstrumentedExec, OffloadPolicy, Request, SessionLog,
+};
+use imax_llm::harness::workloads::templated_prompt;
+use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
+use imax_llm::model::engine::NativeExec;
+use imax_llm::model::{DrafterSpec, Engine, ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::util::bench::JsonMetrics;
+use imax_llm::util::report::Table;
+
+const SPECULATE: usize = 4;
+const N_REQ: usize = 3;
+const PROMPT_LEN: usize = 48;
+const N_OUT: usize = 24;
+
+/// 16-token vocabulary: greedy decode revisits tokens within a few
+/// steps, so the trailing gram of the history re-occurs and the drafter
+/// has material to work with — the same boilerplate-heavy regime the
+/// templated prompts model on real vocabularies.
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "spec-bench",
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        d_ffn: 128,
+        vocab_size: 16,
+        qk_norm: true,
+        rope_theta: 1e4,
+        rms_eps: 1e-6,
+        max_seq_len: 128,
+    }
+}
+
+fn weights() -> ModelWeights {
+    ModelWeights::random(&cfg(), QuantScheme::Q8_0, 29)
+}
+
+struct RunStats {
+    tokens: Vec<Vec<u32>>,
+    /// Modeled operand bytes streamed host→LMM after the prefill
+    /// boundary (decode + verify traffic only).
+    decode_streamed_bytes: u64,
+    decode_rounds: usize,
+    total_out_tokens: usize,
+    verify_calls: usize,
+    draft_tokens: usize,
+    draft_accepted: usize,
+}
+
+fn run(speculate: usize) -> RunStats {
+    let mut exec = InstrumentedExec::new(
+        NativeExec,
+        ImaxDevice::fpga(2),
+        OffloadPolicy::new(LmmConfig::new(64)),
+        TransferMode::Coalesced,
+    );
+    let mut b = ContinuousBatcher::new(Engine::with_slots(weights(), 4), 32, Instant::now());
+    if speculate > 0 {
+        b = b.with_speculation(speculate, DrafterSpec::default());
+    }
+    for id in 0..N_REQ {
+        let req = Request {
+            id,
+            prompt: templated_prompt(id, PROMPT_LEN, cfg().vocab_size),
+            n_out: N_OUT,
+        };
+        assert!(matches!(
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+    }
+    // Settle admission-time prefill into its own round so everything
+    // past this boundary is decode/verify traffic.
+    exec.round_boundary();
+    let prefill_bytes = exec.streamed_bytes;
+    let prefill_rounds = exec.rounds.len();
+    let mut logs: Vec<SessionLog> = Vec::new();
+    while b.n_active() > 0 {
+        logs.extend(b.decode_round(&mut exec));
+    }
+    logs.sort_by_key(|l| l.id);
+    RunStats {
+        tokens: logs.iter().map(|l| l.tokens.clone()).collect(),
+        decode_streamed_bytes: exec.streamed_bytes - prefill_bytes,
+        decode_rounds: exec.rounds.len() - prefill_rounds,
+        total_out_tokens: logs.iter().map(|l| l.tokens.len()).sum(),
+        verify_calls: logs.iter().map(|l| l.verify_calls).sum(),
+        draft_tokens: logs.iter().map(|l| l.draft_tokens).sum(),
+        draft_accepted: logs.iter().map(|l| l.draft_accepted).sum(),
+    }
+}
+
+fn main() {
+    let vanilla = run(0);
+    let spec = run(SPECULATE);
+    assert_eq!(
+        vanilla.tokens, spec.tokens,
+        "speculative decode must be bit-identical to vanilla"
+    );
+    assert!(spec.verify_calls > 0, "templated workload must trigger drafting");
+    // Every emitted token is an accepted token (verification is exact),
+    // so bytes per emitted token IS bytes per accepted token.
+    let bpt = |r: &RunStats| r.decode_streamed_bytes as f64 / r.total_out_tokens as f64;
+    let (bpt_vanilla, bpt_spec) = (bpt(&vanilla), bpt(&spec));
+    assert!(
+        bpt_spec < bpt_vanilla,
+        "speculation must stream fewer modeled bytes per accepted token \
+         ({bpt_spec:.0} vs {bpt_vanilla:.0})"
+    );
+    let accepted_per_verify =
+        (spec.draft_accepted + spec.verify_calls) as f64 / spec.verify_calls as f64;
+    let accept_rate = spec.draft_accepted as f64 / spec.draft_tokens.max(1) as f64;
+
+    let mut t = Table::new(
+        "speculative decoding: templated prompts, greedy, k=4 vs vanilla \
+         (modeled imax:fpga2)",
+        &["metric", "vanilla", "speculate-4"],
+    );
+    t.row(vec![
+        "decode rounds to drain".to_string(),
+        vanilla.decode_rounds.to_string(),
+        spec.decode_rounds.to_string(),
+    ]);
+    t.row(vec![
+        "decode-phase bytes streamed host->LMM".to_string(),
+        vanilla.decode_streamed_bytes.to_string(),
+        spec.decode_streamed_bytes.to_string(),
+    ]);
+    t.row(vec![
+        "bytes streamed per accepted token".to_string(),
+        format!("{bpt_vanilla:.0}"),
+        format!("{bpt_spec:.0}"),
+    ]);
+    t.row(vec![
+        "verify passes / drafted / accepted".to_string(),
+        "-".to_string(),
+        format!("{} / {} / {}", spec.verify_calls, spec.draft_tokens, spec.draft_accepted),
+    ]);
+    t.row(vec![
+        "accepted tokens per verify pass".to_string(),
+        "1 (by definition)".to_string(),
+        format!("{accepted_per_verify:.2}"),
+    ]);
+    t.row(vec![
+        "draft accept rate".to_string(),
+        "-".to_string(),
+        format!("{:.0}%", 100.0 * accept_rate),
+    ]);
+    t.print();
+
+    let mut json = JsonMetrics::new("speculation");
+    json.push("decode_rounds_spec0", vanilla.decode_rounds as f64, "lower", false);
+    json.push("decode_rounds_spec4", spec.decode_rounds as f64, "lower", true);
+    json.push("streamed_bytes_per_token_spec0", bpt_vanilla, "lower", false);
+    json.push("streamed_bytes_per_token_spec4", bpt_spec, "lower", true);
+    json.push(
+        "bytes_per_token_ratio_spec0_over_spec4",
+        bpt_vanilla / bpt_spec,
+        "higher",
+        true,
+    );
+    json.push("accepted_tokens_per_verify", accepted_per_verify, "higher", true);
+    json.push("draft_accept_rate", accept_rate, "higher", false);
+    json.write_if_requested().expect("BENCH_JSON path writable");
+}

@@ -62,6 +62,31 @@
 //! the executor via [`KernelExec::round_boundary`] so the instrumented
 //! cost model keeps the modeled transfer bottleneck visible per round.
 //!
+//! **Speculative decoding**
+//! ([`ContinuousBatcher::with_speculation`]): vanilla decode streams
+//! every offloaded weight for one token of useful work — the paper's
+//! LOAD-bound regime at its worst. With speculation on, each live
+//! decode drafts up to k continuation tokens per round (cheap n-gram
+//! prompt lookup, [`crate::model::drafter::NgramDrafter`], seeded from
+//! the request's prompt + generated history and the prefix cache's
+//! committed spans) and verifies the whole draft in **one** batched
+//! ubatch ([`crate::model::Engine::try_verify_session`]). Acceptance
+//! replays the session's own sampler over the per-position verify
+//! logits in vanilla order, so output is bit-identical to vanilla
+//! decode by construction (greedy *and* seeded top-k): accepted tokens
+//! keep their cached KV, the first mismatch rolls the rejected tail
+//! back through the paged pool's truncate path (refcount/CoW-safe),
+//! and the final sampled token of every verify — the bonus on full
+//! acceptance, the sampler's own choice on mismatch — stays *pending*:
+//! it is emitted now but forwarded by the next round, which skips its
+//! initial sample so stateful samplers advance exactly once per token.
+//! Drafted tokens are budgeted tokens: the mandatory one-token decode
+//! stays starvation-exempt, while the speculative extension spends
+//! only what the round's token budget still allows, competing fairly
+//! with prefill chunks. Every accepted token is one more token per
+//! round of streamed weights — decode moves toward the prefill regime,
+//! which is exactly the trade the CGLA cost model rewards.
+//!
 //! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
 //! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
 //! two — the scheduler model distributes kernel rows across lanes (EXEC
@@ -76,6 +101,7 @@ use crate::coordinator::offload::OffloadPolicy;
 use crate::imax::device::ImaxDevice;
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
+use crate::model::drafter::{DrafterSpec, NgramDrafter};
 use crate::model::engine::{Engine, KernelExec, PrefillCursor, Session};
 use crate::model::graph::Phase;
 use crate::model::kv_cache::{CacheError, KvReuseStats};
@@ -137,6 +163,13 @@ pub struct SessionLog {
     /// time-to-first-token, successive gaps give time-between-tokens —
     /// the tail-latency quantities serving stacks are judged on.
     pub token_marks_s: Vec<f64>,
+    /// Speculative decoding: batched verify passes this request ran
+    /// (0 with speculation off or when no draft ever matched).
+    pub verify_calls: usize,
+    /// Drafted tokens proposed across all verify passes.
+    pub draft_tokens: usize,
+    /// Drafted tokens accepted (their cached KV survived verification).
+    pub draft_accepted: usize,
 }
 
 impl SessionLog {
@@ -151,6 +184,28 @@ impl SessionLog {
     /// Gaps between successive sampled tokens (empty below two tokens).
     pub fn tbt_gaps_s(&self) -> Vec<f64> {
         self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Tokens emitted per verify pass (accepted drafts plus the pass's
+    /// own always-emitted token — the bonus on full acceptance, the
+    /// sampler's choice on mismatch). `None` without any verify pass;
+    /// 1.0 means speculation never beat vanilla decode.
+    pub fn accepted_tokens_per_verify(&self) -> Option<f64> {
+        if self.verify_calls == 0 {
+            None
+        } else {
+            Some((self.draft_accepted + self.verify_calls) as f64 / self.verify_calls as f64)
+        }
+    }
+
+    /// Fraction of drafted tokens the verifier accepted (`None` when
+    /// nothing was ever drafted).
+    pub fn draft_accept_rate(&self) -> Option<f64> {
+        if self.draft_tokens == 0 {
+            None
+        } else {
+            Some(self.draft_accepted as f64 / self.draft_tokens as f64)
+        }
     }
 }
 
@@ -291,6 +346,16 @@ struct InFlight {
     tokens: Vec<u32>,
     /// Epoch-relative emission instant of each sampled token.
     token_marks_s: Vec<f64>,
+    /// The last sampled token has not been forwarded yet (its logits
+    /// are pending): set after every speculative verify, so the next
+    /// round forwards it instead of sampling again — stateful samplers
+    /// advance exactly once per token. Always false with speculation
+    /// off.
+    pending_forward: bool,
+    /// Speculation counters, moved into the [`SessionLog`] at finish.
+    verify_calls: usize,
+    draft_tokens: usize,
+    draft_accepted: usize,
     /// Fresh worst-case pages committed against the pool (worst case
     /// minus aliased prefix pages; the aliased pages enter the distinct
     /// demand via the batcher's shared-page union).
@@ -315,6 +380,10 @@ impl InFlight {
             logits: _,
             tokens,
             token_marks_s,
+            pending_forward: _,
+            verify_calls,
+            draft_tokens,
+            draft_accepted,
             fresh_pages: _,
             aliased: _,
             queue_s,
@@ -334,6 +403,9 @@ impl InFlight {
             decode_start_s,
             finished_s,
             token_marks_s,
+            verify_calls,
+            draft_tokens,
+            draft_accepted,
         };
         (session, log)
     }
@@ -351,6 +423,11 @@ pub struct ContinuousBatcher {
     /// Largest resumable prefill chunk one round may carry per request
     /// (further capped by the remaining budget).
     prefill_chunk: usize,
+    /// Drafted tokens verified per live sequence per round (0 = vanilla
+    /// decode, one forward pass per token).
+    speculate: usize,
+    /// Draft proposer for the speculative path.
+    drafter: NgramDrafter,
     /// Token counts of every settled round, in order.
     rounds: Vec<RoundTokens>,
     active: Vec<InFlight>,
@@ -377,6 +454,8 @@ impl ContinuousBatcher {
             epoch,
             token_budget: None,
             prefill_chunk: ubatch,
+            speculate: 0,
+            drafter: DrafterSpec::default().build(),
             rounds: Vec::new(),
             active: Vec::new(),
             committed_pages: 0,
@@ -401,6 +480,23 @@ impl ContinuousBatcher {
         assert!(chunk >= 1, "prefill chunk must be at least 1");
         self.prefill_chunk = chunk;
         self
+    }
+
+    /// Enable speculative decoding: every decode round drafts up to `k`
+    /// tokens per live sequence with `drafter` and verifies the draft
+    /// in one batched ubatch. Output is bit-identical to vanilla decode
+    /// (the verifier replays the session's own sampler over the verify
+    /// logits in vanilla order); accepted tokens amortize the round's
+    /// streamed weight bytes. `k == 0` keeps vanilla decode.
+    pub fn with_speculation(mut self, k: usize, drafter: DrafterSpec) -> ContinuousBatcher {
+        self.speculate = k;
+        self.drafter = drafter.build();
+        self
+    }
+
+    /// The configured draft length (0 = speculation off).
+    pub fn speculate(&self) -> usize {
+        self.speculate
     }
 
     /// The configured per-round token budget (`None` = phase-segregated).
@@ -590,6 +686,10 @@ impl ContinuousBatcher {
                 logits: Vec::new(),
                 tokens: Vec::new(),
                 token_marks_s: Vec::new(),
+                pending_forward: false,
+                verify_calls: 0,
+                draft_tokens: 0,
+                draft_accepted: 0,
                 fresh_pages,
                 aliased: adopted.pages,
                 queue_s,
@@ -629,6 +729,10 @@ impl ContinuousBatcher {
             logits,
             tokens: Vec::new(),
             token_marks_s: Vec::new(),
+            pending_forward: false,
+            verify_calls: 0,
+            draft_tokens: 0,
+            draft_accepted: 0,
             fresh_pages,
             aliased: adopted.pages,
             queue_s,
@@ -651,6 +755,92 @@ impl ContinuousBatcher {
         Ok(Admitted::Active)
     }
 
+    /// Draft a speculative continuation for live flight `i`: at most
+    /// `speculate` tokens, further capped by the request's remaining
+    /// output room (sampling a verify emits up to k+1 tokens and caches
+    /// 1+k positions, so k ≤ room−1 keeps both inside the
+    /// admission-committed worst case of `prompt + n_out − 1` cached
+    /// tokens — verify can never reserve a page admission didn't pay
+    /// for) and by `budget_room`. Proposed by the n-gram drafter over
+    /// prompt + generated history, with the prefix cache's committed
+    /// spans as fallback corpus when enabled. Empty with speculation
+    /// off or when no gram matches.
+    fn draft_for(&self, i: usize, budget_room: usize) -> Vec<u32> {
+        if self.speculate == 0 {
+            return Vec::new();
+        }
+        let f = &self.active[i];
+        let room = f.req.n_out - f.tokens.len();
+        let k = self.speculate.min(room.saturating_sub(1)).min(budget_room);
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut history = Vec::with_capacity(f.req.prompt.len() + f.tokens.len());
+        history.extend_from_slice(&f.req.prompt);
+        history.extend_from_slice(&f.tokens);
+        let corpus = self.engine.cache.prefix_token_spans();
+        self.drafter.draft(&history, &corpus, k)
+    }
+
+    /// Verify `next` plus `draft` for flight `i` in one batched ubatch,
+    /// replaying the session's sampler over the per-position logits
+    /// exactly as vanilla decode would — the sampler sees the same
+    /// logits in the same order whether the draft is right or wrong, so
+    /// output is bit-identical by construction. Accepted tokens keep
+    /// their cached KV; the first mismatch truncates the rejected tail
+    /// through the paged pool (refcount/CoW-safe). The last sampled
+    /// token (bonus on full acceptance, the sampler's own pick on
+    /// mismatch) has no cached entry yet and is left pending its
+    /// forward pass. Returns whether the request finished.
+    fn verify_draft(
+        &mut self,
+        i: usize,
+        next: u32,
+        draft: &[u32],
+        exec: &mut dyn KernelExec,
+    ) -> bool {
+        let mut ubatch = Vec::with_capacity(1 + draft.len());
+        ubatch.push(next);
+        ubatch.extend_from_slice(draft);
+        let f = &mut self.active[i];
+        let base_len = self.engine.session_pos(&f.session);
+        let rows = self
+            .engine
+            .try_verify_session(&f.session, &ubatch, exec)
+            .expect("verify pages committed at admission");
+        f.verify_calls += 1;
+        f.draft_tokens += draft.len();
+        let mut accepted = 0usize;
+        let mut done = false;
+        for (j, row) in rows.iter().enumerate() {
+            let sampled = f.session.sampler.sample(row);
+            f.tokens.push(sampled);
+            f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
+            let matched = j < draft.len() && sampled == draft[j];
+            if matched {
+                accepted += 1;
+            }
+            if f.tokens.len() == f.req.n_out {
+                done = true;
+                break;
+            }
+            if !matched {
+                break;
+            }
+        }
+        f.draft_accepted += accepted;
+        if !done {
+            // Roll back rejected-draft KV entries; the pending token's
+            // position was never cached, so the valid length is the
+            // base plus `next` plus the accepted prefix.
+            if accepted < draft.len() {
+                self.engine.truncate_session(&f.session, base_len + 1 + accepted);
+            }
+            f.pending_forward = true;
+        }
+        done
+    }
+
     /// One token-budgeted round, in admission order; requests that reach
     /// their `n_out` are retired and returned. Each request samples
     /// exactly `n_out` tokens over its lifetime (the final sampled token
@@ -659,7 +849,11 @@ impl ContinuousBatcher {
     /// The round runs two passes. First the *decode pass*: one decode
     /// step for **every** live decoding request — the decode-starvation
     /// guarantee; live decodes are never displaced by prefill work, even
-    /// when they alone exceed the budget. Then the *prefill pass*: the
+    /// when they alone exceed the budget. With speculation on, each
+    /// decode step may extend into a drafted verify (up to `speculate`
+    /// extra budgeted tokens, see [`ContinuousBatcher::with_speculation`])
+    /// that emits several tokens from one batched pass while staying
+    /// bit-identical to vanilla decode. Then the *prefill pass*: the
     /// remaining budget (`token_budget − decode tokens`) feeds resumable
     /// prefill chunks (at most `prefill_chunk` tokens per request) to
     /// admitted-but-unprefilled slots; a request whose cursor completes
@@ -669,6 +863,7 @@ impl ContinuousBatcher {
     /// phase-segregated decode round.
     pub fn decode_round(&mut self, exec: &mut dyn KernelExec) -> Vec<SessionLog> {
         let mut finished = Vec::new();
+        let budget = self.token_budget.unwrap_or(usize::MAX);
         let mut decoded = 0usize;
         let mut i = 0;
         while i < self.active.len() {
@@ -681,16 +876,37 @@ impl ContinuousBatcher {
             if f.tokens.is_empty() {
                 f.decode_start_s = self.epoch.elapsed().as_secs_f64();
             }
-            let next = f.session.sampler.sample(&f.logits);
-            f.tokens.push(next);
-            f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
-            decoded += 1;
-            let done = f.tokens.len() == f.req.n_out;
-            if !done {
-                f.logits = self
-                    .engine
-                    .forward_session(&f.session, next, Phase::Decode, true, exec)
-                    .expect("decode produced logits");
+            if f.pending_forward {
+                // A speculative verify left its last sampled token
+                // unforwarded (`f.logits` is stale until it runs): this
+                // round forwards it instead of sampling again.
+                f.pending_forward = false;
+            } else {
+                let next = f.session.sampler.sample(&f.logits);
+                f.tokens.push(next);
+                f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
+            }
+            let mut done = f.tokens.len() == f.req.n_out;
+            if done {
+                decoded += 1;
+            } else {
+                let next = *f.tokens.last().expect("decoding flight has a sampled token");
+                // Drafted tokens are budgeted tokens: the mandatory
+                // decode token stays starvation-exempt, the speculative
+                // extension spends only what the budget still allows —
+                // a k-token verify competes with prefill chunks.
+                let draft = self.draft_for(i, budget.saturating_sub(decoded + 1));
+                if draft.is_empty() {
+                    decoded += 1;
+                    let f = &mut self.active[i];
+                    f.logits = self
+                        .engine
+                        .forward_session(&f.session, next, Phase::Decode, true, exec)
+                        .expect("decode produced logits");
+                } else {
+                    decoded += 1 + draft.len();
+                    done = self.verify_draft(i, next, &draft, exec);
+                }
             }
             self.active[i].decode_s += td0.elapsed().as_secs_f64();
             if done {
@@ -703,9 +919,9 @@ impl ContinuousBatcher {
                 i += 1;
             }
         }
-        // Prefill pass: spend what the decodes left of the budget on
-        // resumable chunks, in admission order.
-        let budget = self.token_budget.unwrap_or(usize::MAX);
+        // Prefill pass: spend what the decodes (mandatory tokens plus
+        // drafted verify positions) left of the budget on resumable
+        // chunks, in admission order.
         let mut spent = decoded;
         let mut prefilled = 0usize;
         let mut i = 0;
@@ -1181,6 +1397,126 @@ mod tests {
         assert_eq!(b.n_active(), 0);
         assert_eq!(b.capacity(), 1, "slot released");
         assert_eq!(b.committed_pages(), 0, "commitment released at finish");
+    }
+
+    /// Tiny config with a 16-token vocabulary: a prompt covering the
+    /// whole vocab guarantees every sampled token has a 1-gram match, so
+    /// the drafter always proposes something and the speculative path is
+    /// exercised deterministically.
+    fn spec_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "spec-test",
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            d_ffn: 128,
+            vocab_size: 16,
+            qk_norm: true,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+            max_seq_len: 128,
+        }
+    }
+
+    #[test]
+    fn speculative_decode_is_bit_identical_to_vanilla() {
+        let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 5);
+        let prompt: Vec<u32> = (0..16).collect();
+        let run = |k: usize| {
+            let engine = Engine::with_paged_slots(weights.clone(), 2, 4, Some(24));
+            let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+            if k > 0 {
+                b = b.with_speculation(k, DrafterSpec::default());
+            }
+            let mut exec = NativeExec;
+            let req = Request { id: 0, prompt: prompt.clone(), n_out: 12 };
+            assert!(matches!(
+                b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+                Ok(Admitted::Active)
+            ));
+            let logs = b.drain(&mut exec);
+            assert_eq!(b.engine().free_pages(), 24, "no page leaked (k={k})");
+            assert_eq!(b.committed_pages(), 0);
+            logs.into_iter().next().unwrap()
+        };
+        let vanilla = run(0);
+        assert_eq!(vanilla.verify_calls, 0, "speculation off runs no verifies");
+        assert_eq!(vanilla.tokens.len(), 12);
+        for k in [1usize, 2, 4, 8] {
+            let spec = run(k);
+            assert_eq!(spec.tokens, vanilla.tokens, "k={k} must not change output");
+            assert!(spec.verify_calls > 0, "full-vocab prompt always drafts (k={k})");
+            assert!(spec.draft_accepted <= spec.draft_tokens);
+            assert_eq!(spec.tokens.len(), spec.token_marks_s.len());
+            assert!(spec.token_marks_s.windows(2).all(|w| w[1] >= w[0]));
+            assert!(spec.accepted_tokens_per_verify().unwrap() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn speculative_decode_preserves_stateful_sampler_stream() {
+        // The hardest invariant: a seeded top-k sampler advances its RNG
+        // once per sampled token. The verifier replays the sampler over
+        // per-position logits in vanilla order, and the pending-token
+        // handoff means the bonus token is never re-sampled — so even a
+        // stateful stream cannot diverge.
+        let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 7);
+        let prompt: Vec<u32> = (0..16).collect();
+        let run = |k: usize| {
+            let mut b = ContinuousBatcher::new(
+                Engine::with_slots(weights.clone(), 1),
+                8,
+                Instant::now(),
+            );
+            if k > 0 {
+                b = b.with_speculation(k, DrafterSpec::parse("ngram:2").unwrap());
+            }
+            let mut exec = NativeExec;
+            let req = Request { id: 0, prompt: prompt.clone(), n_out: 10 };
+            assert!(matches!(
+                b.admit(req, Sampler::top_k(0.8, 4, 42), 0.0, &mut exec),
+                Ok(Admitted::Active)
+            ));
+            b.drain(&mut exec).remove(0)
+        };
+        let vanilla = run(0);
+        let spec = run(4);
+        assert_eq!(spec.tokens, vanilla.tokens, "stateful sampler stream preserved");
+        assert!(spec.verify_calls > 0);
+    }
+
+    #[test]
+    fn speculation_spends_only_leftover_budget() {
+        let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 9);
+        let prompt: Vec<u32> = (0..16).collect();
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(weights.clone(), 2),
+            8,
+            Instant::now(),
+        )
+        .with_token_budget(3)
+        .with_prefill_chunk(2)
+        .with_speculation(8, DrafterSpec::default());
+        assert_eq!(b.speculate(), 8);
+        let mut exec = NativeExec;
+        let req = Request { id: 0, prompt: prompt.clone(), n_out: 12 };
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 1);
+        assert!(logs[0].verify_calls > 0);
+        for r in b.rounds() {
+            // One live decode: its mandatory token plus a draft capped
+            // by the leftover budget — never more than the budget.
+            assert!(r.decode_tokens <= 3, "draft extension respects the budget: {r:?}");
+            assert!(r.prefill_tokens <= 3usize.saturating_sub(r.decode_tokens));
+        }
+        // Bit-identity is schedule-independent: the budgeted speculative
+        // run emits what vanilla single-sequence generation emits.
+        let mut reference = Engine::new(weights);
+        let want = reference.generate(&prompt, 12, &mut Sampler::greedy(), &mut NativeExec);
+        assert_eq!(logs[0].tokens, want.tokens);
     }
 
     #[test]

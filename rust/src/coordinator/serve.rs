@@ -54,6 +54,7 @@ use anyhow::Result;
 use crate::coordinator::scheduler::{Admitted, ContinuousBatcher, RoundStats, SchedPolicy};
 pub use crate::coordinator::scheduler::Request;
 use crate::imax::timing::RunBreakdown;
+use crate::model::drafter::DrafterSpec;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
 use crate::model::kv_cache::{KvReuseStats, DEFAULT_PAGE_SIZE};
 use crate::model::sampler::Sampler;
@@ -115,6 +116,15 @@ pub struct ServeOptions {
     /// How many queued requests admission may scan past a deferred head
     /// per round (`--admit-window`; 0 = unbounded).
     pub admit_window: usize,
+    /// Speculative decoding draft length (`--speculate`; 0 = vanilla
+    /// decode). Each decode round drafts up to this many tokens per
+    /// live sequence and verifies them in one batched ubatch — output
+    /// stays bit-identical while accepted tokens amortize the per-round
+    /// weight stream.
+    pub speculate: usize,
+    /// Draft proposer (`--drafter ngram[:N]`; default `ngram:3`). Only
+    /// meaningful with `speculate > 0`.
+    pub drafter: Option<DrafterSpec>,
 }
 
 impl Default for ServeOptions {
@@ -132,6 +142,8 @@ impl Default for ServeOptions {
             token_budget: None,
             prefill_chunk: None,
             admit_window: ADMIT_SCAN_WINDOW,
+            speculate: 0,
+            drafter: None,
         }
     }
 }
@@ -159,6 +171,12 @@ pub struct Completion {
     pub tbt_p99_s: Option<f64>,
     /// Epoch-relative emission instant of each sampled token.
     pub token_marks_s: Vec<f64>,
+    /// Speculative decoding: batched verify passes this request ran
+    /// (0 with speculation off).
+    pub verify_calls: usize,
+    /// Drafted tokens proposed / accepted across those passes.
+    pub draft_tokens: usize,
+    pub draft_accepted: usize,
     /// `Some` when the request was rejected instead of served (e.g. its
     /// worst-case KV footprint exceeds the worker's page pool).
     pub error: Option<String>,
@@ -168,6 +186,26 @@ impl Completion {
     /// Gaps between successive sampled tokens (empty below two tokens).
     pub fn tbt_gaps_s(&self) -> Vec<f64> {
         self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Tokens emitted per verify pass (accepted drafts plus the pass's
+    /// own always-emitted token); `None` without any verify pass.
+    pub fn accepted_tokens_per_verify(&self) -> Option<f64> {
+        if self.verify_calls == 0 {
+            None
+        } else {
+            Some((self.draft_accepted + self.verify_calls) as f64 / self.verify_calls as f64)
+        }
+    }
+
+    /// Fraction of drafted tokens accepted (`None` when nothing was
+    /// drafted).
+    pub fn draft_accept_rate(&self) -> Option<f64> {
+        if self.draft_tokens == 0 {
+            None
+        } else {
+            Some(self.draft_accepted as f64 / self.draft_tokens as f64)
+        }
     }
 }
 
@@ -213,6 +251,26 @@ pub struct ServeReport {
     /// bytes, both directions; 0 for functional backends, which move no
     /// modeled bytes).
     pub kv_swap_bytes: u64,
+    /// Speculative decoding aggregates over all served requests: verify
+    /// passes run, drafted tokens proposed, drafted tokens accepted
+    /// (all 0 with `--speculate 0`).
+    pub verify_calls: usize,
+    pub draft_tokens: usize,
+    pub draft_accepted: usize,
+    /// Aggregate tokens emitted per verify pass (accepted drafts plus
+    /// each pass's always-emitted token); `None` when no verify ran.
+    pub accepted_tokens_per_verify: Option<f64>,
+    /// Aggregate fraction of drafted tokens accepted; `None` when
+    /// nothing was drafted.
+    pub draft_accept_rate: Option<f64>,
+    /// Modeled weight/activation bytes streamed to the accelerator,
+    /// summed over workers (0 for functional backends).
+    pub streamed_bytes: u64,
+    /// Modeled bytes streamed per accepted (= emitted) token: the
+    /// paper's LOAD-bound decode cost per token of useful work.
+    /// Speculation drives this down — each accepted draft token shares
+    /// its round's weight stream. `None` for functional backends.
+    pub streamed_bytes_per_token: Option<f64>,
 }
 
 /// Serve a batch of requests over `n_workers` native-kernel workers;
@@ -269,6 +327,11 @@ pub fn serve_with(
              evicted to the host arena (pass --prefix-cache)"
         );
     }
+    if opts.drafter.is_some() && opts.speculate == 0 {
+        anyhow::bail!(
+            "drafter only applies to speculative decoding (pass --speculate k)"
+        );
+    }
     BackendRegistry::validate(&opts.spec)?;
     if let ExecSpec::Placement(p) = &opts.spec {
         // Fail fast on a placement that leaves layers of *this* model
@@ -312,6 +375,10 @@ pub fn serve_with(
                     batcher = batcher.with_prefill_chunk(chunk);
                 }
             }
+            if opts.speculate > 0 {
+                batcher =
+                    batcher.with_speculation(opts.speculate, opts.drafter.unwrap_or_default());
+            }
             let send = |log: crate::coordinator::scheduler::SessionLog,
                         tx: &mpsc::Sender<Completion>| {
                 let ttft_s = log.ttft_s();
@@ -332,6 +399,9 @@ pub fn serve_with(
                     ttft_s,
                     tbt_p99_s,
                     token_marks_s: log.token_marks_s,
+                    verify_calls: log.verify_calls,
+                    draft_tokens: log.draft_tokens,
+                    draft_accepted: log.draft_accepted,
                     error: None,
                 })
                 .ok();
@@ -404,6 +474,9 @@ pub fn serve_with(
                                     ttft_s: None,
                                     tbt_p99_s: None,
                                     token_marks_s: Vec::new(),
+                                    verify_calls: 0,
+                                    draft_tokens: 0,
+                                    draft_accepted: 0,
                                     error: Some(e.to_string()),
                                 })
                                 .ok();
@@ -493,6 +566,24 @@ pub fn serve_with(
     let merged = BackendReport::merged(&reports);
     let pctl = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
     let pctl_of = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+    let verify_calls: usize = completions.iter().map(|c| c.verify_calls).sum();
+    let draft_tokens: usize = completions.iter().map(|c| c.draft_tokens).sum();
+    let draft_accepted: usize = completions.iter().map(|c| c.draft_accepted).sum();
+    let accepted_tokens_per_verify = if verify_calls == 0 {
+        None
+    } else {
+        Some((draft_accepted + verify_calls) as f64 / verify_calls as f64)
+    };
+    let draft_accept_rate = if draft_tokens == 0 {
+        None
+    } else {
+        Some(draft_accepted as f64 / draft_tokens as f64)
+    };
+    let streamed_bytes_per_token = if merged.streamed_bytes == 0 || total_tokens == 0 {
+        None
+    } else {
+        Some(merged.streamed_bytes as f64 / total_tokens as f64)
+    };
     Ok(ServeReport {
         throughput_tok_s: total_tokens as f64 / wall_s,
         latency_p50_s: pctl(50.0),
@@ -510,9 +601,16 @@ pub fn serve_with(
         modeled: merged.modeled,
         offload_ratio: merged.offload_ratio,
         kv_swap_bytes: merged.kv_swap_bytes,
+        streamed_bytes: merged.streamed_bytes,
+        streamed_bytes_per_token,
         per_backend: merged.parts,
         kv_peak_bytes_f16: kv_peak_total,
         reuse,
+        verify_calls,
+        draft_tokens,
+        draft_accepted,
+        accepted_tokens_per_verify,
+        draft_accept_rate,
     })
 }
 
@@ -852,6 +950,76 @@ mod tests {
         assert!(m.prefill.total() > 0.0, "prefill accounted");
         assert!(m.decode.total() > 0.0, "decode accounted");
         assert!(rep.offload_ratio.unwrap() > 0.0);
+        assert!(rep.streamed_bytes > 0, "modeled weight stream accounted");
+        let per_tok = rep.streamed_bytes_per_token.expect("streamed bytes per token");
+        assert!(per_tok > 0.0);
+        assert!((per_tok - rep.streamed_bytes as f64 / rep.total_tokens as f64).abs() < 1e-9);
+    }
+
+    /// Tiny config with a 16-token vocabulary: a prompt covering the
+    /// whole vocab guarantees every sampled token has a 1-gram match,
+    /// so speculation verifiably fires under serve's stateful top-k
+    /// samplers.
+    fn spec_weights() -> ModelWeights {
+        let cfg = ModelConfig {
+            name: "spec-serve",
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 32,
+            d_ffn: 128,
+            vocab_size: 16,
+            qk_norm: true,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+            max_seq_len: 128,
+        };
+        ModelWeights::random(&cfg, QuantScheme::Q8_0, 3)
+    }
+
+    #[test]
+    fn speculative_serving_matches_vanilla_and_reports_acceptance() {
+        let w = spec_weights();
+        let mk_reqs = || {
+            (0..4)
+                .map(|id| Request { id, prompt: (0..16).collect(), n_out: 8 })
+                .collect::<Vec<Request>>()
+        };
+        let vanilla = serve(&w, mk_reqs(), 1, 42);
+        assert_eq!(vanilla.verify_calls, 0);
+        assert!(vanilla.accepted_tokens_per_verify.is_none());
+        let opts = ServeOptions {
+            speculate: 4,
+            ..ServeOptions::default()
+        };
+        let spec = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+        assert_eq!(spec.completions.len(), 4);
+        // Serve samples with seeded top-k (stateful): token-for-token
+        // equality pins the whole pending-token/verify protocol.
+        for (a, b) in vanilla.completions.iter().zip(&spec.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "speculation must not change tokens");
+        }
+        assert!(spec.verify_calls > 0, "full-vocab prompts always draft");
+        assert!(spec.draft_accepted <= spec.draft_tokens);
+        assert!(spec.accepted_tokens_per_verify.unwrap() >= 1.0);
+        // Aggregates are exactly the per-request sums.
+        let sums: (usize, usize, usize) = spec.completions.iter().fold(
+            (0, 0, 0),
+            |(v, d, a), c| (v + c.verify_calls, d + c.draft_tokens, a + c.draft_accepted),
+        );
+        assert_eq!(sums, (spec.verify_calls, spec.draft_tokens, spec.draft_accepted));
+    }
+
+    #[test]
+    fn drafter_without_speculation_is_rejected() {
+        let opts = ServeOptions {
+            drafter: Some(DrafterSpec::default()),
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("speculate"), "{err}");
     }
 
     #[test]

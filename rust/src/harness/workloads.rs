@@ -43,6 +43,29 @@ pub fn grid() -> Vec<Workload> {
     out
 }
 
+/// Span length of the repeating body in [`templated_prompt`].
+pub const TEMPLATE_SPAN: usize = 8;
+
+/// Build a prompt dominated by a repeating [`TEMPLATE_SPAN`]-token span —
+/// the form-letter shape (boilerplate body, tiny unique closer) where
+/// prompt-lookup n-gram drafting wins: the trailing gram of the history
+/// re-occurs earlier in the prompt, so the drafter proposes the span's
+/// continuation and greedy verification accepts long prefixes.
+///
+/// `id` perturbs the span so distinct requests stay distinct (and keep
+/// distinct prefix-cache fingerprints); all tokens stay `< vocab_size`.
+pub fn templated_prompt(id: usize, len: usize, vocab_size: usize) -> Vec<u32> {
+    assert!(vocab_size > 0, "vocab_size must be positive");
+    let span: Vec<u32> = (0..TEMPLATE_SPAN)
+        .map(|j| ((id * 31 + j * 7 + 3) % vocab_size) as u32)
+        .collect();
+    let mut out: Vec<u32> = (0..len).map(|p| span[p % TEMPLATE_SPAN]).collect();
+    if let Some(last) = out.last_mut() {
+        *last = (id % vocab_size) as u32;
+    }
+    out
+}
+
 /// Look up one grid workload by its paper-style label components.
 pub fn find(model: &str, scheme: QuantScheme, n_in: usize, n_out: usize) -> Option<Workload> {
     let cfg = ModelConfig::by_name(model)?;
@@ -74,6 +97,21 @@ mod tests {
         let labels: std::collections::HashSet<String> =
             g.iter().map(|w| w.label()).collect();
         assert_eq!(labels.len(), 54);
+    }
+
+    #[test]
+    fn templated_prompts_are_repetitive_distinct_and_vocab_bounded() {
+        let a = templated_prompt(0, 40, 16);
+        let b = templated_prompt(1, 40, 16);
+        assert_eq!(a.len(), 40);
+        assert!(a.iter().all(|&t| (t as usize) < 16));
+        assert_ne!(a, b);
+        assert_eq!(a, templated_prompt(0, 40, 16));
+        // The body repeats with period TEMPLATE_SPAN (only the closer
+        // token is perturbed).
+        for p in TEMPLATE_SPAN..a.len() - 1 {
+            assert_eq!(a[p], a[p - TEMPLATE_SPAN]);
+        }
     }
 
     #[test]

@@ -22,9 +22,11 @@ use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
 use imax_llm::coordinator::{serve_with, Request, SchedPolicy, ServeOptions};
 use imax_llm::harness::experiments as exp;
+use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
 use imax_llm::model::{
-    Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_PAGE_SIZE, DEFAULT_UBATCH,
+    DrafterSpec, Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_PAGE_SIZE,
+    DEFAULT_UBATCH,
 };
 use imax_llm::power;
 use imax_llm::runtime::{BackendRegistry, ExecSpec};
@@ -303,6 +305,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(imax_llm::coordinator::ADMIT_SCAN_WINDOW);
+    let speculate: usize = flags.get("speculate").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let drafter: Option<DrafterSpec> =
+        flags.get("drafter").map(|s| DrafterSpec::parse(s)).transpose()?;
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -330,7 +335,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             } else {
                 Vec::new()
             };
-            prompt.extend((0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32));
+            if speculate > 0 {
+                // Speculating: serve templated prompts (repetitive
+                // spans), the shape where prompt-lookup drafting wins.
+                prompt.extend(templated_prompt(id, 6 * TEMPLATE_SPAN, cfg.vocab_size));
+            } else {
+                prompt.extend((0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32));
+            }
             Request { id, prompt, n_out: 16 }
         })
         .collect();
@@ -347,6 +358,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         token_budget,
         prefill_chunk,
         admit_window,
+        speculate,
+        drafter,
     };
     let rep = serve_with(&weights, requests, workers, &opts)?;
     println!(
@@ -393,6 +406,24 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             r.dropped_pages,
             r.swap_in_pages,
             imax_llm::util::human_bytes(r.swap_bytes),
+        );
+    }
+    if speculate > 0 {
+        println!(
+            "speculation (k={speculate}): {} verify passes, {}/{} drafted tokens accepted \
+             ({:.0}% accept rate), {:.2} accepted tokens per verify pass",
+            rep.verify_calls,
+            rep.draft_accepted,
+            rep.draft_tokens,
+            100.0 * rep.draft_accept_rate.unwrap_or(0.0),
+            rep.accepted_tokens_per_verify.unwrap_or(0.0),
+        );
+    }
+    if let Some(bpt) = rep.streamed_bytes_per_token {
+        println!(
+            "modeled accelerator stream: {} total, {:.0} bytes per accepted token",
+            imax_llm::util::human_bytes(rep.streamed_bytes as usize),
+            bpt,
         );
     }
     if rep.kv_swap_bytes > 0 {
@@ -516,6 +547,7 @@ functional engine (real tiny models, real tokens):
               [--page-size N] [--kv-pages N]
               [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
               [--token-budget N] [--prefill-chunk N] [--admit-window N]
+              [--speculate K] [--drafter ngram[:N]]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
@@ -540,7 +572,23 @@ functional engine (real tiny models, real tokens):
               instead of stalling them (the report prints TTFT/TBT
               percentiles and the per-round mix). --admit-window N bounds
               how many queued requests admission scans past a deferred
-              head per round (default 8; 0 = unbounded)
+              head per round (default 8; 0 = unbounded).
+              --speculate K turns on speculative decoding: a host-side
+              prompt-lookup drafter proposes up to K tokens per live
+              sequence each decode round and the engine verifies the
+              whole draft in one batched ubatch, so one weight stream
+              covers every accepted token. Greedy and top-k output is
+              bit-identical to vanilla decode (accept the longest prefix
+              matching what vanilla sampling would have produced);
+              rejected draft KV entries are rolled back through the paged
+              pool. Drafted tokens count against --token-budget like any
+              other tokens. --drafter ngram:N sets the longest gram the
+              drafter matches on (default ngram:3; with --prefix-cache it
+              also mines the cache's committed token spans). The report
+              prints verify passes, the draft accept rate, accepted
+              tokens per verify pass, and — on an imax backend — the
+              modeled streamed bytes per accepted token that speculation
+              drives down
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 

@@ -1,0 +1,209 @@
+//! Self-contained draft proposers for speculative decoding.
+//!
+//! The paper's decode phase streams every weight for one token of useful
+//! work; speculative decoding amortizes that stream by verifying k
+//! drafted tokens in a single ubatch (see
+//! [`crate::model::engine::Engine::try_verify_session`]). The drafter
+//! side must therefore be *cheap* — no second model, no extra weight
+//! traffic. [`NgramDrafter`] is the classic prompt-lookup scheme: match
+//! the trailing n-gram of the sequence history (prompt + generated
+//! tokens) against an earlier occurrence and propose the continuation
+//! that followed it. Templated / retrieval-heavy prompts repeat long
+//! spans, so the continuation is often exactly what the model will emit
+//! — and a wrong draft costs only the rolled-back verify positions,
+//! never correctness (verification accepts the longest prefix the
+//! session's own sampler agrees with, bit-identical to vanilla decode).
+//!
+//! When the prefix cache is on, the cache's committed token spans form a
+//! shared corpus ([`crate::model::kv_cache::KvCache::prefix_token_spans`])
+//! searched after the sequence's own history — a sequence can draft from
+//! spans another request taught the server.
+
+use anyhow::{bail, Result};
+
+/// Default trailing n-gram length (`--drafter ngram` without `:N`).
+pub const DEFAULT_NGRAM: usize = 3;
+
+/// Drafter selection, parseable from the `--drafter` CLI flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrafterSpec {
+    /// Prompt-lookup n-gram drafting with trailing grams of up to
+    /// `max_n` tokens.
+    Ngram { max_n: usize },
+}
+
+impl Default for DrafterSpec {
+    fn default() -> DrafterSpec {
+        DrafterSpec::Ngram { max_n: DEFAULT_NGRAM }
+    }
+}
+
+impl DrafterSpec {
+    /// Parse a `--drafter` selector: `ngram` or `ngram:<N>` (N in
+    /// 1..=16).
+    pub fn parse(s: &str) -> Result<DrafterSpec> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "ngram" {
+            return Ok(DrafterSpec::default());
+        }
+        if let Some(n) = s.strip_prefix("ngram:") {
+            let max_n: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad n-gram length '{n}' (use ngram:<N>)"))?;
+            if !(1..=16).contains(&max_n) {
+                bail!("n-gram length {max_n} out of range (1..=16)");
+            }
+            return Ok(DrafterSpec::Ngram { max_n });
+        }
+        bail!("unknown drafter '{s}' (available: ngram[:N])");
+    }
+
+    /// Canonical selector string; [`DrafterSpec::parse`] round-trips it.
+    pub fn name(&self) -> String {
+        match self {
+            DrafterSpec::Ngram { max_n } => format!("ngram:{max_n}"),
+        }
+    }
+
+    pub fn build(&self) -> NgramDrafter {
+        match *self {
+            DrafterSpec::Ngram { max_n } => NgramDrafter::new(max_n),
+        }
+    }
+}
+
+/// Prompt-lookup n-gram drafter: propose the continuation of the most
+/// recent earlier occurrence of the history's trailing n-gram, trying
+/// the longest gram first. Deterministic and stateless — the same
+/// history always drafts the same tokens.
+#[derive(Clone, Copy, Debug)]
+pub struct NgramDrafter {
+    pub max_n: usize,
+}
+
+impl NgramDrafter {
+    pub fn new(max_n: usize) -> NgramDrafter {
+        assert!(max_n >= 1, "n-gram length must be at least 1");
+        NgramDrafter { max_n }
+    }
+
+    /// Propose up to `k` continuation tokens for a sequence whose full
+    /// history (prompt followed by generated tokens) is `history`.
+    /// `corpus` is an optional set of extra token spans to fall back to
+    /// (the prefix cache's committed pages); pass `&[]` without it.
+    /// Returns an empty draft when no gram matches — the caller falls
+    /// back to vanilla decode for that round.
+    pub fn draft(&self, history: &[u32], corpus: &[Vec<u32>], k: usize) -> Vec<u32> {
+        if k == 0 || history.is_empty() {
+            return Vec::new();
+        }
+        // Longest gram first, within the sequence's own history: the
+        // match must end before the suffix so a continuation exists.
+        let cap = self.max_n.min(history.len().saturating_sub(1));
+        for n in (1..=cap).rev() {
+            let suffix = &history[history.len() - n..];
+            // Most recent occurrence wins (recency beats frequency for
+            // templated text).
+            for i in (0..history.len() - n).rev() {
+                if &history[i..i + n] == suffix {
+                    let end = (i + n + k).min(history.len());
+                    return history[i + n..end].to_vec();
+                }
+            }
+        }
+        // Corpus fallback: spans someone else's prompt committed.
+        let cap = self.max_n.min(history.len());
+        for n in (1..=cap).rev() {
+            let suffix = &history[history.len() - n..];
+            for span in corpus {
+                if span.len() <= n {
+                    continue;
+                }
+                for i in (0..span.len() - n).rev() {
+                    if &span[i..i + n] == suffix {
+                        let end = (i + n + k).min(span.len());
+                        return span[i + n..end].to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_roundtrips() {
+        assert_eq!(DrafterSpec::parse("ngram").unwrap(), DrafterSpec::Ngram { max_n: 3 });
+        let s = DrafterSpec::parse("ngram:5").unwrap();
+        assert_eq!(s, DrafterSpec::Ngram { max_n: 5 });
+        assert_eq!(s.name(), "ngram:5");
+        assert_eq!(DrafterSpec::parse(&s.name()).unwrap(), s);
+        assert!(DrafterSpec::parse("ngram:0").is_err());
+        assert!(DrafterSpec::parse("ngram:17").is_err());
+        assert!(DrafterSpec::parse("ngram:x").is_err());
+        assert!(DrafterSpec::parse("model").is_err());
+        assert!(DrafterSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn drafts_continuation_of_repeated_span() {
+        let d = NgramDrafter::new(3);
+        // "7 8 9" occurred earlier, followed by "10 11 12".
+        let history = [7u32, 8, 9, 10, 11, 12, 1, 2, 7, 8, 9];
+        assert_eq!(d.draft(&history, &[], 3), vec![10, 11, 12]);
+        assert_eq!(d.draft(&history, &[], 2), vec![10, 11], "k caps the draft");
+        // Continuation stops at the end of the matched span's history.
+        let short = [5u32, 6, 5];
+        assert_eq!(d.draft(&short, &[], 4), vec![6]);
+    }
+
+    #[test]
+    fn most_recent_match_wins() {
+        let d = NgramDrafter::new(2);
+        // "1 2" appears twice with different continuations: the later
+        // occurrence (→ 9) is proposed.
+        let history = [1u32, 2, 3, 4, 1, 2, 9, 0, 1, 2];
+        assert_eq!(d.draft(&history, &[], 1), vec![9]);
+    }
+
+    #[test]
+    fn longest_gram_preferred() {
+        let d = NgramDrafter::new(3);
+        // Trailing "2 3": a 2-gram match (→ 7) exists, but the 3-gram
+        // "1 2 3" (→ 8) is more specific and wins.
+        let history = [4u32, 2, 3, 7, 1, 2, 3, 8, 0, 1, 2, 3];
+        assert_eq!(d.draft(&history, &[], 1), vec![8]);
+    }
+
+    #[test]
+    fn pure_repetition_extends() {
+        let d = NgramDrafter::new(3);
+        let history = [5u32, 5, 5, 5];
+        // Overlapping self-match: repetition keeps proposing the token.
+        assert_eq!(d.draft(&history, &[], 2), vec![5]);
+    }
+
+    #[test]
+    fn corpus_fallback_after_history_miss() {
+        let d = NgramDrafter::new(2);
+        let history = [1u32, 2];
+        // No earlier occurrence in history; a corpus span continues it.
+        let corpus = vec![vec![9u32, 1, 2, 30, 31, 32]];
+        assert_eq!(d.draft(&history, &corpus, 2), vec![30, 31]);
+        // History matches take priority over the corpus.
+        let history2 = [1u32, 2, 40, 1, 2];
+        assert_eq!(d.draft(&history2, &corpus, 1), vec![40]);
+    }
+
+    #[test]
+    fn no_match_drafts_nothing() {
+        let d = NgramDrafter::new(3);
+        assert!(d.draft(&[1, 2, 3, 4], &[], 4).is_empty());
+        assert!(d.draft(&[], &[], 4).is_empty());
+        assert!(d.draft(&[1, 1, 2], &[], 0).is_empty());
+    }
+}

@@ -205,6 +205,18 @@ impl Scratch {
     }
 }
 
+/// Which logits a ubatch forward returns. `All` is the speculative-decode
+/// verify path: one LM-head row per chunk position, each bit-identical to
+/// what sequential decode would compute at that position (the ubatch
+/// residual streams already are — pinned by the equivalence suites — and
+/// the per-position final-norm + LM-head arithmetic is unchanged).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LogitsMode {
+    None,
+    Last,
+    All,
+}
+
 fn linear_op_for(
     cfg: &ModelConfig,
     scheme: QuantScheme,
@@ -639,6 +651,36 @@ impl Engine {
         })
     }
 
+    /// Speculative-decode verify step: process `tokens` — the sampled
+    /// next token followed by drafted continuations — as **one** decode
+    /// ubatch on `session`, returning the logits after *every* position.
+    /// `out[i]` is bit-identical to what sequential decode would produce
+    /// after forwarding `tokens[..=i]`, so a verifier can accept the
+    /// longest prefix of the draft that matches its own sampling and
+    /// roll the cache back past the first mismatch with
+    /// [`Engine::truncate_session`]. The whole chunk streams each weight
+    /// once (the ubatch amortization that moves decode toward the
+    /// prefill regime). On `Err` nothing was executed and the sequence
+    /// is unchanged.
+    pub fn try_verify_session(
+        &mut self,
+        session: &Session,
+        tokens: &[u32],
+        exec: &mut dyn KernelExec,
+    ) -> Result<Vec<Vec<f32>>, CacheError> {
+        Ok(self
+            .ubatch_core(session.slot, tokens, Phase::Decode, LogitsMode::All, exec)?
+            .expect("verify always produces logits"))
+    }
+
+    /// Roll `session` back to `new_len` cached positions — the rejection
+    /// path after a speculative verify. Pages wholly past the retained
+    /// span return to the pool; shared/indexed pages only lose this
+    /// slot's reference (see [`KvCache::truncate`]).
+    pub fn truncate_session(&mut self, session: &Session, new_len: usize) {
+        self.cache.truncate(session.slot, new_len);
+    }
+
     /// Chunked-prefill core shared by the session API and the legacy
     /// `generate` path.
     fn try_prefill_on_slot(
@@ -690,6 +732,22 @@ impl Engine {
         want_logits: bool,
         exec: &mut dyn KernelExec,
     ) -> Result<Option<Vec<f32>>, CacheError> {
+        let mode = if want_logits { LogitsMode::Last } else { LogitsMode::None };
+        Ok(self
+            .ubatch_core(slot, tokens, phase, mode, exec)?
+            .map(|mut rows| rows.pop().expect("last-token logits")))
+    }
+
+    /// The transformer stack for one ubatch, parameterized over which
+    /// logits to produce (see [`LogitsMode`]).
+    fn ubatch_core(
+        &mut self,
+        slot: usize,
+        tokens: &[u32],
+        phase: Phase,
+        mode: LogitsMode,
+        exec: &mut dyn KernelExec,
+    ) -> Result<Option<Vec<Vec<f32>>>, CacheError> {
         let cfg = self.weights.cfg.clone();
         let scheme = self.weights.scheme;
         let n = tokens.len();
@@ -920,25 +978,48 @@ impl Engine {
             .expect("chunk pages reserved before execution");
         self.n_tokens_processed += n;
 
-        let out = if want_logits {
-            let mut x = xs.pop().expect("nonempty ubatch");
-            ops::rmsnorm_inplace(&mut x, &self.weights.final_norm, cfg.rms_eps);
-            let op_h = MatvecOp {
-                kind: OpKind::Linear(LinearKind::LmHead),
-                layer: None,
-                wty: self.weights.lm_head.ty,
-                rows: cfg.vocab_size,
-                cols: cfg.d_model,
-            };
-            let act_h = ActQuant::for_weight(self.weights.lm_head.ty, &x);
-            let s = &mut self.scratch;
-            exec.linear(&op_h, &self.weights.lm_head, &act_h, &mut s.logits);
-            // The sampler reads the logits: drain the launch stream.
-            exec.sync();
-            Some(s.logits.clone())
-        } else {
-            exec.sync();
-            None
+        let op_h = MatvecOp {
+            kind: OpKind::Linear(LinearKind::LmHead),
+            layer: None,
+            wty: self.weights.lm_head.ty,
+            rows: cfg.vocab_size,
+            cols: cfg.d_model,
+        };
+        let out = match mode {
+            LogitsMode::None => {
+                exec.sync();
+                None
+            }
+            LogitsMode::Last => {
+                let mut x = xs.pop().expect("nonempty ubatch");
+                ops::rmsnorm_inplace(&mut x, &self.weights.final_norm, cfg.rms_eps);
+                let act_h = ActQuant::for_weight(self.weights.lm_head.ty, &x);
+                let s = &mut self.scratch;
+                exec.linear(&op_h, &self.weights.lm_head, &act_h, &mut s.logits);
+                // The sampler reads the logits: drain the launch stream.
+                exec.sync();
+                Some(vec![s.logits.clone()])
+            }
+            LogitsMode::All => {
+                // Speculative verify: one LM-head row per chunk position,
+                // dispatched as a single ubatch so backends amortize the
+                // LM-head weight stream across the draft like any other
+                // projection. Per-position arithmetic (final norm, act
+                // quantization, matvec) is exactly the `Last` path's, so
+                // each row is bit-identical to sequential decode at that
+                // position.
+                for x in xs.iter_mut() {
+                    ops::rmsnorm_inplace(x, &self.weights.final_norm, cfg.rms_eps);
+                }
+                let acts_h: Vec<ActQuant> = xs
+                    .iter()
+                    .map(|x| ActQuant::for_weight(self.weights.lm_head.ty, x))
+                    .collect();
+                let mut flat = vec![0.0f32; n * cfg.vocab_size];
+                exec.linear_ubatch(&op_h, &self.weights.lm_head, &acts_h, &mut flat);
+                exec.sync();
+                Some(flat.chunks(cfg.vocab_size).map(<[f32]>::to_vec).collect())
+            }
         };
         exec.end_step(phase, base + n - 1);
         Ok(out)
@@ -1217,6 +1298,55 @@ mod tests {
         }
         let corr = num / (df.sqrt() * dq.sqrt());
         assert!(corr > 0.98, "corr {corr}");
+    }
+
+    #[test]
+    fn verify_logits_bit_identical_to_sequential_decode() {
+        for scheme in [QuantScheme::Q8_0, QuantScheme::Q3KS, QuantScheme::F16] {
+            let w = ModelWeights::random(&ModelConfig::tiny(), scheme, 42);
+            let prompt = [1u32, 5, 9, 2];
+            let chunk = [4u32, 8, 15, 16, 23];
+
+            // Sequential reference: forward the chunk one token at a time.
+            let mut seq = Engine::new(w.clone());
+            let s1 = seq.open_session(Sampler::greedy()).unwrap();
+            seq.prefill_session(&s1, &prompt, 32, &mut NativeExec);
+            let mut want = Vec::new();
+            for &t in &chunk {
+                want.push(
+                    seq.forward_session(&s1, t, Phase::Decode, true, &mut NativeExec)
+                        .unwrap(),
+                );
+            }
+
+            // Verify path: the same chunk as one ubatch.
+            let mut ver = Engine::new(w);
+            let s2 = ver.open_session(Sampler::greedy()).unwrap();
+            ver.prefill_session(&s2, &prompt, 32, &mut NativeExec);
+            let got = ver.try_verify_session(&s2, &chunk, &mut NativeExec).unwrap();
+            assert_eq!(got.len(), chunk.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g, w, "position {i} logits diverge ({})", scheme.name());
+            }
+            assert_eq!(ver.session_pos(&s2), prompt.len() + chunk.len());
+
+            // Rollback past a rejection point, then re-decode: the
+            // replacement token's logits match a clean sequential run.
+            ver.truncate_session(&s2, prompt.len() + 2);
+            let after = ver
+                .forward_session(&s2, 99, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+            let mut clean = Engine::new(seq.weights.clone());
+            let s3 = clean.open_session(Sampler::greedy()).unwrap();
+            clean.prefill_session(&s3, &prompt, 32, &mut NativeExec);
+            for &t in &chunk[..2] {
+                clean.forward_session(&s3, t, Phase::Decode, true, &mut NativeExec);
+            }
+            let want_after = clean
+                .forward_session(&s3, 99, Phase::Decode, true, &mut NativeExec)
+                .unwrap();
+            assert_eq!(after, want_after, "post-rollback decode diverges ({})", scheme.name());
+        }
     }
 
     #[test]

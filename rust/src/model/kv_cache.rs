@@ -557,6 +557,20 @@ impl KvCache {
         })
     }
 
+    /// The token spans committed to the prefix index (one full page of
+    /// prompt tokens each, resident or swapped), hottest first — the
+    /// speculative drafter's shared lookup corpus when the prefix cache
+    /// is on. Ordered by last touch (then by span) so drafting stays
+    /// deterministic despite the hash-map index.
+    pub fn prefix_token_spans(&self) -> Vec<Vec<u32>> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| {
+            let mut entries: Vec<(u64, &Vec<u32>)> =
+                p.index.values().map(|e| (e.last_touch, &e.tokens)).collect();
+            entries.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(b.1)));
+            entries.into_iter().map(|(_, t)| t.clone()).collect()
+        })
+    }
+
     /// Swap traffic (f16 bytes in, bytes out) accumulated since the last
     /// call — the engine drains this into the executor's DMA accounting
     /// so modeled reports keep the transfer bottleneck visible.
@@ -968,6 +982,28 @@ impl KvCache {
         }
         self.lens[slot] = len + n;
         Ok(())
+    }
+
+    /// Roll `slot` back to `new_len` positions — the speculative-decode
+    /// rejection path. Shrinks the logical length and releases this
+    /// slot's references to pages wholly beyond the retained span; the
+    /// retained partial page keeps its bytes (positions past `new_len`
+    /// are dead until a later reserve/store overwrites them, and
+    /// attention never reads past `slot_len`). Refcount/CoW-safe: only
+    /// this slot's references drop, so pages shared with other block
+    /// tables or pinned by the prefix index live on.
+    pub fn truncate(&mut self, slot: usize, new_len: usize) {
+        assert!(
+            new_len <= self.lens[slot],
+            "truncate can only shrink: slot {slot} at len {} asked for {new_len}",
+            self.lens[slot]
+        );
+        self.lens[slot] = new_len;
+        let keep = self.pages_needed(new_len);
+        while self.tables[slot].len() > keep {
+            let page = self.tables[slot].pop().expect("table longer than keep");
+            self.release_ref(page);
+        }
     }
 
     /// K vector of head `kv_head` at position `pos` in `layer` of `slot`.
@@ -1454,6 +1490,76 @@ mod tests {
         assert_eq!(c.free_page_count(), c.n_pages(), "full flush frees the pool");
         assert_eq!(c.cached_resident_pages(), 0);
         assert_eq!(c.swapped_out_pages(), 0);
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages_and_keeps_partials() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        fill_tokens(&mut c, 0, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(c.slot_pages(0).len(), 3);
+        // Mid-page rollback: 10 -> 6 drops the third page, keeps the
+        // second (position 5 lives there) with its bytes intact.
+        let want = c.k_at(0, 1, 5, 0, cfg.head_dim)[0];
+        c.truncate(0, 6);
+        assert_eq!(c.slot_len(0), 6);
+        assert_eq!(c.slot_pages(0).len(), 2);
+        assert_eq!(c.free_page_count(), 6);
+        assert_eq!(c.k_at(0, 1, 5, 0, cfg.head_dim)[0], want);
+        // Page-boundary rollback: 6 -> 4 drops the now-dead second page.
+        c.truncate(0, 4);
+        assert_eq!(c.slot_pages(0).len(), 1);
+        // No-op rollback keeps everything.
+        c.truncate(0, 4);
+        assert_eq!(c.slot_len(0), 4);
+        assert_eq!(c.slot_pages(0).len(), 1);
+        // To zero: the slot is as after reset_slot.
+        c.truncate(0, 0);
+        assert!(c.slot_pages(0).is_empty());
+        assert_eq!(c.free_page_count(), 8);
+        // The pool can re-serve the returned pages.
+        c.try_reserve(1, 8).unwrap();
+        c.advance(1, 8).unwrap();
+    }
+
+    #[test]
+    fn truncate_respects_shared_and_indexed_pages() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 2, 4, 8);
+        c.enable_prefix_cache(11);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        fill_tokens(&mut c, 0, &prompt);
+        c.register_prefix(0, &prompt);
+        // Slot 1 adopts both pages, then grows a private tail page.
+        let adopted = c.adopt_prefix(1, &prompt, prompt.len());
+        assert_eq!(adopted.tokens, 8);
+        c.try_reserve(1, 3).unwrap();
+        c.advance(1, 3).unwrap();
+        let shared = c.slot_pages(1)[1];
+        assert_eq!(c.page_ref(shared), 3, "slot 0 + slot 1 + index");
+        // Rolling slot 1 back into the shared page drops only its own
+        // references: the private tail page frees, the shared page loses
+        // one ref but stays resident for the other holders.
+        c.truncate(1, 6);
+        assert_eq!(c.slot_pages(1).len(), 2);
+        assert_eq!(c.page_ref(shared), 3, "partial page retained, ref kept");
+        c.truncate(1, 4);
+        assert_eq!(c.page_ref(shared), 2, "slot 1's ref dropped");
+        assert_eq!(c.cached_resident_pages(), 2, "index pins survive");
+        // Slot 0's view of the shared page is untouched.
+        assert_eq!(
+            c.k_at(0, 0, 5, 0, cfg.head_dim)[0],
+            (prompt[5] as f32) * 100.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate can only shrink")]
+    fn truncate_rejects_growth() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::paged(&cfg, 1, 4, 2);
+        fill_tokens(&mut c, 0, &[1, 2]);
+        c.truncate(0, 3);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! * [`sampler`] — greedy / top-k temperature sampling.
 
 pub mod config;
+pub mod drafter;
 pub mod engine;
 pub mod file;
 pub mod graph;
@@ -27,6 +28,7 @@ pub mod sampler;
 pub mod weights;
 
 pub use config::{LinearKind, ModelConfig, QuantScheme};
+pub use drafter::{DrafterSpec, NgramDrafter, DEFAULT_NGRAM};
 pub use engine::{
     Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, PrefillCursor, Session,
     SharedPrefill, DEFAULT_UBATCH,

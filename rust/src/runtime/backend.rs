@@ -339,6 +339,11 @@ pub struct BackendReport {
     /// backend; f16 cache bytes, both directions). Nonzero only when the
     /// serving layer oversubscribes the page pool with `--swap-pages`.
     pub kv_swap_bytes: u64,
+    /// Modeled weight/activation bytes streamed to the accelerator
+    /// (imax backend only; 0 for functional backends). The numerator of
+    /// the bytes-streamed-per-accepted-token metric speculative
+    /// decoding drives down.
+    pub streamed_bytes: u64,
     /// Measured engine wall time per phase (imax backend only; the
     /// serving loop measures its own phases for the others). Under a
     /// placement every part observes the *whole* shared step, so a
@@ -404,6 +409,7 @@ impl BackendReport {
             out.offloaded_macs += r.offloaded_macs;
             out.total_macs += r.total_macs;
             out.kv_swap_bytes += r.kv_swap_bytes;
+            out.streamed_bytes += r.streamed_bytes;
             out.wall_prefill_s += r.wall_prefill_s;
             out.wall_decode_s += r.wall_decode_s;
         }
@@ -579,6 +585,7 @@ impl BackendExec {
                     offloaded_macs: i.stats.offloaded_macs,
                     total_macs: i.stats.total_macs,
                     kv_swap_bytes: i.kv_swap_bytes,
+                    streamed_bytes: i.streamed_bytes,
                     wall_prefill_s: i.wall_prefill,
                     wall_decode_s: i.wall_decode,
                     ..BackendReport::default()

@@ -1,0 +1,317 @@
+//! Integration tests for speculative decoding: the draft/verify loop
+//! must be bit-identical to vanilla decode under every page geometry,
+//! and a rejected draft must leave no trace — neither in the sequence
+//! (rollback) nor in the paged pool (no leaked pages, no corrupted
+//! refcounts, no damage to shared prefix pages).
+//!
+//! Engine-level coverage pins the verify/rollback contract directly
+//! ([`Engine::try_verify_session`] + [`Engine::truncate_session`]),
+//! including a rollback that lands mid-page; scheduler-level coverage
+//! sweeps k × page-size through the [`ContinuousBatcher`] with the KV
+//! pool sized to the admission commitment exactly, so an over-reserving
+//! verify would fail loudly; the property suite drives randomized
+//! configurations (page size, draft depth, request count, prefix cache
+//! on/off) and checks pool conservation after teardown.
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{Admitted, ContinuousBatcher, Request, SessionLog};
+use imax_llm::model::engine::{Engine, NativeExec};
+use imax_llm::model::{DrafterSpec, ModelConfig, ModelWeights, Phase, QuantScheme, Sampler};
+use imax_llm::util::ceil_div;
+use imax_llm::util::proptest_lite::Runner;
+use imax_llm::util::rng::Rng;
+
+/// Tiny 16-vocab config (mirrors the scheduler's spec tests): a prompt
+/// covering the whole vocabulary guarantees every sampled token has a
+/// 1-gram match, so the n-gram drafter always proposes something and
+/// the speculative path is exercised deterministically.
+fn spec_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "spec-itest",
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        d_ffn: 128,
+        vocab_size: 16,
+        qk_norm: true,
+        rope_theta: 1e4,
+        rms_eps: 1e-6,
+        max_seq_len: 128,
+    }
+}
+
+const PROMPT_LEN: usize = 16;
+const N_OUT: usize = 12;
+
+fn full_vocab_prompt() -> Vec<u32> {
+    (0..PROMPT_LEN as u32).collect()
+}
+
+/// A second vocabulary-covering prompt (5 is coprime with 16, so this is
+/// a permutation) — distinct content, same drafting guarantees.
+fn permuted_prompt() -> Vec<u32> {
+    (0..PROMPT_LEN as u32).map(|i| (5 * i) % 16).collect()
+}
+
+/// Serve both requests through a batcher over a paged engine whose pool
+/// is exactly the admission commitment; returns the per-request logs.
+fn run_batched(weights: &ModelWeights, k: usize, page_size: usize) -> Vec<SessionLog> {
+    // Admission commits pages for `prompt + n_out - 1` cached tokens per
+    // request; a verify may never reserve beyond that.
+    let pool = 2 * ceil_div(PROMPT_LEN + N_OUT - 1, page_size);
+    let engine = Engine::with_paged_slots(weights.clone(), 2, page_size, Some(pool));
+    let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+    if k > 0 {
+        b = b.with_speculation(k, DrafterSpec::default());
+    }
+    let mut exec = NativeExec;
+    for (id, prompt) in [full_vocab_prompt(), permuted_prompt()].into_iter().enumerate() {
+        let req = Request { id, prompt, n_out: N_OUT };
+        assert!(
+            matches!(b.admit(req, Sampler::greedy(), 0.0, &mut exec), Ok(Admitted::Active)),
+            "admission must not defer (k={k}, page={page_size})"
+        );
+    }
+    let mut logs = b.drain(&mut exec);
+    assert_eq!(
+        b.engine().free_pages(),
+        pool,
+        "pages leaked after drain (k={k}, page={page_size})"
+    );
+    assert_eq!(b.committed_pages(), 0, "commitments leaked (k={k}, page={page_size})");
+    logs.sort_by_key(|l| l.id);
+    logs
+}
+
+#[test]
+fn greedy_bit_identity_across_k_and_page_sizes() {
+    let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 17);
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for page_size in [1usize, 3, 16] {
+        let vanilla = run_batched(&weights, 0, page_size);
+        let tokens: Vec<Vec<u32>> = vanilla.iter().map(|l| l.tokens.clone()).collect();
+        assert!(vanilla.iter().all(|l| l.verify_calls == 0));
+        assert!(tokens.iter().all(|t| t.len() == N_OUT));
+        // Page geometry is an allocation detail: vanilla output must not
+        // depend on it.
+        match &reference {
+            None => reference = Some(tokens.clone()),
+            Some(want) => assert_eq!(&tokens, want, "page={page_size} changed vanilla output"),
+        }
+        for k in [1usize, 2, 4, 8] {
+            let spec = run_batched(&weights, k, page_size);
+            for (s, v) in spec.iter().zip(&vanilla) {
+                assert_eq!(
+                    s.tokens, v.tokens,
+                    "speculative output diverged (k={k}, page={page_size}, id={})",
+                    s.id
+                );
+            }
+            let verifies: usize = spec.iter().map(|l| l.verify_calls).sum();
+            assert!(verifies > 0, "vocab-covering prompts must draft (k={k})");
+            for l in &spec {
+                assert!(l.draft_accepted <= l.draft_tokens);
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_page_rejection_rolls_back_and_decode_continues_bit_identical() {
+    let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 11);
+    let prompt = full_vocab_prompt();
+    let n_out = 8usize;
+
+    // Vanilla reference stream.
+    let mut reference = Engine::new(weights.clone());
+    let r = reference.generate(&prompt, n_out, &mut Sampler::greedy(), &mut NativeExec);
+    assert_eq!(r.tokens.len(), n_out);
+    let want = r.tokens;
+    let wrong = |t: u32| (t + 1) % 16; // never equal to t in a 16-vocab
+
+    for page_size in [1usize, 3, 16] {
+        let mut e = Engine::with_paged_slots(weights.clone(), 1, page_size, None);
+        let total = e.total_pages();
+        let s = e.open_session(Sampler::greedy()).unwrap();
+        let logits = e.prefill_session(&s, &prompt, 8, &mut NativeExec);
+        let mut sampler = Sampler::greedy();
+        let t0 = sampler.sample(&logits);
+        assert_eq!(t0, want[0]);
+        assert_eq!(e.session_pos(&s), 16);
+
+        // Verify pass with an entirely wrong 3-token draft: the sampler
+        // rejects at the first drafted position, so the valid length is
+        // base + 1 (the forwarded `t0`) — 17 tokens, which for page
+        // sizes 3 and 16 lands mid-page.
+        let draft = [wrong(want[1]), wrong(want[2]), wrong(want[3])];
+        let rows = e
+            .try_verify_session(&s, &[t0, draft[0], draft[1], draft[2]], &mut NativeExec)
+            .unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(e.session_pos(&s), 20, "verify cached every position");
+        let t1 = sampler.sample(&rows[0]);
+        assert_eq!(t1, want[1], "verify row 0 is the vanilla next-token logits");
+        assert_ne!(t1, draft[0], "draft constructed to be rejected");
+        let free_grown = e.free_pages();
+        e.truncate_session(&s, 17);
+        assert_eq!(e.session_pos(&s), 17);
+        assert_eq!(
+            e.free_pages() - free_grown,
+            e.pages_needed(20) - e.pages_needed(17),
+            "rollback returns exactly the rejected tail's pages (page={page_size})"
+        );
+
+        // The rejection's own sampled token was never cached: forward it
+        // (the scheduler's pending-forward handoff) and keep decoding —
+        // the stream must rejoin the vanilla one exactly.
+        let logits = e
+            .forward_session(&s, t1, Phase::Decode, true, &mut NativeExec)
+            .unwrap();
+        let t2 = sampler.sample(&logits);
+        assert_eq!(t2, want[2], "post-rollback decode diverged (page={page_size})");
+
+        // Second verify: a fully correct draft — every position accepts
+        // and the last row samples the bonus token, no rollback needed.
+        let rows = e
+            .try_verify_session(&s, &[t2, want[3], want[4]], &mut NativeExec)
+            .unwrap();
+        let accepted: Vec<u32> = rows.iter().map(|row| sampler.sample(row)).collect();
+        assert_eq!(accepted, [want[3], want[4], want[5]], "full acceptance + bonus");
+        assert_eq!(e.session_pos(&s), 21);
+
+        // Drain the rest sequentially; the full stream matches vanilla.
+        let mut logits = e
+            .forward_session(&s, want[5], Phase::Decode, true, &mut NativeExec)
+            .unwrap();
+        let mut tokens = vec![t0, t1, t2, want[3], want[4], want[5]];
+        while tokens.len() < n_out {
+            let t = sampler.sample(&logits);
+            tokens.push(t);
+            if tokens.len() < n_out {
+                logits = e
+                    .forward_session(&s, t, Phase::Decode, true, &mut NativeExec)
+                    .unwrap();
+            }
+        }
+        assert_eq!(tokens, want, "mixed verify/rollback stream (page={page_size})");
+
+        e.close_session(s);
+        assert_eq!(e.free_pages(), total, "session teardown recovered the pool");
+    }
+}
+
+/// Randomized configuration for the no-leak property: page geometry,
+/// draft depth, output length, request count, and whether the prefix
+/// cache (shared pages under the verify ubatches) is enabled.
+#[derive(Clone, Debug)]
+struct SpecCase {
+    wseed: u64,
+    page_size: usize,
+    k: usize,
+    n_out: usize,
+    n_req: usize,
+    prefix: bool,
+}
+
+fn gen_spec_case(r: &mut Rng) -> SpecCase {
+    SpecCase {
+        wseed: 31 + r.below(4) as u64,
+        page_size: 1 + r.below(4),
+        k: 1 + r.below(8),
+        // n_out ≥ 3 so the first decode round has draft room (k is
+        // capped at n_out − tokens − 1).
+        n_out: 3 + r.below(8),
+        n_req: 1 + r.below(3),
+        prefix: r.below(2) == 1,
+    }
+}
+
+/// Post-drain engine state + outputs of one batched run, for comparing
+/// a speculative run against its vanilla twin.
+struct RunOutcome {
+    free_pages: usize,
+    /// `peek_prefix` of the shared prompt: (cached tokens, resident
+    /// pages, swapped pages) — the registered index state.
+    peek: (usize, usize, usize),
+    tokens: Vec<Vec<u32>>,
+    verify_calls: usize,
+}
+
+fn check_spec_case(case: &SpecCase) -> Result<(), String> {
+    let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, case.wseed);
+    let prompt = full_vocab_prompt();
+    let pool = case.n_req * ceil_div(PROMPT_LEN + case.n_out - 1, case.page_size);
+    let run = |k: usize| -> Result<RunOutcome, String> {
+        let mut engine =
+            Engine::with_paged_slots(weights.clone(), case.n_req, case.page_size, Some(pool));
+        if case.prefix {
+            engine.enable_prefix_cache();
+        }
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        if k > 0 {
+            b = b.with_speculation(k, DrafterSpec::default());
+        }
+        let mut exec = NativeExec;
+        for id in 0..case.n_req {
+            let req = Request { id, prompt: prompt.clone(), n_out: case.n_out };
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {}
+                other => return Err(format!("admission {other:?} ({case:?})")),
+            }
+        }
+        let mut logs = b.drain(&mut exec);
+        if b.committed_pages() != 0 {
+            return Err(format!("{} committed pages after drain ({case:?})", b.committed_pages()));
+        }
+        logs.sort_by_key(|l| l.id);
+        let verify_calls = logs.iter().map(|l| l.verify_calls).sum();
+        for l in &logs {
+            if l.draft_accepted > l.draft_tokens {
+                return Err(format!("accepted > drafted ({case:?})"));
+            }
+        }
+        Ok(RunOutcome {
+            free_pages: b.engine().free_pages(),
+            peek: b.engine().peek_prefix(&prompt),
+            tokens: logs.into_iter().map(|l| l.tokens).collect(),
+            verify_calls,
+        })
+    };
+    let vanilla = run(0)?;
+    let spec = run(case.k)?;
+    if spec.tokens != vanilla.tokens {
+        return Err(format!("speculative tokens diverge ({case:?})"));
+    }
+    if spec.verify_calls == 0 {
+        return Err(format!("vocab-covering prompt never drafted ({case:?})"));
+    }
+    // Pool conservation: without the prefix cache the whole pool comes
+    // back; with it, only the registered prompt chain may stay resident,
+    // and the speculative run must retire to the *same* state as the
+    // vanilla run — a rejected draft that leaked a page or dropped a
+    // shared page's refcount would break the equality.
+    if !case.prefix && spec.free_pages != pool {
+        return Err(format!("leak: {}/{pool} pages free ({case:?})", spec.free_pages));
+    }
+    if spec.free_pages != vanilla.free_pages {
+        return Err(format!(
+            "free pages {} != vanilla {} ({case:?})",
+            spec.free_pages, vanilla.free_pages
+        ));
+    }
+    if spec.peek != vanilla.peek {
+        return Err(format!(
+            "prefix index {:?} != vanilla {:?} ({case:?})",
+            spec.peek, vanilla.peek
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rejected_drafts_never_leak_pages_or_corrupt_shared_state() {
+    Runner::new("spec-decode-no-leak").cases(24).run_noshrink(gen_spec_case, check_spec_case);
+}

@@ -15,12 +15,17 @@ seeds the perf trajectory), then compares against the baseline:
   informational trajectory points);
 * ``better: lower`` fails when current > baseline * (1 + tolerance),
   ``better: higher`` fails when current < baseline * (1 - tolerance);
-* metrics present on only one side are reported but never fail — a new
-  bench starts recording before it starts gating. A baseline value of
-  null likewise records without gating (used to stage metrics whose
-  first real value is measured by CI itself).
+* a metric only the *current* side has is reported but never fails — a
+  new bench starts recording before it starts gating. A baseline value
+  of null likewise records without gating (used to stage metrics whose
+  first real value is measured by CI itself);
+* a *gated* baseline metric missing from the run (or present with a
+  null value) is a hard failure — a dropped or renamed bench must not
+  silently shrink the gate.
 
-Exit status 1 on any regression, 0 otherwise. Stdlib only.
+Exit status 1 on any regression or missing gated metric, 0 otherwise;
+every failure is collected and reported, not just the first. Stdlib
+only.
 """
 
 import argparse
@@ -78,14 +83,29 @@ def main():
         cur = current.get(name)
         base = baseline.get(name)
         if cur is None:
-            print(f"{name:<{width}}  {base['value']!s:>14}  {'-':>14}  missing from run")
+            bval = base.get("value")
+            if base.get("check", False) and bval is not None:
+                print(f"{name:<{width}}  {bval:>14.6g}  {'-':>14}  MISSING (gated)")
+                failures.append((name, bval, None, base.get("better", "lower")))
+            else:
+                print(f"{name:<{width}}  {bval!s:>14}  {'-':>14}  missing from run")
             continue
+        cval = cur.get("value")
         if base is None or base.get("value") is None:
-            print(f"{name:<{width}}  {'-':>14}  {cur['value']:>14.6g}  recorded (no gate)")
+            shown = "null" if cval is None else f"{float(cval):.6g}"
+            print(f"{name:<{width}}  {'-':>14}  {shown:>14}  recorded (no gate)")
             continue
-        bval, cval = float(base["value"]), float(cur["value"])
+        bval = float(base["value"])
         gated = base.get("check", False) and cur.get("check", False)
         better = base.get("better", cur.get("better", "lower"))
+        if cval is None:
+            if gated:
+                print(f"{name:<{width}}  {bval:>14.6g}  {'null':>14}  MISSING (gated)")
+                failures.append((name, bval, None, better))
+            else:
+                print(f"{name:<{width}}  {bval:>14.6g}  {'null':>14}  informational")
+            continue
+        cval = float(cval)
         if not gated:
             print(f"{name:<{width}}  {bval:>14.6g}  {cval:>14.6g}  informational")
             continue
@@ -99,9 +119,12 @@ def main():
             failures.append((name, bval, cval, better))
 
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed beyond {args.tolerance:.0%}:")
+        print(f"\n{len(failures)} metric(s) regressed beyond {args.tolerance:.0%} or went missing:")
         for name, bval, cval, better in failures:
-            print(f"  {name}: baseline {bval:.6g} -> current {cval:.6g} (better: {better})")
+            if cval is None:
+                print(f"  {name}: baseline {bval:.6g} -> missing from run (better: {better})")
+            else:
+                print(f"  {name}: baseline {bval:.6g} -> current {cval:.6g} (better: {better})")
         return 1
     print("\nno gated regressions")
     return 0
