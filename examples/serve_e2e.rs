@@ -71,11 +71,7 @@ fn main() {
         "over dma and",
     ];
     let requests: Vec<Request> = (0..n_requests)
-        .map(|id| Request {
-            id,
-            prompt: tok.encode_with_bos(prompts[id % prompts.len()]),
-            n_out,
-        })
+        .map(|id| Request::new(id, tok.encode_with_bos(prompts[id % prompts.len()]), n_out))
         .collect();
     let total_prompt_toks: usize = requests.iter().map(|r| r.prompt.len()).sum();
 

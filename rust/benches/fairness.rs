@@ -88,11 +88,7 @@ fn run(budgeted: bool) -> RunStats {
     let mut worst_gap = 0.0f64;
     let mut logs = Vec::new();
     for id in 0..N_SHORT {
-        let req = Request {
-            id,
-            prompt: vec![1 + id as u32, 2, 3, 4],
-            n_out: SHORT_N_OUT,
-        };
+        let req = Request::new(id, vec![1 + id as u32, 2, 3, 4], SHORT_N_OUT);
         assert!(matches!(
             b.admit(req, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -101,11 +97,8 @@ fn run(budgeted: bool) -> RunStats {
     for _ in 0..3 {
         settle_round(&mut b, &mut exec, &mut logs, &mut worst_gap, &mut modeled_mark);
     }
-    let long = Request {
-        id: N_SHORT,
-        prompt: (0..LONG_PROMPT).map(|i| 1 + (i % 100) as u32).collect(),
-        n_out: 2,
-    };
+    let long_prompt: Vec<u32> = (0..LONG_PROMPT).map(|i| 1 + (i % 100) as u32).collect();
+    let long = Request::new(N_SHORT, long_prompt, 2);
     assert!(matches!(
         b.admit(long, Sampler::greedy(), 0.0, &mut exec),
         Ok(Admitted::Active)

@@ -38,7 +38,7 @@ fn templated_requests(n: usize) -> Vec<Request> {
             let mut prompt: Vec<u32> =
                 (0..TEMPLATE_PAGES * PAGE_SIZE).map(|i| 3 + (i % 89) as u32).collect();
             prompt.extend([5 + id as u32, 11, 2 + (id % 7) as u32]);
-            Request { id, prompt, n_out: 4 }
+            Request::new(id, prompt, 4)
         })
         .collect()
 }

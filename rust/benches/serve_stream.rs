@@ -1,0 +1,153 @@
+//! Bench: streaming-serve teardown — mid-decode cancellation and
+//! zero-second deadlines under a tight paged pool with prefix sharing
+//! and host swap enabled.
+//!
+//! The scenario drives a [`ContinuousBatcher`] with a delivery sink
+//! attached (every sampled token crosses the streaming boundary) over a
+//! templated workload in which a third of the requests are cancelled a
+//! couple of rounds after admission and a fifth expire instantly. The
+//! gated counters are exact by construction: cancels fire on round
+//! indices, not timers, so the values are bit-stable across machines.
+//!
+//! * `cancel_leak_pages` — pages neither free nor resident in the
+//!   prefix cache after the churn drains. The teardown contract (a
+//!   cancelled or expired request releases exactly its non-shared
+//!   pages through the refcount/CoW machinery) says this is 0.
+//! * `committed_pages_after_drain` — leaked admission budget; also 0.
+//!
+//! With `BENCH_JSON=path` a machine-readable summary is written for the
+//! CI `bench-smoke` job (`scripts/check_bench_regression.py` gates the
+//! counters against `BENCH_baseline.json`). The shape is already quick
+//! (24 tiny requests), so `IMAX_BENCH_QUICK` changes nothing.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use imax_llm::coordinator::{
+    Admitted, CancelHandle, ContinuousBatcher, FinishReason, Request, SessionLog,
+};
+use imax_llm::model::engine::{Engine, NativeExec};
+use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::util::bench::JsonMetrics;
+use imax_llm::util::report::Table;
+
+const N_REQ: usize = 24;
+
+fn main() {
+    let weights = ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 13);
+    // The oversubscribed serving shape: 3 slots on 8 pages of 4 tokens,
+    // prefix sharing and a 6-page host-swap arena.
+    let mut engine = Engine::with_paged_slots(weights, 3, 4, Some(8));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(6);
+    let total_pages = engine.total_pages();
+    let delivered = Arc::new(Mutex::new(0usize));
+    let sink_count = delivered.clone();
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now()).with_delivery(Box::new(
+        move |_ev| {
+            *sink_count.lock().unwrap() += 1;
+            true
+        },
+    ));
+    let mut exec = NativeExec;
+
+    // Templated prompts (three two-page templates plus a short unique
+    // suffix). Roles by id: ≡4 (mod 5) expires instantly; otherwise
+    // ≡1 (mod 3) cancels two rounds after admission — n_out ≥ 4 keeps
+    // that mid-decode; the rest run to completion.
+    let mut handles: Vec<Option<CancelHandle>> = Vec::with_capacity(N_REQ);
+    let requests: Vec<Request> = (0..N_REQ)
+        .map(|id| {
+            let tpl = id % 3;
+            let mut prompt: Vec<u32> = (0..8).map(|i| (100 * (tpl + 1) + i) as u32).collect();
+            prompt.extend((0..id % 4).map(|i| 1 + ((id * 13 + i * 5) % 50) as u32));
+            if id % 5 == 4 {
+                handles.push(None);
+                Request::new(id, prompt, 1 + id % 6).with_deadline_s(0.0)
+            } else if id % 3 == 1 {
+                let h = CancelHandle::new();
+                handles.push(Some(h.clone()));
+                Request::new(id, prompt, 4 + id % 4).with_cancel(h)
+            } else {
+                handles.push(None);
+                Request::new(id, prompt, 1 + id % 6)
+            }
+        })
+        .collect();
+
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+    let mut done: Vec<SessionLog> = Vec::new();
+    let mut pending: Vec<(usize, usize)> = Vec::new(); // (fire_round, id)
+    let mut rounds = 0usize;
+    while !queue.is_empty() || b.n_active() > 0 {
+        rounds += 1;
+        assert!(rounds < 10_000, "serve churn wedged");
+        pending.retain(|&(fire, id)| {
+            if fire <= rounds {
+                handles[id].as_ref().unwrap().cancel();
+                false
+            } else {
+                true
+            }
+        });
+        while let Some(req) = queue.pop_front() {
+            let id = req.id;
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {
+                    if handles[id].is_some() {
+                        pending.push((rounds + 2, id));
+                    }
+                }
+                Ok(Admitted::Finished(log)) => done.push(log),
+                Ok(Admitted::Deferred(req)) => {
+                    queue.push_front(req);
+                    break;
+                }
+                Err(e) => panic!("no request here is oversized: {e}"),
+            }
+        }
+        done.extend(b.decode_round(&mut exec));
+    }
+
+    assert_eq!(done.len(), N_REQ, "each request completes exactly once");
+    let cancelled: Vec<&SessionLog> =
+        done.iter().filter(|l| l.reason == FinishReason::Cancelled).collect();
+    let expired = done.iter().filter(|l| l.reason == FinishReason::DeadlineExpired).count();
+    let completed = done.iter().filter(|l| l.reason == FinishReason::Completed).count();
+    assert!(!cancelled.is_empty() && expired > 0 && completed > 0, "all roles exercised");
+    let salvaged: usize = cancelled.iter().map(|l| l.tokens.len()).sum();
+    let total_tokens: usize = done.iter().map(|l| l.tokens.len()).sum();
+    let events = *delivered.lock().unwrap();
+    assert_eq!(events, total_tokens, "every token crossed the delivery sink exactly once");
+
+    let cache = &b.engine().cache;
+    let leak = total_pages - cache.free_page_count() - cache.cached_resident_pages();
+    let committed = b.committed_pages();
+
+    let mut t = Table::new(
+        "streaming serve teardown: cancels + deadlines on an 8-page pool",
+        &["metric", "value"],
+    );
+    t.row(vec![
+        "requests (completed / cancelled / expired)".to_string(),
+        format!("{completed} / {} / {expired}", cancelled.len()),
+    ]);
+    t.row(vec!["rounds to drain".to_string(), rounds.to_string()]);
+    t.row(vec![
+        "tokens delivered (salvaged by cancels)".to_string(),
+        format!("{total_tokens} ({salvaged})"),
+    ]);
+    t.row(vec!["pages leaked after drain".to_string(), leak.to_string()]);
+    t.row(vec!["committed pages after drain".to_string(), committed.to_string()]);
+    t.print();
+
+    let mut json = JsonMetrics::new("serve_stream");
+    json.push("cancel_leak_pages", leak as f64, "lower", true);
+    json.push("committed_pages_after_drain", committed as f64, "lower", true);
+    json.push("cancelled_requests", cancelled.len() as f64, "higher", false);
+    json.push("expired_requests", expired as f64, "higher", false);
+    json.push("salvaged_tokens", salvaged as f64, "higher", false);
+    json.push("rounds_to_drain", rounds as f64, "lower", false);
+    json.write_if_requested().expect("BENCH_JSON path writable");
+}

@@ -90,11 +90,7 @@ fn run(speculate: usize) -> RunStats {
         b = b.with_speculation(speculate, DrafterSpec::default());
     }
     for id in 0..N_REQ {
-        let req = Request {
-            id,
-            prompt: templated_prompt(id, PROMPT_LEN, cfg().vocab_size),
-            n_out: N_OUT,
-        };
+        let req = Request::new(id, templated_prompt(id, PROMPT_LEN, cfg().vocab_size), N_OUT);
         assert!(matches!(
             b.admit(req, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)

@@ -26,7 +26,10 @@ pub use hybrid::{simulate, Workload, WorkloadRun};
 pub use offload::{OffloadPolicy, OffloadStats};
 pub use phases::{InstrumentedExec, RoundCost};
 pub use scheduler::{
-    AdmitError, Admitted, ContinuousBatcher, Request, RoundStats, RoundTokens, SchedPolicy,
-    SessionLog,
+    AdmitError, Admitted, CancelHandle, ContinuousBatcher, DeliverySink, FinishReason, Request,
+    RoundStats, RoundTokens, SchedPolicy, SessionLog, TokenEvent,
 };
-pub use serve::{serve, serve_with, Completion, ServeOptions, ServeReport, ADMIT_SCAN_WINDOW};
+pub use serve::{
+    serve, serve_streaming, serve_with, Completion, ServeError, ServeOptions, ServeReport,
+    StreamingServe, ADMIT_SCAN_WINDOW,
+};

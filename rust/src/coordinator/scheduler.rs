@@ -87,6 +87,22 @@
 //! round of streamed weights — decode moves toward the prefill regime,
 //! which is exactly the trade the CGLA cost model rewards.
 //!
+//! **Streaming delivery, cancellation and deadlines**: with a delivery
+//! sink attached ([`ContinuousBatcher::with_delivery`]) every sampled
+//! token is pushed to the consumer as a [`TokenEvent`] the moment the
+//! scheduler makes it available, and all latency marks are stamped at
+//! *delivery* — `token_marks_s` records when each token reached the
+//! sink, and `delivery_marks_s` records one instant per sink *event*
+//! (a speculative verify emits its accepted run as one event), which
+//! is what [`SessionLog::tbt_gaps_s`] measures. Requests can carry a
+//! [`CancelHandle`] and/or a relative deadline
+//! ([`Request::with_deadline_s`]); [`ContinuousBatcher::reap`] runs at
+//! every round boundary and tears down cancelled or expired flights
+//! through the refcounted release path — mid-[`PrefillCursor`] and
+//! pending-verify states included — freeing exactly their non-shared
+//! pages (registered prefix pages stay adoptable) and returning the
+//! slot so the same round's budget is spent by the surviving requests.
+//!
 //! **Lane scalability** ([`lane_sweep`], paper Fig 16 / §V.C): the FPGA
 //! carries 8 IMAX lanes, but the dual-core A72 host saturates beyond
 //! two — the scheduler model distributes kernel rows across lanes (EXEC
@@ -94,6 +110,8 @@
 //! inflates HOST/LOAD issue costs, reproducing the saturation curve.
 
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::hybrid::{simulate, Workload, WorkloadRun};
@@ -134,12 +152,100 @@ impl SchedPolicy {
     }
 }
 
+/// Cooperative cancellation latch for one request, shared between the
+/// submitter and the scheduler. Cancelling is one-way and checked at
+/// round boundaries: the flight is torn down by the next
+/// [`ContinuousBatcher::reap`] (its pages released through the
+/// refcount/CoW path), never mid-kernel.
+#[derive(Clone, Debug, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    pub fn new() -> CancelHandle {
+        CancelHandle::default()
+    }
+
+    /// Latch the cancel; takes effect at the next round boundary.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: usize,
     pub prompt: Vec<u32>,
     pub n_out: usize,
+    /// Relative deadline in seconds, measured from the instant the
+    /// request entered the serving queue: once exceeded — in the queue
+    /// or mid-decode — the request completes with a typed error and its
+    /// pages are released. `None` = no deadline.
+    pub deadline_s: Option<f64>,
+    /// Cooperative cancellation latch (e.g. a consumer that dropped its
+    /// stream receiver), checked between rounds. `None` = not
+    /// cancellable.
+    pub cancel: Option<CancelHandle>,
+}
+
+impl Request {
+    pub fn new(id: usize, prompt: Vec<u32>, n_out: usize) -> Request {
+        Request { id, prompt, n_out, deadline_s: None, cancel: None }
+    }
+
+    /// Attach a relative deadline (seconds from enqueue).
+    pub fn with_deadline_s(mut self, deadline_s: f64) -> Request {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Attach a cancellation latch.
+    pub fn with_cancel(mut self, handle: CancelHandle) -> Request {
+        self.cancel = Some(handle);
+        self
+    }
+
+    /// Whether the attached latch (if any) has been cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().map_or(false, CancelHandle::is_cancelled)
+    }
+}
+
+/// One delivered token, pushed to the serving stream the moment the
+/// scheduler makes it consumer-visible (the SSE `{content, done}`
+/// delivery shape, token-level).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenEvent {
+    pub request_id: usize,
+    pub token: u32,
+    /// Epoch-relative delivery instant — the mark TTFT/TBT percentiles
+    /// are computed from.
+    pub mark_s: f64,
+    /// True on the request's final token (its `n_out`-th; a cancelled
+    /// or expired request's stream simply stops without a `done`
+    /// event — the completion channel carries the typed outcome).
+    pub done: bool,
+}
+
+/// Per-token delivery callback. Returning `false` signals the consumer
+/// is gone (e.g. a dropped channel receiver): the batcher latches
+/// delivery-closed and cancels every in-flight request at the next
+/// round boundary.
+pub type DeliverySink = Box<dyn FnMut(TokenEvent) -> bool + Send>;
+
+/// How a request left the batcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled all `n_out` tokens.
+    Completed,
+    /// Torn down by its [`CancelHandle`] (or a closed delivery sink).
+    Cancelled,
+    /// Torn down because its [`Request::deadline_s`] expired.
+    DeadlineExpired,
 }
 
 /// Lifecycle record of one served request, timestamped on the serving
@@ -158,11 +264,22 @@ pub struct SessionLog {
     pub admitted_s: f64,
     pub decode_start_s: f64,
     pub finished_s: f64,
-    /// Epoch-relative emission instant of each sampled token (same
-    /// length as `tokens`): the first entry against `admitted_s` gives
-    /// time-to-first-token, successive gaps give time-between-tokens —
-    /// the tail-latency quantities serving stacks are judged on.
+    /// Epoch-relative *delivery* instant of each sampled token (same
+    /// length as `tokens`): stamped when the token is pushed to the
+    /// consumer, not when the sampler picked it. The first entry
+    /// against `admitted_s` gives time-to-first-token. Tokens delivered
+    /// in one event (a speculative verify's accepted run) share an
+    /// instant.
     pub token_marks_s: Vec<f64>,
+    /// Epoch-relative instant of each delivery *event* (one entry per
+    /// sink call; a speculative verify delivers its whole accepted run
+    /// as one event). Time-between-tokens gaps are measured over these,
+    /// so a k+1-token burst cannot deflate the percentiles with ~0
+    /// intra-burst gaps.
+    pub delivery_marks_s: Vec<f64>,
+    /// How the request ended. Cancelled/expired logs keep the tokens
+    /// delivered before teardown.
+    pub reason: FinishReason,
     /// Speculative decoding: batched verify passes this request ran
     /// (0 with speculation off or when no draft ever matched).
     pub verify_calls: usize,
@@ -173,17 +290,20 @@ pub struct SessionLog {
 }
 
 impl SessionLog {
-    /// Enqueue → first sampled token (queue time included); `None` when
-    /// the request produced no tokens.
+    /// Enqueue → first *delivered* token (queue time included); `None`
+    /// when the request delivered no tokens.
     pub fn ttft_s(&self) -> Option<f64> {
         self.token_marks_s
             .first()
             .map(|&t| self.queue_s + (t - self.admitted_s))
     }
 
-    /// Gaps between successive sampled tokens (empty below two tokens).
+    /// Gaps between successive delivery events (empty below two
+    /// events). A speculative verify delivers its accepted run as one
+    /// event, so these measure consumer-visible latency — the sampler's
+    /// internal per-token instants within a burst carry no gap.
     pub fn tbt_gaps_s(&self) -> Vec<f64> {
-        self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+        self.delivery_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
     }
 
     /// Tokens emitted per verify pass (accepted drafts plus the pass's
@@ -299,13 +419,23 @@ pub enum AdmitError {
     /// The engine's cache failed during prefill (unreachable while
     /// admission commits worst-case pages, kept for defense in depth).
     Cache { id: usize, err: CacheError },
+    /// Defensive stall guard: the request would defer while the engine
+    /// is idle, so no live flight can ever free the slot or pages it is
+    /// waiting for and retrying can never succeed. Unreachable through
+    /// this batcher alone (an idle engine has every page free and
+    /// `TooLarge` gates pool-exceeding demand), kept typed so a
+    /// violated invariant surfaces as an error completion instead of a
+    /// worker-killing panic.
+    Stalled { id: usize, need_pages: usize, free_pages: usize },
 }
 
 impl AdmitError {
     /// The id of the request that failed admission.
     pub fn id(&self) -> usize {
         match *self {
-            AdmitError::TooLarge { id, .. } | AdmitError::Cache { id, .. } => id,
+            AdmitError::TooLarge { id, .. }
+            | AdmitError::Cache { id, .. }
+            | AdmitError::Stalled { id, .. } => id,
         }
     }
 }
@@ -322,6 +452,11 @@ impl fmt::Display for AdmitError {
             AdmitError::Cache { id, ref err } => {
                 write!(f, "request {id} failed during prefill: {err}")
             }
+            AdmitError::Stalled { id, need_pages, free_pages } => write!(
+                f,
+                "request {id} deferred on an idle engine ({need_pages} pages wanted, \
+                 {free_pages} free): nothing can progress"
+            ),
         }
     }
 }
@@ -344,8 +479,18 @@ struct InFlight {
     state: FlightState,
     logits: Vec<f32>,
     tokens: Vec<u32>,
-    /// Epoch-relative emission instant of each sampled token.
+    /// Rolling `prompt + tokens` history for the drafter — maintained
+    /// incrementally so `draft_for` never rebuilds an O(prompt) Vec per
+    /// decode step.
+    history: Vec<u32>,
+    /// Epoch-relative delivery instant of each sampled token.
     token_marks_s: Vec<f64>,
+    /// Epoch-relative instant of each delivery event (one per sink
+    /// call; a verify's accepted run is one event).
+    delivery_marks_s: Vec<f64>,
+    /// Epoch-relative instant the request's deadline expires (enqueue
+    /// instant + `Request::deadline_s`), checked by `reap`.
+    deadline_epoch_s: Option<f64>,
     /// The last sampled token has not been forwarded yet (its logits
     /// are pending): set after every speculative verify, so the next
     /// round forwards it instead of sampling again — stateful samplers
@@ -372,14 +517,17 @@ struct InFlight {
 impl InFlight {
     /// Split into the session (returned to the engine's slot pool) and
     /// the request's lifecycle log.
-    fn finish(self, finished_s: f64) -> (Session, SessionLog) {
+    fn finish(self, finished_s: f64, reason: FinishReason) -> (Session, SessionLog) {
         let InFlight {
             req,
             session,
             state: _,
             logits: _,
             tokens,
+            history: _,
             token_marks_s,
+            delivery_marks_s,
+            deadline_epoch_s: _,
             pending_forward: _,
             verify_calls,
             draft_tokens,
@@ -403,6 +551,8 @@ impl InFlight {
             decode_start_s,
             finished_s,
             token_marks_s,
+            delivery_marks_s,
+            reason,
             verify_calls,
             draft_tokens,
             draft_accepted,
@@ -428,6 +578,13 @@ pub struct ContinuousBatcher {
     speculate: usize,
     /// Draft proposer for the speculative path.
     drafter: NgramDrafter,
+    /// Streaming delivery sink: every sampled token is pushed here the
+    /// moment it becomes consumer-visible. `None` = report-at-finish
+    /// only (marks are still stamped at the same delivery points).
+    sink: Option<DeliverySink>,
+    /// Latched when the sink reports a gone consumer; `reap` then
+    /// cancels every in-flight request.
+    delivery_closed: bool,
     /// Token counts of every settled round, in order.
     rounds: Vec<RoundTokens>,
     active: Vec<InFlight>,
@@ -456,6 +613,8 @@ impl ContinuousBatcher {
             prefill_chunk: ubatch,
             speculate: 0,
             drafter: DrafterSpec::default().build(),
+            sink: None,
+            delivery_closed: false,
             rounds: Vec::new(),
             active: Vec::new(),
             committed_pages: 0,
@@ -492,6 +651,21 @@ impl ContinuousBatcher {
         self.speculate = k;
         self.drafter = drafter.build();
         self
+    }
+
+    /// Attach a streaming delivery sink: every sampled token is pushed
+    /// as a [`TokenEvent`] the moment it becomes consumer-visible, and
+    /// latency marks are stamped at that push. A sink returning `false`
+    /// latches delivery-closed and cancels every in-flight request at
+    /// the next round boundary.
+    pub fn with_delivery(mut self, sink: DeliverySink) -> ContinuousBatcher {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// True once an attached delivery sink reported a gone consumer.
+    pub fn delivery_closed(&self) -> bool {
+        self.delivery_closed
     }
 
     /// The configured draft length (0 = speculation off).
@@ -649,6 +823,15 @@ impl ContinuousBatcher {
             });
         }
         if self.engine.free_sessions() == 0 {
+            if self.active.is_empty() {
+                // Nothing live can ever return a slot: surface the
+                // stall as a typed error instead of an endless retry.
+                return Err(AdmitError::Stalled {
+                    id: req.id,
+                    need_pages,
+                    free_pages: self.engine.free_pages(),
+                });
+            }
             return Ok(Admitted::Deferred(req));
         }
         let session = self
@@ -664,10 +847,25 @@ impl ContinuousBatcher {
         let demand = self.distinct_demand(Some((fresh_pages, &adopted.pages)));
         if demand > pool_pages {
             self.engine.close_session(session);
+            if self.active.is_empty() {
+                // An idle engine's distinct demand is the request's own
+                // worst case, already gated by TooLarge — deferring
+                // here could never resolve (see `AdmitError::Stalled`).
+                return Err(AdmitError::Stalled {
+                    id: req.id,
+                    need_pages,
+                    free_pages: self.engine.free_pages(),
+                });
+            }
             return Ok(Admitted::Deferred(req));
         }
         self.committed_pages = demand;
         let admitted_s = self.epoch.elapsed().as_secs_f64();
+        // The deadline clock started at enqueue: `admitted_s − queue_s`
+        // recovers the epoch-relative enqueue instant.
+        let deadline_epoch_s = req.deadline_s.map(|d| admitted_s - queue_s + d);
+        let mut history = Vec::with_capacity(req.prompt.len() + req.n_out);
+        history.extend_from_slice(&req.prompt);
         if self.token_budget.is_some() {
             // Token-budget path: the prompt prefills chunk-by-chunk in
             // later rounds (interleaved with live decodes) instead of
@@ -685,7 +883,10 @@ impl ContinuousBatcher {
                 state: FlightState::Prefilling(cursor),
                 logits: Vec::new(),
                 tokens: Vec::new(),
+                history,
                 token_marks_s: Vec::new(),
+                delivery_marks_s: Vec::new(),
+                deadline_epoch_s,
                 pending_forward: false,
                 verify_calls: 0,
                 draft_tokens: 0,
@@ -728,7 +929,10 @@ impl ContinuousBatcher {
             state: FlightState::Decoding,
             logits,
             tokens: Vec::new(),
+            history,
             token_marks_s: Vec::new(),
+            delivery_marks_s: Vec::new(),
+            deadline_epoch_s,
             pending_forward: false,
             verify_calls: 0,
             draft_tokens: 0,
@@ -743,7 +947,7 @@ impl ContinuousBatcher {
         };
         if inflight.req.n_out == 0 {
             let finished_s = self.epoch.elapsed().as_secs_f64();
-            let (session, mut log) = inflight.finish(finished_s);
+            let (session, mut log) = inflight.finish(finished_s, FinishReason::Completed);
             self.engine.close_session(session);
             self.recompute_committed();
             // A 0-output request never decodes; pin its decode mark to
@@ -775,11 +979,82 @@ impl ContinuousBatcher {
         if k == 0 {
             return Vec::new();
         }
-        let mut history = Vec::with_capacity(f.req.prompt.len() + f.tokens.len());
-        history.extend_from_slice(&f.req.prompt);
-        history.extend_from_slice(&f.tokens);
+        // The rolling history is maintained at every token push, so no
+        // O(prompt) rebuild happens per decode step.
+        debug_assert_eq!(f.history.len(), f.req.prompt.len() + f.tokens.len());
         let corpus = self.engine.cache.prefix_token_spans();
-        self.drafter.draft(&history, &corpus, k)
+        self.drafter.draft(&f.history, &corpus, k)
+    }
+
+    /// Deliver the last `n_new` sampled tokens of flight `f` as **one**
+    /// delivery event: stamp the marks *now* — the instant the consumer
+    /// can actually observe the tokens, not when the sampler picked
+    /// them — and push them into the sink, if any. `done` flags the
+    /// final token. A sink refusing an event latches `closed`.
+    fn deliver(
+        epoch: Instant,
+        sink: &mut Option<DeliverySink>,
+        closed: &mut bool,
+        f: &mut InFlight,
+        n_new: usize,
+        done: bool,
+    ) {
+        debug_assert!(n_new >= 1 && n_new <= f.tokens.len());
+        let mark_s = epoch.elapsed().as_secs_f64();
+        f.token_marks_s.resize(f.tokens.len(), mark_s);
+        f.delivery_marks_s.push(mark_s);
+        if let Some(sink) = sink.as_mut() {
+            let start = f.tokens.len() - n_new;
+            for (j, &token) in f.tokens[start..].iter().enumerate() {
+                let last = start + j + 1 == f.tokens.len();
+                let event = TokenEvent { request_id: f.req.id, token, mark_s, done: done && last };
+                if !sink(event) {
+                    *closed = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Sweep cancelled and deadline-expired flights (every flight once
+    /// the delivery sink has closed), tearing each one down through the
+    /// refcounted release path: `close_session` resets the slot's page
+    /// table — mid-[`PrefillCursor`] and pending-verify states included
+    /// — so CoW/shared pages drop one reference, pages pinned by the
+    /// prefix-cache index stay adoptable, and everything else returns
+    /// to the pool. The freed slot and page budget are available to the
+    /// very next admission/prefill pass — the same scheduling round.
+    ///
+    /// Runs automatically at the start of every
+    /// [`ContinuousBatcher::decode_round`]; the serving loop also calls
+    /// it right before admission. Returns the logs of reaped flights
+    /// (tokens delivered before teardown preserved, `reason` set).
+    pub fn reap(&mut self) -> Vec<SessionLog> {
+        let mut reaped = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let now_s = self.epoch.elapsed().as_secs_f64();
+            let f = &self.active[i];
+            let reason = if self.delivery_closed || f.req.is_cancelled() {
+                Some(FinishReason::Cancelled)
+            } else if f.deadline_epoch_s.map_or(false, |d| now_s >= d) {
+                Some(FinishReason::DeadlineExpired)
+            } else {
+                None
+            };
+            let Some(reason) = reason else {
+                i += 1;
+                continue;
+            };
+            let f = self.active.remove(i);
+            let (session, log) = f.finish(now_s, reason);
+            self.engine.close_session(session);
+            reaped.push(log);
+        }
+        if !reaped.is_empty() {
+            self.recompute_committed();
+        }
+        reaped
     }
 
     /// Verify `next` plus `draft` for flight `i` in one batched ubatch,
@@ -811,11 +1086,13 @@ impl ContinuousBatcher {
         f.verify_calls += 1;
         f.draft_tokens += draft.len();
         let mut accepted = 0usize;
+        let mut emitted = 0usize;
         let mut done = false;
         for (j, row) in rows.iter().enumerate() {
             let sampled = f.session.sampler.sample(row);
             f.tokens.push(sampled);
-            f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
+            f.history.push(sampled);
+            emitted += 1;
             let matched = j < draft.len() && sampled == draft[j];
             if matched {
                 accepted += 1;
@@ -829,6 +1106,10 @@ impl ContinuousBatcher {
             }
         }
         f.draft_accepted += accepted;
+        // The whole accepted run becomes consumer-visible here, as one
+        // delivery event: marks stamped at delivery, so the burst's
+        // intra-verify instants cannot deflate the TBT percentiles.
+        Self::deliver(self.epoch, &mut self.sink, &mut self.delivery_closed, f, emitted, done);
         if !done {
             // Roll back rejected-draft KV entries; the pending token's
             // position was never cached, so the valid length is the
@@ -842,9 +1123,12 @@ impl ContinuousBatcher {
     }
 
     /// One token-budgeted round, in admission order; requests that reach
-    /// their `n_out` are retired and returned. Each request samples
-    /// exactly `n_out` tokens over its lifetime (the final sampled token
-    /// needs no further forward pass).
+    /// their `n_out` are retired and returned, as are flights reaped by
+    /// the round-opening cancellation/deadline sweep (see
+    /// [`ContinuousBatcher::reap`] — their freed budget is spent by this
+    /// very round). Each completed request samples exactly `n_out`
+    /// tokens over its lifetime (the final sampled token needs no
+    /// further forward pass).
     ///
     /// The round runs two passes. First the *decode pass*: one decode
     /// step for **every** live decoding request — the decode-starvation
@@ -862,7 +1146,10 @@ impl ContinuousBatcher {
     /// idle (admission prefills inline) and this is exactly the classic
     /// phase-segregated decode round.
     pub fn decode_round(&mut self, exec: &mut dyn KernelExec) -> Vec<SessionLog> {
-        let mut finished = Vec::new();
+        // Tear down cancelled/expired flights first: the budget they
+        // would have consumed flows to the surviving requests' decode
+        // and prefill passes below — the same round spends it.
+        let mut finished = self.reap();
         let budget = self.token_budget.unwrap_or(usize::MAX);
         let mut decoded = 0usize;
         let mut i = 0;
@@ -879,12 +1166,15 @@ impl ContinuousBatcher {
             if f.pending_forward {
                 // A speculative verify left its last sampled token
                 // unforwarded (`f.logits` is stale until it runs): this
-                // round forwards it instead of sampling again.
+                // round forwards it instead of sampling again. The
+                // token itself was already delivered by the verify.
                 f.pending_forward = false;
             } else {
                 let next = f.session.sampler.sample(&f.logits);
                 f.tokens.push(next);
-                f.token_marks_s.push(self.epoch.elapsed().as_secs_f64());
+                f.history.push(next);
+                let last = f.tokens.len() == f.req.n_out;
+                Self::deliver(self.epoch, &mut self.sink, &mut self.delivery_closed, f, 1, last);
             }
             let mut done = f.tokens.len() == f.req.n_out;
             if done {
@@ -912,7 +1202,7 @@ impl ContinuousBatcher {
             if done {
                 let f = self.active.remove(i);
                 let finished_s = self.epoch.elapsed().as_secs_f64();
-                let (session, log) = f.finish(finished_s);
+                let (session, log) = f.finish(finished_s, FinishReason::Completed);
                 self.engine.close_session(session);
                 finished.push(log);
             } else {
@@ -954,7 +1244,7 @@ impl ContinuousBatcher {
                 if f.req.n_out == 0 {
                     let f = self.active.remove(i);
                     let finished_s = self.epoch.elapsed().as_secs_f64();
-                    let (session, mut log) = f.finish(finished_s);
+                    let (session, mut log) = f.finish(finished_s, FinishReason::Completed);
                     self.engine.close_session(session);
                     // Never decodes; pin the mark (see `admit`).
                     log.decode_start_s = log.finished_s;
@@ -1070,7 +1360,7 @@ mod tests {
             Instant::now(),
         );
         let mut exec = NativeExec;
-        let req = Request { id: 0, prompt: prompt.clone(), n_out };
+        let req = Request::new(0, prompt.clone(), n_out);
         assert!(matches!(
             b.admit(req, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1097,14 +1387,14 @@ mod tests {
             ContinuousBatcher::new(Engine::with_slots(weights, 2), 32, Instant::now());
         let mut exec = NativeExec;
 
-        let r0 = Request { id: 0, prompt: vec![1, 2, 3], n_out: 8 };
+        let r0 = Request::new(0, vec![1, 2, 3], 8);
         b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
         // r0 decodes a few rounds alone…
         for _ in 0..3 {
             assert!(b.decode_round(&mut exec).is_empty());
         }
         // …then r1 arrives mid-run and joins the same engine.
-        let r1 = Request { id: 1, prompt: vec![9, 8], n_out: 2 };
+        let r1 = Request::new(1, vec![9, 8], 2);
         b.admit(r1, Sampler::greedy(), 0.0, &mut exec).unwrap();
         assert_eq!(b.n_active(), 2);
 
@@ -1128,7 +1418,7 @@ mod tests {
         let weights = tiny_weights();
         let mut b =
             ContinuousBatcher::new(Engine::with_slots(weights, 1), 32, Instant::now());
-        let req = Request { id: 7, prompt: vec![1, 2], n_out: 0 };
+        let req = Request::new(7, vec![1, 2], 0);
         let log = match b.admit(req, Sampler::greedy(), 0.0, &mut NativeExec) {
             Ok(Admitted::Finished(log)) => log,
             other => panic!("expected immediate finish, got {other:?}"),
@@ -1148,7 +1438,7 @@ mod tests {
         let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
         let mut exec = NativeExec;
         // Worst case: 5 prompt + 8 − 1 = 12 tokens → 3 pages.
-        let r0 = Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 8 };
+        let r0 = Request::new(0, vec![1, 2, 3, 4, 5], 8);
         assert!(matches!(
             b.admit(r0, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1157,7 +1447,7 @@ mod tests {
         // A second identical request needs 3 more pages; 3 + 3 > 4, so it
         // defers even though a session slot is free.
         assert!(b.capacity() > 0, "slot-count alone would admit");
-        let r1 = Request { id: 1, prompt: vec![5, 4, 3, 2, 1], n_out: 8 };
+        let r1 = Request::new(1, vec![5, 4, 3, 2, 1], 8);
         let deferred = match b.admit(r1, Sampler::greedy(), 0.0, &mut exec) {
             Ok(Admitted::Deferred(req)) => req,
             other => panic!("expected deferral, got {other:?}"),
@@ -1183,7 +1473,7 @@ mod tests {
         let engine = Engine::with_paged_slots(weights, 2, 4, Some(4));
         let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
         // Worst case 10 + 20 − 1 = 29 tokens → 8 pages > 4-page pool.
-        let req = Request { id: 9, prompt: vec![1; 10], n_out: 20 };
+        let req = Request::new(9, vec![1; 10], 20);
         let err = b.admit(req, Sampler::greedy(), 0.0, &mut NativeExec).unwrap_err();
         match err {
             AdmitError::TooLarge { id, need_tokens, need_pages, pool_pages, .. } => {
@@ -1195,7 +1485,7 @@ mod tests {
             other => panic!("unexpected error {other:?}"),
         }
         // The rejection wedged nothing: a small request still admits.
-        let small = Request { id: 10, prompt: vec![1, 2], n_out: 2 };
+        let small = Request::new(10, vec![1, 2], 2);
         assert!(matches!(
             b.admit(small, Sampler::greedy(), 0.0, &mut NativeExec),
             Ok(Admitted::Active)
@@ -1216,7 +1506,7 @@ mod tests {
         // request: 9 + 4 − 1 = 12 tokens → 3 pages, so *without* sharing
         // three of these (9 pages) could never be live together.
         let prompt: Vec<u32> = (1..=9).collect();
-        let r0 = Request { id: 0, prompt: prompt.clone(), n_out: 4 };
+        let r0 = Request::new(0, prompt.clone(), 4);
         assert!(matches!(
             b.admit(r0, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1225,7 +1515,7 @@ mod tests {
         // Same prompt again: both full prompt pages alias r0's live
         // pages, so the commitment grows only by the fresh worst case —
         // shared pages are never double-counted against their allocator.
-        let r1 = Request { id: 1, prompt: prompt.clone(), n_out: 4 };
+        let r1 = Request::new(1, prompt.clone(), 4);
         assert!(matches!(
             b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1234,7 +1524,7 @@ mod tests {
         let s = b.reuse_stats();
         assert_eq!(s.prefix_hits, 1);
         assert_eq!(s.prefix_hit_tokens, 8, "two full pages skipped");
-        let r2 = Request { id: 2, prompt: prompt.clone(), n_out: 4 };
+        let r2 = Request::new(2, prompt.clone(), 4);
         assert!(matches!(
             b.admit(r2, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1257,7 +1547,7 @@ mod tests {
         let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
         let mut exec = NativeExec;
         let prompt: Vec<u32> = (10..19).collect();
-        let r0 = Request { id: 0, prompt: prompt.clone(), n_out: 4 };
+        let r0 = Request::new(0, prompt.clone(), 4);
         b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
         b.drain(&mut exec);
         assert_eq!(b.committed_pages(), 0);
@@ -1265,7 +1555,7 @@ mod tests {
         assert_eq!(b.engine().cache.cached_resident_pages(), 2);
         // A warm hit with no live allocator: the shared pages are pinned
         // into the commitment exactly once, next to the fresh page.
-        let r1 = Request { id: 1, prompt: prompt.clone(), n_out: 4 };
+        let r1 = Request::new(1, prompt.clone(), 4);
         assert!(matches!(
             b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1285,9 +1575,9 @@ mod tests {
         // rounds under the chunk bound.
         let mk_reqs = || {
             vec![
-                Request { id: 0, prompt: vec![1, 2, 3], n_out: 6 },
-                Request { id: 1, prompt: (1..=17).collect(), n_out: 4 },
-                Request { id: 2, prompt: vec![9, 8], n_out: 5 },
+                Request::new(0, vec![1, 2, 3], 6),
+                Request::new(1, (1..=17).collect(), 4),
+                Request::new(2, vec![9, 8], 5),
             ]
         };
         let run = |budget: Option<usize>| {
@@ -1354,13 +1644,13 @@ mod tests {
         .with_token_budget(2)
         .with_prefill_chunk(2);
         let mut exec = NativeExec;
-        let r0 = Request { id: 0, prompt: vec![1], n_out: 4 };
-        let r1 = Request { id: 1, prompt: vec![2], n_out: 4 };
+        let r0 = Request::new(0, vec![1], 4);
+        let r1 = Request::new(1, vec![2], 4);
         b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
         b.admit(r1, Sampler::greedy(), 0.0, &mut exec).unwrap();
         // Round 1 prefills both one-token prompts.
         assert!(b.decode_round(&mut exec).is_empty());
-        let long = Request { id: 2, prompt: (1..=9).collect(), n_out: 1 };
+        let long = Request::new(2, (1..=9).collect(), 1);
         b.admit(long, Sampler::greedy(), 0.0, &mut exec).unwrap();
         let logs = b.drain(&mut exec);
         assert_eq!(logs.len(), 3, "the long prompt completes despite decode priority");
@@ -1384,7 +1674,7 @@ mod tests {
         )
         .with_token_budget(8);
         let mut exec = NativeExec;
-        let req = Request { id: 7, prompt: vec![1, 2], n_out: 0 };
+        let req = Request::new(7, vec![1, 2], 0);
         assert!(matches!(
             b.admit(req, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -1431,7 +1721,7 @@ mod tests {
                 b = b.with_speculation(k, DrafterSpec::default());
             }
             let mut exec = NativeExec;
-            let req = Request { id: 0, prompt: prompt.clone(), n_out: 12 };
+            let req = Request::new(0, prompt.clone(), 12);
             assert!(matches!(
                 b.admit(req, Sampler::greedy(), 0.0, &mut exec),
                 Ok(Admitted::Active)
@@ -1474,7 +1764,7 @@ mod tests {
                 b = b.with_speculation(k, DrafterSpec::parse("ngram:2").unwrap());
             }
             let mut exec = NativeExec;
-            let req = Request { id: 0, prompt: prompt.clone(), n_out: 10 };
+            let req = Request::new(0, prompt.clone(), 10);
             assert!(matches!(
                 b.admit(req, Sampler::top_k(0.8, 4, 42), 0.0, &mut exec),
                 Ok(Admitted::Active)
@@ -1501,7 +1791,7 @@ mod tests {
         .with_speculation(8, DrafterSpec::default());
         assert_eq!(b.speculate(), 8);
         let mut exec = NativeExec;
-        let req = Request { id: 0, prompt: prompt.clone(), n_out: 12 };
+        let req = Request::new(0, prompt.clone(), 12);
         b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
         let logs = b.drain(&mut exec);
         assert_eq!(logs.len(), 1);
@@ -1517,6 +1807,287 @@ mod tests {
         let mut reference = Engine::new(weights);
         let want = reference.generate(&prompt, 12, &mut Sampler::greedy(), &mut NativeExec);
         assert_eq!(logs[0].tokens, want.tokens);
+    }
+
+    #[test]
+    fn stalled_admission_is_a_typed_error_not_a_deferral() {
+        // Wedge the engine from outside the batcher: every slot taken by
+        // a raw session the batcher knows nothing about. With nothing
+        // active, a deferral could never resolve — admit must say so.
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(tiny_weights(), 1),
+            32,
+            Instant::now(),
+        );
+        let _held = b.engine.open_session(Sampler::greedy()).unwrap();
+        assert_eq!(b.engine.free_sessions(), 0);
+        assert_eq!(b.n_active(), 0);
+        let req = Request::new(3, vec![1, 2], 2);
+        let err = b.admit(req, Sampler::greedy(), 0.0, &mut NativeExec).unwrap_err();
+        match err {
+            AdmitError::Stalled { id, .. } => assert_eq!(id, 3),
+            other => panic!("expected Stalled, got {other:?}"),
+        }
+        assert!(err.to_string().contains("nothing can progress"), "{err}");
+    }
+
+    #[test]
+    fn cancel_mid_decode_keeps_delivered_tokens_and_frees_pages() {
+        let engine = Engine::with_paged_slots(tiny_weights(), 2, 4, Some(8));
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        let handle = CancelHandle::new();
+        let req = Request::new(0, vec![1, 2, 3], 16).with_cancel(handle.clone());
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        for _ in 0..3 {
+            assert!(b.decode_round(&mut exec).is_empty());
+        }
+        handle.cancel();
+        let logs = b.decode_round(&mut exec);
+        assert_eq!(logs.len(), 1, "the round-opening sweep reaps it");
+        let log = &logs[0];
+        assert_eq!(log.reason, FinishReason::Cancelled);
+        assert_eq!(log.tokens.len(), 3, "one token per completed round survives");
+        assert_eq!(log.token_marks_s.len(), 3);
+        assert!(log.finished_s >= log.decode_start_s);
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.capacity(), 2, "slot returned");
+        assert_eq!(b.committed_pages(), 0, "budget released");
+        assert_eq!(b.engine().free_pages(), 8, "every page back in the pool");
+    }
+
+    #[test]
+    fn cancel_mid_prefill_cursor_releases_partial_pages() {
+        // Token-budget path: the prompt streams in as chunks, so the
+        // cancel lands while a PrefillCursor holds a half-built slot.
+        let engine = Engine::with_paged_slots(tiny_weights(), 2, 4, Some(8));
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now())
+            .with_token_budget(4)
+            .with_prefill_chunk(4);
+        let mut exec = NativeExec;
+        let handle = CancelHandle::new();
+        let prompt: Vec<u32> = (1..=17).collect();
+        let req = Request::new(0, prompt, 4).with_cancel(handle.clone());
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        // One round advances the cursor by one 4-token chunk of 17.
+        assert!(b.decode_round(&mut exec).is_empty());
+        assert!(b.engine().free_pages() < 8, "partial prefill holds pages");
+        handle.cancel();
+        let logs = b.reap();
+        assert_eq!(logs.len(), 1);
+        assert_eq!(logs[0].reason, FinishReason::Cancelled);
+        assert!(logs[0].tokens.is_empty(), "never reached decode");
+        assert_eq!(b.engine().free_pages(), 8, "mid-cursor pages all released");
+        assert_eq!(b.committed_pages(), 0);
+        assert_eq!(b.capacity(), 2);
+        // The freed slot and pages admit new work immediately.
+        let next = Request::new(1, vec![7, 8, 9], 2);
+        assert!(matches!(
+            b.admit(next, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 1);
+        assert_eq!(logs[0].reason, FinishReason::Completed);
+    }
+
+    #[test]
+    fn cancel_with_pending_verify_frees_pages() {
+        // Speculation leaves `pending_forward` flights between rounds —
+        // the teardown path must release their pages like any other.
+        let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 5);
+        let engine = Engine::with_paged_slots(weights, 2, 4, Some(24));
+        let mut b = ContinuousBatcher::new(engine, 8, Instant::now())
+            .with_speculation(4, DrafterSpec::default());
+        let mut exec = NativeExec;
+        let handle = CancelHandle::new();
+        let prompt: Vec<u32> = (0..16).collect();
+        let req = Request::new(0, prompt, 12).with_cancel(handle.clone());
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        // Full-vocab prompt: the first decode round always drafts, so a
+        // verify pass runs and leaves its last token pending.
+        let logs = b.decode_round(&mut exec);
+        assert!(logs.is_empty(), "12 tokens don't finish in one round");
+        handle.cancel();
+        let logs = b.reap();
+        assert_eq!(logs.len(), 1);
+        let log = &logs[0];
+        assert_eq!(log.reason, FinishReason::Cancelled);
+        assert!(log.verify_calls > 0, "cancel landed on a speculative flight");
+        assert!(!log.tokens.is_empty());
+        assert_eq!(b.engine().free_pages(), 24, "verify KV rolled back with the slot");
+        assert_eq!(b.committed_pages(), 0);
+    }
+
+    #[test]
+    fn cancelled_request_leaves_prefix_pages_adoptable() {
+        let mut engine = Engine::with_paged_slots(tiny_weights(), 2, 4, Some(8));
+        engine.enable_prefix_cache();
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        let prompt: Vec<u32> = (1..=9).collect();
+        // r0 completes and registers the prompt's two full pages.
+        let r0 = Request::new(0, prompt.clone(), 2);
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        b.drain(&mut exec);
+        let cached = b.engine().cache.cached_resident_pages();
+        assert_eq!(cached, 2, "prompt pages indexed for sharing");
+        // r1 adopts them, decodes once, then is cancelled mid-decode.
+        let handle = CancelHandle::new();
+        let r1 = Request::new(1, prompt.clone(), 8).with_cancel(handle.clone());
+        b.admit(r1, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        assert_eq!(b.reuse_stats().prefix_hits, 1);
+        assert!(b.decode_round(&mut exec).is_empty());
+        handle.cancel();
+        let logs = b.reap();
+        assert_eq!(logs[0].reason, FinishReason::Cancelled);
+        // Teardown dropped only r1's references: the index still holds
+        // the shared pages, nothing leaked.
+        assert_eq!(b.engine().cache.cached_resident_pages(), 2, "still adoptable");
+        assert_eq!(
+            b.engine().free_pages() + b.engine().cache.cached_resident_pages(),
+            8,
+            "free + cached account for the whole pool"
+        );
+        // And a third request actually adopts them again.
+        let r2 = Request::new(2, prompt, 2);
+        b.admit(r2, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        assert_eq!(b.reuse_stats().prefix_hits, 2, "cancelled flight kept the cache warm");
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs[0].reason, FinishReason::Completed);
+    }
+
+    #[test]
+    fn reap_frees_budget_a_deferred_request_spends_immediately() {
+        // Same-round reflow at the batcher level: a deferred request
+        // admits the moment the cancelled one is reaped, with no decode
+        // round in between.
+        let engine = Engine::with_paged_slots(tiny_weights(), 2, 4, Some(4));
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        let mut exec = NativeExec;
+        let handle = CancelHandle::new();
+        // 5 + 8 − 1 = 12 tokens → 3 of 4 pages.
+        let r0 = Request::new(0, vec![1, 2, 3, 4, 5], 8).with_cancel(handle.clone());
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        assert_eq!(b.committed_pages(), 3);
+        let r1 = Request::new(1, vec![5, 4, 3, 2, 1], 8);
+        let r1 = match b.admit(r1, Sampler::greedy(), 0.0, &mut exec) {
+            Ok(Admitted::Deferred(req)) => req,
+            other => panic!("expected deferral, got {other:?}"),
+        };
+        handle.cancel();
+        let logs = b.reap();
+        assert_eq!(logs.len(), 1);
+        assert_eq!(logs[0].reason, FinishReason::Cancelled);
+        assert_eq!(b.committed_pages(), 0, "reap returned the budget");
+        assert!(matches!(
+            b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+        let logs = b.drain(&mut exec);
+        assert_eq!(logs.len(), 1);
+        assert_eq!(b.engine().free_pages(), 4, "no page leaked across the churn");
+    }
+
+    #[test]
+    fn expired_deadline_reaps_before_decoding() {
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(tiny_weights(), 1),
+            32,
+            Instant::now(),
+        );
+        let mut exec = NativeExec;
+        // deadline_s = 0 relative to enqueue: expired the moment the
+        // round-opening sweep looks at it.
+        let req = Request::new(4, vec![1, 2, 3], 8).with_deadline_s(0.0);
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        let logs = b.decode_round(&mut exec);
+        assert_eq!(logs.len(), 1);
+        assert_eq!(logs[0].reason, FinishReason::DeadlineExpired);
+        assert!(logs[0].tokens.is_empty(), "reaped before sampling anything");
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.capacity(), 1, "slot back for live work");
+    }
+
+    #[test]
+    fn delivery_sink_sees_every_token_and_verify_bursts_as_one_event() {
+        use std::sync::{Arc, Mutex};
+        let weights = ModelWeights::random(&spec_cfg(), QuantScheme::Q8_0, 5);
+        let events: Arc<Mutex<Vec<TokenEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_events = Arc::clone(&events);
+        let mut b = ContinuousBatcher::new(Engine::with_slots(weights, 1), 8, Instant::now())
+            .with_speculation(4, DrafterSpec::default())
+            .with_delivery(Box::new(move |ev| {
+                sink_events.lock().unwrap().push(ev);
+                true
+            }));
+        let mut exec = NativeExec;
+        let prompt: Vec<u32> = (0..16).collect();
+        b.admit(Request::new(0, prompt, 12), Sampler::greedy(), 0.0, &mut exec).unwrap();
+        let logs = b.drain(&mut exec);
+        assert!(!b.delivery_closed());
+        let log = &logs[0];
+        assert_eq!(log.reason, FinishReason::Completed);
+        let events = events.lock().unwrap();
+        // Every token reached the sink, in order, with delivery marks.
+        assert_eq!(
+            events.iter().map(|e| e.token).collect::<Vec<u32>>(),
+            log.tokens
+        );
+        assert_eq!(
+            events.iter().map(|e| e.mark_s).collect::<Vec<f64>>(),
+            log.token_marks_s
+        );
+        assert!(events.last().unwrap().done);
+        assert!(events.iter().rev().skip(1).all(|e| !e.done));
+        // One *event* per sink burst: a verify's accepted run shares a
+        // single delivery instant, and the TBT gaps are measured over
+        // events — the deflation fix (the per-accept regression test
+        // lives in tests/speculative_decode.rs on a known-accepting
+        // workload).
+        assert_eq!(log.token_marks_s.len(), log.tokens.len());
+        assert!(log.delivery_marks_s.len() <= log.tokens.len());
+        assert_eq!(log.tbt_gaps_s().len(), log.delivery_marks_s.len() - 1);
+        let distinct_marks = {
+            let mut m = log.token_marks_s.clone();
+            m.dedup();
+            m.len()
+        };
+        assert_eq!(
+            distinct_marks,
+            log.delivery_marks_s.len(),
+            "tokens of one event share one delivery instant"
+        );
+        assert_eq!(
+            log.tokens.len() - log.delivery_marks_s.len(),
+            log.tokens.len() - distinct_marks,
+            "events and bursts agree"
+        );
+    }
+
+    #[test]
+    fn closed_sink_cancels_every_flight() {
+        let mut b = ContinuousBatcher::new(
+            Engine::with_slots(tiny_weights(), 2),
+            32,
+            Instant::now(),
+        )
+        .with_delivery(Box::new(|_| false));
+        let mut exec = NativeExec;
+        b.admit(Request::new(0, vec![1, 2], 8), Sampler::greedy(), 0.0, &mut exec)
+            .unwrap();
+        b.admit(Request::new(1, vec![3, 4], 8), Sampler::greedy(), 0.0, &mut exec)
+            .unwrap();
+        // The first round's deliveries latch delivery-closed; the next
+        // sweep cancels everything still live.
+        let first = b.decode_round(&mut exec);
+        assert!(first.is_empty());
+        assert!(b.delivery_closed());
+        let logs = b.reap();
+        assert_eq!(logs.len(), 2);
+        assert!(logs.iter().all(|l| l.reason == FinishReason::Cancelled));
+        assert_eq!(b.n_active(), 0);
+        assert_eq!(b.capacity(), 2);
     }
 
     #[test]

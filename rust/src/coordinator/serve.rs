@@ -12,6 +12,19 @@
 //! and a request whose worst case can never fit the pool completes
 //! with [`Completion::error`] set instead of wedging the queue.
 //!
+//! **Streaming, cancellation, deadlines**: [`serve_streaming`] returns
+//! a live [`TokenEvent`] receiver — every token of every request is
+//! pushed the moment the scheduler delivers it (the SSE
+//! `{content, done}` shape), and all TTFT/TBT marks are stamped at that
+//! delivery, not at sampler time. Dropping the receiver cancels every
+//! in-flight request. Requests may carry a [`CancelHandle`]
+//! ([`Request::with_cancel`]) or a relative deadline
+//! ([`Request::with_deadline_s`]): a cancelled or expired request —
+//! queued or mid-decode — completes with a typed [`ServeError`] in
+//! [`Completion::error`], its pages released through the refcount/CoW
+//! path (registered prefix pages stay adoptable) and its slot handed
+//! to the same scheduling iteration's admission pass.
+//!
 //! With `--token-budget` each worker runs the **token-budget iteration
 //! scheduler** instead of the phase-segregated loop: every round carries
 //! all live decode tokens first, then resumable prefill chunks
@@ -45,14 +58,17 @@
 //! on.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::scheduler::{Admitted, ContinuousBatcher, RoundStats, SchedPolicy};
-pub use crate::coordinator::scheduler::Request;
+use crate::coordinator::scheduler::{
+    AdmitError, Admitted, ContinuousBatcher, FinishReason, RoundStats, SchedPolicy, SessionLog,
+};
+pub use crate::coordinator::scheduler::{CancelHandle, Request, TokenEvent};
 use crate::imax::timing::RunBreakdown;
 use crate::model::drafter::DrafterSpec;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
@@ -148,6 +164,40 @@ impl Default for ServeOptions {
     }
 }
 
+/// Typed reason a request completed without running to its full
+/// `n_out` — carried in [`Completion::error`] so consumers can branch
+/// on outcome instead of parsing strings.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission rejected the request outright: its worst case exceeds
+    /// the page pool or context window, or the cache failed during
+    /// prefill.
+    Rejected { reason: String },
+    /// The defensive stall guard fired: the request would defer forever
+    /// on an idle engine. Formerly a worker-killing `assert!` in the
+    /// serve loop; now a typed completion surfaced through the report.
+    Stalled { reason: String },
+    /// Torn down by its [`CancelHandle`] or a dropped stream receiver;
+    /// [`Completion::tokens`] keeps what was delivered before teardown.
+    Cancelled,
+    /// Its [`Request::deadline_s`] expired, in the queue or mid-decode.
+    DeadlineExpired,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected { reason } | ServeError::Stalled { reason } => {
+                f.write_str(reason)
+            }
+            ServeError::Cancelled => f.write_str("cancelled before completion"),
+            ServeError::DeadlineExpired => f.write_str("deadline expired"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Completed request with timing (epoch-relative marks are seconds since
 /// the serve call started).
 #[derive(Clone, Debug)]
@@ -163,29 +213,38 @@ pub struct Completion {
     pub admitted_s: f64,
     pub decode_start_s: f64,
     pub finished_s: f64,
-    /// Enqueue → first sampled token (queue time included); `None` for
-    /// rejected or zero-output requests.
+    /// Enqueue → first *delivered* token (queue time included); `None`
+    /// for rejected or zero-output requests.
     pub ttft_s: Option<f64>,
-    /// Per-request p99 gap between successive sampled tokens (`None`
-    /// below two tokens).
+    /// Per-request p99 gap between successive delivery events (`None`
+    /// below two events).
     pub tbt_p99_s: Option<f64>,
-    /// Epoch-relative emission instant of each sampled token.
+    /// Epoch-relative delivery instant of each sampled token (stamped
+    /// when the token reached the consumer stream, not at sampler
+    /// time; tokens delivered in one event share an instant).
     pub token_marks_s: Vec<f64>,
+    /// Epoch-relative instant of each delivery event (one per sink
+    /// call; a speculative verify's accepted run is one event) — the
+    /// marks TBT percentiles are measured over.
+    pub delivery_marks_s: Vec<f64>,
     /// Speculative decoding: batched verify passes this request ran
     /// (0 with speculation off).
     pub verify_calls: usize,
     /// Drafted tokens proposed / accepted across those passes.
     pub draft_tokens: usize,
     pub draft_accepted: usize,
-    /// `Some` when the request was rejected instead of served (e.g. its
-    /// worst-case KV footprint exceeds the worker's page pool).
-    pub error: Option<String>,
+    /// `Some` when the request did not run to completion: rejected at
+    /// admission, stalled, cancelled, or past its deadline. Cancelled
+    /// and expired completions keep the tokens delivered before
+    /// teardown.
+    pub error: Option<ServeError>,
 }
 
 impl Completion {
-    /// Gaps between successive sampled tokens (empty below two tokens).
+    /// Gaps between successive delivery events (empty below two
+    /// events).
     pub fn tbt_gaps_s(&self) -> Vec<f64> {
-        self.token_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
+        self.delivery_marks_s.windows(2).map(|w| w[1] - w[0]).collect()
     }
 
     /// Tokens emitted per verify pass (accepted drafts plus the pass's
@@ -219,16 +278,24 @@ pub struct ServeReport {
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_mean_s: f64,
-    /// Time-to-first-token percentiles over served requests that
-    /// produced tokens (enqueue → first sampled token).
+    /// Time-to-first-token percentiles over requests that delivered at
+    /// least one token (enqueue → first *delivered* token — delivery
+    /// time, not sampler time; cancelled/expired requests that streamed
+    /// tokens before teardown contribute honestly).
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
     /// Time-between-tokens percentiles over every gap between
-    /// successive sampled tokens of every served request — the
-    /// tail-latency metric accelerator serving stacks are judged on,
-    /// and what the token-budget scheduler bounds.
+    /// successive *delivery events* of every request — the tail-latency
+    /// metric accelerator serving stacks are judged on, and what the
+    /// token-budget scheduler bounds. A speculative verify delivers its
+    /// accepted run as one event, so bursts cannot deflate these with
+    /// ~0 intra-burst gaps.
     pub tbt_p50_s: f64,
     pub tbt_p99_s: f64,
+    /// Requests that completed as [`ServeError::Cancelled`].
+    pub cancelled: usize,
+    /// Requests that completed as [`ServeError::DeadlineExpired`].
+    pub deadline_expired: usize,
     /// Round composition merged over workers (how token-budgeted rounds
     /// actually mixed decode tokens with prefill chunks).
     pub rounds: RoundStats,
@@ -296,6 +363,61 @@ pub fn serve_with(
     n_workers: usize,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
+    serve_inner(weights, requests, n_workers, opts, None)
+}
+
+/// A streaming serve run: the live token stream plus the handle that
+/// yields the final [`ServeReport`] once the run drains.
+pub struct StreamingServe {
+    /// Live multiplexed token stream — one [`TokenEvent`] per delivered
+    /// token of every request, in delivery order. Dropping this
+    /// receiver cancels every in-flight and queued request.
+    pub events: mpsc::Receiver<TokenEvent>,
+    handle: thread::JoinHandle<Result<ServeReport>>,
+}
+
+impl StreamingServe {
+    /// Block until the run drains and return the final report.
+    pub fn join(self) -> Result<ServeReport> {
+        self.handle.join().expect("serve thread panicked")
+    }
+
+    /// Split into the event stream and the report handle — e.g. to
+    /// drop the receiver (cancelling all requests) while still joining
+    /// for the report.
+    #[allow(clippy::type_complexity)]
+    pub fn into_parts(
+        self,
+    ) -> (mpsc::Receiver<TokenEvent>, thread::JoinHandle<Result<ServeReport>>) {
+        (self.events, self.handle)
+    }
+}
+
+/// Serve with incremental per-token delivery: returns immediately with
+/// a [`StreamingServe`] whose `events` receiver yields every delivered
+/// token live (TTFT/TBT marks are stamped at exactly these deliveries).
+/// Dropping the receiver mid-run cancels all outstanding requests —
+/// their pages are released mid-decode and each completes with
+/// [`ServeError::Cancelled`] in the final report.
+pub fn serve_streaming(
+    weights: &ModelWeights,
+    requests: Vec<Request>,
+    n_workers: usize,
+    opts: &ServeOptions,
+) -> Result<StreamingServe> {
+    // Fail fast on the caller's thread; the spawned run re-validates
+    // cheaply.
+    validate_opts(weights, n_workers, opts)?;
+    let (event_tx, events) = mpsc::channel::<TokenEvent>();
+    let weights = weights.clone();
+    let opts = opts.clone();
+    let handle = thread::spawn(move || {
+        serve_inner(&weights, requests, n_workers, &opts, Some(event_tx))
+    });
+    Ok(StreamingServe { events, handle })
+}
+
+fn validate_opts(weights: &ModelWeights, n_workers: usize, opts: &ServeOptions) -> Result<()> {
     assert!(n_workers >= 1);
     if opts.slots_per_worker == 0 {
         anyhow::bail!("slots_per_worker must be at least 1");
@@ -338,6 +460,21 @@ pub fn serve_with(
         // uncovered — better than a routing panic on a worker thread.
         p.validate_layers(weights.cfg.n_layers)?;
     }
+    Ok(())
+}
+
+/// The serving loop behind [`serve_with`] and [`serve_streaming`]:
+/// worker threads over a shared queue, each reaping cancelled/expired
+/// flights before every admission pass and delivering tokens into
+/// `events` (when streaming) the moment the scheduler emits them.
+fn serve_inner(
+    weights: &ModelWeights,
+    requests: Vec<Request>,
+    n_workers: usize,
+    opts: &ServeOptions,
+    events: Option<mpsc::Sender<TokenEvent>>,
+) -> Result<ServeReport> {
+    validate_opts(weights, n_workers, opts)?;
     let n_req = requests.len();
     let started = Instant::now();
 
@@ -353,6 +490,7 @@ pub fn serve_with(
         let tx = tx.clone();
         let weights = weights.clone();
         let opts = opts.clone();
+        let events = events.clone();
         handles.push(thread::spawn(move || -> WorkerStats {
             let mut exec =
                 BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
@@ -379,12 +517,24 @@ pub fn serve_with(
                 batcher =
                     batcher.with_speculation(opts.speculate, opts.drafter.unwrap_or_default());
             }
-            let send = |log: crate::coordinator::scheduler::SessionLog,
-                        tx: &mpsc::Sender<Completion>| {
+            if let Some(event_tx) = events {
+                // Streaming delivery: push every token the instant the
+                // scheduler emits it. A failed send means the consumer
+                // dropped the receiver — the batcher latches
+                // delivery-closed and the loop below cancels the run.
+                batcher = batcher
+                    .with_delivery(Box::new(move |ev: TokenEvent| event_tx.send(ev).is_ok()));
+            }
+            let send = |log: SessionLog, tx: &mpsc::Sender<Completion>| {
                 let ttft_s = log.ttft_s();
                 let gaps = log.tbt_gaps_s();
                 let tbt_p99_s =
                     if gaps.is_empty() { None } else { Some(percentile(&gaps, 99.0)) };
+                let error = match log.reason {
+                    FinishReason::Completed => None,
+                    FinishReason::Cancelled => Some(ServeError::Cancelled),
+                    FinishReason::DeadlineExpired => Some(ServeError::DeadlineExpired),
+                };
                 tx.send(Completion {
                     id: log.id,
                     total_s: log.queue_s + (log.finished_s - log.admitted_s),
@@ -399,14 +549,72 @@ pub fn serve_with(
                     ttft_s,
                     tbt_p99_s,
                     token_marks_s: log.token_marks_s,
+                    delivery_marks_s: log.delivery_marks_s,
                     verify_calls: log.verify_calls,
                     draft_tokens: log.draft_tokens,
                     draft_accepted: log.draft_accepted,
-                    error: None,
+                    error,
+                })
+                .ok();
+            };
+            // A request that never reached a slot (rejected, stalled,
+            // cancelled or expired while queued) still completes — with
+            // a typed error and zero tokens.
+            let send_error = |id: usize,
+                              queue_s: f64,
+                              error: ServeError,
+                              tx: &mpsc::Sender<Completion>| {
+                let now = started.elapsed().as_secs_f64();
+                tx.send(Completion {
+                    id,
+                    tokens: Vec::new(),
+                    queue_s,
+                    prefill_s: 0.0,
+                    decode_s: 0.0,
+                    total_s: queue_s,
+                    worker,
+                    admitted_s: now,
+                    decode_start_s: now,
+                    finished_s: now,
+                    ttft_s: None,
+                    tbt_p99_s: None,
+                    token_marks_s: Vec::new(),
+                    delivery_marks_s: Vec::new(),
+                    verify_calls: 0,
+                    draft_tokens: 0,
+                    draft_accepted: 0,
+                    error: Some(error),
                 })
                 .ok();
             };
             loop {
+                // Cancellation/deadline sweep *before* admission: a
+                // reaped flight's slot and pages are available to the
+                // admission pass right below, and the token budget it
+                // would have consumed is spent by this iteration's
+                // round — same-round reflow.
+                for log in batcher.reap() {
+                    send(log, &tx);
+                }
+                if batcher.delivery_closed() {
+                    // The stream consumer is gone: nothing further can
+                    // be delivered. Cancel the backlog; live flights
+                    // were reaped above (delivery-closed cancels all).
+                    let backlog: Vec<(Request, Instant)> =
+                        queue.lock().unwrap().drain(..).collect();
+                    for (req, enq) in backlog {
+                        send_error(
+                            req.id,
+                            enq.elapsed().as_secs_f64(),
+                            ServeError::Cancelled,
+                            &tx,
+                        );
+                    }
+                    if batcher.n_active() == 0 {
+                        break;
+                    }
+                    continue;
+                }
                 // Admit new requests *between* decode rounds — the
                 // continuous-batching step. The batcher gates on both
                 // free session slots and the KV page budget; admission
@@ -445,6 +653,18 @@ pub fn serve_with(
                         }
                         let (req, enq) = kept[idx].take().expect("each index visited once");
                         let queue_s = enq.elapsed().as_secs_f64();
+                        // Queue-side teardown: a request cancelled or
+                        // already past its deadline never takes a slot.
+                        if req.is_cancelled() {
+                            admitted_any = true;
+                            send_error(req.id, queue_s, ServeError::Cancelled, &tx);
+                            continue;
+                        }
+                        if req.deadline_s.map_or(false, |d| queue_s >= d) {
+                            admitted_any = true;
+                            send_error(req.id, queue_s, ServeError::DeadlineExpired, &tx);
+                            continue;
+                        }
                         let sampler =
                             Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
                         match batcher.admit(req, sampler, queue_s, &mut exec) {
@@ -456,51 +676,34 @@ pub fn serve_with(
                             Ok(Admitted::Deferred(req)) => kept[idx] = Some((req, enq)),
                             Err(e) => {
                                 // Unservable on this engine (worst case
-                                // above the whole pool): complete it as
-                                // an error instead of wedging the queue.
+                                // above the whole pool, or deferred with
+                                // nothing active to free pages): complete
+                                // it with a typed error instead of
+                                // wedging the queue or killing the
+                                // worker — formerly an `assert!` here.
                                 admitted_any = true;
-                                let now = started.elapsed().as_secs_f64();
-                                tx.send(Completion {
-                                    id: e.id(),
-                                    tokens: Vec::new(),
-                                    queue_s,
-                                    prefill_s: 0.0,
-                                    decode_s: 0.0,
-                                    total_s: queue_s,
-                                    worker,
-                                    admitted_s: now,
-                                    decode_start_s: now,
-                                    finished_s: now,
-                                    ttft_s: None,
-                                    tbt_p99_s: None,
-                                    token_marks_s: Vec::new(),
-                                    verify_calls: 0,
-                                    draft_tokens: 0,
-                                    draft_accepted: 0,
-                                    error: Some(e.to_string()),
-                                })
-                                .ok();
+                                let error = match &e {
+                                    AdmitError::Stalled { .. } => {
+                                        ServeError::Stalled { reason: e.to_string() }
+                                    }
+                                    _ => ServeError::Rejected { reason: e.to_string() },
+                                };
+                                send_error(e.id(), queue_s, error, &tx);
                             }
                         }
                     }
-                    let deferred_all = {
+                    {
                         let mut q = queue.lock().unwrap();
-                        let mut any = false;
                         for item in kept.into_iter().flatten().rev() {
                             q.push_front(item);
-                            any = true;
                         }
-                        any
-                    };
+                    }
                     if !admitted_any {
-                        // With nothing active every page is free and no
-                        // shared page is pinned, so a whole-window
-                        // deferral could never resolve; admit gates that
-                        // case as TooLarge instead.
-                        assert!(
-                            !deferred_all || batcher.n_active() > 0,
-                            "deferred with an idle engine: nothing can progress"
-                        );
+                        // Whole window deferred: pages are pinned by
+                        // live flights, so decode below frees them. A
+                        // deferral on an *idle* engine can never resolve
+                        // and admit reports it as `AdmitError::Stalled`
+                        // (handled above) rather than returning Deferred.
                         break;
                     }
                 }
@@ -551,18 +754,20 @@ pub fn serve_with(
         .map(|c| c.total_s)
         .collect();
     let summary = Summary::from_slice(&lats);
-    // TTFT and time-between-tokens over served requests (a rejection
-    // emits no tokens and contributes to neither).
-    let ttfts: Vec<f64> = completions
+    // TTFT and time-between-tokens over every request that delivered at
+    // least one token — cancelled and deadline-expired requests did real
+    // delivery-time work before teardown; a rejection emits no tokens
+    // and contributes to neither.
+    let ttfts: Vec<f64> = completions.iter().filter_map(|c| c.ttft_s).collect();
+    let gaps: Vec<f64> = completions.iter().flat_map(|c| c.tbt_gaps_s()).collect();
+    let cancelled = completions
         .iter()
-        .filter(|c| c.error.is_none())
-        .filter_map(|c| c.ttft_s)
-        .collect();
-    let gaps: Vec<f64> = completions
+        .filter(|c| matches!(c.error, Some(ServeError::Cancelled)))
+        .count();
+    let deadline_expired = completions
         .iter()
-        .filter(|c| c.error.is_none())
-        .flat_map(|c| c.tbt_gaps_s())
-        .collect();
+        .filter(|c| matches!(c.error, Some(ServeError::DeadlineExpired)))
+        .count();
     let merged = BackendReport::merged(&reports);
     let pctl = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
     let pctl_of = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
@@ -593,6 +798,8 @@ pub fn serve_with(
         ttft_p99_s: pctl_of(&ttfts, 99.0),
         tbt_p50_s: pctl_of(&gaps, 50.0),
         tbt_p99_s: pctl_of(&gaps, 99.0),
+        cancelled,
+        deadline_expired,
         rounds,
         completions,
         wall_s,
@@ -626,11 +833,7 @@ mod tests {
 
     fn reqs(n: usize) -> Vec<Request> {
         (0..n)
-            .map(|id| Request {
-                id,
-                prompt: vec![1 + id as u32, 2, 3, 4],
-                n_out: 3,
-            })
+            .map(|id| Request::new(id, vec![1 + id as u32, 2, 3, 4], 3))
             .collect()
     }
 
@@ -680,11 +883,7 @@ mod tests {
         // finishes, so every mid-run admission lands next to a still-live
         // session.
         let requests: Vec<Request> = (0..8)
-            .map(|id| Request {
-                id,
-                prompt: vec![1 + id as u32, 2, 3, 4],
-                n_out: 4 + id * 2,
-            })
+            .map(|id| Request::new(id, vec![1 + id as u32, 2, 3, 4], 4 + id * 2))
             .collect();
         let opts = ServeOptions {
             slots_per_worker: 2,
@@ -751,12 +950,14 @@ mod tests {
             ..ServeOptions::default()
         };
         let mut requests = reqs(3);
-        requests.push(Request { id: 3, prompt: vec![1; 10], n_out: 20 });
+        requests.push(Request::new(3, vec![1; 10], 20));
         let rep = serve_with(&tiny_weights(), requests, 1, &opts).unwrap();
         assert_eq!(rep.completions.len(), 4, "rejected request still completes");
         let big = rep.completions.iter().find(|c| c.id == 3).unwrap();
         assert!(big.tokens.is_empty());
-        let msg = big.error.as_ref().expect("rejected with an error");
+        let err = big.error.as_ref().expect("rejected with an error");
+        assert!(matches!(err, ServeError::Rejected { .. }), "{err}");
+        let msg = err.to_string();
         assert!(msg.contains("never be admitted"), "{msg}");
         for c in rep.completions.iter().filter(|c| c.id != 3) {
             assert!(c.error.is_none(), "small requests are unaffected");
@@ -774,9 +975,9 @@ mod tests {
         // (explicit depth ≥ 2 or 0 = unbounded).
         let mk_reqs = || {
             vec![
-                Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_out: 5 }, // 9 tok → 3 pages
-                Request { id: 1, prompt: vec![9; 8], n_out: 6 },          // 13 tok → 4 pages
-                Request { id: 2, prompt: vec![7, 7], n_out: 2 },          // 3 tok → 1 page
+                Request::new(0, vec![1, 2, 3, 4, 5], 5), // 9 tok → 3 pages
+                Request::new(1, vec![9; 8], 6),          // 13 tok → 4 pages
+                Request::new(2, vec![7, 7], 2),          // 3 tok → 1 page
             ]
         };
         for admit_window in [2usize, ADMIT_SCAN_WINDOW, 0] {
@@ -839,8 +1040,8 @@ mod tests {
         };
         let mk_reqs = || {
             vec![
-                Request { id: 0, prompt: vec![3; 12], n_out: 10 },
-                Request { id: 1, prompt: vec![5, 6], n_out: 2 },
+                Request::new(0, vec![3; 12], 10),
+                Request::new(1, vec![5, 6], 2),
             ]
         };
         let sjf = serve_with(&tiny_weights(), mk_reqs(), 1, &mk_opts(SchedPolicy::Sjf)).unwrap();
@@ -869,10 +1070,9 @@ mod tests {
         let w = tiny_weights();
         let mk_reqs = || {
             (0..6)
-                .map(|id| Request {
-                    id,
-                    prompt: (0..3 + 4 * id).map(|i| 1 + (i % 50) as u32).collect(),
-                    n_out: 4,
+                .map(|id| {
+                    let prompt = (0..3 + 4 * id).map(|i| 1 + (i % 50) as u32).collect();
+                    Request::new(id, prompt, 4)
                 })
                 .collect::<Vec<Request>>()
         };
@@ -983,7 +1183,7 @@ mod tests {
         let w = spec_weights();
         let mk_reqs = || {
             (0..4)
-                .map(|id| Request { id, prompt: (0..16).collect(), n_out: 8 })
+                .map(|id| Request::new(id, (0..16).collect(), 8))
                 .collect::<Vec<Request>>()
         };
         let vanilla = serve(&w, mk_reqs(), 1, 42);
@@ -1076,6 +1276,134 @@ mod tests {
                 ..ServeOptions::default()
             };
             assert!(serve_with(&tiny_weights(), reqs(1), 1, &opts).is_err());
+        }
+    }
+
+    #[test]
+    fn streaming_delivers_every_token_live() {
+        let opts = ServeOptions::default();
+        let stream =
+            serve_streaming(&tiny_weights(), reqs(3), 1, &opts).expect("valid opts");
+        let (events, handle) = stream.into_parts();
+        let events: Vec<TokenEvent> = events.iter().collect();
+        let rep = handle.join().expect("serve thread panicked").unwrap();
+        assert_eq!(rep.completions.len(), 3);
+        assert_eq!(rep.cancelled, 0);
+        assert_eq!(rep.deadline_expired, 0);
+        // Every completed token arrived as exactly one event, in order,
+        // with the final one flagged done.
+        for c in &rep.completions {
+            assert!(c.error.is_none());
+            let mine: Vec<&TokenEvent> =
+                events.iter().filter(|e| e.request_id == c.id).collect();
+            assert_eq!(
+                mine.iter().map(|e| e.token).collect::<Vec<u32>>(),
+                c.tokens,
+                "stream order matches the completion for request {}",
+                c.id
+            );
+            assert!(mine.last().unwrap().done, "last event carries done");
+            assert!(mine.iter().rev().skip(1).all(|e| !e.done));
+            // Marks in the completion are the delivery instants the
+            // stream observed.
+            let marks: Vec<f64> = mine.iter().map(|e| e.mark_s).collect();
+            assert_eq!(marks, c.token_marks_s, "delivery-time stamping");
+            assert!(c.ttft_s.is_some());
+        }
+    }
+
+    #[test]
+    fn cancel_handle_tears_down_mid_serve() {
+        // Long-running request with a handle cancelled after its first
+        // delivered token; a short uncancelled request rides along.
+        let handle = CancelHandle::new();
+        let requests = vec![
+            Request::new(0, vec![1, 2, 3, 4], 64).with_cancel(handle.clone()),
+            Request::new(1, vec![5, 6, 7, 8], 3),
+        ];
+        let opts = ServeOptions::default();
+        let stream =
+            serve_streaming(&tiny_weights(), requests, 1, &opts).expect("valid opts");
+        let (events, join) = stream.into_parts();
+        let mut n_cancelled_tokens = 0usize;
+        for ev in events.iter() {
+            if ev.request_id == 0 {
+                n_cancelled_tokens += 1;
+                handle.cancel();
+            }
+        }
+        let rep = join.join().expect("serve thread panicked").unwrap();
+        assert_eq!(rep.completions.len(), 2);
+        assert_eq!(rep.cancelled, 1);
+        let c0 = rep.completions.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(c0.error, Some(ServeError::Cancelled));
+        assert!(
+            c0.tokens.len() < 64,
+            "cancel must interrupt decode ({} tokens)",
+            c0.tokens.len()
+        );
+        assert_eq!(c0.tokens.len(), n_cancelled_tokens, "delivered tokens kept");
+        let c1 = rep.completions.iter().find(|c| c.id == 1).unwrap();
+        assert!(c1.error.is_none());
+        assert_eq!(c1.tokens.len(), 3, "other requests run to completion");
+    }
+
+    #[test]
+    fn queued_cancelled_request_never_admits() {
+        let handle = CancelHandle::new();
+        handle.cancel();
+        let requests = vec![
+            Request::new(0, vec![1, 2, 3], 3).with_cancel(handle),
+            Request::new(1, vec![4, 5, 6], 3),
+        ];
+        let rep =
+            serve_with(&tiny_weights(), requests, 1, &ServeOptions::default()).unwrap();
+        assert_eq!(rep.cancelled, 1);
+        let c0 = rep.completions.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(c0.error, Some(ServeError::Cancelled));
+        assert!(c0.tokens.is_empty(), "cancelled before admission");
+        assert!(rep.completions[1].error.is_none());
+    }
+
+    #[test]
+    fn expired_deadline_completes_with_typed_error() {
+        // A deadline that has already passed at admission time expires
+        // queue-side; a generous one never fires.
+        let requests = vec![
+            Request::new(0, vec![1, 2, 3], 3).with_deadline_s(0.0),
+            Request::new(1, vec![4, 5, 6], 3).with_deadline_s(3600.0),
+        ];
+        let rep =
+            serve_with(&tiny_weights(), requests, 1, &ServeOptions::default()).unwrap();
+        assert_eq!(rep.deadline_expired, 1);
+        let c0 = rep.completions.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(c0.error, Some(ServeError::DeadlineExpired));
+        assert!(c0.tokens.is_empty());
+        let c1 = rep.completions.iter().find(|c| c.id == 1).unwrap();
+        assert!(c1.error.is_none());
+        assert_eq!(c1.tokens.len(), 3);
+    }
+
+    #[test]
+    fn dropped_receiver_cancels_all_requests() {
+        let mut requests = reqs(3);
+        for r in &mut requests {
+            r.n_out = 64; // long enough that the drop lands mid-decode
+        }
+        let opts = ServeOptions::default();
+        let stream =
+            serve_streaming(&tiny_weights(), requests, 1, &opts).expect("valid opts");
+        let (events, join) = stream.into_parts();
+        // Read one event to prove the run started, then hang up.
+        let first = events.recv().expect("at least one delivery");
+        assert!(!first.done);
+        drop(events);
+        let rep = join.join().expect("serve thread panicked").unwrap();
+        assert_eq!(rep.completions.len(), 3, "every request still completes");
+        assert_eq!(rep.cancelled, 3);
+        for c in &rep.completions {
+            assert_eq!(c.error, Some(ServeError::Cancelled));
+            assert!(c.tokens.len() < 64, "no request ran to completion");
         }
     }
 }

@@ -1,9 +1,13 @@
 //! The paper's workload grid (§IV.A): 3 Qwen3 models × 2 quantized model
 //! files × 9 input/output-token combinations = 54 distinct workloads,
-//! "from [8:1] to [32:16]".
+//! "from [8:1] to [32:16]" — plus an open-loop serving trace generator
+//! (exponential interarrivals with a cancellation/deadline mix) for
+//! exercising the streaming front-end.
 
 use crate::coordinator::hybrid::Workload;
+use crate::coordinator::{CancelHandle, Request};
 use crate::model::config::{ModelConfig, QuantScheme};
+use crate::util::rng::Rng;
 
 /// Input-token counts of the grid.
 pub const N_IN: [usize; 3] = [8, 16, 32];
@@ -66,6 +70,74 @@ pub fn templated_prompt(id: usize, len: usize, vocab_size: usize) -> Vec<u32> {
     out
 }
 
+/// One request in an open-loop serving trace.
+pub struct Arrival {
+    pub request: Request,
+    /// Seconds after trace start at which the request enters the queue.
+    pub at_s: f64,
+    /// `Some` when this arrival is in the cancelled fraction: the
+    /// handle wired into the request and the delay after arrival at
+    /// which the load driver should fire it (mid-decode for delays
+    /// shorter than the request's service time).
+    pub cancel: Option<(CancelHandle, f64)>,
+}
+
+/// Shape of an open-loop arrival trace for the streaming serve
+/// front-end: Poisson arrivals (seeded exponential interarrivals) of
+/// templated prompts, with a fraction of requests carrying a
+/// [`CancelHandle`] to fire shortly after arrival and a fraction
+/// carrying an enqueue-relative deadline.
+#[derive(Clone, Debug)]
+pub struct OpenLoopSpec {
+    /// Number of arrivals to generate.
+    pub n: usize,
+    /// Mean arrival rate (requests per second).
+    pub rate_per_s: f64,
+    /// Prompt length (templated, see [`templated_prompt`]).
+    pub n_in: usize,
+    /// Decode length.
+    pub n_out: usize,
+    /// Vocabulary bound for prompt tokens.
+    pub vocab_size: usize,
+    /// Fraction of requests that self-cancel (0.0 disables).
+    pub cancel_frac: f64,
+    /// Upper bound of the uniform post-arrival cancel delay (seconds).
+    pub cancel_after_s: f64,
+    /// Fraction of requests given a deadline (0.0 disables).
+    pub deadline_frac: f64,
+    /// The enqueue-relative deadline those requests carry (seconds).
+    pub deadline_s: f64,
+}
+
+/// Generate a seeded open-loop trace: arrival offsets are a running sum
+/// of `Exp(rate_per_s)` draws, so the same seed always reproduces the
+/// same trace (ids, prompts, arrival times, cancel/deadline marks).
+pub fn open_loop_arrivals(spec: &OpenLoopSpec, seed: u64) -> Vec<Arrival> {
+    assert!(spec.rate_per_s > 0.0, "rate_per_s must be positive");
+    let mut rng = Rng::new(seed);
+    let mut at_s = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n);
+    for id in 0..spec.n {
+        // Inverse-CDF exponential draw; next_f64 is in [0, 1) so the
+        // argument of ln stays strictly positive.
+        at_s += -(1.0 - rng.next_f64()).ln() / spec.rate_per_s;
+        let mut request =
+            Request::new(id, templated_prompt(id, spec.n_in, spec.vocab_size), spec.n_out);
+        let cancel = if rng.next_f64() < spec.cancel_frac {
+            let handle = CancelHandle::new();
+            request = request.with_cancel(handle.clone());
+            Some((handle, rng.next_f64() * spec.cancel_after_s))
+        } else {
+            None
+        };
+        if rng.next_f64() < spec.deadline_frac {
+            request = request.with_deadline_s(spec.deadline_s);
+        }
+        out.push(Arrival { request, at_s, cancel });
+    }
+    out
+}
+
 /// Look up one grid workload by its paper-style label components.
 pub fn find(model: &str, scheme: QuantScheme, n_in: usize, n_out: usize) -> Option<Workload> {
     let cfg = ModelConfig::by_name(model)?;
@@ -112,6 +184,50 @@ mod tests {
         for p in TEMPLATE_SPAN..a.len() - 1 {
             assert_eq!(a[p], a[p - TEMPLATE_SPAN]);
         }
+    }
+
+    #[test]
+    fn open_loop_trace_is_deterministic_and_well_formed() {
+        let spec = OpenLoopSpec {
+            n: 64,
+            rate_per_s: 100.0,
+            n_in: 8,
+            n_out: 4,
+            vocab_size: 16,
+            cancel_frac: 0.25,
+            cancel_after_s: 0.01,
+            deadline_frac: 0.25,
+            deadline_s: 0.5,
+        };
+        let a = open_loop_arrivals(&spec, 7);
+        let b = open_loop_arrivals(&spec, 7);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.id, y.request.id);
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.at_s, y.at_s, "same seed, same trace");
+            assert_eq!(x.cancel.is_some(), y.cancel.is_some());
+        }
+        // Arrival offsets strictly increase; prompts stay vocab-bounded.
+        for w in a.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+        }
+        assert!(a
+            .iter()
+            .all(|x| x.request.prompt.iter().all(|&t| (t as usize) < 16)));
+        // Both fractions land somewhere strictly between none and all.
+        let cancels = a.iter().filter(|x| x.cancel.is_some()).count();
+        assert!(cancels > 0 && cancels < 64, "{cancels} cancels");
+        let deadlines =
+            a.iter().filter(|x| x.request.deadline_s.is_some()).count();
+        assert!(deadlines > 0 && deadlines < 64, "{deadlines} deadlines");
+        // The cancel handle in the arrival is wired into its request.
+        let c = a.iter().find(|x| x.cancel.is_some()).unwrap();
+        c.cancel.as_ref().unwrap().0.cancel();
+        assert!(c.request.is_cancelled(), "handle wired into the request");
+        // A different seed moves the arrival process.
+        let other = open_loop_arrivals(&spec, 8);
+        assert!(a.iter().zip(&other).any(|(x, y)| x.at_s != y.at_s));
     }
 
     #[test]

@@ -20,7 +20,9 @@ use anyhow::{bail, Context, Result};
 use imax_llm::baseline::calibration as cal;
 use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
-use imax_llm::coordinator::{serve_with, Request, SchedPolicy, ServeOptions};
+use imax_llm::coordinator::{
+    serve_streaming, serve_with, CancelHandle, Request, SchedPolicy, ServeError, ServeOptions,
+};
 use imax_llm::harness::experiments as exp;
 use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
@@ -308,6 +310,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let speculate: usize = flags.get("speculate").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let drafter: Option<DrafterSpec> =
         flags.get("drafter").map(|s| DrafterSpec::parse(s)).transpose()?;
+    let deadline_s: Option<f64> = flags.get("deadline-s").map(|s| s.parse()).transpose()?;
+    let cancel_after: Option<usize> =
+        flags.get("cancel-after").map(|s| s.parse()).transpose()?;
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -342,7 +347,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             } else {
                 prompt.extend((0..8).map(|i| 2 + ((id * 37 + i * 11) % 200) as u32));
             }
-            Request { id, prompt, n_out: 16 }
+            let mut req = Request::new(id, prompt, 16);
+            if let Some(d) = deadline_s {
+                req = req.with_deadline_s(d);
+            }
+            req
         })
         .collect();
     let opts = ServeOptions {
@@ -361,7 +370,38 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         speculate,
         drafter,
     };
-    let rep = serve_with(&weights, requests, workers, &opts)?;
+    let rep = match cancel_after {
+        // --cancel-after N: stream tokens and fire each request's
+        // cancel handle once N of its tokens have been delivered —
+        // exercising mid-decode teardown through the public front-end.
+        Some(n) => {
+            let mut requests = requests;
+            let handles: Vec<CancelHandle> = requests
+                .iter_mut()
+                .map(|r| {
+                    let h = CancelHandle::new();
+                    r.cancel = Some(h.clone());
+                    h
+                })
+                .collect();
+            let stream = serve_streaming(&weights, requests, workers, &opts)?;
+            let (events, handle) = stream.into_parts();
+            let mut delivered = vec![0usize; handles.len()];
+            let mut streamed = 0usize;
+            for ev in events.iter() {
+                streamed += 1;
+                if let Some(count) = delivered.get_mut(ev.request_id) {
+                    *count += 1;
+                    if *count >= n {
+                        handles[ev.request_id].cancel();
+                    }
+                }
+            }
+            eprintln!("streamed {streamed} token events (cancel after {n} per request)");
+            handle.join().expect("serve thread panicked")?
+        }
+        None => serve_with(&weights, requests, workers, &opts)?,
+    };
     println!(
         "served {} requests / {} tokens in {:.2}s — {:.1} tok/s, p50 {:.3}s p95 {:.3}s [{}]",
         rep.completions.len(),
@@ -432,13 +472,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             imax_llm::util::human_bytes(rep.kv_swap_bytes as usize)
         );
     }
-    let rejected: Vec<&imax_llm::coordinator::Completion> =
-        rep.completions.iter().filter(|c| c.error.is_some()).collect();
-    for c in &rejected {
-        eprintln!("request {} rejected: {}", c.id, c.error.as_deref().unwrap_or(""));
+    let mut rejected = 0usize;
+    for c in rep.completions.iter().filter(|c| c.error.is_some()) {
+        match c.error.as_ref().unwrap() {
+            ServeError::Cancelled | ServeError::DeadlineExpired => {}
+            e => {
+                rejected += 1;
+                eprintln!("request {} rejected: {e}", c.id);
+            }
+        }
     }
-    if !rejected.is_empty() {
-        println!("rejected {} of {} requests (KV budget)", rejected.len(), rep.completions.len());
+    if rejected > 0 {
+        println!("rejected {rejected} of {} requests (KV budget)", rep.completions.len());
+    }
+    if rep.cancelled > 0 || rep.deadline_expired > 0 {
+        println!(
+            "cancelled {} / deadline-expired {} of {} requests (pages released mid-decode)",
+            rep.cancelled,
+            rep.deadline_expired,
+            rep.completions.len()
+        );
     }
     if let Some(modeled) = rep.modeled {
         println!(
@@ -548,6 +601,7 @@ functional engine (real tiny models, real tokens):
               [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
               [--token-budget N] [--prefill-chunk N] [--admit-window N]
               [--speculate K] [--drafter ngram[:N]]
+              [--deadline-s F] [--cancel-after N]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
@@ -588,7 +642,18 @@ functional engine (real tiny models, real tokens):
               prints verify passes, the draft accept rate, accepted
               tokens per verify pass, and — on an imax backend — the
               modeled streamed bytes per accepted token that speculation
-              drives down
+              drives down. Serving is streaming-capable: tokens are
+              delivered the instant the scheduler emits them, and TTFT /
+              TBT percentiles are stamped at delivery (a speculative
+              verify's accepted run is one delivery event, so --speculate
+              no longer deflates TBT). --deadline-s F gives every request
+              an enqueue-relative deadline: expired requests complete
+              with a typed deadline error, releasing their pages
+              mid-decode. --cancel-after N streams via the front-end and
+              fires each request's cancel handle after N delivered
+              tokens — cancelled requests free their non-shared KV pages
+              between rounds and the freed budget is re-spent the same
+              round; both print cancelled/expired counts in the report
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 

@@ -486,10 +486,18 @@ impl Engine {
         Some(Session { slot, sampler })
     }
 
-    /// Release a session's slot back to the free pool.
-    pub fn close_session(&mut self, session: Session) {
-        self.cache.reset_slot(session.slot);
+    /// Release a session's slot back to the free pool, returning how
+    /// many KV pages dropped their last reference and went back to the
+    /// page pool. Valid whatever state the session is in — mid-
+    /// [`PrefillCursor`], with a speculative verify pending, or
+    /// mid-decode — which is what makes request cancellation safe: the
+    /// slot holds only page references, and exactly the non-shared ones
+    /// free here. Pages registered in the prefix index keep their index
+    /// reference and stay adoptable by later sessions.
+    pub fn close_session(&mut self, session: Session) -> usize {
+        let freed = self.cache.reset_slot(session.slot);
         self.free_slots.push(session.slot);
+        freed
     }
 
     /// Context length of the session's sequence so far.

@@ -457,13 +457,23 @@ impl KvCache {
     /// Clear one slot (session closed / slot reassigned), releasing
     /// exactly the page references it held. A page returns to the free
     /// list only when its last reference drops — pages shared with other
-    /// slots or pinned by the prefix index live on.
-    pub fn reset_slot(&mut self, slot: usize) {
+    /// slots or pinned by the prefix index live on. Returns how many
+    /// pages this release actually freed to the pool (the non-shared
+    /// ones), so teardown paths — including mid-decode cancellation —
+    /// can account the budget they handed back.
+    ///
+    /// Safe in *any* slot state: a partially prefilled sequence (an
+    /// abandoned cursor), one with a speculative verify pending, or one
+    /// mid-decode all hold nothing but per-slot page references, and
+    /// this drops exactly those.
+    pub fn reset_slot(&mut self, slot: usize) -> usize {
         self.lens[slot] = 0;
+        let free_before = self.free.len();
         // Most-recently-allocated pages go back on top of the LIFO stack.
         while let Some(page) = self.tables[slot].pop() {
             self.release_ref(page);
         }
+        self.free.len() - free_before
     }
 
     /// Drop one reference to `page`, freeing it when the count reaches

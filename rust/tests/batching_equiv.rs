@@ -147,11 +147,7 @@ fn serve_results_independent_of_worker_and_slot_topology() {
     // or session slots the scheduler spreads the requests over.
     let w = weights(QuantScheme::Q8_0, 11);
     let requests: Vec<Request> = (0..6)
-        .map(|id| Request {
-            id,
-            prompt: vec![1 + id as u32, 2, 3, 4, 5],
-            n_out: 7,
-        })
+        .map(|id| Request::new(id, vec![1 + id as u32, 2, 3, 4, 5], 7))
         .collect();
     let a = serve(&w, requests.clone(), 1, 42);
     let b = serve(&w, requests.clone(), 3, 42);

@@ -162,7 +162,7 @@ fn token_budget_batcher_composes_with_prefix_adoption() {
             .map(|id| {
                 let mut prompt: Vec<u32> = (100..100 + 2 * PAGE_SIZE as u32).collect();
                 prompt.extend([7 + id as u32, 3]);
-                Request { id: id as usize, prompt, n_out: 4 }
+                Request::new(id as usize, prompt, 4)
             })
             .collect::<Vec<Request>>()
     };

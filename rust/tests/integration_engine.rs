@@ -85,11 +85,7 @@ fn model_file_roundtrip_via_disk_and_serve() {
     std::fs::remove_file(&path).ok();
 
     let requests: Vec<Request> = (0..4)
-        .map(|id| Request {
-            id,
-            prompt: vec![1, 2 + id as u32, 9],
-            n_out: 4,
-        })
+        .map(|id| Request::new(id, vec![1, 2 + id as u32, 9], 4))
         .collect();
     let rep = serve(&loaded, requests, 2, 5);
     assert_eq!(rep.completions.len(), 4);

@@ -133,7 +133,7 @@ fn templated_requests(n: usize) -> Vec<Request> {
         .map(|id| {
             let mut prompt: Vec<u32> = (100..108).collect(); // 2 pages of 4
             prompt.extend([3 + id as u32, 7]);
-            Request { id, prompt, n_out: 4 }
+            Request::new(id, prompt, 4)
         })
         .collect()
 }
@@ -181,9 +181,9 @@ fn oversubscribed_serve_swaps_and_charges_dma_bytes() {
         let a: Vec<u32> = (20..29).collect();
         let b: Vec<u32> = (40..49).collect();
         vec![
-            Request { id: 0, prompt: a.clone(), n_out: 3 },
-            Request { id: 1, prompt: b, n_out: 3 },
-            Request { id: 2, prompt: a, n_out: 3 },
+            Request::new(0, a.clone(), 3),
+            Request::new(1, b, 3),
+            Request::new(2, a, 3),
         ]
     };
     // One slot serializes the three requests, so the A→B→A order forces

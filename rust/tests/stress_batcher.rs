@@ -14,7 +14,9 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use imax_llm::coordinator::{AdmitError, Admitted, ContinuousBatcher, Request, SessionLog};
+use imax_llm::coordinator::{
+    AdmitError, Admitted, CancelHandle, ContinuousBatcher, FinishReason, Request, SessionLog,
+};
 use imax_llm::model::engine::{Engine, NativeExec};
 use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
 use imax_llm::util::rng::Rng;
@@ -36,12 +38,11 @@ fn randomized_arrivals_complete_under_tight_page_budget() {
 
     let n_req = 24usize;
     let requests: Vec<Request> = (0..n_req)
-        .map(|id| Request {
-            id,
-            prompt: (0..1 + rng.below(10))
+        .map(|id| {
+            let prompt = (0..1 + rng.below(10))
                 .map(|i| 1 + ((id * 31 + i * 7) % 100) as u32)
-                .collect(),
-            n_out: rng.below(9),
+                .collect();
+            Request::new(id, prompt, rng.below(9))
         })
         .collect();
     let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
@@ -95,7 +96,7 @@ fn oversized_request_rejected_instead_of_wedging() {
     let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
     let mut exec = NativeExec;
     // Worst case 15 + 10 − 1 = 24 tokens → 6 pages > 5-page pool.
-    let big = Request { id: 0, prompt: vec![1; 15], n_out: 10 };
+    let big = Request::new(0, vec![1; 15], 10);
     match b.admit(big, Sampler::greedy(), 0.0, &mut exec) {
         Err(AdmitError::TooLarge { need_pages, pool_pages, .. }) => {
             assert_eq!(need_pages, 6);
@@ -104,7 +105,7 @@ fn oversized_request_rejected_instead_of_wedging() {
         other => panic!("expected TooLarge, got {other:?}"),
     }
     // Admission continues: a feasible request admits and completes.
-    let ok = Request { id: 1, prompt: vec![2, 3, 4], n_out: 4 };
+    let ok = Request::new(1, vec![2, 3, 4], 4);
     assert!(matches!(
         b.admit(ok, Sampler::greedy(), 0.0, &mut exec),
         Ok(Admitted::Active)
@@ -133,7 +134,7 @@ fn page_budget_admits_more_short_sequences_than_fixed_stride() {
     let mut exec = NativeExec;
     for id in 0..8usize {
         // Worst case 4 + 4 − 1 = 7 tokens → one page each.
-        let req = Request { id, prompt: vec![1 + id as u32, 2, 3, 4], n_out: 4 };
+        let req = Request::new(id, vec![1 + id as u32, 2, 3, 4], 4);
         assert!(
             matches!(b.admit(req, Sampler::greedy(), 0.0, &mut exec), Ok(Admitted::Active)),
             "request {id} must be admitted concurrently"
@@ -180,7 +181,7 @@ fn token_budget_bounds_decode_delay_under_long_prompt_arrival() {
         }
         let mut exec = NativeExec;
         for id in 0..2usize {
-            let req = Request { id, prompt: vec![1 + id as u32, 2, 3, 4], n_out: 8 };
+            let req = Request::new(id, vec![1 + id as u32, 2, 3, 4], 8);
             assert!(matches!(
                 b.admit(req, Sampler::greedy(), 0.0, &mut exec),
                 Ok(Admitted::Active)
@@ -189,11 +190,7 @@ fn token_budget_bounds_decode_delay_under_long_prompt_arrival() {
         for _ in 0..3 {
             assert!(b.decode_round(&mut exec).is_empty(), "shorts still decoding");
         }
-        let long = Request {
-            id: 2,
-            prompt: (0..LONG).map(|i| 1 + (i % 100) as u32).collect(),
-            n_out: 2,
-        };
+        let long = Request::new(2, (0..LONG).map(|i| 1 + (i % 100) as u32).collect(), 2);
         assert!(matches!(
             b.admit(long, Sampler::greedy(), 0.0, &mut exec),
             Ok(Admitted::Active)
@@ -280,7 +277,7 @@ fn templated_stress_with_prefix_sharing_and_swap_completes_cleanly() {
             let tpl = id % 3;
             let mut prompt: Vec<u32> = (0..8).map(|i| (100 * (tpl + 1) + i) as u32).collect();
             prompt.extend((0..rng.below(4)).map(|i| 1 + ((id * 13 + i * 5) % 50) as u32));
-            Request { id, prompt, n_out: 1 + rng.below(6) }
+            Request::new(id, prompt, 1 + rng.below(6))
         })
         .collect();
     let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
@@ -336,4 +333,209 @@ fn templated_stress_with_prefix_sharing_and_swap_completes_cleanly() {
     let s = b.reuse_stats();
     assert!(s.prefix_hits > 0, "templated workload must share prefixes: {s:?}");
     assert!(s.prefix_hit_tokens >= 4 * s.prefix_hits, "every hit spans ≥1 page: {s:?}");
+}
+
+/// What each request in the cancellation churn expects of its log.
+#[derive(Clone, Copy, PartialEq)]
+enum Role {
+    /// Runs to completion: `Completed` with exactly `n_out` tokens.
+    Plain,
+    /// Carries a [`CancelHandle`] fired 1–3 rounds after admission;
+    /// `n_out ≥ 4` guarantees the cancel lands mid-decode, so the log
+    /// must be `Cancelled` with a non-empty, short token stream.
+    Cancel,
+    /// Carries a zero-second deadline: expired by the first reap,
+    /// before any token decodes.
+    Deadline,
+}
+
+#[test]
+fn randomized_cancels_and_deadlines_leak_nothing_under_tight_pool() {
+    let mut rng = Rng::new(0xCA9CE1);
+    // The oversubscribed serving shape of the templated stress test —
+    // 3 slots on 8 pages of 4 tokens, prefix sharing + host swap on —
+    // now with a third of the requests torn down mid-flight. Teardown
+    // must free exactly the non-shared pages (pool conservation below),
+    // keep registered prefix pages adoptable, and hand the freed budget
+    // to the queue so nothing wedges.
+    let mut engine = Engine::with_paged_slots(tiny_weights(13), 3, 4, Some(8));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(6);
+    let total_pages = engine.total_pages();
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+
+    let n_req = 30usize;
+    let mut roles = Vec::with_capacity(n_req);
+    let mut handles: Vec<Option<CancelHandle>> = Vec::with_capacity(n_req);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let tpl = id % 3;
+            let mut prompt: Vec<u32> = (0..8).map(|i| (100 * (tpl + 1) + i) as u32).collect();
+            prompt.extend((0..rng.below(4)).map(|i| 1 + ((id * 13 + i * 5) % 50) as u32));
+            let (role, req) = if id % 5 == 4 {
+                (Role::Deadline, Request::new(id, prompt, 1 + rng.below(6)).with_deadline_s(0.0))
+            } else if rng.next_f64() < 0.4 {
+                let h = CancelHandle::new();
+                let req = Request::new(id, prompt, 4 + rng.below(4)).with_cancel(h.clone());
+                handles.push(Some(h));
+                roles.push(Role::Cancel);
+                return req;
+            } else {
+                (Role::Plain, Request::new(id, prompt, 1 + rng.below(6)))
+            };
+            handles.push(None);
+            roles.push(role);
+            req
+        })
+        .collect();
+    let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
+    assert!(roles.iter().any(|&r| r == Role::Cancel), "seed must produce cancels");
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+
+    let mut done = Vec::new();
+    let mut pending_cancels: Vec<(usize, usize)> = Vec::new(); // (fire_round, id)
+    let mut rounds = 0usize;
+    while !queue.is_empty() || b.n_active() > 0 {
+        rounds += 1;
+        assert!(
+            rounds < 10_000,
+            "scheduler wedged: {} done, {} queued, {} active",
+            done.len(),
+            queue.len(),
+            b.n_active()
+        );
+        // Fire the cancels that have come due — mid-decode, between
+        // rounds, exactly how a serve-loop consumer drops a stream.
+        pending_cancels.retain(|&(fire, id)| {
+            if fire <= rounds {
+                handles[id].as_ref().unwrap().cancel();
+                false
+            } else {
+                true
+            }
+        });
+        while let Some(req) = queue.pop_front() {
+            let id = req.id;
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {
+                    if handles[id].is_some() {
+                        pending_cancels.push((rounds + 1 + rng.below(3), id));
+                    }
+                }
+                Ok(Admitted::Finished(log)) => done.push(log),
+                Ok(Admitted::Deferred(req)) => {
+                    assert!(b.n_active() > 0, "deferred on an idle engine");
+                    queue.push_front(req);
+                    break;
+                }
+                Err(e) => panic!("no request here is oversized, got: {e}"),
+            }
+        }
+        assert!(
+            b.committed_pages() <= total_pages,
+            "commitment {} oversubscribes the {total_pages}-page pool",
+            b.committed_pages()
+        );
+        done.extend(b.decode_round(&mut exec));
+    }
+
+    let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n_req).collect::<Vec<_>>(), "each request exactly once");
+    for log in &done {
+        match roles[log.id] {
+            Role::Plain => {
+                assert_eq!(log.reason, FinishReason::Completed, "request {}", log.id);
+                assert_eq!(log.tokens.len(), expected_n_out[log.id], "request {}", log.id);
+            }
+            Role::Cancel => {
+                assert_eq!(log.reason, FinishReason::Cancelled, "request {}", log.id);
+                assert!(
+                    !log.tokens.is_empty() && log.tokens.len() < expected_n_out[log.id],
+                    "mid-decode cancel kept {} of {} tokens (request {})",
+                    log.tokens.len(),
+                    expected_n_out[log.id],
+                    log.id
+                );
+            }
+            Role::Deadline => {
+                assert_eq!(log.reason, FinishReason::DeadlineExpired, "request {}", log.id);
+                assert!(log.tokens.is_empty(), "request {} expired before decode", log.id);
+            }
+        }
+    }
+    // Pool conservation across every teardown path: each page is free
+    // or a resident cached prefix page; budget and slots fully released.
+    assert_eq!(b.committed_pages(), 0);
+    assert_eq!(b.capacity(), 3, "all slots free");
+    let cache = &b.engine().cache;
+    assert_eq!(
+        cache.free_page_count() + cache.cached_resident_pages(),
+        total_pages,
+        "pages are either free or cached — none leaked"
+    );
+    let s = b.reuse_stats();
+    assert!(s.prefix_hits > 0, "templated workload must share prefixes: {s:?}");
+
+    // Prefix entries that survived the churn stay adoptable: a fresh
+    // template request completes, and if its template is still indexed
+    // the adoption counter moves.
+    let tpl_prompt: Vec<u32> = (0..8).map(|i| (100 + i) as u32).collect();
+    let (cached_tokens, resident, swapped) = b.engine().peek_prefix(&tpl_prompt);
+    let hits_before = b.reuse_stats().prefix_hits;
+    let req = Request::new(n_req, tpl_prompt, 2);
+    assert!(matches!(
+        b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+        Ok(Admitted::Active)
+    ));
+    let logs = b.drain(&mut exec);
+    assert_eq!(logs.len(), 1);
+    assert_eq!(logs[0].tokens.len(), 2);
+    if cached_tokens > 0 && resident + swapped > 0 {
+        assert!(
+            b.reuse_stats().prefix_hits > hits_before,
+            "surviving prefix entry must still adopt after cancellation churn"
+        );
+    }
+}
+
+#[test]
+fn mid_decode_cancel_frees_budget_for_the_next_round() {
+    // Pool: 4 pages × 4 tokens. Each request's worst case is
+    // 8 + 4 − 1 = 11 tokens → 3 pages, so the second must defer while
+    // the first holds its commitment.
+    let engine = Engine::with_paged_slots(tiny_weights(7), 2, 4, Some(4));
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+    let handle = CancelHandle::new();
+    let r0 = Request::new(0, (1u32..=8).collect(), 4).with_cancel(handle.clone());
+    assert!(matches!(
+        b.admit(r0, Sampler::greedy(), 0.0, &mut exec),
+        Ok(Admitted::Active)
+    ));
+    let r1 = Request::new(1, (11u32..=18).collect(), 4);
+    let r1 = match b.admit(r1, Sampler::greedy(), 0.0, &mut exec) {
+        Ok(Admitted::Deferred(r)) => r,
+        other => panic!("expected deferral under a full pool, got {other:?}"),
+    };
+    // One decode round in, then the consumer walks away.
+    assert!(b.decode_round(&mut exec).is_empty(), "4-token request still decoding");
+    handle.cancel();
+    // The next round reaps the cancelled flight before decoding, so the
+    // freed pages are spendable budget the moment it returns.
+    let logs = b.decode_round(&mut exec);
+    assert_eq!(logs.len(), 1);
+    assert_eq!(logs[0].reason, FinishReason::Cancelled);
+    assert_eq!(logs[0].tokens.len(), 1, "the delivered token survives the cancel");
+    assert!(matches!(
+        b.admit(r1, Sampler::greedy(), 0.0, &mut exec),
+        Ok(Admitted::Active)
+    ));
+    let logs = b.drain(&mut exec);
+    assert_eq!(logs.len(), 1);
+    assert_eq!(logs[0].reason, FinishReason::Completed);
+    assert_eq!(logs[0].tokens.len(), 4);
+    assert_eq!(b.engine().free_pages(), 4, "nothing leaked");
+    assert_eq!(b.committed_pages(), 0);
 }
