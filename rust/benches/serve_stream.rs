@@ -14,6 +14,11 @@
 //!   cancelled or expired request releases exactly its non-shared
 //!   pages through the refcount/CoW machinery) says this is 0.
 //! * `committed_pages_after_drain` — leaked admission budget; also 0.
+//! * `audit_findings` — the static analyzers run live over the whole
+//!   churn (the backend is wrapped in [`AuditExec`], so every forward
+//!   step's launch stream passes the plan-time schedule verifier, and
+//!   the cross-subsystem invariant auditor runs after every round); a
+//!   correct build reports 0.
 //!
 //! With `BENCH_JSON=path` a machine-readable summary is written for the
 //! CI `bench-smoke` job (`scripts/check_bench_regression.py` gates the
@@ -24,6 +29,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use imax_llm::analysis::{self, AuditExec};
 use imax_llm::coordinator::{
     Admitted, CancelHandle, ContinuousBatcher, FinishReason, Request, SessionLog,
 };
@@ -50,7 +56,8 @@ fn main() {
             true
         },
     ));
-    let mut exec = NativeExec;
+    let mut exec = AuditExec::new(NativeExec, true);
+    let mut audit_findings = 0usize;
 
     // Templated prompts (three two-page templates plus a short unique
     // suffix). Roles by id: ≡4 (mod 5) expires instantly; otherwise
@@ -108,7 +115,9 @@ fn main() {
             }
         }
         done.extend(b.decode_round(&mut exec));
+        audit_findings += analysis::audit(b.engine(), &b).len();
     }
+    audit_findings += exec.findings().len();
 
     assert_eq!(done.len(), N_REQ, "each request completes exactly once");
     let cancelled: Vec<&SessionLog> =
@@ -140,11 +149,13 @@ fn main() {
     ]);
     t.row(vec!["pages leaked after drain".to_string(), leak.to_string()]);
     t.row(vec!["committed pages after drain".to_string(), committed.to_string()]);
+    t.row(vec!["audit findings (schedule + invariants)".to_string(), audit_findings.to_string()]);
     t.print();
 
     let mut json = JsonMetrics::new("serve_stream");
     json.push("cancel_leak_pages", leak as f64, "lower", true);
     json.push("committed_pages_after_drain", committed as f64, "lower", true);
+    json.push("audit_findings", audit_findings as f64, "lower", true);
     json.push("cancelled_requests", cancelled.len() as f64, "higher", false);
     json.push("expired_requests", expired as f64, "higher", false);
     json.push("salvaged_tokens", salvaged as f64, "higher", false);

@@ -1,0 +1,273 @@
+//! Cross-subsystem invariant auditing.
+//!
+//! The refcounted CoW page pool ([`crate::model::kv_cache::KvCache`])
+//! and the continuous batcher's page-budget admission
+//! ([`crate::coordinator::scheduler::ContinuousBatcher`]) maintain the
+//! same resources from two sides; prefix sharing, host swap, speculative
+//! rollback, and mid-decode cancellation all mutate them concurrently
+//! within a round. [`audit`] proves, from accessors alone, that the two
+//! sides still agree.
+//!
+//! The audit is **snapshot-based**: [`snapshot`] copies the auditable
+//! state into a plain-data [`PoolSnapshot`], and the pure
+//! [`audit_snapshot`] runs every `audit/*` rule over it. That split is
+//! what makes the rules testable — the live API preserves the
+//! invariants by construction, so the mutation property suite corrupts
+//! snapshot fields directly and proves each rule fires.
+
+use crate::analysis::Finding;
+use crate::coordinator::scheduler::ContinuousBatcher;
+use crate::model::engine::Engine;
+use crate::model::kv_cache::{chain_key, PrefixChainRecord};
+use crate::util::ceil_div;
+
+/// Plain-data copy of every quantity the `audit/*` rules relate: pool
+/// geometry, per-page refcounts, the free list, per-slot lengths and
+/// block tables, the prefix index, and the batcher's budget view.
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    /// Tokens per page.
+    pub page_size: usize,
+    /// Total pages in the shared pool.
+    pub n_pages: usize,
+    /// Per-slot context capacity.
+    pub max_seq: usize,
+    /// Per-page reference counts (`refs[page]`).
+    pub refs: Vec<u32>,
+    /// The LIFO free list, in stack order.
+    pub free: Vec<u32>,
+    /// Cached positions per slot.
+    pub lens: Vec<usize>,
+    /// Per-slot block tables (page ids backing `0..lens[slot]`).
+    pub tables: Vec<Vec<u32>>,
+    /// Device pages pinned by resident prefix-index entries.
+    pub resident_prefix_pages: Vec<u32>,
+    /// The full prefix index (key, parent, span, location per entry).
+    pub chains: Vec<PrefixChainRecord>,
+    /// Chain-key fingerprint (`None`: prefix cache disabled).
+    pub fingerprint: Option<u64>,
+    /// Pages the host swap arena currently holds.
+    pub swapped_pages: usize,
+    /// The batcher's cached committed-page count.
+    pub committed_pages: usize,
+    /// The same quantity recomputed from scratch off the live set.
+    pub recomputed_committed_pages: usize,
+}
+
+/// Copy the auditable state of a live engine/batcher pair. Cheap
+/// relative to a decode round (no KV bytes are copied, only metadata).
+pub fn snapshot(engine: &Engine, batcher: &ContinuousBatcher) -> PoolSnapshot {
+    let cache = &engine.cache;
+    PoolSnapshot {
+        page_size: cache.page_size(),
+        n_pages: cache.n_pages(),
+        max_seq: cache.max_seq,
+        refs: (0..cache.n_pages() as u32).map(|p| cache.page_ref(p)).collect(),
+        free: cache.free_list().to_vec(),
+        lens: (0..cache.n_slots).map(|s| cache.slot_len(s)).collect(),
+        tables: (0..cache.n_slots).map(|s| cache.slot_pages(s).to_vec()).collect(),
+        resident_prefix_pages: cache.cached_page_ids(),
+        chains: cache.prefix_chain_records(),
+        fingerprint: cache.prefix_fingerprint(),
+        swapped_pages: cache.swapped_out_pages(),
+        committed_pages: batcher.committed_pages(),
+        recomputed_committed_pages: batcher.recomputed_committed_pages(),
+    }
+}
+
+/// Audit a live engine/batcher pair: snapshot + [`audit_snapshot`]. An
+/// empty result proves the full `audit/*` rule set at this instant.
+pub fn audit(engine: &Engine, batcher: &ContinuousBatcher) -> Vec<Finding> {
+    audit_snapshot(&snapshot(engine, batcher))
+}
+
+/// Run every `audit/*` rule over a snapshot (see the
+/// [module catalog](crate::analysis) for the rule list). Pure: all
+/// verdicts derive from the snapshot alone.
+pub fn audit_snapshot(s: &PoolSnapshot) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let in_pool = |page: u32| (page as usize) < s.n_pages;
+
+    // --- audit/refcount-conservation: refs[p] == block-table entries
+    // referencing p + 1 if a resident prefix entry pins p ---
+    let mut expected = vec![0u32; s.n_pages];
+    for table in &s.tables {
+        for &p in table {
+            if in_pool(p) {
+                expected[p as usize] += 1;
+            }
+        }
+    }
+    for &p in &s.resident_prefix_pages {
+        if in_pool(p) {
+            expected[p as usize] += 1;
+        }
+    }
+    for (p, (&have, &want)) in s.refs.iter().zip(&expected).enumerate() {
+        if have != want {
+            findings.push(Finding::error(
+                "audit/refcount-conservation",
+                format!(
+                    "page {p}: refcount {have} but {want} live references \
+                     (block tables + resident prefix entries)"
+                ),
+            ));
+        }
+    }
+
+    // --- audit/free-consistency: no duplicates; on the free list ⇔
+    // refcount zero ---
+    let mut on_free = vec![false; s.n_pages];
+    for &p in &s.free {
+        if !in_pool(p) {
+            findings.push(Finding::error(
+                "audit/free-consistency",
+                format!("free list holds page {p} outside the pool of {} pages", s.n_pages),
+            ));
+            continue;
+        }
+        if on_free[p as usize] {
+            findings.push(Finding::error(
+                "audit/free-consistency",
+                format!("page {p} appears twice on the free list"),
+            ));
+        }
+        on_free[p as usize] = true;
+    }
+    for (p, (&free, &r)) in on_free.iter().zip(&s.refs).enumerate() {
+        if free && r != 0 {
+            findings.push(Finding::error(
+                "audit/free-consistency",
+                format!("page {p} is on the free list with refcount {r}"),
+            ));
+        } else if !free && r == 0 {
+            findings.push(Finding::error(
+                "audit/free-consistency",
+                format!("page {p} has refcount 0 but is not on the free list (leaked)"),
+            ));
+        }
+    }
+
+    // --- audit/alias-validity: every alias names a valid, live page ---
+    let live = |p: u32| in_pool(p) && s.refs[p as usize] > 0;
+    for (slot, table) in s.tables.iter().enumerate() {
+        for &p in table {
+            if !live(p) {
+                findings.push(Finding::error(
+                    "audit/alias-validity",
+                    format!("slot {slot}'s block table references dead page {p}"),
+                ));
+            }
+        }
+    }
+    for &p in &s.resident_prefix_pages {
+        if !live(p) {
+            findings.push(Finding::error(
+                "audit/alias-validity",
+                format!("a resident prefix entry references dead page {p}"),
+            ));
+        }
+    }
+
+    // --- audit/length-coverage: table size matches the token length,
+    // lengths fit the context window ---
+    for (slot, (&len, table)) in s.lens.iter().zip(&s.tables).enumerate() {
+        let need = ceil_div(len, s.page_size);
+        if table.len() != need {
+            findings.push(Finding::error(
+                "audit/length-coverage",
+                format!(
+                    "slot {slot}: {len} cached tokens need {need} pages but the \
+                     block table holds {}",
+                    table.len()
+                ),
+            ));
+        }
+        if len > s.max_seq {
+            findings.push(Finding::error(
+                "audit/length-coverage",
+                format!("slot {slot}: {len} cached tokens exceed the context window {}", s.max_seq),
+            ));
+        }
+    }
+
+    // --- audit/budget-conservation: the cached commitment equals the
+    // recomputed exact distinct demand ---
+    if s.committed_pages != s.recomputed_committed_pages {
+        findings.push(Finding::error(
+            "audit/budget-conservation",
+            format!(
+                "batcher commits {} pages but the live set's recomputed distinct \
+                 demand is {}",
+                s.committed_pages, s.recomputed_committed_pages
+            ),
+        ));
+    }
+
+    // --- audit/chain-integrity: stored keys re-hash from parent + span;
+    // spans are one full page; swapped ⇔ arena-backed ---
+    match s.fingerprint {
+        None => {
+            if !s.chains.is_empty() {
+                findings.push(Finding::error(
+                    "audit/chain-integrity",
+                    format!("{} prefix entries exist without a fingerprint", s.chains.len()),
+                ));
+            }
+        }
+        Some(fp) => {
+            let mut swapped = 0usize;
+            for c in &s.chains {
+                let rehash = chain_key(fp, c.prev, &c.tokens);
+                if rehash != c.key {
+                    findings.push(Finding::error(
+                        "audit/chain-integrity",
+                        format!(
+                            "prefix entry {:#018x} does not re-hash from its parent and \
+                             token span (expected {rehash:#018x}) — the chain is corrupt",
+                            c.key
+                        ),
+                    ));
+                }
+                if c.tokens.len() != s.page_size {
+                    findings.push(Finding::error(
+                        "audit/chain-integrity",
+                        format!(
+                            "prefix entry {:#018x} spans {} tokens (entries commit exactly \
+                             one {}-token page)",
+                            c.key,
+                            c.tokens.len(),
+                            s.page_size
+                        ),
+                    ));
+                }
+                match c.resident_page {
+                    Some(_) if c.in_arena => findings.push(Finding::error(
+                        "audit/chain-integrity",
+                        format!("prefix entry {:#018x} is resident yet holds arena bytes", c.key),
+                    )),
+                    None if !c.in_arena => findings.push(Finding::error(
+                        "audit/chain-integrity",
+                        format!("prefix entry {:#018x} is swapped but the arena has no bytes", c.key),
+                    )),
+                    _ => {}
+                }
+                if c.resident_page.is_none() {
+                    swapped += 1;
+                }
+            }
+            if swapped != s.swapped_pages {
+                findings.push(Finding::error(
+                    "audit/chain-integrity",
+                    format!(
+                        "{} swapped index entries but the arena holds {} pages \
+                         (orphaned or missing arena bytes)",
+                        swapped, s.swapped_pages
+                    ),
+                ));
+            }
+        }
+    }
+
+    findings
+}

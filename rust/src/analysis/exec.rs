@@ -1,0 +1,143 @@
+//! A backend wrapper that records and verifies every submission.
+//!
+//! [`AuditExec`] sits between the engine and any
+//! [`KernelExec`] backend: every kernel/marker call is forwarded
+//! unchanged (bit-identical execution) and mirrored into a private
+//! [`LaunchQueue`], drained at the same submit points the inner backend
+//! sees. At each `EndStep` the completed step's launch stream runs
+//! through [`verify_schedule`](crate::analysis::verify_schedule), so an
+//! engine change that misplaces a submit boundary or reorders a
+//! dependency chain surfaces as a typed finding on the very step that
+//! produced it — this is what `serve --audit` and the `verify-plan`
+//! subcommand run under.
+
+use crate::analysis::{verify_schedule, Finding};
+use crate::model::engine::{KernelExec, MatvecExec};
+use crate::model::graph::{KvSwapDir, MatvecOp, Phase};
+use crate::runtime::queue::{KernelOp, Launch, LaunchQueue};
+use crate::tensor::{ActQuant, QTensor};
+
+/// Records every launch the engine plans and statically verifies each
+/// completed step. `enabled: false` is a pure passthrough (no recording,
+/// no verification), so one serve code path serves both modes.
+pub struct AuditExec<E> {
+    inner: E,
+    enabled: bool,
+    queue: LaunchQueue<()>,
+    /// The current step's drained launch stream (markers included).
+    step: Vec<Launch<()>>,
+    findings: Vec<Finding>,
+    steps_verified: u64,
+}
+
+impl<E: KernelExec> AuditExec<E> {
+    pub fn new(inner: E, enabled: bool) -> AuditExec<E> {
+        AuditExec {
+            inner,
+            enabled,
+            queue: LaunchQueue::new(),
+            step: Vec::new(),
+            findings: Vec::new(),
+            steps_verified: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The wrapped backend (reporting still comes from the inner exec).
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Findings accumulated so far (empty on a clean run).
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    pub fn take_findings(&mut self) -> Vec<Finding> {
+        std::mem::take(&mut self.findings)
+    }
+
+    /// Completed steps that went through schedule verification.
+    pub fn steps_verified(&self) -> u64 {
+        self.steps_verified
+    }
+
+    fn record(&mut self, op: KernelOp) {
+        if self.enabled {
+            self.queue.record(op, ());
+        }
+    }
+
+    fn drain(&mut self) {
+        if self.enabled {
+            self.step.extend(self.queue.submit());
+        }
+    }
+}
+
+impl<E: KernelExec> MatvecExec for AuditExec<E> {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        self.record(KernelOp::Linear { op: op.clone(), batch: 1 });
+        self.inner.linear(op, w, act, out);
+    }
+
+    fn linear_ubatch(&mut self, op: &MatvecOp, w: &QTensor, acts: &[ActQuant], outs: &mut [f32]) {
+        self.record(KernelOp::Linear { op: op.clone(), batch: acts.len() });
+        self.inner.linear_ubatch(op, w, acts, outs);
+    }
+
+    fn attn(&mut self, op: &MatvecOp) {
+        self.record(KernelOp::Attn { op: op.clone() });
+        self.inner.attn(op);
+    }
+
+    fn begin_step(&mut self, phase: Phase, pos: usize) {
+        self.record(KernelOp::BeginStep { phase, pos });
+        self.inner.begin_step(phase, pos);
+    }
+
+    fn end_step(&mut self, phase: Phase, pos: usize) {
+        self.record(KernelOp::EndStep { phase, pos });
+        self.inner.end_step(phase, pos);
+        // A step boundary is an implicit flush (the instrumented backend
+        // settles its batch here too): drain, verify the completed step,
+        // and reset so memory stays bounded by one step's launches.
+        if self.enabled {
+            self.drain();
+            self.findings.extend(verify_schedule(&self.step));
+            self.steps_verified += 1;
+            self.step.clear();
+        }
+    }
+
+    fn kv_transfer(&mut self, phase: Phase, dir: KvSwapDir, bytes: usize) {
+        self.inner.kv_transfer(phase, dir, bytes);
+    }
+}
+
+impl<E: KernelExec> KernelExec for AuditExec<E> {
+    fn submit(&mut self) {
+        self.drain();
+        self.inner.submit();
+    }
+
+    fn sync(&mut self) {
+        self.drain();
+        self.inner.sync();
+    }
+
+    fn round_boundary(&mut self) {
+        self.inner.round_boundary();
+    }
+}

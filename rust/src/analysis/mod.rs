@@ -1,0 +1,125 @@
+//! Static analysis: plan-time schedule verification and cross-subsystem
+//! invariant auditing.
+//!
+//! PRs 3–7 stacked double-buffered overlap modeling, prefix sharing,
+//! speculative rollback, and mid-decode cancellation on the same two
+//! state machines — the plan/submit [`crate::runtime::queue::LaunchQueue`]
+//! and the refcounted CoW page pool. The invariants that keep them
+//! correct were enforced only by scattered `assert!`s and per-feature
+//! tests. This subsystem makes them *checkable as data*: a recorded
+//! kernel stream or a live engine/batcher pair goes in, a list of typed
+//! [`Finding`]s comes out, and a clean run proves the whole invariant
+//! set at once.
+//!
+//! Three entry points:
+//!
+//! - [`verify_schedule`] statically checks a recorded launch stream
+//!   (structure, dependency order, submit placement, batch legality) —
+//!   see [`schedule`].
+//! - [`audit`] proves the pool/batcher cross-subsystem invariants on a
+//!   live engine (refcounts, free list, aliasing, budgets, chain
+//!   hashes) by snapshotting state into a [`PoolSnapshot`] and running
+//!   the pure [`audit_snapshot`] over it.
+//! - [`AuditExec`] wraps any [`crate::model::engine::KernelExec`] and
+//!   runs [`verify_schedule`] over every completed step transparently
+//!   (`serve --audit`, the `verify-plan` CLI subcommand).
+//!
+//! # Rule catalog
+//!
+//! Every finding carries one of these stable rule IDs. Schedule rules
+//! (from [`verify_schedule`] / [`verify_placement`]):
+//!
+//! - `schedule/step-markers` — `BeginStep`/`EndStep` markers are
+//!   balanced, non-nested, and paired with identical `Phase`/`pos`.
+//! - `schedule/op-outside-step` — every kernel launch falls between a
+//!   `BeginStep` and its `EndStep`.
+//! - `schedule/op-order` — within a step, per-layer kernels follow the
+//!   dependency chain qkv → attention → o_proj → gate/up → down, layers
+//!   run in ascending order, and the LM head runs last.
+//! - `schedule/submit-hazard` — a submission batch (the window the dbuf
+//!   LOAD/EXEC overlap model may prefetch across) never spans a true RAW
+//!   dependency: one layer, one host-dependency group per batch.
+//! - `schedule/batch-legality` — every linear records a positive ubatch
+//!   width and one submission batch keeps a uniform width.
+//! - `schedule/seq-order` — launch `seq` numbers are strictly
+//!   increasing and `submission` indices non-decreasing (FIFO replay
+//!   order is intact).
+//! - `placement/gap` — every model layer is covered by a placement rule.
+//! - `placement/overlap` — no two placement rules claim the same layer.
+//! - `placement/lm-head` — the LM-head home (the part owning the
+//!   highest range) owns at least one live layer, and that range
+//!   includes the model's final layer.
+//!
+//! Audit rules (from [`audit`] / [`audit_snapshot`]):
+//!
+//! - `audit/refcount-conservation` — every page's refcount equals its
+//!   block-table entries plus one for a resident prefix-index entry.
+//! - `audit/free-consistency` — the free list holds no duplicates and a
+//!   page is on it exactly when its refcount is zero.
+//! - `audit/alias-validity` — every block-table entry and resident
+//!   prefix entry points at a valid, referenced (non-free) page.
+//! - `audit/length-coverage` — each slot's block table holds exactly
+//!   the pages its token length needs, and lengths fit the context
+//!   window.
+//! - `audit/budget-conservation` — the batcher's cached committed-page
+//!   count equals the live set's recomputed exact distinct demand.
+//! - `audit/chain-integrity` — every prefix-index entry's stored key
+//!   re-hashes from its parent and token span, spans are exactly one
+//!   page, and an entry is swapped exactly when the host arena holds
+//!   its bytes.
+//!
+//! Mutation property tests in `rust/tests/analysis_rules.rs` prove each
+//! rule fires on a seeded corruption; the serve/stress suites prove
+//! clean runs stay finding-free.
+
+pub mod audit;
+pub mod exec;
+pub mod schedule;
+
+pub use audit::{audit, audit_snapshot, snapshot, PoolSnapshot};
+pub use exec::AuditExec;
+pub use schedule::{verify_placement, verify_schedule};
+
+use std::fmt;
+
+/// How bad a finding is.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Severity {
+    /// An invariant is broken: state is corrupt or a schedule is
+    /// illegal. A clean system never produces one.
+    Error,
+    /// Suspicious but not provably wrong (reserved; current rules all
+    /// report errors).
+    Warning,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One verified-invariant violation: a stable rule ID (see the module
+/// docs for the catalog), a severity, and a human-readable detail
+/// naming the exact page/launch/slot involved.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub detail: String,
+}
+
+impl Finding {
+    pub fn error(rule: &'static str, detail: String) -> Finding {
+        Finding { rule, severity: Severity::Error, detail }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.severity.name(), self.rule, self.detail)
+    }
+}

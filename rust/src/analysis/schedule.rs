@@ -1,0 +1,312 @@
+//! Plan-time schedule verification.
+//!
+//! [`verify_schedule`] statically checks a recorded launch stream — the
+//! exact data a queueing backend drains from
+//! [`crate::runtime::queue::LaunchQueue`] — against the engine's
+//! dependency contract. The key rule is `schedule/submit-hazard`: the
+//! dbuf LOAD/EXEC overlap model (PR 3) prefetches kernel *k*'s operands
+//! under kernel *k−1*'s EXEC **within one submission batch**, so a
+//! submit boundary missing between two host-dependent kernels would let
+//! the model overlap across a true RAW dependency. The engine's
+//! dependency chain per layer partitions kernels into host-dependency
+//! groups — q/k/v (host QK-norm/RoPE/cache-store follows), attention +
+//! o_proj (device-chained, one group), gate/up (host SwiGLU follows),
+//! down (host residual add follows), LM head — and a legal submission
+//! batch stays inside one group of one layer.
+
+use crate::analysis::Finding;
+use crate::model::config::LinearKind;
+use crate::model::graph::{OpKind, Phase};
+use crate::runtime::backend::PlacementSpec;
+use crate::runtime::queue::{KernelOp, Launch};
+
+/// Host-dependency group of a kernel inside one layer's chain. Kernels
+/// in different groups are separated by host work (a RAW dependency the
+/// backend cannot see), so they must never share a submission batch.
+/// The group index doubles as the dependency-chain stage: within a
+/// layer, groups must appear in ascending order.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Group {
+    /// q/k/v projections (host applies QK-norm, RoPE, cache store next).
+    Qkv,
+    /// Attention score/mix + o_proj: device-chained, no host boundary.
+    Attn,
+    /// FFN gate and up (host applies SwiGLU next).
+    GateUp,
+    /// FFN down (host applies the residual add next).
+    Down,
+    /// LM head (layer `None`; host samples from the logits next).
+    LmHead,
+}
+
+impl Group {
+    fn name(self) -> &'static str {
+        match self {
+            Group::Qkv => "qkv",
+            Group::Attn => "attn",
+            Group::GateUp => "gate/up",
+            Group::Down => "down",
+            Group::LmHead => "lm_head",
+        }
+    }
+
+    fn of(op: &KernelOp) -> Option<Group> {
+        let kind = match op {
+            KernelOp::Linear { op, .. } | KernelOp::Attn { op } => op.kind,
+            _ => return None,
+        };
+        Some(match kind {
+            OpKind::Linear(LinearKind::QProj | LinearKind::KProj | LinearKind::VProj) => Group::Qkv,
+            OpKind::AttnScore | OpKind::AttnMix | OpKind::Linear(LinearKind::OProj) => Group::Attn,
+            OpKind::Linear(LinearKind::FfnGate | LinearKind::FfnUp) => Group::GateUp,
+            OpKind::Linear(LinearKind::FfnDown) => Group::Down,
+            OpKind::Linear(LinearKind::LmHead) => Group::LmHead,
+        })
+    }
+}
+
+fn describe(op: &KernelOp) -> String {
+    match op {
+        KernelOp::Linear { op, batch } => {
+            format!("{}[layer {:?}, batch {batch}]", op.kind.name(), op.layer)
+        }
+        KernelOp::Attn { op } => format!("{}[layer {:?}]", op.kind.name(), op.layer),
+        KernelOp::BeginStep { phase, pos } => format!("BeginStep[{}, pos {pos}]", phase.name()),
+        KernelOp::EndStep { phase, pos } => format!("EndStep[{}, pos {pos}]", phase.name()),
+    }
+}
+
+/// Statically verify a recorded launch stream (one or more complete
+/// forward steps in record order). Returns every violation found; an
+/// empty vector certifies the stream against the full schedule rule set
+/// (`schedule/*` in the [module catalog](crate::analysis)).
+pub fn verify_schedule<P>(stream: &[Launch<P>]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // --- schedule/step-markers + schedule/op-outside-step ---
+    let mut open: Option<(Phase, usize)> = None;
+    for l in stream {
+        match &l.op {
+            KernelOp::BeginStep { phase, pos } => {
+                if let Some((p, q)) = open {
+                    findings.push(Finding::error(
+                        "schedule/step-markers",
+                        format!(
+                            "seq {}: BeginStep[{}, pos {pos}] nests inside the \
+                             unclosed step [{}, pos {q}]",
+                            l.seq,
+                            phase.name(),
+                            p.name()
+                        ),
+                    ));
+                }
+                open = Some((*phase, *pos));
+            }
+            KernelOp::EndStep { phase, pos } => match open.take() {
+                None => findings.push(Finding::error(
+                    "schedule/step-markers",
+                    format!("seq {}: EndStep[{}, pos {pos}] without a BeginStep", l.seq, phase.name()),
+                )),
+                Some((p, q)) => {
+                    // A ubatch step spans `pos..pos+n`: BeginStep carries
+                    // the base position, EndStep the last. End < begin or
+                    // a phase flip mid-step is inconsistent.
+                    if p != *phase || *pos < q {
+                        findings.push(Finding::error(
+                            "schedule/step-markers",
+                            format!(
+                                "seq {}: EndStep[{}, pos {pos}] closes BeginStep[{}, pos {q}]",
+                                l.seq,
+                                phase.name(),
+                                p.name()
+                            ),
+                        ));
+                    }
+                }
+            },
+            op if op.is_kernel() && open.is_none() => {
+                findings.push(Finding::error(
+                    "schedule/op-outside-step",
+                    format!("seq {}: {} recorded outside any step", l.seq, describe(op)),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if let Some((p, q)) = open {
+        findings.push(Finding::error(
+            "schedule/step-markers",
+            format!("stream ends inside the unclosed step [{}, pos {q}]", p.name()),
+        ));
+    }
+
+    // --- schedule/op-order: per-step layer monotonicity + per-layer
+    // group chain + LM head last ---
+    let mut cur: Option<(Option<usize>, Group)> = None; // (layer, group) of the previous kernel
+    for l in stream {
+        if matches!(l.op, KernelOp::BeginStep { .. }) {
+            cur = None;
+            continue;
+        }
+        let Some(group) = Group::of(&l.op) else { continue };
+        let layer = l.op.layer();
+        if let Some((prev_layer, prev_group)) = cur {
+            let ok = match (prev_layer, layer) {
+                // Same layer: the chain may only advance (or stay —
+                // attention records one score+mix pair per ubatch token).
+                (Some(a), Some(b)) if a == b => group >= prev_group,
+                // New layer: strictly ascending, restarting at qkv.
+                (Some(a), Some(b)) => b > a && group == Group::Qkv,
+                // LM head (layer None) terminates the chain.
+                (Some(_), None) => group == Group::LmHead,
+                // Nothing may follow the LM head within a step.
+                (None, _) => false,
+            };
+            if !ok {
+                findings.push(Finding::error(
+                    "schedule/op-order",
+                    format!(
+                        "seq {}: {} breaks the dependency chain after {}[layer {:?}]",
+                        l.seq,
+                        describe(&l.op),
+                        prev_group.name(),
+                        prev_layer
+                    ),
+                ));
+            }
+        } else if layer.is_some() && group != Group::Qkv {
+            findings.push(Finding::error(
+                "schedule/op-order",
+                format!("seq {}: step enters layer {:?} at {} (expected qkv)", l.seq, layer, group.name()),
+            ));
+        }
+        cur = Some((layer, group));
+    }
+
+    // --- schedule/submit-hazard + schedule/batch-legality: walk
+    // submission batches ---
+    let mut i = 0usize;
+    while i < stream.len() {
+        let sub = stream[i].submission;
+        let mut j = i;
+        while j < stream.len() && stream[j].submission == sub {
+            j += 1;
+        }
+        let batch = &stream[i..j];
+        let mut ident: Option<(Option<usize>, Group)> = None;
+        let mut width: Option<usize> = None;
+        for l in batch {
+            if let KernelOp::Linear { batch: b, .. } = &l.op {
+                if *b == 0 {
+                    findings.push(Finding::error(
+                        "schedule/batch-legality",
+                        format!("seq {}: {} records an empty ubatch", l.seq, describe(&l.op)),
+                    ));
+                } else if *width.get_or_insert(*b) != *b {
+                    findings.push(Finding::error(
+                        "schedule/batch-legality",
+                        format!(
+                            "submission {sub}: mixed ubatch widths {} and {b} in one batch",
+                            width.unwrap_or(0)
+                        ),
+                    ));
+                }
+            }
+            let Some(group) = Group::of(&l.op) else { continue };
+            let id = (l.op.layer(), group);
+            if let Some(prev) = ident {
+                if prev != id {
+                    findings.push(Finding::error(
+                        "schedule/submit-hazard",
+                        format!(
+                            "submission {sub}: {} shares a batch with {}[layer {:?}] — the \
+                             LOAD/EXEC overlap window would span a host (RAW) dependency; \
+                             a submit boundary is missing between them",
+                            describe(&l.op),
+                            prev.1.name(),
+                            prev.0
+                        ),
+                    ));
+                    // Report each illegal batch once.
+                    break;
+                }
+            }
+            ident = Some(id);
+        }
+        i = j;
+    }
+
+    // --- schedule/seq-order ---
+    for w in stream.windows(2) {
+        if w[1].seq <= w[0].seq {
+            findings.push(Finding::error(
+                "schedule/seq-order",
+                format!("seq {} follows seq {} (record order lost)", w[1].seq, w[0].seq),
+            ));
+        }
+        if w[1].submission < w[0].submission {
+            findings.push(Finding::error(
+                "schedule/seq-order",
+                format!(
+                    "submission {} follows submission {} (flush order lost)",
+                    w[1].submission, w[0].submission
+                ),
+            ));
+        }
+    }
+
+    findings
+}
+
+/// Verify a placement against a model depth: every layer `0..n_layers`
+/// routed exactly once (`placement/gap`, `placement/overlap`) and the
+/// LM-head home — the part owning the highest range, where
+/// `PlacementExec` routes `layer: None` kernels — owning the model's
+/// final layer (`placement/lm-head`).
+pub fn verify_placement(spec: &PlacementSpec, n_layers: usize) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if n_layers == 0 {
+        return findings;
+    }
+    let mut owners = vec![0usize; n_layers];
+    for r in &spec.rules {
+        for l in r.first..=r.last.min(n_layers - 1) {
+            owners[l] += 1;
+        }
+    }
+    for (l, &n) in owners.iter().enumerate() {
+        if n == 0 {
+            findings.push(Finding::error(
+                "placement/gap",
+                format!("layer {l} is not covered by any placement rule"),
+            ));
+        } else if n > 1 {
+            findings.push(Finding::error(
+                "placement/overlap",
+                format!("layer {l} is covered by {n} placement rules"),
+            ));
+        }
+    }
+    if n_layers > 0 {
+        match spec.rules.iter().max_by_key(|r| r.last) {
+            None => findings.push(Finding::error(
+                "placement/lm-head",
+                "empty placement: the LM head has no home part".to_string(),
+            )),
+            Some(home) if !(home.first <= n_layers - 1 && n_layers - 1 <= home.last) => {
+                findings.push(Finding::error(
+                    "placement/lm-head",
+                    format!(
+                        "the LM-head home range {}-{} does not own the final layer {} — \
+                         logits would run on a part serving no live layer",
+                        home.first,
+                        home.last,
+                        n_layers - 1
+                    ),
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    findings
+}

@@ -724,6 +724,16 @@ impl ContinuousBatcher {
         self.committed_pages
     }
 
+    /// Recompute the live set's exact distinct page demand from scratch —
+    /// the quantity [`ContinuousBatcher::committed_pages`] caches between
+    /// live-set changes. Exposed for the `analysis` auditor's
+    /// budget-conservation proof (`audit/budget-conservation`): a cached
+    /// value drifting from this recomputation is exactly the bug class
+    /// the audit exists to catch.
+    pub fn recomputed_committed_pages(&self) -> usize {
+        self.distinct_demand(None)
+    }
+
     /// Sharing/eviction counters: the engine cache's CoW/evict/swap
     /// tallies plus this batcher's admission-level prefix-hit counts.
     pub fn reuse_stats(&self) -> KvReuseStats {
@@ -834,6 +844,10 @@ impl ContinuousBatcher {
             }
             return Ok(Admitted::Deferred(req));
         }
+        // Invariant: `free_sessions() > 0` was checked above and nothing
+        // between the check and here opens a session, so this cannot
+        // fail; a `None` would mean the engine lost track of its own
+        // slot accounting (a bug, not a recoverable condition).
         let session = self
             .engine
             .open_session(sampler)
@@ -1079,6 +1093,11 @@ impl ContinuousBatcher {
         ubatch.extend_from_slice(draft);
         let f = &mut self.active[i];
         let base_len = self.engine.session_pos(&f.session);
+        // Invariant: admission committed this flight's worst-case page
+        // demand (`distinct_demand`), and a verify never extends the
+        // sequence past `prompt + n_out − 1` cached tokens, so the cache
+        // reservation cannot fail here. `audit/budget-conservation`
+        // cross-checks the commitment each round under `--audit`.
         let rows = self
             .engine
             .try_verify_session(&f.session, &ubatch, exec)
@@ -1180,6 +1199,9 @@ impl ContinuousBatcher {
             if done {
                 decoded += 1;
             } else {
+                // Invariant: a flight only reaches `Decoding` after its
+                // prefill (or verify) pushed at least one sampled token,
+                // and tokens are never popped — `last()` always exists.
                 let next = *f.tokens.last().expect("decoding flight has a sampled token");
                 // Drafted tokens are budgeted tokens: the mandatory
                 // decode token stays starvation-exempt, the speculative
@@ -1189,6 +1211,10 @@ impl ContinuousBatcher {
                 if draft.is_empty() {
                     decoded += 1;
                     let f = &mut self.active[i];
+                    // Invariant: same page-commitment argument as
+                    // `verify_draft` — one decode token stays inside the
+                    // admitted worst case, and `logits=true` guarantees
+                    // the engine returns a row.
                     f.logits = self
                         .engine
                         .forward_session(&f.session, next, Phase::Decode, true, exec)
@@ -1227,6 +1253,9 @@ impl ContinuousBatcher {
                 unreachable!("checked above");
             };
             let before = cursor.pos();
+            // Invariant: the whole prompt is inside the worst case
+            // admission committed, so a resumable chunk can never hit a
+            // page reservation failure mid-prefill.
             let logits = self
                 .engine
                 .prefill_partial(&f.session, cursor, max, exec)
@@ -1323,7 +1352,7 @@ pub fn lane_sweep(
 pub fn best_lanes(points: &[ScalingPoint]) -> usize {
     points
         .iter()
-        .min_by(|a, b| a.e2e_s.partial_cmp(&b.e2e_s).unwrap())
+        .min_by(|a, b| a.e2e_s.total_cmp(&b.e2e_s))
         .map(|p| p.lanes)
         .unwrap_or(0)
 }

@@ -65,6 +65,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::analysis::{self, AuditExec, Finding};
 use crate::coordinator::scheduler::{
     AdmitError, Admitted, ContinuousBatcher, FinishReason, RoundStats, SchedPolicy, SessionLog,
 };
@@ -85,8 +86,9 @@ use crate::util::stats::{percentile, Summary};
 pub const ADMIT_SCAN_WINDOW: usize = 8;
 
 /// What each worker thread hands back when it drains: its backend
-/// report, peak resident KV bytes, reuse counters, and round stats.
-type WorkerStats = (BackendReport, usize, KvReuseStats, RoundStats);
+/// report, peak resident KV bytes, reuse counters, round stats, and the
+/// audit findings its run accumulated (always empty without `--audit`).
+type WorkerStats = (BackendReport, usize, KvReuseStats, RoundStats, Vec<Finding>);
 
 /// Serving configuration beyond the request list.
 #[derive(Clone, Debug)]
@@ -141,6 +143,13 @@ pub struct ServeOptions {
     /// Draft proposer (`--drafter ngram[:N]`; default `ngram:3`). Only
     /// meaningful with `speculate > 0`.
     pub drafter: Option<DrafterSpec>,
+    /// Run the static analyzers during the serve (`--audit`): every
+    /// worker's backend is wrapped in [`AuditExec`] (each forward step's
+    /// launch stream runs the plan-time schedule verifier) and the
+    /// cross-subsystem invariant auditor runs between decode rounds.
+    /// Findings surface in [`ServeReport::audit_findings`]; execution is
+    /// bit-identical either way.
+    pub audit: bool,
 }
 
 impl Default for ServeOptions {
@@ -160,6 +169,7 @@ impl Default for ServeOptions {
             admit_window: ADMIT_SCAN_WINDOW,
             speculate: 0,
             drafter: None,
+            audit: false,
         }
     }
 }
@@ -338,6 +348,13 @@ pub struct ServeReport {
     /// Speculation drives this down — each accepted draft token shares
     /// its round's weight stream. `None` for functional backends.
     pub streamed_bytes_per_token: Option<f64>,
+    /// Static-analysis findings merged over workers (`--audit`): every
+    /// schedule-verifier violation from the [`AuditExec`] wrapper plus
+    /// every cross-subsystem auditor violation observed between rounds.
+    /// Always empty without `--audit`; empty **with** `--audit`
+    /// certifies the run against the full rule catalog in
+    /// [`crate::analysis`].
+    pub audit_findings: Vec<Finding>,
 }
 
 /// Serve a batch of requests over `n_workers` native-kernel workers;
@@ -353,6 +370,9 @@ pub fn serve(
         sampler_seed,
         ..ServeOptions::default()
     };
+    // Invariant: the default options carry the native spec, which has no
+    // failure mode in `BackendRegistry::validate`, so with `n_workers
+    // >= 1` this convenience wrapper cannot see a validation error.
     serve_with(weights, requests, n_workers, &opts).expect("native backend always builds")
 }
 
@@ -377,9 +397,14 @@ pub struct StreamingServe {
 }
 
 impl StreamingServe {
-    /// Block until the run drains and return the final report.
+    /// Block until the run drains and return the final report. A panic
+    /// on the serve thread surfaces as a typed error, not a re-panic on
+    /// the caller's thread.
     pub fn join(self) -> Result<ServeReport> {
-        self.handle.join().expect("serve thread panicked")
+        match self.handle.join() {
+            Ok(report) => report,
+            Err(_) => Err(anyhow::anyhow!("serve thread panicked before producing a report")),
+        }
     }
 
     /// Split into the event stream and the report handle — e.g. to
@@ -418,7 +443,9 @@ pub fn serve_streaming(
 }
 
 fn validate_opts(weights: &ModelWeights, n_workers: usize, opts: &ServeOptions) -> Result<()> {
-    assert!(n_workers >= 1);
+    if n_workers == 0 {
+        anyhow::bail!("n_workers must be at least 1");
+    }
     if opts.slots_per_worker == 0 {
         anyhow::bail!("slots_per_worker must be at least 1");
     }
@@ -463,6 +490,17 @@ fn validate_opts(weights: &ModelWeights, n_workers: usize, opts: &ServeOptions) 
     Ok(())
 }
 
+/// Lock the shared admission queue, recovering from poisoning: every
+/// mutation under the lock is a single drain or push of plain request
+/// data, so a worker that panicked while holding the guard cannot have
+/// left the queue half-mutated — the surviving workers keep draining it
+/// rather than cascading the panic.
+fn lock_queue(
+    queue: &Mutex<VecDeque<(Request, Instant)>>,
+) -> std::sync::MutexGuard<'_, VecDeque<(Request, Instant)>> {
+    queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// The serving loop behind [`serve_with`] and [`serve_streaming`]:
 /// worker threads over a shared queue, each reaping cancelled/expired
 /// flights before every admission pass and delivering tokens into
@@ -492,8 +530,16 @@ fn serve_inner(
         let opts = opts.clone();
         let events = events.clone();
         handles.push(thread::spawn(move || -> WorkerStats {
-            let mut exec =
+            // Invariant: `validate_opts` ran `BackendRegistry::validate`
+            // on this exact spec before any worker spawned, and `build`
+            // has no failure mode a passing `validate` does not share.
+            let backend =
                 BackendRegistry::build(&opts.spec).expect("spec validated before spawn");
+            // One code path for both modes: disabled, the wrapper is a
+            // pure passthrough; enabled, every completed step's launch
+            // stream runs the plan-time schedule verifier.
+            let mut exec = AuditExec::new(backend, opts.audit);
+            let mut audit_findings: Vec<Finding> = Vec::new();
             let mut engine = Engine::with_paged_slots(
                 weights,
                 opts.slots_per_worker,
@@ -601,7 +647,7 @@ fn serve_inner(
                     // be delivered. Cancel the backlog; live flights
                     // were reaped above (delivery-closed cancels all).
                     let backlog: Vec<(Request, Instant)> =
-                        queue.lock().unwrap().drain(..).collect();
+                        lock_queue(&queue).drain(..).collect();
                     for (req, enq) in backlog {
                         send_error(
                             req.id,
@@ -627,7 +673,7 @@ fn serve_inner(
                         break;
                     }
                     let window: Vec<(Request, Instant)> = {
-                        let mut q = queue.lock().unwrap();
+                        let mut q = lock_queue(&queue);
                         let take = if opts.admit_window == 0 {
                             q.len()
                         } else {
@@ -651,6 +697,9 @@ fn serve_inner(
                         if batcher.capacity() == 0 {
                             break;
                         }
+                        // Invariant: `order` is a permutation of
+                        // `0..kept.len()`, so each index is taken at
+                        // most once and the slot is still `Some` here.
                         let (req, enq) = kept[idx].take().expect("each index visited once");
                         let queue_s = enq.elapsed().as_secs_f64();
                         // Queue-side teardown: a request cancelled or
@@ -693,7 +742,7 @@ fn serve_inner(
                         }
                     }
                     {
-                        let mut q = queue.lock().unwrap();
+                        let mut q = lock_queue(&queue);
                         for item in kept.into_iter().flatten().rev() {
                             q.push_front(item);
                         }
@@ -708,7 +757,7 @@ fn serve_inner(
                     }
                 }
                 if batcher.n_active() == 0 {
-                    if queue.lock().unwrap().is_empty() {
+                    if lock_queue(&queue).is_empty() {
                         break;
                     }
                     continue;
@@ -717,13 +766,26 @@ fn serve_inner(
                 for log in batcher.decode_round(&mut exec) {
                     send(log, &tx);
                 }
+                if opts.audit {
+                    // Between-round invariant audit: the page pool and
+                    // the batcher's budget view must agree at every
+                    // round boundary — exactly when admission, teardown,
+                    // swap, and speculative rollback have all settled.
+                    audit_findings.extend(analysis::audit(batcher.engine(), &batcher));
+                }
+            }
+            if opts.audit {
+                // Final audit over the drained engine: every flight has
+                // retired, so leaks and stale commitments show here.
+                audit_findings.extend(analysis::audit(batcher.engine(), &batcher));
             }
             // Peak page-granular KV residency on this worker's engine —
             // the quantity `--kv-pages` budgets.
             let kv_peak = batcher.engine().cache.peak_resident_bytes_f16();
             let reuse = batcher.reuse_stats();
             let rounds = batcher.round_stats();
-            (exec.report(), kv_peak, reuse, rounds)
+            audit_findings.extend(exec.take_findings());
+            (exec.into_inner().report(), kv_peak, reuse, rounds, audit_findings)
         }));
     }
     drop(tx);
@@ -733,16 +795,29 @@ fn serve_inner(
     let mut kv_peak_total = 0usize;
     let mut reuse = KvReuseStats::default();
     let mut rounds = RoundStats::default();
+    let mut audit_findings: Vec<Finding> = Vec::new();
     for h in handles {
-        let (report, kv_peak, worker_reuse, worker_rounds) =
-            h.join().expect("worker panicked");
+        // A worker panic is a serve failure, not a caller panic: surface
+        // it as a typed error so the report path stays total.
+        let (report, kv_peak, worker_reuse, worker_rounds, worker_findings) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve worker thread panicked"))?;
         reports.push(report);
         kv_peak_total += kv_peak;
         reuse.merge(&worker_reuse);
         rounds.merge(&worker_rounds);
+        audit_findings.extend(worker_findings);
     }
     completions.sort_by_key(|c| c.id);
-    assert_eq!(completions.len(), n_req, "all requests completed");
+    if completions.len() != n_req {
+        // Every admission outcome — served, rejected, stalled,
+        // cancelled, expired — sends exactly one completion; a mismatch
+        // means a request was silently dropped.
+        anyhow::bail!(
+            "serve drained with {} of {n_req} requests completed",
+            completions.len()
+        );
+    }
 
     let wall_s = started.elapsed().as_secs_f64();
     let total_tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
@@ -813,6 +888,7 @@ fn serve_inner(
         per_backend: merged.parts,
         kv_peak_bytes_f16: kv_peak_total,
         reuse,
+        audit_findings,
         verify_calls,
         draft_tokens,
         draft_accepted,
@@ -1265,6 +1341,30 @@ mod tests {
     fn homogeneous_serve_has_no_sub_reports() {
         let rep = serve(&tiny_weights(), reqs(2), 2, 42);
         assert!(rep.per_backend.is_empty());
+    }
+
+    #[test]
+    fn audited_serve_is_clean_and_bit_identical() {
+        let w = tiny_weights();
+        let opts = ServeOptions {
+            audit: true,
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&w, reqs(4), 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 4);
+        assert!(
+            rep.audit_findings.is_empty(),
+            "clean serve must verify: {:?}",
+            rep.audit_findings
+        );
+        // The wrapper only records; execution is bit-identical.
+        let plain = serve(&w, reqs(4), 1, 42);
+        for (a, b) in rep.completions.iter().zip(&plain.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "audit must not change tokens");
+        }
+        // Without --audit the report carries no findings either way.
+        assert!(plain.audit_findings.is_empty());
     }
 
     #[test]

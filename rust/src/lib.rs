@@ -29,10 +29,16 @@
 //!   roofline GPU comparators (RTX 4090, GTX 1080 Ti, Jetson AGX Orin).
 //! * [`harness`] — the 54-workload grid and one runner per paper table and
 //!   figure (Table 1–2, Fig 11–16, DMA-coalescing ablation).
+//! * [`analysis`] — static analysis over all of the above: a plan-time
+//!   schedule verifier for recorded launch streams, a cross-subsystem
+//!   invariant auditor for the page pool/batcher pair, and the
+//!   [`analysis::AuditExec`] wrapper behind `serve --audit` and the
+//!   `verify-plan` subcommand.
 //!
 //! See `DESIGN.md` for the substitution table (FPGA/ASIC/GPUs → simulator +
 //! calibrated analytic models) and `EXPERIMENTS.md` for paper-vs-measured.
 
+pub mod analysis;
 pub mod baseline;
 pub mod coordinator;
 pub mod harness;

@@ -8,6 +8,7 @@
 //! imax-llm kernels              # Fig 5-9 kernel mapping summary
 //! imax-llm run    [--model tiny|110m] [--scheme Q8_0] [--prompt txt] [--n 32]
 //! imax-llm serve  [--requests 16] [--workers 2] [--kv-pages 64] [--page-size 16]
+//! imax-llm verify-plan [--backend SPEC]   # static schedule/invariant gate
 //! imax-llm build-model --out path [--model tiny|110m] [--scheme Q8_0]
 //! ```
 //!
@@ -17,6 +18,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use imax_llm::analysis;
 use imax_llm::baseline::calibration as cal;
 use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
@@ -313,6 +315,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let deadline_s: Option<f64> = flags.get("deadline-s").map(|s| s.parse()).transpose()?;
     let cancel_after: Option<usize> =
         flags.get("cancel-after").map(|s| s.parse()).transpose()?;
+    let audit = flags.get("audit").map(|v| v == "true").unwrap_or(false);
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -369,6 +372,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         admit_window,
         speculate,
         drafter,
+        audit,
     };
     let rep = match cancel_after {
         // --cancel-after N: stream tokens and fire each request's
@@ -514,7 +518,96 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             None => println!("  [{}] functional only (no modeled costs)", part.backend),
         }
     }
+    if audit {
+        if rep.audit_findings.is_empty() {
+            println!(
+                "audit: clean — schedule verifier on every step, invariant auditor \
+                 between rounds, 0 findings"
+            );
+        } else {
+            println!("audit: {} findings", rep.audit_findings.len());
+            for f in &rep.audit_findings {
+                println!("  {f}");
+            }
+        }
+    }
     Ok(())
+}
+
+/// `verify-plan`: replay a full-feature serve shape under the analysis
+/// stack — static placement verification, the plan-time schedule
+/// verifier on every forward step, and the cross-subsystem invariant
+/// auditor between rounds — and fail (exit nonzero) on any finding.
+fn cmd_verify_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = model_flag(flags)?;
+    let scheme = scheme_flag(flags)?;
+    let spec = backend_flag(flags, "native")?;
+    let mut findings = Vec::new();
+    if let ExecSpec::Placement(p) = &spec {
+        findings.extend(analysis::verify_placement(p, cfg.n_layers));
+    }
+    if findings.is_empty() {
+        let n_req: usize =
+            flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(6);
+        let workers: usize =
+            flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1);
+        let page_size: usize =
+            flags.get("page-size").map(|s| s.parse()).transpose()?.unwrap_or(8);
+        let kv_pages: usize =
+            flags.get("kv-pages").map(|s| s.parse()).transpose()?.unwrap_or(20);
+        let swap_pages: usize =
+            flags.get("swap-pages").map(|s| s.parse()).transpose()?.unwrap_or(8);
+        let speculate: usize =
+            flags.get("speculate").map(|s| s.parse()).transpose()?.unwrap_or(4);
+        eprintln!(
+            "verify-plan: replaying {n_req} requests on {} ({}), backend {} — \
+             prefix cache + {swap_pages}-page swap arena over a {kv_pages}-page \
+             pool, speculation k={speculate}…",
+            cfg.name,
+            scheme.name(),
+            spec.name()
+        );
+        let weights = ModelWeights::random(&cfg, scheme, 2025);
+        let requests: Vec<Request> = (0..n_req)
+            .map(|id| {
+                // Two shared prefix pages plus a templated suffix: the
+                // shape that exercises prefix aliasing, CoW, eviction,
+                // swap, and prompt-lookup drafting all at once.
+                let mut prompt: Vec<u32> =
+                    (0..2 * page_size).map(|i| 2 + (i % 97) as u32).collect();
+                prompt.extend(templated_prompt(id, 4 * TEMPLATE_SPAN, cfg.vocab_size));
+                Request::new(id, prompt, 12)
+            })
+            .collect();
+        let opts = ServeOptions {
+            spec,
+            page_size,
+            kv_pages: Some(kv_pages),
+            prefix_cache: true,
+            swap_pages,
+            speculate,
+            audit: true,
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&weights, requests, workers, &opts)?;
+        eprintln!(
+            "verify-plan: served {} requests / {} tokens; every step's launch \
+             stream verified, pool audited between rounds",
+            rep.completions.len(),
+            rep.total_tokens
+        );
+        findings.extend(rep.audit_findings);
+    }
+    if findings.is_empty() {
+        println!("verify-plan: clean (0 findings)");
+        Ok(())
+    } else {
+        println!("verify-plan: {} findings", findings.len());
+        for f in &findings {
+            println!("  {f}");
+        }
+        bail!("verify-plan found {} schedule/invariant violations", findings.len());
+    }
 }
 
 fn cmd_build_model(flags: &HashMap<String, String>) -> Result<()> {
@@ -557,6 +650,7 @@ fn main() -> Result<()> {
         "kernels" => cmd_kernels(),
         "run" => cmd_run(&flags)?,
         "serve" => cmd_serve(&flags)?,
+        "verify-plan" => cmd_verify_plan(&flags)?,
         "build-model" => cmd_build_model(&flags)?,
         "all" => {
             let grid = exp::eval_grid();
@@ -601,7 +695,7 @@ functional engine (real tiny models, real tokens):
               [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
               [--token-budget N] [--prefill-chunk N] [--admit-window N]
               [--speculate K] [--drafter ngram[:N]]
-              [--deadline-s F] [--cancel-after N]
+              [--deadline-s F] [--cancel-after N] [--audit]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
               continuous batching: sessions are admitted into free slots
@@ -653,7 +747,24 @@ functional engine (real tiny models, real tokens):
               fires each request's cancel handle after N delivered
               tokens — cancelled requests free their non-shared KV pages
               between rounds and the freed budget is re-spent the same
-              round; both print cancelled/expired counts in the report
+              round; both print cancelled/expired counts in the report.
+              --audit runs the static analyzers during the serve: every
+              forward step's recorded launch stream goes through the
+              plan-time schedule verifier (dependency-chain order, submit
+              boundaries vs the dbuf LOAD/EXEC overlap, step markers,
+              batch legality) and the cross-subsystem invariant auditor
+              runs between decode rounds (page refcounts, CoW aliases,
+              budget conservation, prefix-chain hashes); findings print
+              with the report and execution stays bit-identical
+  verify-plan [--backend SPEC] [--model tiny|110m] [--scheme S]
+              [--requests N] [--workers N] [--page-size N] [--kv-pages N]
+              [--swap-pages N] [--speculate K]
+              static plan verification as a gate: verifies placement
+              coverage (every layer routed exactly once, LM head homed on
+              a live range), then replays a full-feature serve shape —
+              prefix cache, swap arena, speculation — under --audit and
+              exits nonzero if any schedule or invariant finding fires
+              (rule catalog: rust/src/analysis/mod.rs)
   build-model --out model.imx3 [--model tiny|110m] [--scheme S]
   kernels     Fig 5-9 kernel-mapping summary
 

@@ -196,6 +196,25 @@ pub struct AdoptedPrefix {
     pub pages: Vec<u32>,
 }
 
+/// One prefix-index entry exported for invariant auditing
+/// ([`KvCache::prefix_chain_records`]): the chain key the entry is
+/// stored under, its parent key, the committed token span, and where the
+/// page's bytes currently live.
+#[derive(Clone, Debug)]
+pub struct PrefixChainRecord {
+    /// Index key the entry is stored under (must equal
+    /// [`chain_key`]`(fingerprint, prev, &tokens)`).
+    pub key: u64,
+    /// Parent chain key (the model fingerprint for chain roots).
+    pub prev: u64,
+    /// The committed token span — exactly one full page of prompt tokens.
+    pub tokens: Vec<u32>,
+    /// Device page backing the entry when resident (`None` = swapped).
+    pub resident_page: Option<u32>,
+    /// Whether the host swap arena holds a copy of the entry's bytes.
+    pub in_arena: bool,
+}
+
 /// Where a cached page's bytes currently live.
 #[derive(Clone, Debug, PartialEq, Eq)]
 enum PageLoc {
@@ -257,8 +276,10 @@ fn fnv1a(h: &mut u64, bytes: &[u8]) {
 
 /// FNV-1a over the chain parent key and a token span, seeded with the
 /// model fingerprint. Collisions are tolerated (entries verify the full
-/// token span and parent key on lookup); the hash only buckets.
-fn chain_key(fingerprint: u64, prev: u64, tokens: &[u32]) -> u64 {
+/// token span and parent key on lookup); the hash only buckets. Public
+/// so the `analysis` auditor can recompute keys independently and prove
+/// chain-hash integrity against [`KvCache::prefix_chain_records`].
+pub fn chain_key(fingerprint: u64, prev: u64, tokens: &[u32]) -> u64 {
     let mut h = FNV_OFFSET;
     fnv1a(&mut h, &fingerprint.to_le_bytes());
     fnv1a(&mut h, &prev.to_le_bytes());
@@ -578,6 +599,38 @@ impl KvCache {
                 p.index.values().map(|e| (e.last_touch, &e.tokens)).collect();
             entries.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(b.1)));
             entries.into_iter().map(|(_, t)| t.clone()).collect()
+        })
+    }
+
+    /// The fingerprint seeding this cache's chain keys (`None` when the
+    /// prefix index is disabled). Chain roots use the fingerprint itself
+    /// as their parent key.
+    pub fn prefix_fingerprint(&self) -> Option<u64> {
+        self.prefix.as_ref().map(|p| p.fingerprint)
+    }
+
+    /// Export the prefix index for invariant auditing: one record per
+    /// entry with the key it is stored under, its parent key, the
+    /// committed token span, and where its bytes live. Sorted by key so
+    /// audits are deterministic despite the hash-map index.
+    pub fn prefix_chain_records(&self) -> Vec<PrefixChainRecord> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| {
+            let mut records: Vec<PrefixChainRecord> = p
+                .index
+                .iter()
+                .map(|(&key, e)| PrefixChainRecord {
+                    key,
+                    prev: e.prev,
+                    tokens: e.tokens.clone(),
+                    resident_page: match e.loc {
+                        PageLoc::Resident(page) => Some(page),
+                        PageLoc::Swapped => None,
+                    },
+                    in_arena: p.arena.contains_key(&key),
+                })
+                .collect();
+            records.sort_by_key(|r| r.key);
+            records
         })
     }
 

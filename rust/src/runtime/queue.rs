@@ -61,7 +61,12 @@ pub struct Launch<P> {
     pub payload: P,
     /// Global record order, monotonic per queue.
     pub seq: u64,
-    /// Index of the submission batch this launch was flushed in.
+    /// Index of the submission batch this launch is flushed in. Stamped
+    /// once, at record time — exact, not provisional: the queue is FIFO,
+    /// `submit()` drains *everything* pending, and an empty submit
+    /// consumes no index, so the batch a pending launch will land in is
+    /// always the queue's current submission counter. `submit()` asserts
+    /// the contract rather than re-stamping.
     pub submission: u64,
 }
 
@@ -89,7 +94,10 @@ impl<P> LaunchQueue<P> {
         }
     }
 
-    /// Record one launch; returns its sequence number.
+    /// Record one launch; returns its sequence number. The launch's
+    /// `submission` index is stamped here and is final — see
+    /// [`Launch::submission`] for why the FIFO total-drain discipline
+    /// makes the record-time value exact.
     pub fn record(&mut self, op: KernelOp, payload: P) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -104,10 +112,11 @@ impl<P> LaunchQueue<P> {
         if self.pending.is_empty() {
             return Vec::new();
         }
-        let mut batch = std::mem::take(&mut self.pending);
-        for l in &mut batch {
-            l.submission = self.n_submissions;
-        }
+        let batch = std::mem::take(&mut self.pending);
+        debug_assert!(
+            batch.iter().all(|l| l.submission == self.n_submissions),
+            "record-time submission stamps must match the batch being flushed"
+        );
         self.n_submissions += 1;
         self.n_launched += batch.len() as u64;
         batch
@@ -199,6 +208,30 @@ mod tests {
         q.submit();
         assert!(q.submit().is_empty());
         assert_eq!(q.submissions(), 1);
+    }
+
+    /// Pins the `Launch::submission` stamping contract: the index is
+    /// assigned at record time and `submit()` never changes it — exact
+    /// because empty submits consume no index and every flush drains the
+    /// whole pending set.
+    #[test]
+    fn submission_stamp_is_final_at_record_time() {
+        let mut q: LaunchQueue<()> = LaunchQueue::new();
+        // Empty submits before anything is pending consume no index, so
+        // the first recorded launch still lands in batch 0.
+        q.submit();
+        q.submit();
+        q.record(lop(0), ());
+        let a = q.submit();
+        assert_eq!(a[0].submission, 0, "first non-empty flush is batch 0");
+        // Interleave another empty submit, then a two-launch batch: both
+        // launches carry the batch index they were recorded under.
+        assert!(q.submit().is_empty());
+        q.record(lop(1), ());
+        q.record(lop(2), ());
+        let b = q.submit();
+        assert!(b.iter().all(|l| l.submission == 1));
+        assert_eq!(q.submissions(), 2);
     }
 
     #[test]

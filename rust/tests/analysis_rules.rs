@@ -1,0 +1,467 @@
+//! Mutation-style property suite for the `analysis/` rule catalog.
+//!
+//! The static verifier and the invariant auditor are only trustworthy if
+//! every rule demonstrably *fires*: a checker that silently passes
+//! corrupted inputs certifies nothing. Each property here builds a known
+//! legal artifact (a launch stream recorded the way the engine records
+//! one, or a pool snapshot taken off a live engine/batcher mid-churn),
+//! applies one seeded corruption from a class keyed to a rule, and
+//! asserts that exact rule reports it. The clean counterparts — a legal
+//! stream, an uncorrupted snapshot, a real engine driven through
+//! [`AuditExec`], a full-feature serve run — must verify with zero
+//! findings.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use imax_llm::analysis::{
+    self, audit_snapshot, verify_placement, verify_schedule, AuditExec, PoolSnapshot,
+};
+use imax_llm::coordinator::{
+    serve_streaming, Admitted, CancelHandle, ContinuousBatcher, Request, ServeOptions,
+};
+use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
+use imax_llm::model::config::LinearKind;
+use imax_llm::model::engine::{Engine, NativeExec};
+use imax_llm::model::{MatvecOp, ModelConfig, ModelWeights, OpKind, Phase, QuantScheme, Sampler};
+use imax_llm::quant::GgmlType;
+use imax_llm::runtime::queue::{KernelOp, Launch};
+use imax_llm::runtime::{ExecSpec, PlacementRule, PlacementSpec};
+use imax_llm::util::proptest_lite::Runner;
+use imax_llm::util::rng::Rng;
+
+fn tiny_weights(seed: u64) -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, seed)
+}
+
+// ---------------------------------------------------------------------
+// Stream construction: record launches exactly the way the engine does
+// (see `ubatch_core`), with submit boundaries at every host dependency.
+// ---------------------------------------------------------------------
+
+struct StreamBuilder {
+    stream: Vec<Launch<()>>,
+    seq: u64,
+    submission: u64,
+}
+
+impl StreamBuilder {
+    fn new() -> StreamBuilder {
+        StreamBuilder { stream: Vec::new(), seq: 0, submission: 0 }
+    }
+
+    fn push(&mut self, op: KernelOp) {
+        self.stream.push(Launch {
+            op,
+            payload: (),
+            seq: self.seq,
+            submission: self.submission,
+        });
+        self.seq += 1;
+    }
+
+    fn submit(&mut self) {
+        self.submission += 1;
+    }
+}
+
+fn lin(kind: LinearKind, layer: Option<usize>, batch: usize) -> KernelOp {
+    KernelOp::Linear {
+        op: MatvecOp {
+            kind: OpKind::Linear(kind),
+            layer,
+            wty: GgmlType::Q8_0,
+            rows: 8,
+            cols: 8,
+        },
+        batch,
+    }
+}
+
+fn attn(kind: OpKind, layer: usize) -> KernelOp {
+    KernelOp::Attn {
+        op: MatvecOp { kind, layer: Some(layer), wty: GgmlType::F16, rows: 8, cols: 8 },
+    }
+}
+
+const N_LAYERS: usize = 3;
+
+/// Append one legal forward step of `width` tokens: per layer
+/// q/k/v | submit | attention + o_proj | submit | gate/up | submit |
+/// down | submit, then LM head | submit | EndStep — the exact boundary
+/// placement of `Engine::ubatch_core`.
+fn push_step(b: &mut StreamBuilder, phase: Phase, pos: usize, width: usize) {
+    b.push(KernelOp::BeginStep { phase, pos });
+    for layer in 0..N_LAYERS {
+        b.push(lin(LinearKind::QProj, Some(layer), width));
+        b.push(lin(LinearKind::KProj, Some(layer), width));
+        b.push(lin(LinearKind::VProj, Some(layer), width));
+        b.submit();
+        for _ in 0..width {
+            b.push(attn(OpKind::AttnScore, layer));
+            b.push(attn(OpKind::AttnMix, layer));
+        }
+        b.push(lin(LinearKind::OProj, Some(layer), width));
+        b.submit();
+        b.push(lin(LinearKind::FfnGate, Some(layer), width));
+        b.push(lin(LinearKind::FfnUp, Some(layer), width));
+        b.submit();
+        b.push(lin(LinearKind::FfnDown, Some(layer), width));
+        b.submit();
+    }
+    b.push(lin(LinearKind::LmHead, None, 1));
+    b.submit();
+    b.push(KernelOp::EndStep { phase, pos: pos + width - 1 });
+    b.submit();
+}
+
+/// A single-token decode step at position 3. With `width == 1` the
+/// layout is fixed: index 0 is BeginStep, layer `L` occupies
+/// `1 + 9L ..= 9 + 9L` (q,k,v,score,mix,o,gate,up,down), the LM head and
+/// EndStep close the stream.
+fn decode_step() -> Vec<Launch<()>> {
+    let mut b = StreamBuilder::new();
+    push_step(&mut b, Phase::Decode, 3, 1);
+    b.stream
+}
+
+fn idx_q(layer: usize) -> usize {
+    1 + 9 * layer
+}
+
+#[test]
+fn legal_streams_verify_clean() {
+    let mut b = StreamBuilder::new();
+    push_step(&mut b, Phase::Prefill, 0, 4);
+    push_step(&mut b, Phase::Decode, 4, 1);
+    let findings = verify_schedule(&b.stream);
+    assert!(findings.is_empty(), "legal two-step stream must be clean: {findings:?}");
+}
+
+/// Every `schedule/*` rule fires on its corruption class. Classes:
+/// 0 step-markers, 1 op-outside-step, 2 op-order, 3 submit-hazard,
+/// 4 batch-legality, 5 seq-order.
+#[test]
+fn seeded_schedule_corruptions_fire_their_rules() {
+    Runner::new("analysis_rules::schedule_corruptions").cases(72).run_noshrink(
+        |rng| (rng.below(6), rng.next_u64()),
+        |&(class, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut s = decode_step();
+            let layer = rng.below(N_LAYERS);
+            let expected = match class {
+                0 => {
+                    match rng.below(3) {
+                        // Unclosed step: drop the EndStep marker.
+                        0 => {
+                            s.pop();
+                        }
+                        // Phase flip between the step's markers.
+                        1 => {
+                            s.last_mut().unwrap().op =
+                                KernelOp::EndStep { phase: Phase::Prefill, pos: 3 };
+                        }
+                        // EndStep position before the step's base.
+                        _ => {
+                            s.last_mut().unwrap().op =
+                                KernelOp::EndStep { phase: Phase::Decode, pos: 2 };
+                        }
+                    }
+                    "schedule/step-markers"
+                }
+                1 => {
+                    // Kernels recorded with no enclosing step.
+                    s.remove(0);
+                    "schedule/op-outside-step"
+                }
+                2 => {
+                    // Swap the gate and down launches of one layer: the
+                    // walk then sees the chain run backwards (down before
+                    // gate/up).
+                    let (a, b) = (idx_q(layer) + 6, idx_q(layer) + 8);
+                    let tmp = s[a].op.clone();
+                    s[a].op = s[b].op.clone();
+                    s[b].op = tmp;
+                    "schedule/op-order"
+                }
+                3 => {
+                    // Merge one layer's attention trio into its q/k/v
+                    // submission: the modeled LOAD/EXEC overlap window
+                    // would now span the host QK-norm/RoPE/cache-store.
+                    let qsub = s[idx_q(layer)].submission;
+                    for i in idx_q(layer) + 3..=idx_q(layer) + 5 {
+                        s[i].submission = qsub;
+                    }
+                    "schedule/submit-hazard"
+                }
+                4 => {
+                    if rng.below(2) == 0 {
+                        // Empty ubatch on one projection.
+                        let i = idx_q(layer) + 6;
+                        if let KernelOp::Linear { batch, .. } = &mut s[i].op {
+                            *batch = 0;
+                        }
+                    } else {
+                        // Mixed ubatch widths inside the q/k/v batch.
+                        let i = idx_q(layer) + 2;
+                        if let KernelOp::Linear { batch, .. } = &mut s[i].op {
+                            *batch = 3;
+                        }
+                    }
+                    "schedule/batch-legality"
+                }
+                _ => {
+                    // Swap two adjacent sequence numbers: record order lost.
+                    let i = rng.below(s.len() - 1);
+                    let (x, y) = (s[i].seq, s[i + 1].seq);
+                    s[i].seq = y;
+                    s[i + 1].seq = x;
+                    "schedule/seq-order"
+                }
+            };
+            let findings = verify_schedule(&s);
+            if findings.iter().any(|f| f.rule == expected) {
+                Ok(())
+            } else {
+                Err(format!("class {class}: expected {expected}, got {findings:?}"))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Invariant auditor: corrupt a snapshot taken off a live engine/batcher
+// mid-decode (live flights, shared prefix pages, budget committed).
+// ---------------------------------------------------------------------
+
+/// Snapshot of a real engine/batcher pair two rounds into serving three
+/// prefix-sharing requests — every auditable structure is populated.
+fn live_snapshot() -> PoolSnapshot {
+    let mut engine = Engine::with_paged_slots(tiny_weights(29), 3, 4, Some(14));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(4);
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
+    let mut exec = NativeExec;
+    for id in 0..3usize {
+        // 8 shared prefix tokens (2 full pages) + a 2-token unique tail.
+        let mut prompt: Vec<u32> = (0..8u32).map(|i| 5 + i).collect();
+        prompt.push(40 + 3 * id as u32);
+        prompt.push(41 + 3 * id as u32);
+        match b.admit(Request::new(id, prompt, 6), Sampler::greedy(), 0.0, &mut exec) {
+            Ok(Admitted::Active) => {}
+            Ok(_) => panic!("request {id} must stay active"),
+            Err(e) => panic!("request {id} must admit: {e}"),
+        }
+    }
+    // Two decode rounds of six: flights stay live mid-decode.
+    b.decode_round(&mut exec);
+    b.decode_round(&mut exec);
+    analysis::snapshot(b.engine(), &b)
+}
+
+/// Every `audit/*` rule fires on its corruption class. Classes:
+/// 0 refcount-conservation, 1/2 free-consistency, 3 alias-validity,
+/// 4 length-coverage, 5 budget-conservation, 6 chain-integrity.
+#[test]
+fn seeded_audit_corruptions_fire_their_rules() {
+    let base = live_snapshot();
+    // The corruptions below only mean something if the baseline is clean
+    // and every structure they target is populated.
+    assert!(audit_snapshot(&base).is_empty(), "live snapshot must audit clean");
+    assert!(base.tables.iter().any(|t| !t.is_empty()), "live flights expected");
+    assert!(!base.free.is_empty(), "spare pages expected");
+    assert!(!base.chains.is_empty(), "committed prefix chains expected");
+
+    let referenced_page = |s: &PoolSnapshot| -> u32 {
+        s.tables
+            .iter()
+            .flat_map(|t| t.iter().copied())
+            .next()
+            .expect("a live flight holds pages")
+    };
+
+    Runner::new("analysis_rules::audit_corruptions").cases(56).run_noshrink(
+        |rng| (rng.below(7), rng.next_u64()),
+        |&(class, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut s = base.clone();
+            let expected = match class {
+                0 => {
+                    // Phantom reference: the count no longer matches the
+                    // block tables + resident prefix entries.
+                    let p = referenced_page(&s);
+                    s.refs[p as usize] += 1;
+                    "audit/refcount-conservation"
+                }
+                1 => {
+                    // Double free.
+                    let p = s.free[rng.below(s.free.len())];
+                    s.free.push(p);
+                    "audit/free-consistency"
+                }
+                2 => {
+                    // A referenced page on the free list.
+                    let p = referenced_page(&s);
+                    s.free.push(p);
+                    "audit/free-consistency"
+                }
+                3 => {
+                    // Kill a page's refcount under a live block table.
+                    let p = referenced_page(&s);
+                    s.refs[p as usize] = 0;
+                    "audit/alias-validity"
+                }
+                4 => {
+                    // A slot claims more cached tokens than its table backs.
+                    let slot = s
+                        .tables
+                        .iter()
+                        .position(|t| !t.is_empty())
+                        .expect("a live flight");
+                    s.lens[slot] += s.page_size;
+                    "audit/length-coverage"
+                }
+                5 => {
+                    // Budget drift between the batcher's cached count and
+                    // the recomputed distinct demand.
+                    s.committed_pages += 1;
+                    "audit/budget-conservation"
+                }
+                _ => {
+                    match rng.below(3) {
+                        // Stored key no longer re-hashes from its parent.
+                        0 => s.chains[0].key ^= 1,
+                        // Span no longer covers exactly one page.
+                        1 => s.chains[0].tokens.push(0),
+                        // Residency and arena backing disagree.
+                        _ => {
+                            let flipped = !s.chains[0].in_arena;
+                            s.chains[0].in_arena = flipped;
+                        }
+                    }
+                    "audit/chain-integrity"
+                }
+            };
+            let findings = audit_snapshot(&s);
+            if findings.iter().any(|f| f.rule == expected) {
+                Ok(())
+            } else {
+                Err(format!("class {class}: expected {expected}, got {findings:?}"))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Placement coverage rules.
+// ---------------------------------------------------------------------
+
+fn rule(first: usize, last: usize) -> PlacementRule {
+    PlacementRule { first, last, spec: ExecSpec::Native }
+}
+
+#[test]
+fn placement_rules_fire_on_gap_overlap_and_lm_head() {
+    let gap = PlacementSpec { rules: vec![rule(0, 1), rule(3, 3)] };
+    let f = verify_placement(&gap, 4);
+    assert!(f.iter().any(|x| x.rule == "placement/gap"), "layer 2 uncovered: {f:?}");
+
+    let overlap = PlacementSpec { rules: vec![rule(0, 2), rule(2, 3)] };
+    let f = verify_placement(&overlap, 4);
+    assert!(f.iter().any(|x| x.rule == "placement/overlap"), "layer 2 double-routed: {f:?}");
+
+    // The highest range (the LM-head home) serves no live layer of a
+    // 4-layer model: logits would run on an idle part.
+    let lm = PlacementSpec { rules: vec![rule(0, 3), rule(8, 15)] };
+    let f = verify_placement(&lm, 4);
+    assert!(f.iter().any(|x| x.rule == "placement/lm-head"), "idle LM-head home: {f:?}");
+
+    let clean = PlacementSpec { rules: vec![rule(0, 1), rule(2, 3)] };
+    assert!(verify_placement(&clean, 4).is_empty());
+    assert!(verify_placement(&clean, 0).is_empty(), "zero-depth model is trivially clean");
+}
+
+// ---------------------------------------------------------------------
+// Clean-path certification: the real engine through AuditExec, and a
+// full-feature serve run, must produce zero findings.
+// ---------------------------------------------------------------------
+
+#[test]
+fn audit_exec_certifies_real_engine_schedules() {
+    let prompt: Vec<u32> = (0..12u32).map(|i| 3 + i).collect();
+    let mut engine = Engine::new(tiny_weights(7));
+    let mut exec = AuditExec::new(NativeExec, true);
+    let out = engine.generate(&prompt, 4, &mut Sampler::greedy(), &mut exec);
+    assert_eq!(out.tokens.len(), 4);
+    assert!(
+        exec.steps_verified() >= 4,
+        "prefill chunks + 3 decode steps, saw {}",
+        exec.steps_verified()
+    );
+    assert!(exec.findings().is_empty(), "real engine must verify clean: {:?}", exec.findings());
+
+    // Disabled wrapper: pure passthrough, bit-identical tokens, nothing
+    // recorded or verified.
+    let mut engine2 = Engine::new(tiny_weights(7));
+    let mut plain = AuditExec::new(NativeExec, false);
+    let out2 = engine2.generate(&prompt, 4, &mut Sampler::greedy(), &mut plain);
+    assert_eq!(out2.tokens, out.tokens, "auditing must not change execution");
+    assert_eq!(plain.steps_verified(), 0);
+}
+
+/// The tentpole acceptance run: prefix cache + host swap + speculation +
+/// mid-decode cancellation + a deadline expiry, all under `--audit`, and
+/// the full rule catalog stays silent.
+#[test]
+fn full_feature_audited_serve_is_clean() {
+    let w = tiny_weights(3);
+    let cfg = ModelConfig::tiny();
+    // 16 shared prefix tokens = 2 pages of 8, then a templated body the
+    // n-gram drafter can bite into.
+    let shared: Vec<u32> = (0..16u32).map(|i| 2 + (i % 97)).collect();
+    let cancels: HashMap<usize, CancelHandle> =
+        [2usize, 5].iter().map(|&id| (id, CancelHandle::new())).collect();
+    let requests: Vec<Request> = (0..8usize)
+        .map(|id| {
+            let mut prompt = shared.clone();
+            prompt.extend(templated_prompt(id, 2 * TEMPLATE_SPAN, cfg.vocab_size));
+            if let Some(h) = cancels.get(&id) {
+                // Long enough that the mid-stream cancel below always
+                // lands many rounds before completion.
+                Request::new(id, prompt, 64).with_cancel(h.clone())
+            } else if id == 7 {
+                Request::new(id, prompt, 6).with_deadline_s(0.0)
+            } else {
+                Request::new(id, prompt, 10)
+            }
+        })
+        .collect();
+    let opts = ServeOptions {
+        page_size: 8,
+        kv_pages: Some(24),
+        prefix_cache: true,
+        swap_pages: 8,
+        speculate: 4,
+        audit: true,
+        ..ServeOptions::default()
+    };
+    let run = serve_streaming(&w, requests, 2, &opts).expect("options validate");
+    let mut seen: HashMap<usize, usize> = HashMap::new();
+    for ev in run.events.iter() {
+        let n = seen.entry(ev.request_id).or_insert(0);
+        *n += 1;
+        if *n == 2 {
+            if let Some(h) = cancels.get(&ev.request_id) {
+                h.cancel();
+            }
+        }
+    }
+    let rep = run.join().expect("serve must drain");
+    assert_eq!(rep.completions.len(), 8);
+    assert!(rep.cancelled >= 2, "both handles fired mid-decode: {rep:?}");
+    assert!(
+        rep.audit_findings.is_empty(),
+        "full-feature churn must audit clean: {:?}",
+        rep.audit_findings
+    );
+}

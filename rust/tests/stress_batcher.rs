@@ -10,20 +10,39 @@
 //! * and the acceptance criterion of the paging work: under the same
 //!   memory budget, page-gated admission runs strictly more concurrent
 //!   short-prompt sequences than the fixed-stride slot-count limit.
+//!
+//! The churn tests additionally run the cross-subsystem invariant
+//! auditor (`imax_llm::analysis::audit` — the `serve --audit` checks)
+//! at **every** round boundary: refcount conservation, free-list
+//! consistency, CoW alias validity, budget conservation, and
+//! prefix-chain hash integrity must hold mid-churn, not just after
+//! drain.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use imax_llm::analysis;
 use imax_llm::coordinator::{
     AdmitError, Admitted, CancelHandle, ContinuousBatcher, FinishReason, Request, SessionLog,
 };
 use imax_llm::model::engine::{Engine, NativeExec};
-use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme, Sampler};
+use imax_llm::model::{DrafterSpec, ModelConfig, ModelWeights, QuantScheme, Sampler};
 use imax_llm::util::rng::Rng;
 use imax_llm::util::stats::percentile;
 
 fn tiny_weights(seed: u64) -> ModelWeights {
     ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, seed)
+}
+
+/// The `serve --audit` invariant check, applied between rounds: the
+/// page pool and the batcher's budget view must agree at every round
+/// boundary, whatever the churn just tore down.
+fn assert_audit_clean(b: &ContinuousBatcher, round: usize) {
+    let findings = analysis::audit(b.engine(), b);
+    assert!(
+        findings.is_empty(),
+        "invariant audit failed at round {round}: {findings:?}"
+    );
 }
 
 #[test]
@@ -75,6 +94,7 @@ fn randomized_arrivals_complete_under_tight_page_budget() {
         // The committed budget never oversubscribes the pool.
         assert!(b.committed_pages() <= total_pages);
         done.extend(b.decode_round(&mut exec));
+        assert_audit_clean(&b, rounds);
     }
 
     let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
@@ -312,6 +332,7 @@ fn templated_stress_with_prefix_sharing_and_swap_completes_cleanly() {
             b.committed_pages()
         );
         done.extend(b.decode_round(&mut exec));
+        assert_audit_clean(&b, rounds);
     }
 
     let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
@@ -438,6 +459,7 @@ fn randomized_cancels_and_deadlines_leak_nothing_under_tight_pool() {
             b.committed_pages()
         );
         done.extend(b.decode_round(&mut exec));
+        assert_audit_clean(&b, rounds);
     }
 
     let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
@@ -538,4 +560,135 @@ fn mid_decode_cancel_frees_budget_for_the_next_round() {
     assert_eq!(logs[0].tokens.len(), 4);
     assert_eq!(b.engine().free_pages(), 4, "nothing leaked");
     assert_eq!(b.committed_pages(), 0);
+}
+
+#[test]
+fn speculative_churn_audits_clean_every_round() {
+    let mut rng = Rng::new(0xD00_DAD5);
+    // Speculative decoding over the oversubscribed shape: prefix sharing
+    // + host swap + a prompt-lookup drafter proposing 3 tokens per
+    // sequence per round, with a slice of the flights cancelled or
+    // expiring mid-decode. Draft rollback returns rejected KV entries
+    // through the paged pool, so every round boundary must still pass
+    // the full invariant audit — this is the `serve --audit` contract
+    // under the nastiest combination of features.
+    let mut engine = Engine::with_paged_slots(tiny_weights(17), 3, 4, Some(10));
+    engine.enable_prefix_cache();
+    engine.set_kv_swap_capacity(6);
+    let total_pages = engine.total_pages();
+    let mut b = ContinuousBatcher::new(engine, 8, Instant::now())
+        .with_speculation(3, DrafterSpec::default());
+    let mut exec = NativeExec;
+
+    let n_req = 24usize;
+    let mut handles: Vec<Option<CancelHandle>> = Vec::with_capacity(n_req);
+    let requests: Vec<Request> = (0..n_req)
+        .map(|id| {
+            let tpl = id % 3;
+            // Two shared template pages plus a repetitive body: the
+            // repetition gives the n-gram drafter real matches, so
+            // accepted *and* rejected drafts both occur.
+            let mut prompt: Vec<u32> = (0..8).map(|i| (100 * (tpl + 1) + i) as u32).collect();
+            prompt.extend((0..8).map(|i| (100 * (tpl + 1) + (i % 4)) as u32));
+            let req = if id % 7 == 6 {
+                handles.push(None);
+                Request::new(id, prompt, 1 + rng.below(5)).with_deadline_s(0.0)
+            } else if rng.next_f64() < 0.3 {
+                let h = CancelHandle::new();
+                handles.push(Some(h.clone()));
+                Request::new(id, prompt, 4 + rng.below(4)).with_cancel(h)
+            } else {
+                handles.push(None);
+                Request::new(id, prompt, 1 + rng.below(5))
+            };
+            req
+        })
+        .collect();
+    let expected_n_out: Vec<usize> = requests.iter().map(|r| r.n_out).collect();
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+
+    let mut done = Vec::new();
+    let mut pending_cancels: Vec<(usize, usize)> = Vec::new(); // (fire_round, id)
+    let mut rounds = 0usize;
+    while !queue.is_empty() || b.n_active() > 0 {
+        rounds += 1;
+        assert!(
+            rounds < 10_000,
+            "scheduler wedged: {} done, {} queued, {} active",
+            done.len(),
+            queue.len(),
+            b.n_active()
+        );
+        pending_cancels.retain(|&(fire, id)| {
+            if fire <= rounds {
+                handles[id].as_ref().unwrap().cancel();
+                false
+            } else {
+                true
+            }
+        });
+        while let Some(req) = queue.pop_front() {
+            let id = req.id;
+            match b.admit(req, Sampler::greedy(), 0.0, &mut exec) {
+                Ok(Admitted::Active) => {
+                    if handles[id].is_some() {
+                        pending_cancels.push((rounds + 1 + rng.below(3), id));
+                    }
+                }
+                Ok(Admitted::Finished(log)) => done.push(log),
+                Ok(Admitted::Deferred(req)) => {
+                    assert!(b.n_active() > 0, "deferred on an idle engine");
+                    queue.push_front(req);
+                    break;
+                }
+                Err(e) => panic!("no request here is oversized, got: {e}"),
+            }
+        }
+        assert!(
+            b.committed_pages() <= total_pages,
+            "commitment {} oversubscribes the {total_pages}-page pool",
+            b.committed_pages()
+        );
+        done.extend(b.decode_round(&mut exec));
+        assert_audit_clean(&b, rounds);
+    }
+
+    let mut ids: Vec<usize> = done.iter().map(|l| l.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n_req).collect::<Vec<_>>(), "each request exactly once");
+    for log in &done {
+        // Cancels race speculation (an accepted run may complete the
+        // request before its cancel fires), so assert consistency of
+        // outcome rather than a fixed per-id reason.
+        match log.reason {
+            FinishReason::Completed => {
+                assert_eq!(log.tokens.len(), expected_n_out[log.id], "request {}", log.id);
+            }
+            FinishReason::Cancelled => {
+                assert!(
+                    log.tokens.len() < expected_n_out[log.id],
+                    "cancelled request {} kept a full token stream",
+                    log.id
+                );
+            }
+            FinishReason::DeadlineExpired => {
+                assert!(log.tokens.is_empty(), "request {} expired before decode", log.id);
+            }
+        }
+    }
+    assert!(
+        done.iter().any(|l| l.verify_calls > 0),
+        "repetitive prompts must draft at least once"
+    );
+    // Pool conservation after drain, then one final audit over the
+    // quiesced pair.
+    assert_eq!(b.committed_pages(), 0);
+    assert_eq!(b.capacity(), 3, "all slots free");
+    let cache = &b.engine().cache;
+    assert_eq!(
+        cache.free_page_count() + cache.cached_resident_pages(),
+        total_pages,
+        "pages are either free or cached — none leaked"
+    );
+    assert_audit_clean(&b, rounds + 1);
 }
