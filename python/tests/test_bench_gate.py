@@ -1,0 +1,126 @@
+"""Unit tests for the CI bench gate (scripts/check_bench_regression.py):
+the per-metric ``gate_fails`` helper's band and floor semantics, plus
+end-to-end exit codes for a floor-gated metric. Stdlib only — no jax."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "scripts",
+    "check_bench_regression.py",
+)
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("check_bench_regression", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+gate = _load()
+
+
+# ---------------------------------------------------------------------------
+# Band gate (the default +/-tolerance semantics)
+# ---------------------------------------------------------------------------
+
+def test_band_lower_passes_inside_tolerance():
+    assert not gate.gate_fails("lower", 100.0, 119.0, 0.20)
+    assert not gate.gate_fails("lower", 100.0, 50.0, 0.20)
+
+
+def test_band_lower_fails_beyond_tolerance():
+    assert gate.gate_fails("lower", 100.0, 121.0, 0.20)
+
+
+def test_band_higher_passes_inside_tolerance():
+    assert not gate.gate_fails("higher", 100.0, 81.0, 0.20)
+    assert not gate.gate_fails("higher", 100.0, 500.0, 0.20)
+
+
+def test_band_higher_fails_beyond_tolerance():
+    assert gate.gate_fails("higher", 100.0, 79.0, 0.20)
+
+
+# ---------------------------------------------------------------------------
+# Floor gate (absolute threshold; baseline value is trajectory-only)
+# ---------------------------------------------------------------------------
+
+def test_floor_higher_gates_on_threshold_not_baseline():
+    # Baseline records 1.882 but the gate is the 1.7 floor: a drop to
+    # 1.75 (a >5% band regression) still passes.
+    assert not gate.gate_fails("higher", 1.882, 1.75, 0.20, floor=1.7)
+    assert gate.gate_fails("higher", 1.882, 1.69, 0.20, floor=1.7)
+
+
+def test_floor_higher_ignores_null_baseline_value():
+    # A staged floor metric (value null) still gates.
+    assert not gate.gate_fails("higher", None, 1.88, 0.20, floor=1.7)
+    assert gate.gate_fails("higher", None, 1.2, 0.20, floor=1.7)
+
+
+def test_floor_lower_is_a_ceiling():
+    assert not gate.gate_fails("lower", 10.0, 4.0, 0.20, floor=5.0)
+    assert gate.gate_fails("lower", 10.0, 6.0, 0.20, floor=5.0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: exit codes through the CLI
+# ---------------------------------------------------------------------------
+
+def _run(tmp_path, baseline, current):
+    bpath = tmp_path / "baseline.json"
+    cpath = tmp_path / "current.json"
+    bpath.write_text(json.dumps({"metrics": baseline}))
+    cpath.write_text(json.dumps(current))
+    return subprocess.run(
+        [sys.executable, SCRIPT, "--baseline", str(bpath), "--current", str(cpath)],
+        capture_output=True,
+        text=True,
+    )
+
+
+FLOOR_BASE = {
+    "kv_quant/stream_bytes_ratio": {
+        "value": 1.8823529411764706,
+        "better": "higher",
+        "check": True,
+        "floor": 1.7,
+    }
+}
+
+
+def test_cli_floor_pass(tmp_path):
+    cur = {
+        "bench": "kv_quant",
+        "metrics": {
+            "stream_bytes_ratio": {"value": 1.75, "better": "higher", "check": True}
+        },
+    }
+    res = _run(tmp_path, FLOOR_BASE, cur)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "ok (floor 1.7)" in res.stdout
+
+
+def test_cli_floor_fail(tmp_path):
+    cur = {
+        "bench": "kv_quant",
+        "metrics": {
+            "stream_bytes_ratio": {"value": 1.6, "better": "higher", "check": True}
+        },
+    }
+    res = _run(tmp_path, FLOOR_BASE, cur)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "REGRESSION" in res.stdout
+
+
+def test_cli_floor_metric_missing_from_run_fails(tmp_path):
+    cur = {"bench": "kv_quant", "metrics": {}}
+    res = _run(tmp_path, FLOOR_BASE, cur)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "MISSING (gated)" in res.stdout

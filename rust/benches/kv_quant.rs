@@ -1,0 +1,195 @@
+//! Bench: quantized KV pages — what q8_0 page encoding buys on the
+//! paper's LOAD-bound decode regime.
+//!
+//! Decode streams the live KV window from host to the LMM every step,
+//! so the cache encoding directly scales the bytes that bound decode.
+//! `--kv-quant q8_0` stores pages as 34-byte q8_0 blocks instead of
+//! f16 rows: 64 bytes per 32 elements become 34, a 64/34 ≈ 1.88× cut
+//! in both resident footprint and per-step stream traffic. This bench
+//! serves the same templated workload through a [`ContinuousBatcher`]
+//! twice — once per [`KvScheme`] — over identically shaped page pools
+//! and compares:
+//!
+//! * peak resident KV bytes (page-granular, dedup-aware; the pool
+//!   allocates the same page count under either scheme, so the ratio
+//!   is exactly the per-page encoding ratio),
+//! * attention KV stream bytes: whole pages covering each step's
+//!   context, K and V, every layer — the transfer unit the host-swap
+//!   and offload paths actually move.
+//!
+//! Both ratios gate at > 1.7 (floor semantics in `BENCH_baseline.json`;
+//! the exact value is 64/34 ≈ 1.882). The shape is already quick
+//! (2-layer 16-vocab model, 4 requests), so `IMAX_BENCH_QUICK` changes
+//! nothing.
+//!
+//! With `BENCH_JSON=path` a machine-readable summary is written for the
+//! CI `bench-smoke` job (`scripts/check_bench_regression.py` gates the
+//! deterministic counters against `BENCH_baseline.json`).
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{Admitted, ContinuousBatcher, Request, SessionLog};
+use imax_llm::harness::workloads::templated_prompt;
+use imax_llm::model::engine::{KernelExec, MatvecExec, NativeExec};
+use imax_llm::model::{
+    Engine, KvScheme, MatvecOp, ModelConfig, ModelWeights, OpKind, QuantScheme, Sampler,
+};
+use imax_llm::tensor::{ActQuant, QTensor};
+use imax_llm::util::bench::JsonMetrics;
+use imax_llm::util::ceil_div;
+use imax_llm::util::report::Table;
+
+const N_REQ: usize = 4;
+const PROMPT_LEN: usize = 40;
+const N_OUT: usize = 24;
+const PAGE_SIZE: usize = 8;
+const N_SLOTS: usize = 4;
+
+/// kv_dim = 32 (one q8_0 block per row): the smallest shape the q8_0
+/// pool accepts, so the bench stays fast while exercising the exact
+/// block geometry the encoding-ratio gates are about.
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kv-quant-bench",
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        d_ffn: 128,
+        vocab_size: 16,
+        qk_norm: true,
+        rope_theta: 1e4,
+        rms_eps: 1e-6,
+        max_seq_len: 128,
+    }
+}
+
+fn weights() -> ModelWeights {
+    ModelWeights::random(&cfg(), QuantScheme::Q8_0, 29)
+}
+
+/// Executes natively and accounts the attention KV stream at page
+/// granularity: one `AttnScore` op per token per layer means one K+V
+/// window transfer of `2 × pages(ctx) × page_size × row_bytes(kv_dim)`
+/// bytes in the pool's encoding — the same sizing as
+/// `KvCache::stream_bytes_per_layer`, observed per executed step.
+struct AttnStream {
+    inner: NativeExec,
+    row_bytes: usize,
+    n_heads: usize,
+    kv_stream_bytes: u64,
+}
+
+impl AttnStream {
+    fn new(scheme: KvScheme) -> AttnStream {
+        AttnStream {
+            inner: NativeExec,
+            row_bytes: scheme.row_bytes(cfg().n_kv_heads * cfg().head_dim),
+            n_heads: cfg().n_heads,
+            kv_stream_bytes: 0,
+        }
+    }
+}
+
+impl MatvecExec for AttnStream {
+    fn linear(&mut self, op: &MatvecOp, w: &QTensor, act: &ActQuant, out: &mut [f32]) {
+        self.inner.linear(op, w, act, out);
+    }
+
+    fn attn(&mut self, op: &MatvecOp) {
+        if matches!(op.kind, OpKind::AttnScore) {
+            let ctx = op.rows / self.n_heads;
+            let pages = ceil_div(ctx, PAGE_SIZE);
+            self.kv_stream_bytes += (2 * pages * PAGE_SIZE * self.row_bytes) as u64;
+        }
+    }
+}
+
+impl KernelExec for AttnStream {}
+
+struct RunStats {
+    peak_resident_bytes: usize,
+    kv_stream_bytes: u64,
+    total_out_tokens: usize,
+}
+
+fn run(scheme: KvScheme) -> RunStats {
+    let mut exec = AttnStream::new(scheme);
+    let engine = Engine::with_paged_slots_kv(weights(), N_SLOTS, PAGE_SIZE, None, scheme);
+    let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+    for id in 0..N_REQ {
+        let req = Request::new(id, templated_prompt(id, PROMPT_LEN, cfg().vocab_size), N_OUT);
+        assert!(matches!(
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+            Ok(Admitted::Active)
+        ));
+    }
+    let mut logs: Vec<SessionLog> = Vec::new();
+    while b.n_active() > 0 {
+        logs.extend(b.decode_round(&mut exec));
+    }
+    RunStats {
+        peak_resident_bytes: b.engine().cache.peak_resident_bytes(),
+        kv_stream_bytes: exec.kv_stream_bytes,
+        total_out_tokens: logs.iter().map(|l| l.tokens.len()).sum(),
+    }
+}
+
+fn main() {
+    let f16 = run(KvScheme::F16);
+    let q8 = run(KvScheme::Q8_0);
+    assert_eq!(f16.total_out_tokens, N_REQ * N_OUT, "f16 run must drain the workload");
+    assert_eq!(q8.total_out_tokens, N_REQ * N_OUT, "q8_0 run must drain the workload");
+
+    // Same request lengths → same page allocation under either scheme,
+    // so both ratios are exactly the per-row encoding ratio 64/34.
+    let resident_ratio = f16.peak_resident_bytes as f64 / q8.peak_resident_bytes as f64;
+    let stream_ratio = f16.kv_stream_bytes as f64 / q8.kv_stream_bytes as f64;
+    let expect = 64.0 / 34.0;
+    assert!(
+        (resident_ratio - expect).abs() < 1e-9,
+        "resident ratio {resident_ratio} must equal 64/34"
+    );
+    assert!(
+        (stream_ratio - expect).abs() < 1e-9,
+        "stream ratio {stream_ratio} must equal 64/34"
+    );
+    assert!(resident_ratio > 1.7, "resident gate: {resident_ratio} <= 1.7");
+    assert!(stream_ratio > 1.7, "stream gate: {stream_ratio} <= 1.7");
+
+    let mut t = Table::new(
+        "quantized KV pages: f16 vs q8_0 pool encoding, same serve shape",
+        &["metric", "f16", "q8_0"],
+    );
+    t.row(vec![
+        "peak resident KV bytes".to_string(),
+        f16.peak_resident_bytes.to_string(),
+        q8.peak_resident_bytes.to_string(),
+    ]);
+    t.row(vec![
+        "attention KV stream bytes".to_string(),
+        f16.kv_stream_bytes.to_string(),
+        q8.kv_stream_bytes.to_string(),
+    ]);
+    t.row(vec![
+        "resident ratio f16/q8_0".to_string(),
+        "-".to_string(),
+        format!("{resident_ratio:.3}"),
+    ]);
+    t.row(vec![
+        "stream ratio f16/q8_0".to_string(),
+        "-".to_string(),
+        format!("{stream_ratio:.3}"),
+    ]);
+    t.print();
+
+    let mut json = JsonMetrics::new("kv_quant");
+    json.push("peak_resident_bytes_f16", f16.peak_resident_bytes as f64, "lower", false);
+    json.push("peak_resident_bytes_q8", q8.peak_resident_bytes as f64, "lower", false);
+    json.push("stream_bytes_f16", f16.kv_stream_bytes as f64, "lower", false);
+    json.push("stream_bytes_q8", q8.kv_stream_bytes as f64, "lower", false);
+    json.push("resident_bytes_ratio_f16_over_q8", resident_ratio, "higher", true);
+    json.push("stream_bytes_ratio", stream_ratio, "higher", true);
+    json.write_if_requested().expect("BENCH_JSON path writable");
+}

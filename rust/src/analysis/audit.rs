@@ -18,7 +18,7 @@
 use crate::analysis::Finding;
 use crate::coordinator::scheduler::ContinuousBatcher;
 use crate::model::engine::Engine;
-use crate::model::kv_cache::{chain_key, PrefixChainRecord};
+use crate::model::kv_cache::{chain_key, KvScheme, PrefixChainRecord};
 use crate::util::ceil_div;
 
 /// Plain-data copy of every quantity the `audit/*` rules relate: pool
@@ -52,6 +52,18 @@ pub struct PoolSnapshot {
     pub committed_pages: usize,
     /// The same quantity recomputed from scratch off the live set.
     pub recomputed_committed_pages: usize,
+    /// Page encoding chosen at pool construction.
+    pub kv_scheme: KvScheme,
+    /// Model layers each page spans (encoding-rule geometry).
+    pub n_layers: usize,
+    /// Elements per K (or V) row (encoding-rule geometry).
+    pub kv_dim: usize,
+    /// Actual host-side backing lengths of the device pool:
+    /// `(k_mirror_cells, v_mirror_cells, k_block_bytes, v_block_bytes)`.
+    pub pool_backing: (usize, usize, usize, usize),
+    /// Stored payload of every swap-arena entry, sorted by chain key:
+    /// `(key, mirror_f32_cells, block_bytes)` counting K and V together.
+    pub arena_payloads: Vec<(u64, usize, usize)>,
 }
 
 /// Copy the auditable state of a live engine/batcher pair. Cheap
@@ -72,6 +84,11 @@ pub fn snapshot(engine: &Engine, batcher: &ContinuousBatcher) -> PoolSnapshot {
         swapped_pages: cache.swapped_out_pages(),
         committed_pages: batcher.committed_pages(),
         recomputed_committed_pages: batcher.recomputed_committed_pages(),
+        kv_scheme: cache.kv_scheme(),
+        n_layers: cache.n_layers(),
+        kv_dim: cache.kv_dim,
+        pool_backing: cache.pool_backing_lens(),
+        arena_payloads: cache.arena_payloads(),
     }
 }
 
@@ -266,6 +283,50 @@ pub fn audit_snapshot(s: &PoolSnapshot) -> Vec<Finding> {
                     ),
                 ));
             }
+        }
+    }
+
+    // --- audit/encoding-consistency: pool backing and every swapped
+    // page's payload are sized exactly by the pool scheme, re-derived
+    // from geometry (n_pages, n_layers, page_size, kv_dim) alone ---
+    let page_cells = s.n_layers * s.page_size * s.kv_dim;
+    let page_q_bytes = s.n_layers * s.page_size * s.kv_scheme.row_bytes(s.kv_dim);
+    let (want_pool_q, want_arena) = match s.kv_scheme {
+        // F16 pools keep the functional f32 storage and no block
+        // arrays; arena pages carry the f32 payload (lossless restore).
+        KvScheme::F16 => (0usize, (2 * page_cells, 0usize)),
+        // Q8_0 pools keep canonical block bytes plus the dequantized
+        // mirror; arena pages carry only the block bytes (the mirror is
+        // rebuilt by dequantization on swap-in).
+        KvScheme::Q8_0 => (s.n_pages * page_q_bytes, (0usize, 2 * page_q_bytes)),
+    };
+    let want_pool =
+        (s.n_pages * page_cells, s.n_pages * page_cells, want_pool_q, want_pool_q);
+    if s.pool_backing != want_pool {
+        findings.push(Finding::error(
+            "audit/encoding-consistency",
+            format!(
+                "{} pool backing is {:?} but the page geometry demands {:?} \
+                 (k_cells, v_cells, k_block_bytes, v_block_bytes)",
+                s.kv_scheme.name(),
+                s.pool_backing,
+                want_pool
+            ),
+        ));
+    }
+    for &(key, f_cells, q_bytes) in &s.arena_payloads {
+        if (f_cells, q_bytes) != want_arena {
+            findings.push(Finding::error(
+                "audit/encoding-consistency",
+                format!(
+                    "swapped page {key:#018x} holds ({f_cells} f32 cells, {q_bytes} \
+                     block bytes) but a {} page must hold ({}, {}) — it cannot \
+                     restore under the pool scheme",
+                    s.kv_scheme.name(),
+                    want_arena.0,
+                    want_arena.1
+                ),
+            ));
         }
     }
 

@@ -67,6 +67,15 @@
 //!   re-hashes from its parent and token span, spans are exactly one
 //!   page, and an entry is swapped exactly when the host arena holds
 //!   its bytes.
+//! - `audit/encoding-consistency` — the pool's host-side backing and
+//!   every swap-arena page's payload are sized exactly by the pool's
+//!   [`crate::model::kv_cache::KvScheme`], re-derived from the page
+//!   geometry alone: f16 pools carry f32 storage and swap the lossless
+//!   mirror; q8_0 pools carry canonical block bytes (plus the
+//!   dequantized mirror) and swap only blocks. Prefix-chain keys hash
+//!   token ids, never page bytes, so `audit/chain-integrity` stays
+//!   scheme-independent and warm hits behave identically under either
+//!   encoding.
 //!
 //! Mutation property tests in `rust/tests/analysis_rules.rs` prove each
 //! rule fires on a seeded corruption; the serve/stress suites prove

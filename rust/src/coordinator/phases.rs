@@ -79,8 +79,9 @@ pub struct InstrumentedExec<E: MatvecExec> {
     /// `overlap` off).
     pub overlap_saved_s: f64,
     /// KV page swap traffic observed through [`MatvecExec::kv_transfer`]
-    /// (prefix-cache eviction/restore), in f16 cache bytes. The modeled
-    /// seconds are already folded into `modeled` via
+    /// (prefix-cache eviction/restore), in the pool's page encoding —
+    /// f16 bytes or q8_0 block bytes, whichever `--kv-quant` selected.
+    /// The modeled seconds are already folded into `modeled` via
     /// [`sim::kv_swap_cost`].
     pub kv_swap_bytes: u64,
     /// Modeled seconds the swap traffic cost (LOAD + DRAIN + HOST).

@@ -73,7 +73,7 @@ pub use crate::coordinator::scheduler::{CancelHandle, Request, TokenEvent};
 use crate::imax::timing::RunBreakdown;
 use crate::model::drafter::DrafterSpec;
 use crate::model::engine::{Engine, DEFAULT_UBATCH};
-use crate::model::kv_cache::{KvReuseStats, DEFAULT_PAGE_SIZE};
+use crate::model::kv_cache::{KvReuseStats, KvScheme, DEFAULT_PAGE_SIZE};
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
 use crate::runtime::backend::{BackendRegistry, BackendReport, ExecSpec};
@@ -143,6 +143,12 @@ pub struct ServeOptions {
     /// Draft proposer (`--drafter ngram[:N]`; default `ngram:3`). Only
     /// meaningful with `speculate > 0`.
     pub drafter: Option<DrafterSpec>,
+    /// KV page encoding (`--kv-quant f16|q8_0`; default f16, the
+    /// bit-exact reference). `q8_0` quantizes pages on commit and
+    /// dequantizes on attention read: ~1.88× less KV residency, swap
+    /// traffic, and modeled attention-stream bytes, at the cost of
+    /// bounded logit drift (see `rust/tests/kv_quant_accuracy.rs`).
+    pub kv_quant: KvScheme,
     /// Run the static analyzers during the serve (`--audit`): every
     /// worker's backend is wrapped in [`AuditExec`] (each forward step's
     /// launch stream runs the plan-time schedule verifier) and the
@@ -169,6 +175,7 @@ impl Default for ServeOptions {
             admit_window: ADMIT_SCAN_WINDOW,
             speculate: 0,
             drafter: None,
+            kv_quant: KvScheme::F16,
             audit: false,
         }
     }
@@ -318,15 +325,20 @@ pub struct ServeReport {
     /// One summed sub-report per distinct backend when the run was
     /// heterogeneous (placement specs); empty for single-backend runs.
     pub per_backend: Vec<BackendReport>,
-    /// Peak resident KV bytes (f16 accounting, page-granular), summed
-    /// over each worker's own peak — an upper bound on simultaneous
-    /// residency, and the quantity `--kv-pages` caps per worker.
-    pub kv_peak_bytes_f16: usize,
+    /// Peak resident KV bytes (page-granular, in the pool's page
+    /// encoding — see [`ServeReport::kv_scheme`]), summed over each
+    /// worker's own peak — an upper bound on simultaneous residency,
+    /// and the quantity `--kv-pages` caps per worker.
+    pub kv_peak_bytes: usize,
+    /// KV page encoding the run used (`"f16"` | `"q8_0"`,
+    /// `--kv-quant`) — makes every KV byte figure in this report and in
+    /// bench JSON self-describing.
+    pub kv_scheme: String,
     /// Prefix-hit / CoW / eviction / swap counters, merged over workers.
     pub reuse: KvReuseStats,
-    /// KV swap traffic charged through the imax DMA cost model (f16
-    /// bytes, both directions; 0 for functional backends, which move no
-    /// modeled bytes).
+    /// KV swap traffic charged through the imax DMA cost model (bytes
+    /// in the pool's page encoding, both directions; 0 for functional
+    /// backends, which move no modeled bytes).
     pub kv_swap_bytes: u64,
     /// Speculative decoding aggregates over all served requests: verify
     /// passes run, drafted tokens proposed, drafted tokens accepted
@@ -481,6 +493,17 @@ fn validate_opts(weights: &ModelWeights, n_workers: usize, opts: &ServeOptions) 
             "drafter only applies to speculative decoding (pass --speculate k)"
         );
     }
+    if opts.kv_quant == KvScheme::Q8_0
+        && weights.cfg.kv_dim() % crate::quant::q8_0::QK8_0 != 0
+    {
+        // Fail fast on the caller's thread instead of panicking inside a
+        // worker's pool construction.
+        anyhow::bail!(
+            "--kv-quant q8_0 needs kv_dim divisible by {} (model has kv_dim {})",
+            crate::quant::q8_0::QK8_0,
+            weights.cfg.kv_dim()
+        );
+    }
     BackendRegistry::validate(&opts.spec)?;
     if let ExecSpec::Placement(p) = &opts.spec {
         // Fail fast on a placement that leaves layers of *this* model
@@ -540,11 +563,12 @@ fn serve_inner(
             // stream runs the plan-time schedule verifier.
             let mut exec = AuditExec::new(backend, opts.audit);
             let mut audit_findings: Vec<Finding> = Vec::new();
-            let mut engine = Engine::with_paged_slots(
+            let mut engine = Engine::with_paged_slots_kv(
                 weights,
                 opts.slots_per_worker,
                 opts.page_size,
                 opts.kv_pages,
+                opts.kv_quant,
             );
             if opts.prefix_cache {
                 engine.enable_prefix_cache();
@@ -781,7 +805,7 @@ fn serve_inner(
             }
             // Peak page-granular KV residency on this worker's engine —
             // the quantity `--kv-pages` budgets.
-            let kv_peak = batcher.engine().cache.peak_resident_bytes_f16();
+            let kv_peak = batcher.engine().cache.peak_resident_bytes();
             let reuse = batcher.reuse_stats();
             let rounds = batcher.round_stats();
             audit_findings.extend(exec.take_findings());
@@ -886,7 +910,8 @@ fn serve_inner(
         streamed_bytes: merged.streamed_bytes,
         streamed_bytes_per_token,
         per_backend: merged.parts,
-        kv_peak_bytes_f16: kv_peak_total,
+        kv_peak_bytes: kv_peak_total,
+        kv_scheme: opts.kv_quant.name().to_string(),
         reuse,
         audit_findings,
         verify_calls,
@@ -1003,11 +1028,12 @@ mod tests {
         // configured 6-page budget.
         let cfg = ModelConfig::tiny();
         let pool_bytes = 2 * 6 * cfg.n_layers * 4 * cfg.kv_dim() * 2;
-        assert!(rep.kv_peak_bytes_f16 > 0, "peak residency reported");
+        assert_eq!(rep.kv_scheme, "f16", "default pool encoding");
+        assert!(rep.kv_peak_bytes > 0, "peak residency reported");
         assert!(
-            rep.kv_peak_bytes_f16 <= pool_bytes,
+            rep.kv_peak_bytes <= pool_bytes,
             "{} exceeds the {pool_bytes}-byte budget",
-            rep.kv_peak_bytes_f16
+            rep.kv_peak_bytes
         );
         // Same tokens as a run with a fully backed cache.
         let free = serve(&w, reqs(6), 1, 42);
@@ -1015,6 +1041,64 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.tokens, b.tokens, "page budget must not change tokens");
         }
+    }
+
+    #[test]
+    fn kv_quant_serve_completes_and_reports_scheme() {
+        // tiny has kv_dim 128 (32-aligned), so q8_0 pools build. The
+        // quantized run must serve every request to completion and
+        // report a page-granular peak ~1.88× below the f16 run's on the
+        // same workload (exact block math: 34/64 bytes per element
+        // pair). Token equality is NOT asserted — q8_0 deliberately
+        // breaks bit-identity; `rust/tests/kv_quant_accuracy.rs` bounds
+        // the drift instead.
+        let w = tiny_weights();
+        let f16 = serve(&w, reqs(4), 1, 42);
+        let opts = ServeOptions {
+            kv_quant: KvScheme::Q8_0,
+            ..ServeOptions::default()
+        };
+        let q8 = serve_with(&w, reqs(4), 1, &opts).unwrap();
+        assert_eq!(q8.completions.len(), 4);
+        for c in &q8.completions {
+            assert!(c.error.is_none());
+            assert_eq!(c.tokens.len(), 3);
+        }
+        assert_eq!(q8.kv_scheme, "q8_0");
+        assert_eq!(f16.kv_scheme, "f16");
+        assert!(q8.kv_peak_bytes > 0);
+        let ratio = f16.kv_peak_bytes as f64 / q8.kv_peak_bytes as f64;
+        assert!(
+            (ratio - 64.0 / 34.0).abs() < 1e-9,
+            "same page-granular peak, compressed encoding: ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn kv_quant_rejects_unaligned_kv_dim() {
+        // 8-dim KV heads cannot form q8_0 blocks (QK8_0 = 32); the
+        // option must fail fast at validation, not panic in a worker.
+        let cfg = ModelConfig {
+            name: "kv-unaligned",
+            n_layers: 1,
+            d_model: 16,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 8,
+            d_ffn: 32,
+            vocab_size: 16,
+            qk_norm: false,
+            rope_theta: 1e4,
+            rms_eps: 1e-6,
+            max_seq_len: 32,
+        };
+        let w = ModelWeights::random(&cfg, QuantScheme::Q8_0, 5);
+        let opts = ServeOptions {
+            kv_quant: KvScheme::Q8_0,
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&w, reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("divisible"), "{err}");
     }
 
     #[test]

@@ -29,8 +29,8 @@ use imax_llm::harness::experiments as exp;
 use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
 use imax_llm::model::{
-    DrafterSpec, Engine, ModelConfig, ModelWeights, QuantScheme, Sampler, DEFAULT_PAGE_SIZE,
-    DEFAULT_UBATCH,
+    DrafterSpec, Engine, KvScheme, ModelConfig, ModelWeights, QuantScheme, Sampler,
+    DEFAULT_PAGE_SIZE, DEFAULT_UBATCH,
 };
 use imax_llm::power;
 use imax_llm::runtime::{BackendRegistry, ExecSpec};
@@ -224,6 +224,12 @@ fn backend_flag(flags: &HashMap<String, String>, default: &str) -> Result<ExecSp
     ExecSpec::parse(name)
 }
 
+fn kv_quant_flag(flags: &HashMap<String, String>) -> Result<KvScheme> {
+    let name = flags.get("kv-quant").map(|s| s.as_str()).unwrap_or("f16");
+    KvScheme::by_name(name)
+        .with_context(|| format!("unknown KV page encoding '{name}' (use f16|q8_0)"))
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = model_flag(flags)?;
     let scheme = scheme_flag(flags)?;
@@ -316,6 +322,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let cancel_after: Option<usize> =
         flags.get("cancel-after").map(|s| s.parse()).transpose()?;
     let audit = flags.get("audit").map(|v| v == "true").unwrap_or(false);
+    let kv_quant = kv_quant_flag(flags)?;
     match kv_pages {
         Some(pages) => eprintln!(
             "building {} ({}), backend {}, {workers} workers × {slots} sessions, \
@@ -372,6 +379,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         admit_window,
         speculate,
         drafter,
+        kv_quant,
         audit,
     };
     let rep = match cancel_after {
@@ -434,8 +442,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     println!(
-        "peak resident KV (f16, page-granular, summed per worker): {}",
-        imax_llm::util::human_bytes(rep.kv_peak_bytes_f16)
+        "peak resident KV ({} pages, page-granular, summed per worker): {}",
+        rep.kv_scheme,
+        imax_llm::util::human_bytes(rep.kv_peak_bytes)
     );
     if prefix_cache {
         let r = &rep.reuse;
@@ -559,13 +568,15 @@ fn cmd_verify_plan(flags: &HashMap<String, String>) -> Result<()> {
             flags.get("swap-pages").map(|s| s.parse()).transpose()?.unwrap_or(8);
         let speculate: usize =
             flags.get("speculate").map(|s| s.parse()).transpose()?.unwrap_or(4);
+        let kv_quant = kv_quant_flag(flags)?;
         eprintln!(
             "verify-plan: replaying {n_req} requests on {} ({}), backend {} — \
              prefix cache + {swap_pages}-page swap arena over a {kv_pages}-page \
-             pool, speculation k={speculate}…",
+             {} pool, speculation k={speculate}…",
             cfg.name,
             scheme.name(),
-            spec.name()
+            spec.name(),
+            kv_quant.name()
         );
         let weights = ModelWeights::random(&cfg, scheme, 2025);
         let requests: Vec<Request> = (0..n_req)
@@ -586,6 +597,7 @@ fn cmd_verify_plan(flags: &HashMap<String, String>) -> Result<()> {
             prefix_cache: true,
             swap_pages,
             speculate,
+            kv_quant,
             audit: true,
             ..ServeOptions::default()
         };
@@ -694,7 +706,7 @@ functional engine (real tiny models, real tokens):
               [--page-size N] [--kv-pages N]
               [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
               [--token-budget N] [--prefill-chunk N] [--admit-window N]
-              [--speculate K] [--drafter ngram[:N]]
+              [--speculate K] [--drafter ngram[:N]] [--kv-quant f16|q8_0]
               [--deadline-s F] [--cancel-after N] [--audit]
               [--model tiny|110m] [--scheme S]
               [--backend SPEC]   (default native)
@@ -748,6 +760,17 @@ functional engine (real tiny models, real tokens):
               tokens — cancelled requests free their non-shared KV pages
               between rounds and the freed budget is re-spent the same
               round; both print cancelled/expired counts in the report.
+              --kv-quant picks the KV page encoding: f16 (default) is
+              the bit-exact reference; q8_0 quantizes each committed
+              token's K/V rows into q8_0 blocks and dequantizes on
+              attention read — ~1.88x less KV residency, swap traffic,
+              and modeled attention-stream bytes, at the cost of a
+              small bounded logit drift (sampled tokens can differ from
+              the f16 reference; rust/tests/kv_quant_accuracy.rs bounds
+              the drift and checks greedy-token agreement). Needs
+              kv_dim divisible by 32. Prefix-cache keys hash token ids,
+              not page bytes, so warm hits behave identically under
+              either encoding.
               --audit runs the static analyzers during the serve: every
               forward step's recorded launch stream goes through the
               plan-time schedule verifier (dependency-chain order, submit
@@ -758,7 +781,7 @@ functional engine (real tiny models, real tokens):
               with the report and execution stays bit-identical
   verify-plan [--backend SPEC] [--model tiny|110m] [--scheme S]
               [--requests N] [--workers N] [--page-size N] [--kv-pages N]
-              [--swap-pages N] [--speculate K]
+              [--swap-pages N] [--speculate K] [--kv-quant f16|q8_0]
               static plan verification as a gate: verifies placement
               coverage (every layer routed exactly once, LM head homed on
               a live range), then replays a full-feature serve shape —

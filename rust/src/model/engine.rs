@@ -46,11 +46,10 @@
 
 use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
 use crate::model::graph::{KvSwapDir, MatvecOp, OpKind, Phase};
-use crate::model::kv_cache::{AdoptedPrefix, CacheError, KvCache};
+use crate::model::kv_cache::{AdoptedPrefix, CacheError, KvCache, KvScheme};
 use crate::model::ops;
 use crate::model::sampler::Sampler;
 use crate::model::weights::ModelWeights;
-use crate::quant::GgmlType;
 use crate::tensor::{matvec_into, ActQuant, QTensor};
 
 /// Default prefill chunk size (llama.cpp's `n_ubatch` spirit; bounds the
@@ -85,7 +84,8 @@ pub trait MatvecExec {
     fn end_step(&mut self, _phase: Phase, _pos: usize) {}
 
     /// Observe a host↔device KV page swap (prefix-cache eviction or
-    /// restore) of `bytes` f16 cache bytes. Instrumented backends charge
+    /// restore) of `bytes` cache bytes in the pool's page encoding
+    /// (f16 or q8_0 blocks). Instrumented backends charge
     /// this through the DMA transfer-mode cost model; the default ignores
     /// it (functional backends move no real bytes — the cache is
     /// host-resident).
@@ -345,10 +345,25 @@ impl Engine {
         page_size: usize,
         n_pages: Option<usize>,
     ) -> Engine {
+        Engine::with_paged_slots_kv(weights, n_slots, page_size, n_pages, KvScheme::F16)
+    }
+
+    /// [`Engine::with_paged_slots`] with an explicit KV page encoding.
+    /// `KvScheme::F16` is the bit-exact reference; `KvScheme::Q8_0`
+    /// quantizes pages on commit and dequantizes on attention read,
+    /// trading bounded logit drift (see `rust/tests/kv_quant_accuracy.rs`)
+    /// for ~1.88× less KV residency and attention-stream traffic.
+    pub fn with_paged_slots_kv(
+        weights: ModelWeights,
+        n_slots: usize,
+        page_size: usize,
+        n_pages: Option<usize>,
+        kv_scheme: KvScheme,
+    ) -> Engine {
         let cfg = &weights.cfg;
         let pages =
             n_pages.unwrap_or_else(|| KvCache::full_backing_pages(cfg, n_slots, page_size));
-        let cache = KvCache::paged(cfg, n_slots, page_size, pages);
+        let cache = KvCache::paged_with_scheme(cfg, n_slots, page_size, pages, kv_scheme);
         Engine::with_cache(weights, cache)
     }
 
@@ -775,6 +790,10 @@ impl Engine {
         let head_dim = cfg.head_dim;
         let groups = cfg.gqa_groups();
         let scale = 1.0 / (head_dim as f32).sqrt();
+        // The attention kernels' weight side is the KV cache itself, so
+        // their recorded format follows the pool's page encoding — the
+        // cost model then charges the compressed stream under q8_0.
+        let kv_elem = self.cache.kv_scheme().elem_type();
 
         // Residual streams, one per ubatch token.
         let mut xs: Vec<Vec<f32>> =
@@ -877,7 +896,7 @@ impl Engine {
                 exec.attn(&MatvecOp {
                     kind: OpKind::AttnScore,
                     layer: Some(layer),
-                    wty: GgmlType::F16,
+                    wty: kv_elem,
                     rows: cfg.n_heads * ctx,
                     cols: head_dim,
                 });
@@ -910,7 +929,7 @@ impl Engine {
                 exec.attn(&MatvecOp {
                     kind: OpKind::AttnMix,
                     layer: Some(layer),
-                    wty: GgmlType::F16,
+                    wty: kv_elem,
                     rows: cfg.n_heads * head_dim,
                     cols: ctx,
                 });

@@ -10,6 +10,7 @@
 //! the real engine.
 
 use crate::model::config::{LinearKind, ModelConfig, QuantScheme};
+use crate::model::kv_cache::KvScheme;
 use crate::quant::GgmlType;
 use crate::tensor::ActQuant;
 
@@ -138,9 +139,26 @@ impl MatvecOp {
 /// `pos` (0-based; attention sees `pos + 1` cached entries including the
 /// current token). `logits` selects whether the LM head runs (llama.cpp
 /// computes logits for the last prefill token and every decode token).
+/// The KV cache is priced f16 (the reference [`KvScheme::F16`] pool);
+/// see [`ops_for_token_kv`] for encoding-aware attention pricing.
 pub fn ops_for_token(
     cfg: &ModelConfig,
     scheme: QuantScheme,
+    pos: usize,
+    logits: bool,
+) -> Vec<MatvecOp> {
+    ops_for_token_kv(cfg, scheme, KvScheme::F16, pos, logits)
+}
+
+/// [`ops_for_token`] parameterized over the KV pool's page encoding:
+/// the attention score/mix ops carry `kv.elem_type()` as their weight
+/// format, so their streamed-byte and LOAD-cost accounting charge the
+/// compressed size under [`KvScheme::Q8_0`] (the same `wty` the engine
+/// records through `MatvecExec::attn`).
+pub fn ops_for_token_kv(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    kv: KvScheme,
     pos: usize,
     logits: bool,
 ) -> Vec<MatvecOp> {
@@ -163,20 +181,21 @@ pub fn ops_for_token(
             });
         }
         // Attention over the KV cache: n_heads score-dots of length
-        // head_dim per cached position, then the value mix. KV cache is
-        // FP16 (llama.cpp default; paper offloads these to the FP16
-        // kernel).
+        // head_dim per cached position, then the value mix. The weight
+        // side is the cache itself, so its format follows the pool's
+        // page encoding (f16 reference, or q8_0 blocks at 8.5
+        // bits/element).
         ops.push(MatvecOp {
             kind: OpKind::AttnScore,
             layer: l,
-            wty: GgmlType::F16,
+            wty: kv.elem_type(),
             rows: cfg.n_heads * ctx,
             cols: cfg.head_dim,
         });
         ops.push(MatvecOp {
             kind: OpKind::AttnMix,
             layer: l,
-            wty: GgmlType::F16,
+            wty: kv.elem_type(),
             rows: cfg.n_heads * cfg.head_dim,
             cols: ctx,
         });
@@ -218,13 +237,25 @@ pub fn ops_for_workload(
     n_in: usize,
     n_out: usize,
 ) -> Vec<(Phase, Vec<MatvecOp>)> {
+    ops_for_workload_kv(cfg, scheme, KvScheme::F16, n_in, n_out)
+}
+
+/// [`ops_for_workload`] with encoding-aware attention pricing (see
+/// [`ops_for_token_kv`]).
+pub fn ops_for_workload_kv(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    kv: KvScheme,
+    n_in: usize,
+    n_out: usize,
+) -> Vec<(Phase, Vec<MatvecOp>)> {
     let mut steps = Vec::with_capacity(n_in + n_out);
     for pos in 0..n_in {
         let logits = pos + 1 == n_in; // last prefill token produces logits
-        steps.push((Phase::Prefill, ops_for_token(cfg, scheme, pos, logits)));
+        steps.push((Phase::Prefill, ops_for_token_kv(cfg, scheme, kv, pos, logits)));
     }
     for pos in n_in..n_in + n_out {
-        steps.push((Phase::Decode, ops_for_token(cfg, scheme, pos, true)));
+        steps.push((Phase::Decode, ops_for_token_kv(cfg, scheme, kv, pos, true)));
     }
     steps
 }

@@ -67,13 +67,28 @@
 //!
 //! Cache exhaustion is a typed [`CacheError`] (carrying slot, current
 //! length and the failed requirement) so schedulers can defer admission
-//! instead of unwinding. The functional engine keeps K/V in f32; the
-//! *byte accounting* used by the timing path models the llama.cpp
-//! default of an FP16 cache (see `MatvecOp::weight_bytes` with
-//! `GgmlType::F16`) at page granularity — and is **dedup-aware**:
-//! [`KvCache::resident_bytes_f16`] counts each physical page once however
+//! instead of unwinding.
+//!
+//! **Page encoding** is chosen at pool construction ([`KvScheme`]):
+//!
+//! * [`KvScheme::F16`] (default) — the functional engine keeps K/V in
+//!   f32 and the *byte accounting* used by the timing path models the
+//!   llama.cpp default of an FP16 cache (see `MatvecOp::weight_bytes`
+//!   with `GgmlType::F16`). Bit-exact reference behaviour.
+//! * [`KvScheme::Q8_0`] — [`KvCache::store`] quantizes each token's K/V
+//!   row into q8_0 blocks (the canonical stored bytes) and keeps an f32
+//!   *dequantized mirror* that [`KvCache::k_at`]/[`KvCache::v_at`] read,
+//!   so attention consumes exactly what a q8_0 decode kernel would. All
+//!   byte accounting, swap traffic, and the modeled attention stream
+//!   charge the compressed size (8.5 bits/element vs 16 — a 1.88× cut
+//!   for 32-aligned `kv_dim`). Numerics deliberately drift from f16 by
+//!   the quantization error; `rust/tests/kv_quant_accuracy.rs` bounds
+//!   that drift.
+//!
+//! Accounting is page-granular and **dedup-aware**:
+//! [`KvCache::resident_bytes`] counts each physical page once however
 //! many block tables alias it, while
-//! [`KvCache::logical_resident_bytes_f16`] counts per-slot references
+//! [`KvCache::logical_resident_bytes`] counts per-slot references
 //! (what exclusive ownership would cost), so the difference is the bytes
 //! prefix sharing keeps off the device.
 
@@ -81,12 +96,62 @@ use std::collections::HashMap;
 use std::fmt;
 
 use crate::model::config::{ModelConfig, QuantScheme};
+use crate::quant::{q8_0, GgmlType};
 use crate::util::ceil_div;
 
 /// Default page size in tokens. Small enough that short sequences waste
 /// little slack in their last page, large enough that the block table
 /// indirection stays cold next to the attention arithmetic.
 pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Encoding of the cached K/V pages, chosen at pool construction.
+///
+/// `F16` is the bit-exact reference (the llama.cpp default the paper's
+/// FP16 attention kernels stream); `Q8_0` stores each token's K and V
+/// rows as q8_0 blocks — 8.5 bits/element instead of 16 — so resident
+/// bytes, swap traffic, and the modeled per-round attention stream all
+/// shrink by ~1.88× at the cost of bounded quantization drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvScheme {
+    /// FP16 byte accounting, f32 functional storage (exact reference).
+    F16,
+    /// q8_0-blocked pages: quantize on commit, dequantize on read.
+    Q8_0,
+}
+
+impl KvScheme {
+    /// Parse a CLI name (`f16` | `q8_0`).
+    pub fn by_name(name: &str) -> Option<KvScheme> {
+        match name.to_ascii_lowercase().as_str() {
+            "f16" | "fp16" => Some(KvScheme::F16),
+            "q8_0" | "q8" => Some(KvScheme::Q8_0),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvScheme::F16 => "f16",
+            KvScheme::Q8_0 => "q8_0",
+        }
+    }
+
+    /// The element format whose sizing this scheme charges — and, for
+    /// `Q8_0`, whose block codec the store path actually runs. Feeds the
+    /// attention ops' `MatvecOp::wty` so the cost model prices the
+    /// compressed stream end-to-end.
+    pub fn elem_type(self) -> GgmlType {
+        match self {
+            KvScheme::F16 => GgmlType::F16,
+            KvScheme::Q8_0 => GgmlType::Q8_0,
+        }
+    }
+
+    /// Encoded bytes of one `kv_dim`-element K (or V) row.
+    pub fn row_bytes(self, kv_dim: usize) -> usize {
+        self.elem_type().row_bytes(kv_dim)
+    }
+}
 
 /// Typed KV-cache exhaustion/contract error. Every variant carries the
 /// slot, its current length, and what was asked for, so callers (and
@@ -145,8 +210,9 @@ impl fmt::Display for CacheError {
 impl std::error::Error for CacheError {}
 
 /// Counters for the sharing/eviction machinery, merged across workers
-/// into the serve report. All byte quantities use the f16 cache
-/// accounting (the same basis as [`KvCache::resident_bytes_f16`]).
+/// into the serve report. All byte quantities use the pool's encoded
+/// page size (the same scheme-aware basis as
+/// [`KvCache::resident_bytes`]).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct KvReuseStats {
     /// Admissions that aliased at least one cached prefix page.
@@ -161,8 +227,9 @@ pub struct KvReuseStats {
     pub swap_out_pages: usize,
     /// Pages swapped back in from the arena on a prefix hit.
     pub swap_in_pages: usize,
-    /// Modeled f16 bytes moved host↔device by swap traffic (both
-    /// directions).
+    /// Modeled bytes moved host↔device by swap traffic (both
+    /// directions), in the pool's page encoding — f16 page bytes for
+    /// [`KvScheme::F16`], q8_0 block bytes for [`KvScheme::Q8_0`].
     pub swap_bytes: usize,
 }
 
@@ -235,11 +302,20 @@ struct PrefixEntry {
     last_touch: u64,
 }
 
-/// Host-side copy of one evicted page (all layers, K and V).
+/// Host-side copy of one evicted page (all layers, K and V). The
+/// payload is the pool's *canonical* storage: f32 mirror cells under
+/// [`KvScheme::F16`] (lossless restore of the exact reference), q8_0
+/// block bytes under [`KvScheme::Q8_0`] (the f32 mirror is rebuilt by
+/// dequantization on swap-in — bit-exact, because the mirror was the
+/// dequantization of those same blocks before eviction).
 #[derive(Clone, Debug)]
 struct SwapPage {
+    /// f32 cells (F16 pools; empty under Q8_0).
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Encoded q8_0 block bytes (Q8_0 pools; empty under F16).
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
 }
 
 /// The prefix-sharing state: content-addressed index + host swap arena.
@@ -342,9 +418,20 @@ pub struct KvCache {
     /// Lifetime high-water mark of owned pages (exact peak residency,
     /// updated at allocation so it can't miss pages freed mid-round).
     peak_used: usize,
-    /// `[n_pages][n_layers][page_size][kv_dim]`, row-major.
+    /// `[n_pages][n_layers][page_size][kv_dim]`, row-major. Under
+    /// [`KvScheme::F16`] this is the functional storage; under
+    /// [`KvScheme::Q8_0`] it is the *dequantized mirror* of `k_q`/`v_q`
+    /// (what attention reads — exactly the q8_0 roundtrip of what was
+    /// stored).
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Canonical q8_0 block bytes,
+    /// `[n_pages][n_layers][page_size][row_bytes(kv_dim)]`, row-major
+    /// (empty under [`KvScheme::F16`]).
+    k_q: Vec<u8>,
+    v_q: Vec<u8>,
+    /// Page encoding chosen at construction.
+    scheme: KvScheme,
     n_layers: usize,
     /// Prefix index + swap arena (None: plain exclusive paging).
     prefix: Option<PrefixState>,
@@ -383,11 +470,36 @@ impl KvCache {
     /// that is the point of paging; admission control keeps concurrent
     /// sequences inside the budget.
     pub fn paged(cfg: &ModelConfig, n_slots: usize, page_size: usize, n_pages: usize) -> KvCache {
+        KvCache::paged_with_scheme(cfg, n_slots, page_size, n_pages, KvScheme::F16)
+    }
+
+    /// [`KvCache::paged`] with an explicit page encoding. `Q8_0` requires
+    /// `kv_dim` to be a multiple of the q8_0 block size (32) — true of
+    /// every shipping configuration — so each K/V row packs into whole
+    /// blocks with no padding ambiguity.
+    pub fn paged_with_scheme(
+        cfg: &ModelConfig,
+        n_slots: usize,
+        page_size: usize,
+        n_pages: usize,
+        scheme: KvScheme,
+    ) -> KvCache {
         assert!(n_slots >= 1, "need at least one session slot");
         assert!(page_size >= 1, "page_size must be at least 1");
         assert!(n_pages >= 1, "need at least one page");
         let kv_dim = cfg.kv_dim();
+        if scheme == KvScheme::Q8_0 {
+            assert!(
+                kv_dim % q8_0::QK8_0 == 0,
+                "q8_0 KV pages need kv_dim divisible by {} (got {kv_dim})",
+                q8_0::QK8_0,
+            );
+        }
         let cells = n_pages * cfg.n_layers * page_size * kv_dim;
+        let q_bytes = match scheme {
+            KvScheme::F16 => 0,
+            KvScheme::Q8_0 => n_pages * cfg.n_layers * page_size * scheme.row_bytes(kv_dim),
+        };
         KvCache {
             kv_dim,
             max_seq: cfg.max_seq_len,
@@ -402,12 +514,20 @@ impl KvCache {
             peak_used: 0,
             k: vec![0.0; cells],
             v: vec![0.0; cells],
+            k_q: vec![0; q_bytes],
+            v_q: vec![0; q_bytes],
+            scheme,
             n_layers: cfg.n_layers,
             prefix: None,
             stats: KvReuseStats::default(),
             pending_swap_in_bytes: 0,
             pending_swap_out_bytes: 0,
         }
+    }
+
+    /// The page encoding chosen at construction.
+    pub fn kv_scheme(&self) -> KvScheme {
+        self.scheme
     }
 
     /// Length of slot 0 — the single-sequence engine's implicit slot.
@@ -432,6 +552,11 @@ impl KvCache {
     /// Total pages in the shared pool.
     pub fn n_pages(&self) -> usize {
         self.n_pages
+    }
+
+    /// Model layers each page stores a `page_size`-token span of.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
     }
 
     /// Pages currently on the free list.
@@ -634,9 +759,10 @@ impl KvCache {
         })
     }
 
-    /// Swap traffic (f16 bytes in, bytes out) accumulated since the last
-    /// call — the engine drains this into the executor's DMA accounting
-    /// so modeled reports keep the transfer bottleneck visible.
+    /// Swap traffic (encoded bytes in, bytes out — sized by the pool's
+    /// [`KvScheme`]) accumulated since the last call — the engine drains
+    /// this into the executor's DMA accounting so modeled reports keep
+    /// the transfer bottleneck visible.
     pub fn take_pending_swap_bytes(&mut self) -> (usize, usize) {
         let out = (self.pending_swap_in_bytes, self.pending_swap_out_bytes);
         self.pending_swap_in_bytes = 0;
@@ -695,26 +821,91 @@ impl KvCache {
             })
             .min();
         let Some((_, key, page)) = victim else { return false };
-        let page_bytes = self.page_bytes_f16();
-        let p = self.prefix.as_mut().expect("checked above");
-        if p.arena.len() < p.swap_capacity {
-            let (k, v) = {
-                // Export the page's cells (all layers, K and V).
-                let cells = self.n_layers * self.page_size * self.kv_dim;
-                let base = page as usize * cells;
-                (self.k[base..base + cells].to_vec(), self.v[base..base + cells].to_vec())
-            };
-            p.arena.insert(key, SwapPage { k, v });
+        let page_bytes = self.page_bytes();
+        let will_swap =
+            self.prefix.as_ref().is_some_and(|p| p.arena.len() < p.swap_capacity);
+        if will_swap {
+            let sp = self.export_page(page);
+            let p = self.prefix.as_mut().expect("checked above");
+            p.arena.insert(key, sp);
             p.index.get_mut(&key).expect("victim exists").loc = PageLoc::Swapped;
             self.stats.swap_out_pages += 1;
             self.stats.swap_bytes += page_bytes;
             self.pending_swap_out_bytes += page_bytes;
         } else {
+            let p = self.prefix.as_mut().expect("checked above");
             p.index.remove(&key);
             self.stats.dropped_pages += 1;
         }
         self.release_ref(page);
         true
+    }
+
+    /// Snapshot one page's canonical payload for the swap arena (see
+    /// [`SwapPage`] for the per-scheme contents).
+    fn export_page(&self, page: u32) -> SwapPage {
+        let cells = self.page_cells();
+        let base = page as usize * cells;
+        match self.scheme {
+            KvScheme::F16 => SwapPage {
+                k: self.k[base..base + cells].to_vec(),
+                v: self.v[base..base + cells].to_vec(),
+                k_q: Vec::new(),
+                v_q: Vec::new(),
+            },
+            KvScheme::Q8_0 => {
+                let pq = self.page_q_bytes();
+                let qbase = page as usize * pq;
+                SwapPage {
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    k_q: self.k_q[qbase..qbase + pq].to_vec(),
+                    v_q: self.v_q[qbase..qbase + pq].to_vec(),
+                }
+            }
+        }
+    }
+
+    /// Restore one arena payload into device `page`, rebuilding the f32
+    /// mirror from the block bytes under [`KvScheme::Q8_0`] (bit-exact:
+    /// the mirror is *defined* as the dequantization of the blocks).
+    fn import_page(&mut self, page: u32, sp: &SwapPage) {
+        let cells = self.page_cells();
+        let base = page as usize * cells;
+        match self.scheme {
+            KvScheme::F16 => {
+                self.k[base..base + cells].copy_from_slice(&sp.k);
+                self.v[base..base + cells].copy_from_slice(&sp.v);
+            }
+            KvScheme::Q8_0 => {
+                let pq = self.page_q_bytes();
+                let qbase = page as usize * pq;
+                self.k_q[qbase..qbase + pq].copy_from_slice(&sp.k_q);
+                self.v_q[qbase..qbase + pq].copy_from_slice(&sp.v_q);
+                let rb = self.scheme.row_bytes(self.kv_dim);
+                let rows = self.n_layers * self.page_size;
+                for r in 0..rows {
+                    let qoff = qbase + r * rb;
+                    let off = base + r * self.kv_dim;
+                    let kd = q8_0::dequantize_row_bytes(&self.k_q[qoff..qoff + rb], self.kv_dim);
+                    self.k[off..off + self.kv_dim].copy_from_slice(&kd);
+                    let vd = q8_0::dequantize_row_bytes(&self.v_q[qoff..qoff + rb], self.kv_dim);
+                    self.v[off..off + self.kv_dim].copy_from_slice(&vd);
+                }
+            }
+        }
+    }
+
+    /// f32 cells of one page's K (or V) backing store, all layers.
+    #[inline]
+    fn page_cells(&self) -> usize {
+        self.n_layers * self.page_size * self.kv_dim
+    }
+
+    /// Encoded q8_0 bytes of one page's K (or V) blocks (Q8_0 pools).
+    #[inline]
+    fn page_q_bytes(&self) -> usize {
+        self.n_layers * self.page_size * self.scheme.row_bytes(self.kv_dim)
     }
 
     /// Verified index lookup: the entry at `key` whose token span and
@@ -807,13 +998,13 @@ impl KvCache {
                     // Bring the page home; the remaining chain is
                     // protected from eviction.
                     let Some(page) = self.obtain_page(&chain[i..]) else { break };
-                    let cells = self.n_layers * self.page_size * self.kv_dim;
-                    let base = page as usize * cells;
-                    let page_bytes = self.page_bytes_f16();
+                    let page_bytes = self.page_bytes();
+                    let sp = {
+                        let p = self.prefix.as_mut().expect("enabled");
+                        p.arena.remove(&key).expect("swapped entry has arena bytes")
+                    };
+                    self.import_page(page, &sp);
                     let p = self.prefix.as_mut().expect("enabled");
-                    let sp = p.arena.remove(&key).expect("swapped entry has arena bytes");
-                    self.k[base..base + cells].copy_from_slice(&sp.k);
-                    self.v[base..base + cells].copy_from_slice(&sp.v);
                     p.index.get_mut(&key).expect("chain verified").loc = PageLoc::Resident(page);
                     // One ref for the index (obtain_page granted one to
                     // the caller) plus one for the adopting slot.
@@ -982,10 +1173,16 @@ impl KvCache {
         let new = self
             .obtain_page(&[])
             .unwrap_or_else(|| panic!("copy-on-write needs a free page (slot {slot})"));
-        let cells = self.n_layers * self.page_size * self.kv_dim;
+        let cells = self.page_cells();
         let (ob, nb) = (old as usize * cells, new as usize * cells);
         self.k.copy_within(ob..ob + cells, nb);
         self.v.copy_within(ob..ob + cells, nb);
+        if self.scheme == KvScheme::Q8_0 {
+            let pq = self.page_q_bytes();
+            let (oq, nq) = (old as usize * pq, new as usize * pq);
+            self.k_q.copy_within(oq..oq + pq, nq);
+            self.v_q.copy_within(oq..oq + pq, nq);
+        }
         self.tables[slot][idx] = new;
         self.release_ref(old);
         self.stats.cow_pages += 1;
@@ -997,6 +1194,13 @@ impl KvCache {
     /// `advance(slot, n)` once. Storing into a page other readers still
     /// reference triggers copy-on-write — the other readers' bytes are
     /// never mutated.
+    ///
+    /// Under [`KvScheme::Q8_0`] the row is quantized on commit: the
+    /// q8_0 block bytes become the canonical storage and the f32 mirror
+    /// gets their exact dequantization, so every committed row is always
+    /// a *complete* encoding (a store writes the whole row's blocks and
+    /// mirror together — no partially-encoded state exists for rollback
+    /// or CoW to observe).
     pub fn store(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert!(
             pos < self.max_seq,
@@ -1017,8 +1221,43 @@ impl KvCache {
             self.cow_page(slot, idx);
         }
         let base = self.base(slot, layer, pos);
-        self.k[base..base + self.kv_dim].copy_from_slice(k);
-        self.v[base..base + self.kv_dim].copy_from_slice(v);
+        match self.scheme {
+            KvScheme::F16 => {
+                self.k[base..base + self.kv_dim].copy_from_slice(k);
+                self.v[base..base + self.kv_dim].copy_from_slice(v);
+            }
+            KvScheme::Q8_0 => {
+                let rb = self.scheme.row_bytes(self.kv_dim);
+                let qoff = (base / self.kv_dim) * rb;
+                let kq = q8_0::quantize_row_bytes(k);
+                let vq = q8_0::quantize_row_bytes(v);
+                let kd = q8_0::dequantize_row_bytes(&kq, self.kv_dim);
+                let vd = q8_0::dequantize_row_bytes(&vq, self.kv_dim);
+                self.k_q[qoff..qoff + rb].copy_from_slice(&kq);
+                self.v_q[qoff..qoff + rb].copy_from_slice(&vq);
+                self.k[base..base + self.kv_dim].copy_from_slice(&kd);
+                self.v[base..base + self.kv_dim].copy_from_slice(&vd);
+            }
+        }
+    }
+
+    /// The stored q8_0 block bytes of one position's K row (Q8_0 pools
+    /// only) — exposed so the property/accuracy suites can prove the f32
+    /// mirror is exactly the dequantization of the canonical blocks, and
+    /// that swap/CoW round trips preserve the blocks byte-for-byte.
+    pub fn k_block_bytes_at(&self, slot: usize, layer: usize, pos: usize) -> &[u8] {
+        assert_eq!(self.scheme, KvScheme::Q8_0, "block bytes exist only on q8_0 pools");
+        let rb = self.scheme.row_bytes(self.kv_dim);
+        let qoff = (self.base(slot, layer, pos) / self.kv_dim) * rb;
+        &self.k_q[qoff..qoff + rb]
+    }
+
+    /// V-row companion of [`KvCache::k_block_bytes_at`].
+    pub fn v_block_bytes_at(&self, slot: usize, layer: usize, pos: usize) -> &[u8] {
+        assert_eq!(self.scheme, KvScheme::Q8_0, "block bytes exist only on q8_0 pools");
+        let rb = self.scheme.row_bytes(self.kv_dim);
+        let qoff = (self.base(slot, layer, pos) / self.kv_dim) * rb;
+        &self.v_q[qoff..qoff + rb]
     }
 
     /// Advance `slot`'s position counter after all layers of a ubatch of
@@ -1098,50 +1337,93 @@ impl KvCache {
         &self.v[base..base + head_dim]
     }
 
-    /// Bytes one decode step must stream if the cache lives host-side and
-    /// attention is offloaded (FP16 cache entries, both K and V). Paging
-    /// makes the transfer page-granular: whole pages covering `ctx`
-    /// positions move, so `2 formats × pages(ctx) × page_size × kv_dim ×
-    /// 2 bytes` per layer.
+    /// Bytes one decode step must stream if the cache lives host-side
+    /// and attention is offloaded (scheme-encoded cache entries, both K
+    /// and V). Paging makes the transfer page-granular: whole pages
+    /// covering `ctx` positions move, so `2 formats × pages(ctx) ×
+    /// page_size × row_bytes(kv_dim)` per layer — f16 rows are
+    /// `2 × kv_dim` bytes, q8_0 rows `kv_dim / 32 × 34` (a 1.88× cut).
     pub fn stream_bytes_per_layer(&self, ctx: usize) -> usize {
-        2 * self.pages_needed(ctx) * self.page_size * self.kv_dim * 2
+        2 * self.pages_needed(ctx) * self.page_size * self.scheme.row_bytes(self.kv_dim)
     }
 
-    /// f16 bytes of one whole page, all layers, both K and V — the unit
-    /// the swap-traffic accounting charges per eviction/swap-in.
-    pub fn page_bytes_f16(&self) -> usize {
-        2 * self.n_layers * self.page_size * self.kv_dim * 2
+    /// Encoded bytes of one whole page, all layers, both K and V — the
+    /// unit the swap-traffic accounting charges per eviction/swap-in,
+    /// sized by the pool's [`KvScheme`].
+    pub fn page_bytes(&self) -> usize {
+        2 * self.n_layers * self.page_size * self.scheme.row_bytes(self.kv_dim)
     }
 
-    /// Total resident size of the cache (f16 accounting, all layers, both
-    /// K and V) at the current allocation — the quantity that grows with
-    /// live context in the paper's long-context discussion. Paging makes
-    /// residency page-granular (slack inside a sequence's last page is
-    /// resident even though not yet written), and refcounting makes it
-    /// **dedup-aware**: a page aliased by several block tables counts
-    /// once.
-    pub fn resident_bytes_f16(&self) -> usize {
-        self.bytes_f16_for_pages(self.used_pages())
+    /// Total resident size of the cache (scheme-encoded, all layers,
+    /// both K and V) at the current allocation — the quantity that grows
+    /// with live context in the paper's long-context discussion. Paging
+    /// makes residency page-granular (slack inside a sequence's last
+    /// page is resident even though not yet written), and refcounting
+    /// makes it **dedup-aware**: a page aliased by several block tables
+    /// counts once.
+    pub fn resident_bytes(&self) -> usize {
+        self.bytes_for_pages(self.used_pages())
     }
 
     /// What the current block tables would cost under exclusive
     /// ownership: per-slot page references counted with multiplicity.
     /// `logical − resident` (clamped at the index-only pages) is the
     /// memory prefix sharing saves.
-    pub fn logical_resident_bytes_f16(&self) -> usize {
+    pub fn logical_resident_bytes(&self) -> usize {
         let refs: usize = self.tables.iter().map(Vec::len).sum();
-        self.bytes_f16_for_pages(refs)
+        self.bytes_for_pages(refs)
     }
 
-    /// Lifetime peak of [`KvCache::resident_bytes_f16`] — tracked at
+    /// Lifetime peak of [`KvCache::resident_bytes`] — tracked at
     /// allocation time, so it is exact even when pages are freed between
     /// observations (what the serve report surfaces per worker).
-    pub fn peak_resident_bytes_f16(&self) -> usize {
-        self.bytes_f16_for_pages(self.peak_used)
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.bytes_for_pages(self.peak_used)
     }
 
-    fn bytes_f16_for_pages(&self, pages: usize) -> usize {
-        pages * self.page_bytes_f16()
+    fn bytes_for_pages(&self, pages: usize) -> usize {
+        pages * self.page_bytes()
+    }
+
+    // ---- encoding-consistency audit surface ----
+
+    /// Host-side backing lengths of the device pool, for the auditor's
+    /// encoding-consistency rule: `(k_mirror_cells, v_mirror_cells,
+    /// k_block_bytes, v_block_bytes)`. Invariant: mirrors always hold
+    /// `n_pages × n_layers × page_size × kv_dim` f32 cells; block arrays
+    /// hold `n_pages × page_q_bytes` under [`KvScheme::Q8_0`] and are
+    /// empty under [`KvScheme::F16`].
+    pub fn pool_backing_lens(&self) -> (usize, usize, usize, usize) {
+        (self.k.len(), self.v.len(), self.k_q.len(), self.v_q.len())
+    }
+
+    /// Expected per-scheme payload of one arena-held page:
+    /// `(mirror_f32_cells, block_bytes)` counting K and V together. F16
+    /// pools swap the f32 mirror (lossless restore of the exact
+    /// reference); Q8_0 pools swap only the canonical block bytes.
+    pub fn arena_expected_payload(&self) -> (usize, usize) {
+        match self.scheme {
+            KvScheme::F16 => (2 * self.page_cells(), 0),
+            KvScheme::Q8_0 => (0, 2 * self.page_q_bytes()),
+        }
+    }
+
+    /// Stored payload of every arena entry, sorted by chain key:
+    /// `(key, mirror_f32_cells, block_bytes)` — each must match
+    /// [`KvCache::arena_expected_payload`] or the page cannot restore
+    /// under the pool's scheme.
+    pub fn arena_payloads(&self) -> Vec<(u64, usize, usize)> {
+        self.prefix.as_ref().map_or_else(Vec::new, |p| {
+            let mut out: Vec<(u64, usize, usize)> = p
+                .arena
+                .iter()
+                .map(|(&key, sp)| {
+                    (key, sp.k.len() + sp.v.len(), sp.k_q.len() + sp.v_q.len())
+                })
+                .collect();
+            out.sort_by_key(|r| r.0);
+            out
+        })
     }
 }
 
@@ -1290,27 +1572,27 @@ mod tests {
         assert_eq!(c.stream_bytes_per_layer(48), 2 * 48 * 1024 * 2);
         // ctx 40 rounds up to 48 positions' worth of pages.
         assert_eq!(c.stream_bytes_per_layer(40), 2 * 48 * 1024 * 2);
-        assert_eq!(c.resident_bytes_f16(), 0);
+        assert_eq!(c.resident_bytes(), 0);
         c.try_reserve(0, 17).unwrap();
         c.advance(0, 17).unwrap();
         // 17 tokens = 2 pages resident, both K and V, f16, all layers.
-        assert_eq!(c.resident_bytes_f16(), 2 * 2 * cfg.n_layers * 16 * 1024 * 2);
+        assert_eq!(c.resident_bytes(), 2 * 2 * cfg.n_layers * 16 * 1024 * 2);
     }
 
     #[test]
     fn peak_residency_watermark() {
         let cfg = ModelConfig::tiny();
         let mut c = KvCache::paged(&cfg, 2, 4, 8);
-        assert_eq!(c.peak_resident_bytes_f16(), 0);
+        assert_eq!(c.peak_resident_bytes(), 0);
         c.try_reserve(0, 9).unwrap(); // 3 pages
         c.advance(0, 9).unwrap();
         c.try_reserve(1, 2).unwrap(); // 1 page → peak 4
         c.advance(1, 2).unwrap();
-        let peak = c.peak_resident_bytes_f16();
+        let peak = c.peak_resident_bytes();
         assert_eq!(peak, 2 * 4 * cfg.n_layers * 4 * cfg.kv_dim() * 2);
         c.reset_slot(0);
-        assert!(c.resident_bytes_f16() < peak);
-        assert_eq!(c.peak_resident_bytes_f16(), peak, "watermark survives frees");
+        assert!(c.resident_bytes() < peak);
+        assert_eq!(c.peak_resident_bytes(), peak, "watermark survives frees");
     }
 
     #[test]
@@ -1524,7 +1806,7 @@ mod tests {
         assert_eq!(c.reuse_stats().dropped_pages, 0);
         let (in_b, out_b) = c.take_pending_swap_bytes();
         assert_eq!(in_b, 0);
-        assert_eq!(out_b, 2 * c.page_bytes_f16());
+        assert_eq!(out_b, 2 * c.page_bytes());
         // …then release and adopt: pages swap back in, bit-exact.
         c.reset_slot(1);
         let adopted = c.adopt_prefix(0, &prompt, prompt.len());
@@ -1534,7 +1816,7 @@ mod tests {
         assert_eq!(c.k_at(0, 1, 5, 0, cfg.head_dim)[0], want_k);
         assert_eq!(c.v_at(0, 1, 5, 0, cfg.head_dim)[0], want_v);
         let (in_b, out_b) = c.take_pending_swap_bytes();
-        assert_eq!(in_b, 2 * c.page_bytes_f16());
+        assert_eq!(in_b, 2 * c.page_bytes());
         assert_eq!(out_b, 0);
     }
 
@@ -1638,8 +1920,8 @@ mod tests {
         // Three block tables reference the same two pages: physical
         // residency counts them once, logical counts per reference.
         assert_eq!(c.used_pages(), 2);
-        assert_eq!(c.resident_bytes_f16(), 2 * c.page_bytes_f16());
-        assert_eq!(c.logical_resident_bytes_f16(), 6 * c.page_bytes_f16());
+        assert_eq!(c.resident_bytes(), 2 * c.page_bytes());
+        assert_eq!(c.logical_resident_bytes(), 6 * c.page_bytes());
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub use engine::{
     Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, PrefillCursor, Session,
     SharedPrefill, DEFAULT_UBATCH,
 };
-pub use kv_cache::{AdoptedPrefix, CacheError, KvCache, KvReuseStats, DEFAULT_PAGE_SIZE};
+pub use kv_cache::{AdoptedPrefix, CacheError, KvCache, KvReuseStats, KvScheme, DEFAULT_PAGE_SIZE};
 pub use graph::{KvSwapDir, MatvecOp, OpKind, Phase};
 pub use sampler::Sampler;
 pub use weights::ModelWeights;

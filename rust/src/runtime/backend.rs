@@ -336,8 +336,9 @@ pub struct BackendReport {
     pub offloaded_macs: u64,
     pub total_macs: u64,
     /// KV page swap traffic charged through the DMA cost model (imax
-    /// backend; f16 cache bytes, both directions). Nonzero only when the
-    /// serving layer oversubscribes the page pool with `--swap-pages`.
+    /// backend; bytes in the pool's page encoding — f16 or q8_0 blocks —
+    /// both directions). Nonzero only when the serving layer
+    /// oversubscribes the page pool with `--swap-pages`.
     pub kv_swap_bytes: u64,
     /// Modeled weight/activation bytes streamed to the accelerator
     /// (imax backend only; 0 for functional backends). The numerator of

@@ -23,7 +23,9 @@ use imax_llm::coordinator::{
 use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
 use imax_llm::model::config::LinearKind;
 use imax_llm::model::engine::{Engine, NativeExec};
-use imax_llm::model::{MatvecOp, ModelConfig, ModelWeights, OpKind, Phase, QuantScheme, Sampler};
+use imax_llm::model::{
+    KvScheme, MatvecOp, ModelConfig, ModelWeights, OpKind, Phase, QuantScheme, Sampler,
+};
 use imax_llm::quant::GgmlType;
 use imax_llm::runtime::queue::{KernelOp, Launch};
 use imax_llm::runtime::{ExecSpec, PlacementRule, PlacementSpec};
@@ -237,7 +239,12 @@ fn seeded_schedule_corruptions_fire_their_rules() {
 /// Snapshot of a real engine/batcher pair two rounds into serving three
 /// prefix-sharing requests — every auditable structure is populated.
 fn live_snapshot() -> PoolSnapshot {
-    let mut engine = Engine::with_paged_slots(tiny_weights(29), 3, 4, Some(14));
+    live_snapshot_kv(KvScheme::F16)
+}
+
+fn live_snapshot_kv(scheme: KvScheme) -> PoolSnapshot {
+    let mut engine =
+        Engine::with_paged_slots_kv(tiny_weights(29), 3, 4, Some(14), scheme);
     engine.enable_prefix_cache();
     engine.set_kv_swap_capacity(4);
     let mut b = ContinuousBatcher::new(engine, 8, Instant::now());
@@ -261,7 +268,8 @@ fn live_snapshot() -> PoolSnapshot {
 
 /// Every `audit/*` rule fires on its corruption class. Classes:
 /// 0 refcount-conservation, 1/2 free-consistency, 3 alias-validity,
-/// 4 length-coverage, 5 budget-conservation, 6 chain-integrity.
+/// 4 length-coverage, 5 budget-conservation, 6 chain-integrity,
+/// 7 encoding-consistency.
 #[test]
 fn seeded_audit_corruptions_fire_their_rules() {
     let base = live_snapshot();
@@ -280,8 +288,8 @@ fn seeded_audit_corruptions_fire_their_rules() {
             .expect("a live flight holds pages")
     };
 
-    Runner::new("analysis_rules::audit_corruptions").cases(56).run_noshrink(
-        |rng| (rng.below(7), rng.next_u64()),
+    Runner::new("analysis_rules::audit_corruptions").cases(64).run_noshrink(
+        |rng| (rng.below(8), rng.next_u64()),
         |&(class, seed)| {
             let mut rng = Rng::new(seed);
             let mut s = base.clone();
@@ -327,7 +335,7 @@ fn seeded_audit_corruptions_fire_their_rules() {
                     s.committed_pages += 1;
                     "audit/budget-conservation"
                 }
-                _ => {
+                6 => {
                     match rng.below(3) {
                         // Stored key no longer re-hashes from its parent.
                         0 => s.chains[0].key ^= 1,
@@ -341,6 +349,20 @@ fn seeded_audit_corruptions_fire_their_rules() {
                     }
                     "audit/chain-integrity"
                 }
+                _ => {
+                    match rng.below(3) {
+                        // The k mirror lost cells: pool backing no
+                        // longer matches the page geometry.
+                        0 => s.pool_backing.0 -= 1,
+                        // q8_0 block arrays materialized on an f16 pool.
+                        1 => s.pool_backing.2 += 34,
+                        // A swapped page stores q8_0 block bytes where
+                        // the f16 scheme demands the f32 mirror — it
+                        // could never restore.
+                        _ => s.arena_payloads.push((0xdead_beef, 0, 544)),
+                    }
+                    "audit/encoding-consistency"
+                }
             };
             let findings = audit_snapshot(&s);
             if findings.iter().any(|f| f.rule == expected) {
@@ -350,6 +372,18 @@ fn seeded_audit_corruptions_fire_their_rules() {
             }
         },
     );
+}
+
+/// A q8_0 pool mid-churn satisfies the whole audit catalog too — the
+/// encoding rule certifies the block arrays and (dequantized) mirror
+/// are sized for the quantized scheme, not the f16 default.
+#[test]
+fn q8_0_live_snapshot_audits_clean() {
+    let s = live_snapshot_kv(KvScheme::Q8_0);
+    assert_eq!(s.kv_scheme, KvScheme::Q8_0);
+    assert!(s.pool_backing.2 > 0, "q8_0 pool carries block bytes");
+    let findings = audit_snapshot(&s);
+    assert!(findings.is_empty(), "q8_0 churn must audit clean: {findings:?}");
 }
 
 // ---------------------------------------------------------------------
@@ -411,9 +445,18 @@ fn audit_exec_certifies_real_engine_schedules() {
 
 /// The tentpole acceptance run: prefix cache + host swap + speculation +
 /// mid-decode cancellation + a deadline expiry, all under `--audit`, and
-/// the full rule catalog stays silent.
+/// the full rule catalog stays silent — under both KV page encodings.
 #[test]
 fn full_feature_audited_serve_is_clean() {
+    run_full_feature_audited_serve(KvScheme::F16);
+}
+
+#[test]
+fn full_feature_audited_q8_0_serve_is_clean() {
+    run_full_feature_audited_serve(KvScheme::Q8_0);
+}
+
+fn run_full_feature_audited_serve(kv_quant: KvScheme) {
     let w = tiny_weights(3);
     let cfg = ModelConfig::tiny();
     // 16 shared prefix tokens = 2 pages of 8, then a templated body the
@@ -442,6 +485,7 @@ fn full_feature_audited_serve_is_clean() {
         prefix_cache: true,
         swap_pages: 8,
         speculate: 4,
+        kv_quant,
         audit: true,
         ..ServeOptions::default()
     };

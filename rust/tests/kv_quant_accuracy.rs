@@ -1,0 +1,332 @@
+//! Accuracy harness for `--kv-quant q8_0` (quantized KV pages).
+//!
+//! The q8_0 pool deliberately trades bit-identity for a 64/34 ≈ 1.88×
+//! cut in KV bytes, so correctness splits into two claims this suite
+//! pins down:
+//!
+//! 1. **Bounded drift vs the exact path.** Per-row quantization error
+//!    obeys the analytic q8_0 bound (`≤ max|x| × 0.005` per element),
+//!    and end-to-end logits of a q8_0-KV engine stay close to the f16
+//!    reference under teacher forcing (same token fed to both), with
+//!    high greedy-token agreement.
+//! 2. **Exactness *within* the q8_0 world.** The drift is introduced
+//!    once, at commit time; everything downstream is deterministic on
+//!    the canonical block bytes. Warm prefix hits, host-swap
+//!    roundtrips, and speculative verify/rollback must all reproduce
+//!    the plain q8_0 path token-for-token and byte-for-byte.
+//!
+//! Property-level churn coverage (CoW/truncate/swap under random op
+//! sequences) lives in `prop_paged_kv.rs`; this file is the directed
+//! accuracy story the serve `--kv-quant` flag documentation points at.
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{
+    serve_with, Admitted, ContinuousBatcher, Request, ServeOptions, SessionLog,
+};
+use imax_llm::harness::workloads::templated_prompt;
+use imax_llm::model::engine::NativeExec;
+use imax_llm::model::{
+    DrafterSpec, Engine, KvCache, KvScheme, ModelConfig, ModelWeights, Phase, QuantScheme, Sampler,
+};
+use imax_llm::quant::q8_0;
+use imax_llm::util::rng::Rng;
+
+/// 2-layer kv_dim-32 model: the smallest shape a q8_0 pool accepts,
+/// with a vocabulary small enough that greedy ties are far apart.
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "kv-acc",
+        n_layers: 2,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 1,
+        head_dim: 32,
+        d_ffn: 128,
+        vocab_size: 16,
+        qk_norm: true,
+        rope_theta: 1e4,
+        rms_eps: 1e-6,
+        max_seq_len: 128,
+    }
+}
+
+fn weights(seed: u64) -> ModelWeights {
+    ModelWeights::random(&cfg(), QuantScheme::Q8_0, seed)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += f64::from(x - y) * f64::from(x - y);
+        den += f64::from(x) * f64::from(x);
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bounded drift vs the exact f16 path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn q8_0_row_roundtrip_error_within_analytic_bound() {
+    // quantize → dequantize of one 32-wide row: per-element error is at
+    // most d/2 (integer rounding) plus 127 × the f16 error of the scale
+    // itself, which together stay under max|x| × 0.005 for values in
+    // the f16 normal range. 0.005 holds even for a truncating (rather
+    // than round-to-nearest) f32→f16 conversion.
+    let mut r = Rng::new(0xACC0);
+    for _ in 0..200 {
+        let mut row: Vec<f32> = (0..q8_0::QK8_0)
+            .map(|_| (r.below(4001) as f32 - 2000.0) / 1000.0)
+            .collect();
+        row[0] = 1.5; // keep amax in the f16 normal range
+        let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let back = q8_0::dequantize_row_bytes(&q8_0::quantize_row_bytes(&row), row.len());
+        for (&x, &y) in row.iter().zip(&back) {
+            assert!(
+                (x - y).abs() <= amax * 0.005,
+                "roundtrip error {} exceeds the analytic bound {} (x = {x})",
+                (x - y).abs(),
+                amax * 0.005
+            );
+        }
+    }
+}
+
+/// Teacher-forced drift run: prefill the same prompt on an f16-KV and a
+/// q8_0-KV engine (identical weights), then decode feeding *the f16
+/// path's greedy token* to both, so the KV contents stay comparable
+/// step for step. Returns per-step relative-L2 logit drifts and the
+/// greedy-agreement count.
+fn teacher_forced_drift(steps: usize) -> (Vec<f64>, usize) {
+    let mut exec = NativeExec;
+    let mut e16 = Engine::with_paged_slots_kv(weights(77), 1, 8, None, KvScheme::F16);
+    let mut e8 = Engine::with_paged_slots_kv(weights(77), 1, 8, None, KvScheme::Q8_0);
+    let s16 = e16.open_session(Sampler::greedy()).expect("slot");
+    let s8 = e8.open_session(Sampler::greedy()).expect("slot");
+    let prompt = templated_prompt(3, 32, cfg().vocab_size);
+    let l16 = e16.prefill_session(&s16, &prompt, 8, &mut exec);
+    let l8 = e8.prefill_session(&s8, &prompt, 8, &mut exec);
+
+    let mut drifts = vec![rel_l2(&l16, &l8)];
+    let mut agree = usize::from(argmax(&l16) == argmax(&l8));
+    let mut tok = argmax(&l16) as u32;
+    for _ in 0..steps {
+        let a = e16
+            .forward_session(&s16, tok, Phase::Decode, true, &mut exec)
+            .expect("logits");
+        let b = e8
+            .forward_session(&s8, tok, Phase::Decode, true, &mut exec)
+            .expect("logits");
+        drifts.push(rel_l2(&a, &b));
+        agree += usize::from(argmax(&a) == argmax(&b));
+        tok = argmax(&a) as u32;
+    }
+    (drifts, agree)
+}
+
+const DRIFT_STEPS: usize = 24;
+
+#[test]
+fn logit_drift_vs_exact_path_is_bounded() {
+    let (drifts, _) = teacher_forced_drift(DRIFT_STEPS);
+    // Per-element KV error is ~0.5%; through attention, two layers, and
+    // the LM head it stays percent-level. 0.3 relative L2 is a loose
+    // ceiling — a regression that re-quantizes pages per read or leaks
+    // wrong bytes lands far above it.
+    for (step, d) in drifts.iter().enumerate() {
+        assert!(
+            *d < 0.3,
+            "step {step}: q8_0 logit drift {d:.4} breaches the 0.3 relative-L2 bound"
+        );
+    }
+}
+
+#[test]
+fn greedy_agreement_vs_exact_path_is_high() {
+    let (_, agree) = teacher_forced_drift(DRIFT_STEPS);
+    let total = DRIFT_STEPS + 1; // prefill logits + each decode step
+    assert!(
+        agree * 10 >= total * 6,
+        "greedy agreement {agree}/{total} fell below 60% under teacher forcing"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Exactness within the q8_0 world
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_roundtrip_is_bit_identical_on_q8_0_pages() {
+    // Commit two pages, register them, force both out to the host arena,
+    // adopt them back, and every canonical block byte and mirror cell
+    // must come back exactly — the swap path moves blocks, never
+    // re-encodes.
+    let cfg = cfg();
+    let kv_dim = cfg.kv_dim();
+    let mut c = KvCache::paged_with_scheme(&cfg, 2, 4, 4, KvScheme::Q8_0);
+    c.enable_prefix_cache(0xBEEF);
+    c.set_swap_capacity(4);
+
+    let tokens: Vec<u32> = (0..8u32).collect();
+    c.try_reserve(0, 8).expect("pool starts empty");
+    for (pos, &t) in tokens.iter().enumerate() {
+        for layer in 0..cfg.n_layers {
+            let val = 0.25 + t as f32 + layer as f32 * 0.125;
+            c.store(0, layer, pos, &vec![val; kv_dim], &vec![-val; kv_dim]);
+        }
+    }
+    c.advance(0, 8).expect("reserved");
+    c.register_prefix(0, &tokens);
+
+    let snap: Vec<(Vec<u8>, Vec<u8>, f32)> = (0..8usize)
+        .flat_map(|pos| {
+            (0..cfg.n_layers).map(move |layer| (pos, layer)).collect::<Vec<_>>()
+        })
+        .map(|(pos, layer)| {
+            (
+                c.k_block_bytes_at(0, layer, pos).to_vec(),
+                c.v_block_bytes_at(0, layer, pos).to_vec(),
+                c.k_at(0, layer, pos, 0, cfg.head_dim)[0],
+            )
+        })
+        .collect();
+
+    // Free the slot, then fill the whole pool from slot 1: the two
+    // cached pages must be evicted to the arena to satisfy the reserve.
+    c.reset_slot(0);
+    c.try_reserve(1, 16).expect("eviction frees the cached pages");
+    c.advance(1, 16).expect("reserved");
+    assert_eq!(c.swapped_out_pages(), 2, "both registered pages swap out");
+    c.reset_slot(1);
+
+    let adopted = c.adopt_prefix(0, &tokens, tokens.len());
+    assert!(adopted.tokens > 0, "swapped-out prefix must still hit");
+    for pos in 0..adopted.tokens {
+        for layer in 0..cfg.n_layers {
+            let (want_k, want_v, want_cell) = &snap[pos * cfg.n_layers + layer];
+            assert_eq!(
+                c.k_block_bytes_at(0, layer, pos),
+                want_k.as_slice(),
+                "K blocks differ after swap roundtrip at pos {pos} layer {layer}"
+            );
+            assert_eq!(
+                c.v_block_bytes_at(0, layer, pos),
+                want_v.as_slice(),
+                "V blocks differ after swap roundtrip at pos {pos} layer {layer}"
+            );
+            assert_eq!(
+                c.k_at(0, layer, pos, 0, cfg.head_dim)[0],
+                *want_cell,
+                "mirror differs after swap roundtrip at pos {pos} layer {layer}"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_hits_and_swap_roundtrips_do_not_change_served_tokens() {
+    // Three requests on one serial slot: 0 registers its prompt, 1 (a
+    // different prompt) evicts those pages into the swap arena under a
+    // 4-page pool, 2 (prompt identical to 0) warm-hits via swap-in.
+    // Against an unconstrained q8_0 run of the same requests (warm hit
+    // stays device-resident, no swap), every request's token stream
+    // must match exactly: aliased and swapped-back pages carry the same
+    // canonical block bytes a cold prefill would commit.
+    let w = weights(11);
+    let prompt_a: Vec<u32> = (0..8).map(|i| 3 + i as u32 % 5).collect();
+    let prompt_b: Vec<u32> = (0..8).map(|i| 1 + i as u32 % 7).collect();
+    let reqs = || {
+        vec![
+            Request::new(0, prompt_a.clone(), 3),
+            Request::new(1, prompt_b.clone(), 3),
+            Request::new(2, prompt_a.clone(), 3),
+        ]
+    };
+    let tight = ServeOptions {
+        slots_per_worker: 1,
+        page_size: 4,
+        kv_pages: Some(4),
+        prefix_cache: true,
+        swap_pages: 4,
+        kv_quant: KvScheme::Q8_0,
+        ..ServeOptions::default()
+    };
+    let ample = ServeOptions {
+        slots_per_worker: 1,
+        page_size: 4,
+        kv_pages: None,
+        prefix_cache: true,
+        kv_quant: KvScheme::Q8_0,
+        ..ServeOptions::default()
+    };
+    let rt = serve_with(&w, reqs(), 1, &tight).expect("options validate");
+    let ra = serve_with(&w, reqs(), 1, &ample).expect("options validate");
+    assert!(
+        rt.reuse.swap_in_pages >= 1,
+        "tight run must exercise the swap-in path: {:?}",
+        rt.reuse
+    );
+    assert!(ra.reuse.prefix_hits >= 1, "ample run must warm-hit: {:?}", ra.reuse);
+    let toks = |rep: &imax_llm::coordinator::ServeReport| {
+        let mut out: Vec<(usize, Vec<u32>)> =
+            rep.completions.iter().map(|c| (c.id, c.tokens.clone())).collect();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    };
+    assert_eq!(
+        toks(&rt),
+        toks(&ra),
+        "swap roundtrips / warm hits changed q8_0 token streams"
+    );
+}
+
+#[test]
+fn speculative_verify_and_rollback_match_sequential_q8_0_decode() {
+    // Greedy verification is exact, and rollback truncates to whole
+    // committed rows — neither may disturb quantized pages. The
+    // templated workload (drafter-friendly) decoded with k=4 must
+    // reproduce the sequential q8_0 stream token for token.
+    let run = |speculate: usize| -> Vec<Vec<u32>> {
+        let mut exec = NativeExec;
+        let engine = Engine::with_paged_slots_kv(weights(29), 4, 8, None, KvScheme::Q8_0);
+        let mut b = ContinuousBatcher::new(engine, 32, Instant::now());
+        if speculate > 0 {
+            b = b.with_speculation(speculate, DrafterSpec::default());
+        }
+        for id in 0..3usize {
+            let req = Request::new(id, templated_prompt(id, 48, cfg().vocab_size), 24);
+            assert!(matches!(
+                b.admit(req, Sampler::greedy(), 0.0, &mut exec),
+                Ok(Admitted::Active)
+            ));
+        }
+        let mut logs: Vec<SessionLog> = Vec::new();
+        while b.n_active() > 0 {
+            logs.extend(b.decode_round(&mut exec));
+        }
+        logs.sort_by_key(|l| l.id);
+        assert!(
+            speculate == 0 || logs.iter().map(|l| l.verify_calls).sum::<usize>() > 0,
+            "templated workload must trigger drafting"
+        );
+        logs.into_iter().map(|l| l.tokens).collect()
+    };
+    assert_eq!(
+        run(0),
+        run(4),
+        "speculative decode must be bit-identical to sequential under q8_0 KV"
+    );
+}

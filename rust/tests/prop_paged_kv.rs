@@ -11,8 +11,16 @@
 //!   the right kind for the state (`ContextOverflow` vs `OutOfPages`),
 //! * data written through one slot is never clobbered by another slot's
 //!   growth (the functional face of "no double allocation").
+//!
+//! Both suites run under each [`KvScheme`]: f16 pools must read back
+//! stored values bit-exactly; q8_0 pools must keep the canonical block
+//! bytes equal to the commit-time encoding of every live position (and
+//! the f32 mirror equal to their dequantization) through CoW splits,
+//! swap roundtrips, and truncation — rollback never leaves a
+//! partially-encoded page behind.
 
-use imax_llm::model::{CacheError, KvCache, ModelConfig};
+use imax_llm::model::{CacheError, KvCache, KvScheme, ModelConfig};
+use imax_llm::quant::q8_0;
 use imax_llm::util::proptest_lite::Runner;
 use imax_llm::util::rng::Rng;
 
@@ -28,6 +36,40 @@ fn mini_cfg(max_seq: usize) -> ModelConfig {
     cfg.vocab_size = 32;
     cfg.max_seq_len = max_seq;
     cfg
+}
+
+/// Smallest geometry a q8_0 pool accepts: kv_dim = 32 (one block per
+/// K/V row), 2 layers.
+fn q8_cfg(max_seq: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 2;
+    cfg.d_model = 64;
+    cfg.n_heads = 2;
+    cfg.n_kv_heads = 1;
+    cfg.head_dim = 32;
+    cfg.d_ffn = 64;
+    cfg.vocab_size = 32;
+    cfg.max_seq_len = max_seq;
+    cfg
+}
+
+fn cfg_for(scheme: KvScheme, max_seq: usize) -> ModelConfig {
+    match scheme {
+        KvScheme::F16 => mini_cfg(max_seq),
+        KvScheme::Q8_0 => q8_cfg(max_seq),
+    }
+}
+
+/// What a scheme's pool reads back for a cell committed as `val` (the
+/// whole row is uniform, so one cell characterizes it): f16 pools are
+/// lossless, q8_0 pools return the quantization roundtrip.
+fn expect_cell(scheme: KvScheme, kv_dim: usize, val: f32) -> f32 {
+    match scheme {
+        KvScheme::F16 => val,
+        KvScheme::Q8_0 => {
+            q8_0::dequantize_row_bytes(&q8_0::quantize_row_bytes(&vec![val; kv_dim]), kv_dim)[0]
+        }
+    }
 }
 
 const MAX_SEQ: usize = 32;
@@ -86,10 +128,11 @@ fn marker(slot: usize, epoch: usize, pos: usize, layer: usize) -> f32 {
 
 /// Replay a case, checking every invariant after every operation.
 /// Returns `Err(description)` on the first violation.
-fn check_case(case: &Case) -> Result<(), String> {
-    let cfg = mini_cfg(MAX_SEQ);
+fn check_case(case: &Case, scheme: KvScheme) -> Result<(), String> {
+    let cfg = cfg_for(scheme, MAX_SEQ);
     let kv_dim = cfg.kv_dim();
-    let mut c = KvCache::paged(&cfg, case.n_slots, case.page_size, case.n_pages);
+    let mut c =
+        KvCache::paged_with_scheme(&cfg, case.n_slots, case.page_size, case.n_pages, scheme);
     // Mirror state: per-slot length and reset epoch.
     let mut lens = vec![0usize; case.n_slots];
     let mut epochs = vec![0usize; case.n_slots];
@@ -206,11 +249,16 @@ fn check_case(case: &Case) -> Result<(), String> {
         for pos in 0..lens[slot] {
             for layer in 0..cfg.n_layers {
                 let want = marker(slot, epochs[slot], pos, layer);
+                let (want_k, want_v) = (
+                    expect_cell(scheme, kv_dim, want),
+                    expect_cell(scheme, kv_dim, -want),
+                );
                 let k = c.k_at(slot, layer, pos, 0, cfg.head_dim)[0];
                 let v = c.v_at(slot, layer, pos, 0, cfg.head_dim)[0];
-                if k != want || v != -want {
+                if k != want_k || v != want_v {
                     return Err(format!(
-                        "slot {slot} layer {layer} pos {pos}: k/v = {k}/{v}, want ±{want}"
+                        "slot {slot} layer {layer} pos {pos}: k/v = {k}/{v}, \
+                         want {want_k}/{want_v}"
                     ));
                 }
             }
@@ -221,7 +269,20 @@ fn check_case(case: &Case) -> Result<(), String> {
 
 #[test]
 fn prop_pool_conservation_and_no_double_allocation() {
-    Runner::new("paged-kv-pool-invariants").run(gen_case, check_case, shrink_case);
+    Runner::new("paged-kv-pool-invariants").run(
+        gen_case,
+        |c| check_case(c, KvScheme::F16),
+        shrink_case,
+    );
+}
+
+#[test]
+fn prop_q8_0_pool_conservation_and_no_double_allocation() {
+    Runner::new("paged-kv-pool-invariants-q8").cases(128).run(
+        gen_case,
+        |c| check_case(c, KvScheme::Q8_0),
+        shrink_case,
+    );
 }
 
 // ---- refcounted sharing / CoW / eviction property suite ----
@@ -241,6 +302,9 @@ enum ShareOp {
     Adopt { slot: usize, pick: usize },
     /// Overwrite one committed position in place (CoW on shared pages).
     Overwrite { slot: usize, pos_seed: usize },
+    /// Roll back `slot` to a shorter length (the speculative-verify
+    /// rejection path), dropping whole pages past the kept span.
+    Truncate { slot: usize, keep_seed: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -260,11 +324,12 @@ fn gen_share_case(r: &mut Rng) -> ShareCase {
     let swap_pages = r.below(6);
     let n_ops = r.below(48);
     let ops = (0..n_ops)
-        .map(|_| match r.below(8) {
+        .map(|_| match r.below(10) {
             0 => ShareOp::Reset { slot: r.below(n_slots) },
             1 | 2 => ShareOp::Register { slot: r.below(n_slots) },
             3 | 4 => ShareOp::Adopt { slot: r.below(n_slots), pick: r.below(8) },
             5 => ShareOp::Overwrite { slot: r.below(n_slots), pos_seed: r.below(64) },
+            6 => ShareOp::Truncate { slot: r.below(n_slots), keep_seed: r.below(64) },
             _ => ShareOp::Grow { slot: r.below(n_slots), n: 1 + r.below(5) },
         })
         .collect();
@@ -291,11 +356,11 @@ fn content_val(token: u32, pos: usize) -> f32 {
     (token as f32) * 1000.0 + (pos as f32) * 10.0
 }
 
-fn check_share_case(case: &ShareCase) -> Result<(), String> {
-    let cfg = mini_cfg(MAX_SEQ);
+fn check_share_case(case: &ShareCase, scheme: KvScheme) -> Result<(), String> {
+    let cfg = cfg_for(scheme, MAX_SEQ);
     let kv_dim = cfg.kv_dim();
     let ps = case.page_size;
-    let mut c = KvCache::paged(&cfg, case.n_slots, ps, case.n_pages);
+    let mut c = KvCache::paged_with_scheme(&cfg, case.n_slots, ps, case.n_pages, scheme);
     c.enable_prefix_cache(0xF00D);
     if case.swap_pages > 0 {
         c.set_swap_capacity(case.swap_pages);
@@ -388,6 +453,24 @@ fn check_share_case(case: &ShareCase) -> Result<(), String> {
                     }
                 }
             }
+            ShareOp::Truncate { slot, keep_seed } => {
+                if !tokens[slot].is_empty() {
+                    let keep = keep_seed % (tokens[slot].len() + 1);
+                    // Future growth re-stores into the last kept page when
+                    // `keep` is unaligned; the engine only rolls back its
+                    // own freshly appended (exclusive) tail, so keep the
+                    // generator out of the shared-page-rewrite states that
+                    // real flows never reach.
+                    let safe = keep % ps == 0
+                        || c.page_ref(c.slot_pages(slot)[(keep - 1) / ps]) == 1;
+                    if safe {
+                        c.truncate(slot, keep);
+                        tokens[slot].truncate(keep);
+                        vals[slot].truncate(keep);
+                        dirty[slot].truncate(keep);
+                    }
+                }
+            }
         }
 
         // ---- invariants after every op ----
@@ -446,20 +529,52 @@ fn check_share_case(case: &ShareCase) -> Result<(), String> {
                 ));
             }
         }
+        // Arena payloads always match the scheme's per-page shape: f16
+        // pools swap the lossless f32 mirror, q8_0 pools swap only the
+        // canonical block bytes — never a mixed or partial payload.
+        let want_arena = c.arena_expected_payload();
+        for (key, f_cells, q_bytes) in c.arena_payloads() {
+            if (f_cells, q_bytes) != want_arena {
+                return Err(format!(
+                    "op {i}: arena entry {key:#x} payload ({f_cells} cells, {q_bytes} \
+                     block bytes) != scheme shape {want_arena:?}"
+                ));
+            }
+        }
         // Data integrity: every live cell reads back the mirrored value —
         // CoW never leaks a writer's bytes into another reader, adoption
         // serves exactly the registered content, swap roundtrips are
-        // bit-exact.
+        // bit-exact. On q8_0 pools the canonical block bytes must equal
+        // the commit-time encoding byte-for-byte (truncation, CoW, and
+        // swap never re-encode or partially encode a live row) and the
+        // f32 mirror must be exactly their dequantization.
         for s in 0..case.n_slots {
             for pos in 0..vals[s].len() {
                 for layer in 0..cfg.n_layers {
                     let want = vals[s][pos] + layer as f32;
+                    let (want_k, want_v) = (
+                        expect_cell(scheme, kv_dim, want),
+                        expect_cell(scheme, kv_dim, -want),
+                    );
                     let k = c.k_at(s, layer, pos, 0, cfg.head_dim)[0];
                     let v = c.v_at(s, layer, pos, 0, cfg.head_dim)[0];
-                    if k != want || v != -want {
+                    if k != want_k || v != want_v {
                         return Err(format!(
-                            "op {i}: slot {s} layer {layer} pos {pos}: k/v {k}/{v}, want ±{want}"
+                            "op {i}: slot {s} layer {layer} pos {pos}: k/v {k}/{v}, \
+                             want {want_k}/{want_v}"
                         ));
+                    }
+                    if scheme == KvScheme::Q8_0 {
+                        let enc_k = q8_0::quantize_row_bytes(&vec![want; kv_dim]);
+                        let enc_v = q8_0::quantize_row_bytes(&vec![-want; kv_dim]);
+                        if c.k_block_bytes_at(s, layer, pos) != enc_k.as_slice()
+                            || c.v_block_bytes_at(s, layer, pos) != enc_v.as_slice()
+                        {
+                            return Err(format!(
+                                "op {i}: slot {s} layer {layer} pos {pos}: block bytes \
+                                 differ from the commit-time q8_0 encoding"
+                            ));
+                        }
                     }
                 }
             }
@@ -485,7 +600,16 @@ fn check_share_case(case: &ShareCase) -> Result<(), String> {
 fn prop_refcounted_pool_share_cow_evict_invariants() {
     Runner::new("refcounted-kv-share-invariants").run(
         gen_share_case,
-        check_share_case,
+        |c| check_share_case(c, KvScheme::F16),
+        shrink_share_case,
+    );
+}
+
+#[test]
+fn prop_q8_0_share_cow_swap_roundtrip_preserves_block_bytes() {
+    Runner::new("refcounted-kv-share-invariants-q8").cases(128).run(
+        gen_share_case,
+        |c| check_share_case(c, KvScheme::Q8_0),
         shrink_share_case,
     );
 }

@@ -13,8 +13,16 @@ seeds the perf trajectory), then compares against the baseline:
 * a metric is *gated* only when both the baseline entry and the current
   entry have ``check: true`` (wall-clock metrics ride along as
   informational trajectory points);
-* ``better: lower`` fails when current > baseline * (1 + tolerance),
-  ``better: higher`` fails when current < baseline * (1 - tolerance);
+* band gate (default): ``better: lower`` fails when current > baseline
+  * (1 + tolerance), ``better: higher`` fails when current < baseline
+  * (1 - tolerance);
+* floor gate: a baseline entry carrying ``"floor": x`` gates on the
+  absolute threshold instead — current must sit on the good side of
+  ``x`` (``better: higher`` fails below it, ``better: lower`` above
+  it), and the recorded baseline value is trajectory-only. Used for
+  ratio metrics (``kv_quant/*``) whose exact value may shift as bench
+  shapes evolve but whose claimed win must never drop below the
+  paper's floor;
 * a metric only the *current* side has is reported but never fails — a
   new bench starts recording before it starts gating. A baseline value
   of null likewise records without gating (used to stage metrics whose
@@ -31,6 +39,22 @@ only.
 import argparse
 import json
 import sys
+
+
+def gate_fails(better, bval, cval, tolerance, floor=None):
+    """Per-metric gate: True when current value ``cval`` regresses.
+
+    Band gate (default): ``cval`` beyond the one-sided tolerance band
+    around baseline ``bval``, direction given by ``better``. Floor gate
+    (``floor`` is not None): ``cval`` on the bad side of the absolute
+    threshold, ``bval`` ignored (it may even be None for a staged
+    metric whose trajectory value is still unmeasured).
+    """
+    if floor is not None:
+        return cval < floor if better == "higher" else cval > floor
+    if better == "lower":
+        return cval > bval * (1.0 + tolerance)
+    return cval < bval * (1.0 - tolerance)
 
 
 def load_metrics(path):
@@ -82,49 +106,58 @@ def main():
     for name in sorted(set(current) | set(baseline)):
         cur = current.get(name)
         base = baseline.get(name)
+        floor = base.get("floor") if base is not None else None
         if cur is None:
             bval = base.get("value")
-            if base.get("check", False) and bval is not None:
-                print(f"{name:<{width}}  {bval:>14.6g}  {'-':>14}  MISSING (gated)")
+            if base.get("check", False) and (bval is not None or floor is not None):
+                bshow = "null" if bval is None else f"{bval:.6g}"
+                print(f"{name:<{width}}  {bshow:>14}  {'-':>14}  MISSING (gated)")
                 failures.append((name, bval, None, base.get("better", "lower")))
             else:
                 print(f"{name:<{width}}  {bval!s:>14}  {'-':>14}  missing from run")
             continue
         cval = cur.get("value")
-        if base is None or base.get("value") is None:
+        if base is None or (base.get("value") is None and floor is None):
             shown = "null" if cval is None else f"{float(cval):.6g}"
             print(f"{name:<{width}}  {'-':>14}  {shown:>14}  recorded (no gate)")
             continue
-        bval = float(base["value"])
+        bval = None if base.get("value") is None else float(base["value"])
+        bshow = "null" if bval is None else f"{bval:.6g}"
         gated = base.get("check", False) and cur.get("check", False)
         better = base.get("better", cur.get("better", "lower"))
         if cval is None:
             if gated:
-                print(f"{name:<{width}}  {bval:>14.6g}  {'null':>14}  MISSING (gated)")
+                print(f"{name:<{width}}  {bshow:>14}  {'null':>14}  MISSING (gated)")
                 failures.append((name, bval, None, better))
             else:
-                print(f"{name:<{width}}  {bval:>14.6g}  {'null':>14}  informational")
+                print(f"{name:<{width}}  {bshow:>14}  {'null':>14}  informational")
             continue
         cval = float(cval)
         if not gated:
-            print(f"{name:<{width}}  {bval:>14.6g}  {cval:>14.6g}  informational")
+            print(f"{name:<{width}}  {bshow:>14}  {cval:>14.6g}  informational")
             continue
-        if better == "lower":
-            bad = cval > bval * (1.0 + args.tolerance)
+        bad = gate_fails(better, bval, cval, args.tolerance, floor)
+        if bad:
+            verdict = "REGRESSION"
+        elif floor is not None:
+            verdict = f"ok (floor {floor:g})"
         else:
-            bad = cval < bval * (1.0 - args.tolerance)
-        verdict = "REGRESSION" if bad else "ok"
-        print(f"{name:<{width}}  {bval:>14.6g}  {cval:>14.6g}  {verdict}")
+            verdict = "ok"
+        print(f"{name:<{width}}  {bshow:>14}  {cval:>14.6g}  {verdict}")
         if bad:
             failures.append((name, bval, cval, better))
 
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed beyond {args.tolerance:.0%} or went missing:")
+        print(
+            f"\n{len(failures)} metric(s) regressed beyond {args.tolerance:.0%}, "
+            "fell through a floor, or went missing:"
+        )
         for name, bval, cval, better in failures:
+            bshow = "null" if bval is None else f"{bval:.6g}"
             if cval is None:
-                print(f"  {name}: baseline {bval:.6g} -> missing from run (better: {better})")
+                print(f"  {name}: baseline {bshow} -> missing from run (better: {better})")
             else:
-                print(f"  {name}: baseline {bval:.6g} -> current {cval:.6g} (better: {better})")
+                print(f"  {name}: baseline {bshow} -> current {cval:.6g} (better: {better})")
         return 1
     print("\nno gated regressions")
     return 0
