@@ -1,0 +1,218 @@
+//! Bench: multi-tenant serving — WFQ admission fairness, the
+//! closed-loop adaptive token budget, and SLO attainment on the
+//! committed scenario file.
+//!
+//! Three segments, all deterministic enough to gate in CI:
+//!
+//! 1. **WFQ fairness.** Twelve equal-cost requests queue at once: six
+//!    `bulk` (ids 0–5) ahead of six `vip` (ids 6–11), weights 1 vs 4,
+//!    one worker with a single slot so admissions are strictly serial.
+//!    FIFO admits in arrival order (vip mean admission rank 8.5 of
+//!    0–11); weighted fair queuing charges each admission at
+//!    `tokens / weight`, so the vip class is pulled forward to ranks
+//!    {1,2,3,4,6,7} — mean 3.83. The gate is the rank *gain* (≈ 4.67,
+//!    floor 2.0), and the bench asserts token streams are identical
+//!    either way: scheduling moved, outputs did not.
+//!
+//! 2. **Adaptive budget.** A mixed-length batch served on the modeled
+//!    IMAX backend with `--adaptive-budget 4:64` (seeded low at 6):
+//!    every settled round feeds its LOAD/EXEC balance back into the
+//!    next round's token budget. Gates that the controller actually
+//!    stepped (`adaptive_rounds`, floor 1) and asserts bit-identical
+//!    tokens against a fixed-budget run.
+//!
+//! 3. **Scenario replay.** `examples/scenarios/mixed_tenants.scn` — the
+//!    committed three-tenant bursty trace — replayed through
+//!    `serve_trace` under WFQ with the scenario's own weights and SLO
+//!    targets. The targets are generous on purpose: the gate is "the
+//!    stack meets easy SLOs under mixed load on any machine", floor
+//!    0.9 overall and 0.75 for the worst tenant, with all 48 requests
+//!    served.
+//!
+//! The shapes are already small (tiny model, ≤ 48 requests), so
+//! `IMAX_BENCH_QUICK` changes nothing. With `BENCH_JSON=path` a
+//! machine-readable summary is written for the CI `bench-smoke` job
+//! (`scripts/check_bench_regression.py` gates the counters against
+//! `BENCH_baseline.json`).
+
+use imax_llm::coordinator::{
+    serve_trace, serve_with, AdaptiveBudget, Request, SchedPolicy, ServeOptions, ServeReport,
+};
+use imax_llm::harness::scenario::Scenario;
+use imax_llm::harness::workloads::templated_prompt;
+use imax_llm::model::{ModelConfig, ModelWeights, QuantScheme};
+use imax_llm::runtime::{ExecSpec, ImaxSpec};
+use imax_llm::util::bench::JsonMetrics;
+use imax_llm::util::report::Table;
+
+const N_BULK: usize = 6;
+const N_VIP: usize = 6;
+const FAIR_N_IN: usize = 8;
+const FAIR_N_OUT: usize = 4;
+
+fn tiny_weights() -> ModelWeights {
+    ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 31)
+}
+
+/// The twelve-request fairness workload: bulk ids 0–5 queued ahead of
+/// vip ids 6–11, every request the same cost so only the scheduler can
+/// tell the classes apart.
+fn fairness_requests() -> Vec<Request> {
+    (0..N_BULK + N_VIP)
+        .map(|id| {
+            let tenant = if id < N_BULK { "bulk" } else { "vip" };
+            Request::new(id, templated_prompt(id, FAIR_N_IN, 64), FAIR_N_OUT)
+                .with_tenant(tenant.to_string())
+        })
+        .collect()
+}
+
+/// Mean 0-based admission rank of the vip class: completions sorted by
+/// `admitted_s` (admissions are strictly serial under a single slot).
+fn vip_mean_rank(rep: &ServeReport) -> f64 {
+    let mut order: Vec<(f64, usize)> =
+        rep.completions.iter().map(|c| (c.admitted_s, c.id)).collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let ranks: Vec<f64> = order
+        .iter()
+        .enumerate()
+        .filter(|(_, &(_, id))| id >= N_BULK)
+        .map(|(rank, _)| rank as f64)
+        .collect();
+    assert_eq!(ranks.len(), N_VIP);
+    ranks.iter().sum::<f64>() / ranks.len() as f64
+}
+
+/// Tokens per request id, for schedule-only invariance checks.
+fn tokens_by_id(rep: &ServeReport) -> Vec<(usize, Vec<u32>)> {
+    let mut v: Vec<(usize, Vec<u32>)> =
+        rep.completions.iter().map(|c| (c.id, c.tokens.clone())).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+fn run_fairness(sched: SchedPolicy) -> ServeReport {
+    let opts = ServeOptions {
+        slots_per_worker: 1,
+        admit_window: 0,
+        sched,
+        tenant_weights: vec![("bulk".to_string(), 1.0), ("vip".to_string(), 4.0)],
+        ..ServeOptions::default()
+    };
+    serve_with(&tiny_weights(), fairness_requests(), 1, &opts).expect("native serve builds")
+}
+
+fn adaptive_requests() -> Vec<Request> {
+    (0..6)
+        .map(|id| {
+            let prompt = (0..3 + 4 * id).map(|i| 1 + (i % 50) as u32).collect();
+            Request::new(id, prompt, 4)
+        })
+        .collect()
+}
+
+fn main() {
+    // ---- Segment 1: WFQ admission fairness --------------------------
+    let fifo = run_fairness(SchedPolicy::Fifo);
+    let wfq = run_fairness(SchedPolicy::Wfq);
+    assert_eq!(
+        tokens_by_id(&fifo),
+        tokens_by_id(&wfq),
+        "WFQ must reorder admissions, never change tokens"
+    );
+    let fifo_rank = vip_mean_rank(&fifo);
+    let wfq_rank = vip_mean_rank(&wfq);
+    let rank_gain = fifo_rank - wfq_rank;
+    assert!(
+        rank_gain > 0.0,
+        "weight-4 vip class must be admitted earlier under WFQ: \
+         fifo mean rank {fifo_rank:.2}, wfq {wfq_rank:.2}"
+    );
+
+    // ---- Segment 2: adaptive budget on the modeled backend ----------
+    let adaptive_opts = ServeOptions {
+        spec: ExecSpec::Imax(ImaxSpec::default()),
+        token_budget: Some(6),
+        adaptive_budget: Some(AdaptiveBudget::new(4, 64)),
+        prefill_chunk: Some(3),
+        adaptive_chunk: true,
+        ..ServeOptions::default()
+    };
+    let adaptive =
+        serve_with(&tiny_weights(), adaptive_requests(), 1, &adaptive_opts).expect("imax serve");
+    let fixed_opts = ServeOptions {
+        spec: ExecSpec::Imax(ImaxSpec::default()),
+        token_budget: Some(6),
+        prefill_chunk: Some(3),
+        ..ServeOptions::default()
+    };
+    let fixed =
+        serve_with(&tiny_weights(), adaptive_requests(), 1, &fixed_opts).expect("imax serve");
+    assert_eq!(
+        tokens_by_id(&adaptive),
+        tokens_by_id(&fixed),
+        "the budget controller must be schedule-only"
+    );
+    let adaptive_rounds = adaptive.rounds.adaptive_rounds;
+    let (budget_lo, budget_hi) = (adaptive.rounds.budget_lo, adaptive.rounds.budget_hi);
+    assert!(adaptive_rounds > 0, "modeled backend must step the controller");
+    assert!(
+        (4..=64).contains(&budget_lo) && (4..=64).contains(&budget_hi) && budget_lo <= budget_hi,
+        "controller escaped [4, 64]: lo={budget_lo} hi={budget_hi}"
+    );
+
+    // ---- Segment 3: committed scenario replay under SLOs ------------
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios/mixed_tenants.scn");
+    let text = std::fs::read_to_string(path).expect("committed scenario file");
+    let sc = Scenario::parse(&text).expect("committed scenario parses");
+    let arrivals = sc.arrivals();
+    let trace: Vec<(Request, f64)> = arrivals
+        .into_iter()
+        .map(|a| {
+            assert!(a.cancel.is_none(), "the CI scenario carries no cancels");
+            (a.request, a.at_s)
+        })
+        .collect();
+    let scn_opts = ServeOptions {
+        sched: SchedPolicy::Wfq,
+        tenant_weights: sc.tenant_weights(),
+        prefix_cache: true,
+        slo_ttft_s: Some(sc.slo_ttft_s),
+        slo_tbt_s: Some(sc.slo_tbt_s),
+        ..ServeOptions::default()
+    };
+    let rep = serve_trace(&tiny_weights(), trace, 2, &scn_opts).expect("scenario serve");
+    let served = rep.completions.iter().filter(|c| c.error.is_none()).count();
+    assert_eq!(rep.tenants.len(), sc.tenants.len(), "every tenant class reports");
+    let attainment = rep.slo_attainment.expect("SLO targets were set");
+    let worst_tenant = rep
+        .tenants
+        .iter()
+        .filter_map(|t| t.slo_attainment)
+        .fold(f64::INFINITY, f64::min);
+    assert!(worst_tenant.is_finite(), "every tenant served something");
+
+    // ---- Report -----------------------------------------------------
+    let mut t = Table::new("multi-tenant serving", &["segment", "metric", "value"]);
+    t.row(vec!["wfq".into(), "vip mean rank (fifo)".into(), format!("{fifo_rank:.2}")]);
+    t.row(vec!["wfq".into(), "vip mean rank (wfq)".into(), format!("{wfq_rank:.2}")]);
+    t.row(vec!["wfq".into(), "rank gain".into(), format!("{rank_gain:.2}")]);
+    t.row(vec!["adaptive".into(), "controller steps".into(), format!("{adaptive_rounds}")]);
+    t.row(vec!["adaptive".into(), "budget walk".into(), format!("[{budget_lo}, {budget_hi}]")]);
+    t.row(vec!["scenario".into(), "served / requests".into(), format!("{served} / {}", sc.n)]);
+    t.row(vec!["scenario".into(), "SLO attainment".into(), format!("{attainment:.3}")]);
+    t.row(vec!["scenario".into(), "worst-tenant attainment".into(), format!("{worst_tenant:.3}")]);
+    t.row(vec!["scenario".into(), "wall (s)".into(), format!("{:.3}", rep.wall_s)]);
+    println!("{}", t.render());
+
+    let mut m = JsonMetrics::new("multi_tenant");
+    m.push("fairness_rank_gain", rank_gain, "higher", true);
+    m.push("wfq_vip_mean_rank", wfq_rank, "lower", false);
+    m.push("adaptive_rounds", adaptive_rounds as f64, "higher", true);
+    m.push("adaptive_budget_span", (budget_hi - budget_lo) as f64, "higher", false);
+    m.push("scenario_served", served as f64, "higher", true);
+    m.push("scenario_slo_attainment", attainment, "higher", true);
+    m.push("scenario_worst_tenant_slo_attainment", worst_tenant, "higher", true);
+    m.push("scenario_wall_s", rep.wall_s, "lower", false);
+    m.write_if_requested().expect("BENCH_JSON write");
+}

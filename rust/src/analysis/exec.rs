@@ -12,7 +12,7 @@
 //! subcommand run under.
 
 use crate::analysis::{verify_schedule, Finding};
-use crate::model::engine::{KernelExec, MatvecExec};
+use crate::model::engine::{KernelExec, MatvecExec, RoundBalance};
 use crate::model::graph::{KvSwapDir, MatvecOp, Phase};
 use crate::runtime::queue::{KernelOp, Launch, LaunchQueue};
 use crate::tensor::{ActQuant, QTensor};
@@ -139,5 +139,9 @@ impl<E: KernelExec> KernelExec for AuditExec<E> {
 
     fn round_boundary(&mut self) {
         self.inner.round_boundary();
+    }
+
+    fn last_round_balance(&self) -> Option<RoundBalance> {
+        self.inner.last_round_balance()
     }
 }

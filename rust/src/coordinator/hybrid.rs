@@ -20,13 +20,18 @@ use crate::model::graph::{ops_for_token, MatvecOp, OpKind, Phase};
 /// A `[n_in : n_out]` workload on a model+scheme (the paper's notation).
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// Model hyperparameters the workload runs on.
     pub cfg: ModelConfig,
+    /// Weight quantization scheme priced by the cost model.
     pub scheme: QuantScheme,
+    /// Prompt (prefill) length in tokens.
     pub n_in: usize,
+    /// Decode length in tokens.
     pub n_out: usize,
 }
 
 impl Workload {
+    /// Human-readable `model scheme [n_in:n_out]` tag for tables.
     pub fn label(&self) -> String {
         format!(
             "{} {} [{}:{}]",
@@ -41,7 +46,9 @@ impl Workload {
 /// Result of simulating one workload on one IMAX configuration.
 #[derive(Clone, Debug)]
 pub struct WorkloadRun {
+    /// Modeled per-phase LOAD/EXEC/DRAIN cost totals.
     pub breakdown: RunBreakdown,
+    /// Offloaded / total MAC accounting behind the Table 2 ratios.
     pub stats: OffloadStats,
     /// Total bytes moved host→IMAX (LOAD traffic).
     pub load_bytes: u64,
@@ -56,9 +63,13 @@ pub struct WorkloadRun {
 /// time (host-executed kernels, NEON pegged).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ActiveTime {
+    /// Seconds of IMAX-active time in fp16 kernels.
     pub fp16: f64,
+    /// Seconds of IMAX-active time in q8_0 kernels.
     pub q8_0: f64,
+    /// Seconds of IMAX-active time in q6_k kernels.
     pub q6_k: f64,
+    /// Seconds of IMAX-active time in q3_k kernels.
     pub q3_k: f64,
     /// DMA + PIO activity (LOAD/DRAIN/CONF/REGV/RANGE).
     pub xfer: f64,
@@ -69,6 +80,7 @@ pub struct ActiveTime {
 }
 
 impl ActiveTime {
+    /// Total seconds with IMAX lanes active, summed over kernel classes.
     pub fn imax_active(&self) -> f64 {
         self.fp16 + self.q8_0 + self.q6_k + self.q3_k
     }

@@ -16,6 +16,8 @@
 //!   and the [`crate::runtime::backend::BackendRegistry`] (the
 //!   examples/serve_e2e.rs driver).
 
+#![warn(missing_docs)]
+
 pub mod hybrid;
 pub mod offload;
 pub mod phases;
@@ -26,10 +28,11 @@ pub use hybrid::{simulate, Workload, WorkloadRun};
 pub use offload::{OffloadPolicy, OffloadStats};
 pub use phases::{InstrumentedExec, RoundCost};
 pub use scheduler::{
-    AdmitError, Admitted, CancelHandle, ContinuousBatcher, DeliverySink, FinishReason, Request,
-    RoundStats, RoundTokens, SchedPolicy, SessionLog, TokenEvent,
+    AdaptiveBudget, AdmitError, Admitted, CancelHandle, ContinuousBatcher, DeliverySink,
+    FinishReason, Request, RoundStats, RoundTokens, SchedPolicy, SessionLog, TenantFairness,
+    TokenEvent,
 };
 pub use serve::{
-    serve, serve_streaming, serve_with, Completion, ServeError, ServeOptions, ServeReport,
-    StreamingServe, ADMIT_SCAN_WINDOW,
+    serve, serve_streaming, serve_trace, serve_trace_streaming, serve_with, Completion,
+    ServeError, ServeOptions, ServeReport, StreamingServe, TenantReport, ADMIT_SCAN_WINDOW,
 };

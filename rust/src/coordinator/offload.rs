@@ -33,6 +33,7 @@ use crate::util::report::Table;
 /// Offload decision policy for one (model, scheme, device) combination.
 #[derive(Clone, Debug)]
 pub struct OffloadPolicy {
+    /// LMM geometry offload candidates must fit (capacity gate).
     pub lmm: LmmConfig,
     /// Kernel classes excluded because their weights don't fit the DMA
     /// staging buffer.
@@ -70,6 +71,7 @@ impl OffloadPolicy {
         }
     }
 
+    /// Policy that offloads nothing: the host-only baseline.
     pub fn host_only() -> OffloadPolicy {
         OffloadPolicy {
             lmm: LmmConfig::new(64),
@@ -132,11 +134,14 @@ pub struct OffloadStats {
     per_class: HashMap<KernelClass, (u64, u64)>,
     /// (offloaded, total) per op kind (diagnostics).
     per_kind: HashMap<String, (u64, u64)>,
+    /// MACs executed on the accelerator.
     pub offloaded_macs: u64,
+    /// MACs executed anywhere (host + accelerator).
     pub total_macs: u64,
 }
 
 impl OffloadStats {
+    /// Account one matvec op under the given offload decision.
     pub fn record(&mut self, op: &MatvecOp, offloaded: bool) {
         let class = KernelClass::for_type(op.wty);
         let e = self.per_class.entry(class).or_insert((0, 0));
@@ -183,6 +188,7 @@ impl OffloadStats {
         }
     }
 
+    /// Offload ratio of one linear kind (`None` when never seen).
     pub fn ratio_for_kind(&self, kind: LinearKind) -> Option<f64> {
         self.per_kind
             .get(kind.name())

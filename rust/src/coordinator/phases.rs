@@ -31,7 +31,7 @@ use crate::imax::dma::TransferMode;
 use crate::imax::pio::ConfTracker;
 use crate::imax::sim;
 use crate::imax::timing::{PhaseCost, RunBreakdown};
-use crate::model::engine::{KernelExec, MatvecExec};
+use crate::model::engine::{KernelExec, MatvecExec, RoundBalance};
 use crate::model::graph::{KvSwapDir, MatvecOp, OpKind, Phase};
 use crate::runtime::queue::{KernelOp, LaunchQueue};
 use crate::tensor::{ActQuant, QTensor};
@@ -56,8 +56,21 @@ struct LaunchCost {
 pub struct RoundCost {
     /// Modeled seconds the round added (all phases, LOAD/EXEC/HOST/…).
     pub modeled_s: f64,
+    /// Modeled streaming-LOAD seconds the round added (post-overlap:
+    /// what the double-buffered prefetch could not hide).
+    pub load_s: f64,
+    /// Modeled kernel-EXEC seconds the round added.
+    pub exec_s: f64,
     /// Operand bytes the round's offloaded kernels streamed host→LMM.
     pub streamed_bytes: u64,
+}
+
+impl RoundCost {
+    /// The round's LOAD/EXEC split as the scheduler feedback signal
+    /// ([`crate::model::engine::KernelExec::last_round_balance`]).
+    pub fn balance(&self) -> RoundBalance {
+        RoundBalance { load_s: self.load_s, exec_s: self.exec_s }
+    }
 }
 
 /// A [`MatvecExec`] that runs kernels through an inner executor while
@@ -65,15 +78,21 @@ pub struct RoundCost {
 /// wall time per phase. Costs queue per launch and settle at the
 /// engine's submit points (see the module docs).
 pub struct InstrumentedExec<E: MatvecExec> {
+    /// The executor that actually runs the kernels.
     pub inner: E,
+    /// IMAX device model pricing every queued launch.
     pub dev: ImaxDevice,
+    /// Offload decision policy (what runs on the accelerator).
     pub policy: OffloadPolicy,
+    /// DMA transfer mode the cost model charges (PIO vs coalesced).
     pub mode: TransferMode,
     /// Model the double-buffered LMM prefetch: overlap each queued
     /// kernel's streaming LOAD with the previous kernel's EXEC within a
     /// submission batch.
     pub overlap: bool,
+    /// Accumulated modeled per-phase costs.
     pub modeled: RunBreakdown,
+    /// Offloaded / total MAC accounting.
     pub stats: OffloadStats,
     /// Modeled LOAD seconds recovered by prefetch overlap (0 with
     /// `overlap` off).
@@ -92,7 +111,9 @@ pub struct InstrumentedExec<E: MatvecExec> {
     /// their kernels' bytes never stream (`benches/prefix_reuse.rs`
     /// reports the reduction).
     pub streamed_bytes: u64,
+    /// Measured wall seconds spent in prefill steps.
     pub wall_prefill: f64,
+    /// Measured wall seconds spent in decode steps.
     pub wall_decode: f64,
     /// Modeled cost deltas per scheduler round
     /// ([`KernelExec::round_boundary`]); empty unless an iteration
@@ -105,11 +126,16 @@ pub struct InstrumentedExec<E: MatvecExec> {
     step_start: Option<Instant>,
     /// Cumulative modeled seconds at the last round boundary.
     round_mark_modeled_s: f64,
+    /// Cumulative modeled LOAD / EXEC seconds at the last round boundary.
+    round_mark_load_s: f64,
+    round_mark_exec_s: f64,
     /// Cumulative streamed bytes at the last round boundary.
     round_mark_bytes: u64,
 }
 
 impl<E: MatvecExec> InstrumentedExec<E> {
+    /// Wrap `inner` with cost instrumentation for the given device
+    /// model, offload policy and transfer mode.
     pub fn new(inner: E, dev: ImaxDevice, policy: OffloadPolicy, mode: TransferMode) -> Self {
         InstrumentedExec {
             inner,
@@ -131,6 +157,8 @@ impl<E: MatvecExec> InstrumentedExec<E> {
             current_phase: Phase::Prefill,
             step_start: None,
             round_mark_modeled_s: 0.0,
+            round_mark_load_s: 0.0,
+            round_mark_exec_s: 0.0,
             round_mark_bytes: 0,
         }
     }
@@ -267,13 +295,22 @@ impl<E: MatvecExec> KernelExec for InstrumentedExec<E> {
         // added to the modeled totals — the per-round view of the
         // transfer bottleneck.
         self.flush();
-        let cum = self.modeled.total().total();
+        let tot = self.modeled.total();
+        let cum = tot.total();
         self.rounds.push(RoundCost {
             modeled_s: cum - self.round_mark_modeled_s,
+            load_s: tot.load - self.round_mark_load_s,
+            exec_s: tot.exec - self.round_mark_exec_s,
             streamed_bytes: self.streamed_bytes - self.round_mark_bytes,
         });
         self.round_mark_modeled_s = cum;
+        self.round_mark_load_s = tot.load;
+        self.round_mark_exec_s = tot.exec;
         self.round_mark_bytes = self.streamed_bytes;
+    }
+
+    fn last_round_balance(&self) -> Option<RoundBalance> {
+        self.rounds.last().map(RoundCost::balance)
     }
 }
 
@@ -379,6 +416,15 @@ mod tests {
         );
         let bytes: u64 = exec.rounds.iter().map(|r| r.streamed_bytes).sum();
         assert_eq!(bytes, exec.streamed_bytes);
+        // The LOAD/EXEC split reconciles the same way, and the feedback
+        // accessor hands the scheduler the last round's balance.
+        let load: f64 = exec.rounds.iter().map(|r| r.load_s).sum();
+        let ex: f64 = exec.rounds.iter().map(|r| r.exec_s).sum();
+        assert!((load - exec.modeled.total().load).abs() < 1e-12);
+        assert!((ex - exec.modeled.total().exec).abs() < 1e-12);
+        let bal = exec.last_round_balance().expect("instrumented backend feeds balance");
+        assert_eq!(bal, exec.rounds[1].balance());
+        assert!(bal.load_fraction().expect("offloaded round has LOAD+EXEC") > 0.0);
     }
 
     #[test]

@@ -109,6 +109,7 @@
 //! speedup) while the host-contention factor in [`crate::imax::sim`]
 //! inflates HOST/LOAD issue costs, reproducing the saturation curve.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -120,7 +121,7 @@ use crate::imax::device::ImaxDevice;
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::model::drafter::{DrafterSpec, NgramDrafter};
-use crate::model::engine::{Engine, KernelExec, PrefillCursor, Session};
+use crate::model::engine::{Engine, KernelExec, PrefillCursor, RoundBalance, Session};
 use crate::model::graph::Phase;
 use crate::model::kv_cache::{CacheError, KvReuseStats};
 use crate::model::sampler::Sampler;
@@ -133,21 +134,162 @@ pub enum SchedPolicy {
     /// Shortest job first within the scan window, by prefix-aware
     /// effective cost (worst-case pages minus the cached prefix).
     Sjf,
+    /// Weighted fair queueing across tenants within the scan window:
+    /// candidates whose tenant has consumed the least weighted service
+    /// admit first (see [`TenantFairness`]), so one tenant's burst
+    /// cannot starve another's steady trickle. Requests without a
+    /// tenant share one default account at weight 1.
+    Wfq,
 }
 
 impl SchedPolicy {
+    /// Parse a `--sched` value (`fifo|sjf|wfq`), case-insensitive.
     pub fn by_name(name: &str) -> Option<SchedPolicy> {
         match name.to_ascii_lowercase().as_str() {
             "fifo" => Some(SchedPolicy::Fifo),
             "sjf" => Some(SchedPolicy::Sjf),
+            "wfq" => Some(SchedPolicy::Wfq),
             _ => None,
         }
     }
 
+    /// The CLI name of this policy.
     pub fn name(self) -> &'static str {
         match self {
             SchedPolicy::Fifo => "fifo",
             SchedPolicy::Sjf => "sjf",
+            SchedPolicy::Wfq => "wfq",
+        }
+    }
+}
+
+/// Weighted fair-queueing ledger for per-tenant admission
+/// ([`SchedPolicy::Wfq`]): each tenant accrues *virtual service* —
+/// admitted tokens divided by its weight — and admission always prefers
+/// the candidate whose tenant has accrued the least. A tenant with
+/// weight 2 therefore sustains twice the admitted token rate of a
+/// weight-1 tenant under contention, and a burst from one tenant cannot
+/// monopolize the scan window: its virtual service races ahead after a
+/// few admissions and the other tenants' requests sort first.
+///
+/// Requests without a tenant share one default account at weight 1.0.
+/// The ledger is deliberately engine-agnostic (plain names and token
+/// counts) so benches can drive it against a bare
+/// [`ContinuousBatcher`] exactly the way the serve loop does.
+#[derive(Clone, Debug, Default)]
+pub struct TenantFairness {
+    weights: HashMap<String, f64>,
+    service: HashMap<String, f64>,
+}
+
+impl TenantFairness {
+    /// Build a ledger from `(tenant, weight)` pairs. Non-positive
+    /// weights are clamped to a small epsilon (a zero weight would make
+    /// one admission push the tenant's virtual service to infinity).
+    pub fn new(weights: &[(String, f64)]) -> TenantFairness {
+        let weights = weights
+            .iter()
+            .map(|(name, w)| (name.clone(), w.max(1e-9)))
+            .collect();
+        TenantFairness { weights, service: HashMap::new() }
+    }
+
+    fn key(tenant: Option<&str>) -> &str {
+        tenant.unwrap_or("")
+    }
+
+    /// The admission weight of `tenant` (1.0 unless configured).
+    pub fn weight(&self, tenant: Option<&str>) -> f64 {
+        self.weights.get(Self::key(tenant)).copied().unwrap_or(1.0)
+    }
+
+    /// Weighted service `tenant` has accrued so far (admitted tokens
+    /// divided by its weight).
+    pub fn virtual_service(&self, tenant: Option<&str>) -> f64 {
+        self.service.get(Self::key(tenant)).copied().unwrap_or(0.0)
+    }
+
+    /// Admission order over a window of candidates, least-served tenant
+    /// first. The sort is stable, so requests of one tenant (and ties
+    /// across fresh tenants) keep arrival order.
+    pub fn order(&self, tenants: &[Option<&str>]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..tenants.len()).collect();
+        order.sort_by(|&a, &b| {
+            let sa = self.virtual_service(tenants[a]);
+            let sb = self.virtual_service(tenants[b]);
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+
+    /// Charge an admission: `tokens` of work (prompt + requested output
+    /// tokens) against `tenant`'s weighted account.
+    pub fn charge(&mut self, tenant: Option<&str>, tokens: usize) {
+        let w = self.weight(tenant);
+        *self.service.entry(Self::key(tenant).to_string()).or_insert(0.0) +=
+            tokens as f64 / w;
+    }
+}
+
+/// Closed-loop per-round token budget
+/// ([`ContinuousBatcher::with_adaptive_budget`]): after every settled
+/// round the controller reads the backend's modeled LOAD/EXEC balance
+/// ([`KernelExec::last_round_balance`]) and walks the budget inside
+/// `[min, max]` — up when the round was LOAD-bound (a bigger round
+/// amortizes the same weight stream over more tokens, the paper's
+/// transfer-bottleneck lever), down when EXEC-bound (extra tokens are
+/// pure latency). Functional backends feed no balance, so the budget
+/// stays at its starting value and scheduling remains exactly the fixed
+/// `--token-budget` behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveBudget {
+    /// Budget floor: the controller never starves prefill below this.
+    pub min: usize,
+    /// Budget ceiling: bounds the worst-case round latency (TBT).
+    pub max: usize,
+    /// LOAD fraction at or below which the budget shrinks one step.
+    pub low_load_frac: f64,
+    /// LOAD fraction at or above which the budget grows one step.
+    pub high_load_frac: f64,
+}
+
+impl AdaptiveBudget {
+    /// Controller with the default dead-band (shrink ≤ 0.45, grow
+    /// ≥ 0.65). Panics unless `1 <= min <= max`.
+    pub fn new(min: usize, max: usize) -> AdaptiveBudget {
+        assert!(min >= 1, "adaptive budget floor must be at least 1");
+        assert!(min <= max, "adaptive budget floor must not exceed its ceiling");
+        AdaptiveBudget { min, max, low_load_frac: 0.45, high_load_frac: 0.65 }
+    }
+
+    /// Parse the CLI form `MIN:MAX` (e.g. `--adaptive-budget 4:64`).
+    pub fn parse(s: &str) -> anyhow::Result<AdaptiveBudget> {
+        let (min, max) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("adaptive budget must be MIN:MAX, got '{s}'"))?;
+        let min: usize = min.trim().parse()?;
+        let max: usize = max.trim().parse()?;
+        if min < 1 || min > max {
+            anyhow::bail!("adaptive budget needs 1 <= MIN <= MAX, got {min}:{max}");
+        }
+        Ok(AdaptiveBudget::new(min, max))
+    }
+
+    /// One controller step: the next round's budget given the current
+    /// one and the settled round's LOAD/EXEC balance. Multiplicative
+    /// steps (a quarter of the current budget, at least 1 token) so the
+    /// budget converges in a handful of rounds from either end.
+    pub fn next_budget(&self, cur: usize, bal: &RoundBalance) -> usize {
+        let Some(frac) = bal.load_fraction() else {
+            return cur.clamp(self.min, self.max);
+        };
+        let step = (cur / 4).max(1);
+        if frac >= self.high_load_frac {
+            (cur + step).min(self.max)
+        } else if frac <= self.low_load_frac {
+            cur.saturating_sub(step).max(self.min)
+        } else {
+            cur.clamp(self.min, self.max)
         }
     }
 }
@@ -161,6 +303,7 @@ impl SchedPolicy {
 pub struct CancelHandle(Arc<AtomicBool>);
 
 impl CancelHandle {
+    /// Fresh, un-cancelled latch.
     pub fn new() -> CancelHandle {
         CancelHandle::default()
     }
@@ -170,6 +313,7 @@ impl CancelHandle {
         self.0.store(true, Ordering::Release);
     }
 
+    /// Whether [`CancelHandle::cancel`] has been called.
     pub fn is_cancelled(&self) -> bool {
         self.0.load(Ordering::Acquire)
     }
@@ -178,8 +322,11 @@ impl CancelHandle {
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen identifier carried through logs and completions.
     pub id: usize,
+    /// Prompt token ids to prefill.
     pub prompt: Vec<u32>,
+    /// Number of tokens to decode after the prompt.
     pub n_out: usize,
     /// Relative deadline in seconds, measured from the instant the
     /// request entered the serving queue: once exceeded — in the queue
@@ -190,11 +337,17 @@ pub struct Request {
     /// stream receiver), checked between rounds. `None` = not
     /// cancellable.
     pub cancel: Option<CancelHandle>,
+    /// Tenant class this request belongs to (`None` = untagged).
+    /// Carried through [`SessionLog`] into the serve report's
+    /// per-tenant latency/SLO breakdown, and the account
+    /// [`SchedPolicy::Wfq`] admission charges.
+    pub tenant: Option<String>,
 }
 
 impl Request {
+    /// An untenanted, uncancellable request with no deadline.
     pub fn new(id: usize, prompt: Vec<u32>, n_out: usize) -> Request {
-        Request { id, prompt, n_out, deadline_s: None, cancel: None }
+        Request { id, prompt, n_out, deadline_s: None, cancel: None, tenant: None }
     }
 
     /// Attach a relative deadline (seconds from enqueue).
@@ -209,6 +362,12 @@ impl Request {
         self
     }
 
+    /// Tag the request with a tenant class name.
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Request {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
     /// Whether the attached latch (if any) has been cancelled.
     pub fn is_cancelled(&self) -> bool {
         self.cancel.as_ref().map_or(false, CancelHandle::is_cancelled)
@@ -220,7 +379,9 @@ impl Request {
 /// delivery shape, token-level).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TokenEvent {
+    /// [`Request::id`] of the originating request.
     pub request_id: usize,
+    /// The sampled token id.
     pub token: u32,
     /// Epoch-relative delivery instant — the mark TTFT/TBT percentiles
     /// are computed from.
@@ -252,17 +413,25 @@ pub enum FinishReason {
 /// epoch's clock (seconds since `ContinuousBatcher::new`'s `epoch`).
 #[derive(Clone, Debug)]
 pub struct SessionLog {
+    /// [`Request::id`] of the originating request.
     pub id: usize,
+    /// Tenant class of the originating [`Request`] (`None` = untagged).
+    pub tenant: Option<String>,
+    /// Every token the request decoded (or kept at teardown).
     pub tokens: Vec<u32>,
+    /// Prompt tokens actually prefilled (prefix-cache hits skip some).
     pub n_prefill: usize,
     /// Time spent in the shared queue before admission.
     pub queue_s: f64,
-    /// Prefill / decode processing time attributed to this request.
+    /// Prefill processing time attributed to this request.
     pub prefill_s: f64,
+    /// Decode processing time attributed to this request.
     pub decode_s: f64,
-    /// Epoch-relative lifecycle marks.
+    /// Epoch-relative admission mark.
     pub admitted_s: f64,
+    /// Epoch-relative instant the first decode round ran.
     pub decode_start_s: f64,
+    /// Epoch-relative completion (or teardown) mark.
     pub finished_s: f64,
     /// Epoch-relative *delivery* instant of each sampled token (same
     /// length as `tokens`): stamped when the token is pushed to the
@@ -334,7 +503,9 @@ impl SessionLog {
 /// spent the remaining budget on.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundTokens {
+    /// Live decode tokens the round carried.
     pub decode_tokens: usize,
+    /// Resumable prefill-chunk tokens the round spent budget on.
     pub prefill_tokens: usize,
 }
 
@@ -348,6 +519,7 @@ pub struct RoundStats {
     pub mixed_rounds: usize,
     /// Rounds that carried at least one prefill-chunk token.
     pub prefill_rounds: usize,
+    /// Decode tokens summed over all rounds.
     pub decode_tokens: usize,
     /// Prompt tokens executed as in-round resumable chunks (0 on the
     /// phase-segregated path, which prefills at admission).
@@ -361,9 +533,20 @@ pub struct RoundStats {
     /// streaming it is bounded by the prefill chunk size (the fairness
     /// guarantee).
     pub max_prefill_tokens_decode_round: usize,
+    /// Rounds after which the adaptive budget controller observed a
+    /// modeled balance and stepped (0 with adaptive budgeting off or on
+    /// a functional backend, which feeds no balance).
+    pub adaptive_rounds: usize,
+    /// Smallest per-round token budget the adaptive controller settled
+    /// on (0 when `adaptive_rounds == 0`).
+    pub budget_lo: usize,
+    /// Largest per-round token budget the adaptive controller settled
+    /// on (0 when `adaptive_rounds == 0`).
+    pub budget_hi: usize,
 }
 
 impl RoundStats {
+    /// Fold another worker's round accounting into this one.
     pub fn merge(&mut self, other: &RoundStats) {
         self.rounds += other.rounds;
         self.mixed_rounds += other.mixed_rounds;
@@ -375,6 +558,16 @@ impl RoundStats {
         self.max_prefill_tokens_decode_round = self
             .max_prefill_tokens_decode_round
             .max(other.max_prefill_tokens_decode_round);
+        if other.adaptive_rounds > 0 {
+            if self.adaptive_rounds == 0 {
+                self.budget_lo = other.budget_lo;
+                self.budget_hi = other.budget_hi;
+            } else {
+                self.budget_lo = self.budget_lo.min(other.budget_lo);
+                self.budget_hi = self.budget_hi.max(other.budget_hi);
+            }
+            self.adaptive_rounds += other.adaptive_rounds;
+        }
     }
 
     /// Mean prefill tokens per round over rounds that carried any.
@@ -543,6 +736,7 @@ impl InFlight {
         let log = SessionLog {
             id: req.id,
             n_prefill: req.prompt.len(),
+            tenant: req.tenant,
             tokens,
             queue_s,
             prefill_s,
@@ -570,9 +764,21 @@ pub struct ContinuousBatcher {
     /// Per-round token cap for the mixed iteration scheduler. `None`
     /// keeps the phase-segregated schedule (whole prefill at admission).
     token_budget: Option<usize>,
+    /// Closed-loop budget controller: when set, every settled round's
+    /// modeled LOAD/EXEC balance steps `token_budget` inside the
+    /// controller's `[min, max]` band.
+    adaptive: Option<AdaptiveBudget>,
+    /// The budget each adaptive step settled on, in round order (empty
+    /// with adaptive budgeting off or on a functional backend).
+    budget_trace: Vec<usize>,
     /// Largest resumable prefill chunk one round may carry per request
     /// (further capped by the remaining budget).
     prefill_chunk: usize,
+    /// Queue-depth-aware chunk sizing: split each round's leftover
+    /// budget evenly across the flights still prefilling (never above
+    /// `prefill_chunk`), so a deep prefill queue lowers worst-case TTFT
+    /// instead of serving cursors strictly in admission order.
+    adaptive_chunk: bool,
     /// Drafted tokens verified per live sequence per round (0 = vanilla
     /// decode, one forward pass per token).
     speculate: usize,
@@ -610,7 +816,10 @@ impl ContinuousBatcher {
             ubatch,
             epoch,
             token_budget: None,
+            adaptive: None,
+            budget_trace: Vec::new(),
             prefill_chunk: ubatch,
+            adaptive_chunk: false,
             speculate: 0,
             drafter: DrafterSpec::default().build(),
             sink: None,
@@ -638,6 +847,33 @@ impl ContinuousBatcher {
     pub fn with_prefill_chunk(mut self, chunk: usize) -> ContinuousBatcher {
         assert!(chunk >= 1, "prefill chunk must be at least 1");
         self.prefill_chunk = chunk;
+        self
+    }
+
+    /// Close the budget control loop: after every settled round the
+    /// controller reads the backend's modeled LOAD/EXEC balance and
+    /// steps the per-round token budget inside `spec`'s `[min, max]`
+    /// band (see [`AdaptiveBudget`]). Implies token-budget scheduling:
+    /// the starting budget is the configured `with_token_budget` value
+    /// clamped into the band, or `spec.max` when none was set. The
+    /// decode-starvation guarantee is untouched — every live decode
+    /// token is budget-exempt regardless of where the controller walks.
+    pub fn with_adaptive_budget(mut self, spec: AdaptiveBudget) -> ContinuousBatcher {
+        let start = self.token_budget.unwrap_or(spec.max).clamp(spec.min, spec.max);
+        self.token_budget = Some(start);
+        self.adaptive = Some(spec);
+        self
+    }
+
+    /// Enable queue-depth-aware prefill chunk sizing: each round splits
+    /// its leftover budget evenly across the flights still prefilling
+    /// (capped by `with_prefill_chunk`), instead of feeding cursors the
+    /// full chunk strictly in admission order. With a deep prefill
+    /// queue this spreads every round across more waiting prompts —
+    /// lower worst-case TTFT at identical tokens. Only meaningful with
+    /// a token budget set.
+    pub fn with_adaptive_chunk(mut self, enabled: bool) -> ContinuousBatcher {
+        self.adaptive_chunk = enabled;
         self
     }
 
@@ -673,9 +909,24 @@ impl ContinuousBatcher {
         self.speculate
     }
 
-    /// The configured per-round token budget (`None` = phase-segregated).
+    /// The current per-round token budget (`None` = phase-segregated).
+    /// Under [`ContinuousBatcher::with_adaptive_budget`] this is the
+    /// value the controller last settled on.
     pub fn token_budget(&self) -> Option<usize> {
         self.token_budget
+    }
+
+    /// The adaptive budget controller, if one is closed over this
+    /// batcher.
+    pub fn adaptive_budget(&self) -> Option<AdaptiveBudget> {
+        self.adaptive
+    }
+
+    /// The budget each adaptive controller step settled on, in round
+    /// order (empty with adaptive budgeting off, or when the backend
+    /// never fed a modeled balance).
+    pub fn budget_trace(&self) -> &[usize] {
+        &self.budget_trace
     }
 
     /// Token counts of every settled round, in order.
@@ -700,6 +951,11 @@ impl ContinuousBatcher {
             }
             s.max_prefill_tokens_round = s.max_prefill_tokens_round.max(r.prefill_tokens);
         }
+        if !self.budget_trace.is_empty() {
+            s.adaptive_rounds = self.budget_trace.len();
+            s.budget_lo = *self.budget_trace.iter().min().expect("nonempty trace");
+            s.budget_hi = *self.budget_trace.iter().max().expect("nonempty trace");
+        }
         s
     }
 
@@ -710,10 +966,12 @@ impl ContinuousBatcher {
         self.engine.free_sessions()
     }
 
+    /// Number of sessions currently admitted and live.
     pub fn n_active(&self) -> usize {
         self.active.len()
     }
 
+    /// The underlying engine (slot and cache introspection).
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
@@ -1237,9 +1495,24 @@ impl ContinuousBatcher {
         }
         // Prefill pass: spend what the decodes (mandatory tokens plus
         // drafted verify positions) left of the budget on resumable
-        // chunks, in admission order.
+        // chunks, in admission order. With queue-depth-aware chunk
+        // sizing the leftover budget is split evenly across every
+        // cursor still waiting (never above `prefill_chunk`), so a deep
+        // prefill queue advances many prompts a little per round
+        // instead of one prompt a lot.
         let mut spent = decoded;
         let mut prefilled = 0usize;
+        let waiting = self
+            .active
+            .iter()
+            .filter(|f| matches!(f.state, FlightState::Prefilling(_)))
+            .count();
+        let chunk_cap = if self.adaptive_chunk && waiting > 0 {
+            let leftover = budget.saturating_sub(spent);
+            self.prefill_chunk.min((leftover / waiting).max(1))
+        } else {
+            self.prefill_chunk
+        };
         let mut i = 0;
         while i < self.active.len() && spent < budget {
             if !matches!(self.active[i].state, FlightState::Prefilling(_)) {
@@ -1247,7 +1520,7 @@ impl ContinuousBatcher {
                 continue;
             }
             let tp0 = Instant::now();
-            let max = self.prefill_chunk.min(budget - spent);
+            let max = chunk_cap.min(budget - spent);
             let f = &mut self.active[i];
             let FlightState::Prefilling(cursor) = &mut f.state else {
                 unreachable!("checked above");
@@ -1289,6 +1562,19 @@ impl ContinuousBatcher {
                 prefill_tokens: prefilled,
             });
             exec.round_boundary();
+            // Adaptive budget: steer next round's token budget from the
+            // modeled LOAD/EXEC balance the backend just snapshotted.
+            // Backends that don't model phase costs return `None`, which
+            // freezes the budget at its current value (functional runs
+            // keep exact fixed-budget behavior).
+            if let Some(spec) = self.adaptive {
+                if let Some(bal) = exec.last_round_balance() {
+                    let cur = self.token_budget.unwrap_or(spec.max);
+                    let next = spec.next_budget(cur, &bal);
+                    self.token_budget = Some(next);
+                    self.budget_trace.push(next);
+                }
+            }
         }
         if !finished.is_empty() {
             // One recomputation covers every retirement this round (the
@@ -1312,11 +1598,17 @@ impl ContinuousBatcher {
 /// One point of the Fig 16 sweep.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
+    /// Lane count this point was simulated at.
     pub lanes: usize,
+    /// Modeled end-to-end seconds for the workload.
     pub e2e_s: f64,
+    /// Decode throughput at this lane count.
     pub tokens_per_s: f64,
+    /// Modeled accelerator EXEC seconds.
     pub exec_s: f64,
+    /// Modeled host-side seconds (the scaling bottleneck).
     pub host_s: f64,
+    /// Full simulation result behind the headline numbers.
     pub run: WorkloadRun,
 }
 

@@ -57,17 +57,19 @@
 //! aggregate throughput, the metrics the paper's E2E evaluation is built
 //! on.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::analysis::{self, AuditExec, Finding};
 use crate::coordinator::scheduler::{
-    AdmitError, Admitted, ContinuousBatcher, FinishReason, RoundStats, SchedPolicy, SessionLog,
+    AdaptiveBudget, AdmitError, Admitted, ContinuousBatcher, FinishReason, RoundStats,
+    SchedPolicy, SessionLog, TenantFairness,
 };
 pub use crate::coordinator::scheduler::{CancelHandle, Request, TokenEvent};
 use crate::imax::timing::RunBreakdown;
@@ -156,6 +158,31 @@ pub struct ServeOptions {
     /// Findings surface in [`ServeReport::audit_findings`]; execution is
     /// bit-identical either way.
     pub audit: bool,
+    /// Closed-loop per-round token budget (`--adaptive-budget MIN:MAX`):
+    /// each worker steers its round budget inside `[MIN, MAX]` from the
+    /// modeled LOAD/EXEC balance of the round it just settled (see
+    /// [`AdaptiveBudget`]). Implies token-budget scheduling — the budget
+    /// starts at `token_budget` (clamped) when set, else at `MAX`.
+    /// Functional backends feed no balance, so the budget stays frozen.
+    pub adaptive_budget: Option<AdaptiveBudget>,
+    /// Queue-depth-aware prefill chunk sizing (`--adaptive-chunk`): each
+    /// round splits its leftover budget evenly across every waiting
+    /// prefill cursor (capped by `prefill_chunk`), advancing many
+    /// prompts a little per round instead of one prompt a lot. Requires
+    /// token-budget scheduling.
+    pub adaptive_chunk: bool,
+    /// Per-tenant admission weights for [`SchedPolicy::Wfq`]
+    /// (`--tenant-weights name:w,...`). Unlisted tenants — and untagged
+    /// requests — weigh 1.
+    pub tenant_weights: Vec<(String, f64)>,
+    /// TTFT target (`--slo-ttft-s`): a served request attains it when
+    /// its first delivered token lands within this many seconds of
+    /// enqueue. Grades [`ServeReport::slo_attainment`] and the
+    /// per-tenant breakdown; `None` disables.
+    pub slo_ttft_s: Option<f64>,
+    /// Per-request p99 time-between-tokens target (`--slo-tbt-s`);
+    /// `None` disables.
+    pub slo_tbt_s: Option<f64>,
 }
 
 impl Default for ServeOptions {
@@ -177,6 +204,11 @@ impl Default for ServeOptions {
             drafter: None,
             kv_quant: KvScheme::F16,
             audit: false,
+            adaptive_budget: None,
+            adaptive_chunk: false,
+            tenant_weights: Vec::new(),
+            slo_ttft_s: None,
+            slo_tbt_s: None,
         }
     }
 }
@@ -219,16 +251,28 @@ impl std::error::Error for ServeError {}
 /// the serve call started).
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// [`Request::id`] of the originating request.
     pub id: usize,
+    /// Tenant class of the originating [`Request`] (`None` = untagged);
+    /// keys the per-tenant breakdown in [`ServeReport::tenants`].
+    pub tenant: Option<String>,
+    /// Every token delivered (teardown keeps the partial stream).
     pub tokens: Vec<u32>,
+    /// Time spent in the shared queue before admission.
     pub queue_s: f64,
+    /// Prefill processing time attributed to this request.
     pub prefill_s: f64,
+    /// Decode processing time attributed to this request.
     pub decode_s: f64,
     /// Enqueue → completion.
     pub total_s: f64,
+    /// Index of the worker engine that served the request.
     pub worker: usize,
+    /// Epoch-relative admission mark.
     pub admitted_s: f64,
+    /// Epoch-relative instant the first decode round ran.
     pub decode_start_s: f64,
+    /// Epoch-relative completion (or teardown) mark.
     pub finished_s: f64,
     /// Enqueue → first *delivered* token (queue time included); `None`
     /// for rejected or zero-output requests.
@@ -247,8 +291,9 @@ pub struct Completion {
     /// Speculative decoding: batched verify passes this request ran
     /// (0 with speculation off).
     pub verify_calls: usize,
-    /// Drafted tokens proposed / accepted across those passes.
+    /// Drafted tokens proposed across those passes.
     pub draft_tokens: usize,
+    /// Drafted tokens accepted across those passes.
     pub draft_accepted: usize,
     /// `Some` when the request did not run to completion: rejected at
     /// admission, stalled, cancelled, or past its deadline. Cancelled
@@ -285,21 +330,81 @@ impl Completion {
     }
 }
 
+/// Per-tenant slice of a serve run: latency percentiles and SLO
+/// attainment over one tenant class's completions (see
+/// [`ServeReport::tenants`]). Untagged requests aggregate under the
+/// empty tenant name.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    /// Tenant name (`""` for untagged requests).
+    pub tenant: String,
+    /// All completions of this tenant, whatever their outcome.
+    pub requests: usize,
+    /// Completions that ran to their full `n_out`.
+    pub served: usize,
+    /// Completions torn down by a [`CancelHandle`].
+    pub cancelled: usize,
+    /// Completions whose deadline expired.
+    pub deadline_expired: usize,
+    /// Completions rejected or stalled at admission.
+    pub rejected: usize,
+    /// Tokens delivered to this tenant (teardown remainders included).
+    pub total_tokens: usize,
+    /// Median TTFT over this tenant's requests that delivered at least
+    /// one token (0 when none did).
+    pub ttft_p50_s: f64,
+    /// p99 TTFT over the same requests.
+    pub ttft_p99_s: f64,
+    /// Median gap between successive delivery events of this tenant's
+    /// requests (0 below two events).
+    pub tbt_p50_s: f64,
+    /// p99 delivery gap over the same events.
+    pub tbt_p99_s: f64,
+    /// Fraction of this tenant's *served* requests meeting every
+    /// configured SLO target; `None` when no SLO is set or nothing was
+    /// served.
+    pub slo_attainment: Option<f64>,
+}
+
+/// Whether one completion attains every configured SLO target. A
+/// request that delivered no first token yet completed (zero-output
+/// requests) vacuously attains TTFT; a request with fewer than two
+/// delivery events vacuously attains TBT.
+fn attains_slo(c: &Completion, slo_ttft_s: Option<f64>, slo_tbt_s: Option<f64>) -> bool {
+    let ttft_ok = match (slo_ttft_s, c.ttft_s) {
+        (Some(slo), Some(ttft)) => ttft <= slo,
+        _ => true,
+    };
+    let tbt_ok = match (slo_tbt_s, c.tbt_p99_s) {
+        (Some(slo), Some(tbt)) => tbt <= slo,
+        _ => true,
+    };
+    ttft_ok && tbt_ok
+}
+
 /// Aggregate serving statistics.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Every request's outcome, in completion order.
     pub completions: Vec<Completion>,
+    /// Wall seconds from the serve call to the last completion.
     pub wall_s: f64,
+    /// Tokens delivered across all requests.
     pub total_tokens: usize,
+    /// Delivered tokens per wall second.
     pub throughput_tok_s: f64,
+    /// Median enqueue→completion latency.
     pub latency_p50_s: f64,
+    /// p95 enqueue→completion latency.
     pub latency_p95_s: f64,
+    /// Mean enqueue→completion latency.
     pub latency_mean_s: f64,
     /// Time-to-first-token percentiles over requests that delivered at
     /// least one token (enqueue → first *delivered* token — delivery
     /// time, not sampler time; cancelled/expired requests that streamed
     /// tokens before teardown contribute honestly).
     pub ttft_p50_s: f64,
+    /// p99 of the same delivery-time TTFT distribution.
     pub ttft_p99_s: f64,
     /// Time-between-tokens percentiles over every gap between
     /// successive *delivery events* of every request — the tail-latency
@@ -308,11 +413,24 @@ pub struct ServeReport {
     /// accepted run as one event, so bursts cannot deflate these with
     /// ~0 intra-burst gaps.
     pub tbt_p50_s: f64,
+    /// p99 of the same delivery-time inter-event gaps.
     pub tbt_p99_s: f64,
     /// Requests that completed as [`ServeError::Cancelled`].
     pub cancelled: usize,
     /// Requests that completed as [`ServeError::DeadlineExpired`].
     pub deadline_expired: usize,
+    /// Per-tenant latency/SLO breakdown, sorted by tenant name (the
+    /// empty name aggregates untagged requests). Empty when no request
+    /// carried a tenant tag.
+    pub tenants: Vec<TenantReport>,
+    /// TTFT target the run was graded against (`--slo-ttft-s`).
+    pub slo_ttft_s: Option<f64>,
+    /// Per-request p99 TBT target the run was graded against
+    /// (`--slo-tbt-s`).
+    pub slo_tbt_s: Option<f64>,
+    /// Fraction of all *served* requests meeting every configured SLO
+    /// target; `None` when no SLO is set or nothing was served.
+    pub slo_attainment: Option<f64>,
     /// Round composition merged over workers (how token-budgeted rounds
     /// actually mixed decode tokens with prefill chunks).
     pub rounds: RoundStats,
@@ -344,7 +462,9 @@ pub struct ServeReport {
     /// passes run, drafted tokens proposed, drafted tokens accepted
     /// (all 0 with `--speculate 0`).
     pub verify_calls: usize,
+    /// Drafted tokens proposed across the run.
     pub draft_tokens: usize,
+    /// Drafted tokens accepted across the run.
     pub draft_accepted: usize,
     /// Aggregate tokens emitted per verify pass (accepted drafts plus
     /// each pass's always-emitted token); `None` when no verify ran.
@@ -395,7 +515,45 @@ pub fn serve_with(
     n_workers: usize,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
-    serve_inner(weights, requests, n_workers, opts, None)
+    let arrivals = requests.into_iter().map(|r| (r, 0.0)).collect();
+    serve_inner(weights, arrivals, n_workers, opts, None)
+}
+
+/// Serve a *timed* open-loop trace: each request enters the shared
+/// admission queue `at_s` wall-clock seconds after the call (a feeder
+/// thread holds it back until then), so queue time, deadlines and SLO
+/// grading measure real load instead of an all-at-once batch. This is
+/// the entry behind `serve --scenario` — pair it with
+/// [`crate::harness::scenario::Scenario::arrivals`]. Requests with
+/// non-positive `at_s` enqueue immediately; passing all zeros is
+/// exactly [`serve_with`].
+pub fn serve_trace(
+    weights: &ModelWeights,
+    arrivals: Vec<(Request, f64)>,
+    n_workers: usize,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    serve_inner(weights, arrivals, n_workers, opts, None)
+}
+
+/// [`serve_trace`] with live per-token delivery (see
+/// [`serve_streaming`]): returns immediately; the feeder thread
+/// releases requests at their arrival times while the receiver streams
+/// every delivered token.
+pub fn serve_trace_streaming(
+    weights: &ModelWeights,
+    arrivals: Vec<(Request, f64)>,
+    n_workers: usize,
+    opts: &ServeOptions,
+) -> Result<StreamingServe> {
+    validate_opts(weights, n_workers, opts)?;
+    let (event_tx, events) = mpsc::channel::<TokenEvent>();
+    let weights = weights.clone();
+    let opts = opts.clone();
+    let handle = thread::spawn(move || {
+        serve_inner(&weights, arrivals, n_workers, &opts, Some(event_tx))
+    });
+    Ok(StreamingServe { events, handle })
 }
 
 /// A streaming serve run: the live token stream plus the handle that
@@ -449,7 +607,8 @@ pub fn serve_streaming(
     let weights = weights.clone();
     let opts = opts.clone();
     let handle = thread::spawn(move || {
-        serve_inner(&weights, requests, n_workers, &opts, Some(event_tx))
+        let arrivals = requests.into_iter().map(|r| (r, 0.0)).collect();
+        serve_inner(&weights, arrivals, n_workers, &opts, Some(event_tx))
     });
     Ok(StreamingServe { events, handle })
 }
@@ -476,11 +635,33 @@ fn validate_opts(weights: &ModelWeights, n_workers: usize, opts: &ServeOptions) 
     if opts.prefill_chunk == Some(0) {
         anyhow::bail!("prefill_chunk must be at least 1");
     }
-    if opts.prefill_chunk.is_some() && opts.token_budget.is_none() {
+    if opts.prefill_chunk.is_some() && opts.token_budget.is_none() && opts.adaptive_budget.is_none()
+    {
         anyhow::bail!(
             "prefill_chunk only applies to the token-budget scheduler \
-             (pass --token-budget)"
+             (pass --token-budget or --adaptive-budget)"
         );
+    }
+    if opts.adaptive_chunk && opts.token_budget.is_none() && opts.adaptive_budget.is_none() {
+        anyhow::bail!(
+            "adaptive_chunk only applies to the token-budget scheduler \
+             (pass --token-budget or --adaptive-budget)"
+        );
+    }
+    for (slo, name) in [(opts.slo_ttft_s, "slo_ttft_s"), (opts.slo_tbt_s, "slo_tbt_s")] {
+        if let Some(v) = slo {
+            if !v.is_finite() || v <= 0.0 {
+                anyhow::bail!("{name} must be a positive number of seconds, got {v}");
+            }
+        }
+    }
+    for (name, w) in &opts.tenant_weights {
+        if name.is_empty() {
+            anyhow::bail!("tenant_weights entries need a non-empty tenant name");
+        }
+        if !w.is_finite() || *w <= 0.0 {
+            anyhow::bail!("tenant {name:?}: admission weight must be positive, got {w}");
+        }
     }
     if opts.swap_pages > 0 && !opts.prefix_cache {
         anyhow::bail!(
@@ -524,30 +705,66 @@ fn lock_queue(
     queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
-/// The serving loop behind [`serve_with`] and [`serve_streaming`]:
-/// worker threads over a shared queue, each reaping cancelled/expired
-/// flights before every admission pass and delivering tokens into
-/// `events` (when streaming) the moment the scheduler emits them.
+/// The serving loop behind [`serve_with`], [`serve_trace`] and the
+/// streaming variants: worker threads over a shared queue, each reaping
+/// cancelled/expired flights before every admission pass and delivering
+/// tokens into `events` (when streaming) the moment the scheduler emits
+/// them. Requests whose arrival offset is positive are held back by a
+/// feeder thread and pushed at their wall-clock arrival instant.
 fn serve_inner(
     weights: &ModelWeights,
-    requests: Vec<Request>,
+    arrivals: Vec<(Request, f64)>,
     n_workers: usize,
     opts: &ServeOptions,
     events: Option<mpsc::Sender<TokenEvent>>,
 ) -> Result<ServeReport> {
     validate_opts(weights, n_workers, opts)?;
-    let n_req = requests.len();
+    let n_req = arrivals.len();
     let started = Instant::now();
 
-    // Shared admission queue with enqueue timestamps.
-    let queue: Arc<Mutex<VecDeque<(Request, Instant)>>> = Arc::new(Mutex::new(
-        requests.into_iter().map(|r| (r, Instant::now())).collect(),
-    ));
+    // Shared admission queue with enqueue timestamps. An all-immediate
+    // trace (every offset <= 0, the `serve_with` path) enqueues up
+    // front; a timed trace starts empty and a feeder thread pushes each
+    // request at its arrival instant, so queue time and deadlines are
+    // measured from the *arrival*, not from the call.
+    let timed = arrivals.iter().any(|(_, at_s)| *at_s > 0.0);
+    let queue: Arc<Mutex<VecDeque<(Request, Instant)>>> =
+        Arc::new(Mutex::new(VecDeque::new()));
+    let feeding_done = Arc::new(AtomicBool::new(!timed));
+    let mut feeder: Option<thread::JoinHandle<()>> = None;
+    if timed {
+        let mut arrivals = arrivals;
+        // The feeder walks the trace in arrival order regardless of how
+        // the caller sorted it (ties keep caller order).
+        arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        let queue = Arc::clone(&queue);
+        let feeding_done = Arc::clone(&feeding_done);
+        feeder = Some(thread::spawn(move || {
+            for (req, at_s) in arrivals {
+                let target = Duration::from_secs_f64(at_s.max(0.0));
+                loop {
+                    let elapsed = started.elapsed();
+                    if elapsed >= target {
+                        break;
+                    }
+                    // Bounded naps so a long trace stays responsive to
+                    // process teardown without busy-waiting.
+                    thread::sleep((target - elapsed).min(Duration::from_millis(5)));
+                }
+                lock_queue(&queue).push_back((req, Instant::now()));
+            }
+            feeding_done.store(true, Ordering::Release);
+        }));
+    } else {
+        *lock_queue(&queue) =
+            arrivals.into_iter().map(|(r, _)| (r, Instant::now())).collect();
+    }
     let (tx, rx) = mpsc::channel::<Completion>();
 
     let mut handles = Vec::new();
     for worker in 0..n_workers {
         let queue = Arc::clone(&queue);
+        let feeding_done = Arc::clone(&feeding_done);
         let tx = tx.clone();
         let weights = weights.clone();
         let opts = opts.clone();
@@ -579,10 +796,22 @@ fn serve_inner(
             let mut batcher = ContinuousBatcher::new(engine, opts.ubatch, started);
             if let Some(budget) = opts.token_budget {
                 batcher = batcher.with_token_budget(budget);
-                if let Some(chunk) = opts.prefill_chunk {
-                    batcher = batcher.with_prefill_chunk(chunk);
-                }
             }
+            if let Some(spec) = opts.adaptive_budget {
+                batcher = batcher.with_adaptive_budget(spec);
+            }
+            if let Some(chunk) = opts.prefill_chunk {
+                // validate_opts guarantees a budget (fixed or adaptive)
+                // accompanies the chunk bound.
+                batcher = batcher.with_prefill_chunk(chunk);
+            }
+            if opts.adaptive_chunk {
+                batcher = batcher.with_adaptive_chunk(true);
+            }
+            // WFQ ledger: admitted work charges each tenant's weighted
+            // account; `--sched wfq` orders every admission window by
+            // least-served tenant. Per worker, like the engine itself.
+            let mut fairness = TenantFairness::new(&opts.tenant_weights);
             if opts.speculate > 0 {
                 batcher =
                     batcher.with_speculation(opts.speculate, opts.drafter.unwrap_or_default());
@@ -607,6 +836,7 @@ fn serve_inner(
                 };
                 tx.send(Completion {
                     id: log.id,
+                    tenant: log.tenant,
                     total_s: log.queue_s + (log.finished_s - log.admitted_s),
                     tokens: log.tokens,
                     queue_s: log.queue_s,
@@ -631,12 +861,14 @@ fn serve_inner(
             // cancelled or expired while queued) still completes — with
             // a typed error and zero tokens.
             let send_error = |id: usize,
+                              tenant: Option<String>,
                               queue_s: f64,
                               error: ServeError,
                               tx: &mpsc::Sender<Completion>| {
                 let now = started.elapsed().as_secs_f64();
                 tx.send(Completion {
                     id,
+                    tenant,
                     tokens: Vec::new(),
                     queue_s,
                     prefill_s: 0.0,
@@ -670,18 +902,27 @@ fn serve_inner(
                     // The stream consumer is gone: nothing further can
                     // be delivered. Cancel the backlog; live flights
                     // were reaped above (delivery-closed cancels all).
+                    // With a feeder still releasing a timed trace, keep
+                    // draining until it finishes so every request still
+                    // completes (with a typed error).
                     let backlog: Vec<(Request, Instant)> =
                         lock_queue(&queue).drain(..).collect();
                     for (req, enq) in backlog {
                         send_error(
                             req.id,
+                            req.tenant,
                             enq.elapsed().as_secs_f64(),
                             ServeError::Cancelled,
                             &tx,
                         );
                     }
                     if batcher.n_active() == 0 {
-                        break;
+                        if feeding_done.load(Ordering::Acquire)
+                            && lock_queue(&queue).is_empty()
+                        {
+                            break;
+                        }
+                        thread::sleep(Duration::from_micros(200));
                     }
                     continue;
                 }
@@ -709,10 +950,22 @@ fn serve_inner(
                         break;
                     }
                     let mut order: Vec<usize> = (0..window.len()).collect();
-                    if opts.sched == SchedPolicy::Sjf {
-                        // Shortest job first by prefix-aware effective
-                        // cost; stable, so ties keep arrival order.
-                        order.sort_by_key(|&i| batcher.effective_cost_pages(&window[i].0));
+                    match opts.sched {
+                        SchedPolicy::Fifo => {}
+                        SchedPolicy::Sjf => {
+                            // Shortest job first by prefix-aware effective
+                            // cost; stable, so ties keep arrival order.
+                            order
+                                .sort_by_key(|&i| batcher.effective_cost_pages(&window[i].0));
+                        }
+                        SchedPolicy::Wfq => {
+                            // Least weighted service first: the tenant
+                            // furthest behind its fair share goes to the
+                            // head of the window; ties keep arrival order.
+                            let tenants: Vec<Option<&str>> =
+                                window.iter().map(|(r, _)| r.tenant.as_deref()).collect();
+                            order = fairness.order(&tenants);
+                        }
                     }
                     let mut kept: Vec<Option<(Request, Instant)>> =
                         window.into_iter().map(Some).collect();
@@ -730,20 +983,35 @@ fn serve_inner(
                         // already past its deadline never takes a slot.
                         if req.is_cancelled() {
                             admitted_any = true;
-                            send_error(req.id, queue_s, ServeError::Cancelled, &tx);
+                            send_error(req.id, req.tenant, queue_s, ServeError::Cancelled, &tx);
                             continue;
                         }
                         if req.deadline_s.map_or(false, |d| queue_s >= d) {
                             admitted_any = true;
-                            send_error(req.id, queue_s, ServeError::DeadlineExpired, &tx);
+                            send_error(
+                                req.id,
+                                req.tenant,
+                                queue_s,
+                                ServeError::DeadlineExpired,
+                                &tx,
+                            );
                             continue;
                         }
                         let sampler =
                             Sampler::top_k(0.9, 40, opts.sampler_seed.wrapping_add(req.id as u64));
+                        // Captured before `admit` consumes the request:
+                        // the WFQ ledger charges admitted work and the
+                        // rejection path tags its completion.
+                        let tenant = req.tenant.clone();
+                        let work = req.prompt.len() + req.n_out;
                         match batcher.admit(req, sampler, queue_s, &mut exec) {
-                            Ok(Admitted::Active) => admitted_any = true,
+                            Ok(Admitted::Active) => {
+                                admitted_any = true;
+                                fairness.charge(tenant.as_deref(), work);
+                            }
                             Ok(Admitted::Finished(log)) => {
                                 admitted_any = true;
+                                fairness.charge(tenant.as_deref(), work);
                                 send(log, &tx);
                             }
                             Ok(Admitted::Deferred(req)) => kept[idx] = Some((req, enq)),
@@ -761,7 +1029,7 @@ fn serve_inner(
                                     }
                                     _ => ServeError::Rejected { reason: e.to_string() },
                                 };
-                                send_error(e.id(), queue_s, error, &tx);
+                                send_error(e.id(), tenant, queue_s, error, &tx);
                             }
                         }
                     }
@@ -782,7 +1050,12 @@ fn serve_inner(
                 }
                 if batcher.n_active() == 0 {
                     if lock_queue(&queue).is_empty() {
-                        break;
+                        if feeding_done.load(Ordering::Acquire) {
+                            break;
+                        }
+                        // Timed trace still feeding: idle until the next
+                        // arrival lands rather than spinning on the lock.
+                        thread::sleep(Duration::from_micros(200));
                     }
                     continue;
                 }
@@ -831,6 +1104,10 @@ fn serve_inner(
         reuse.merge(&worker_reuse);
         rounds.merge(&worker_rounds);
         audit_findings.extend(worker_findings);
+    }
+    // Workers only exit once feeding finished, so this join is instant.
+    if let Some(f) = feeder {
+        f.join().ok();
     }
     completions.sort_by_key(|c| c.id);
     if completions.len() != n_req {
@@ -888,6 +1165,69 @@ fn serve_inner(
     } else {
         Some(merged.streamed_bytes as f64 / total_tokens as f64)
     };
+    // SLO grading covers served requests only — a rejection never ran,
+    // so it can neither attain nor miss a latency target. `None` when no
+    // target is configured or nothing in the group was served.
+    let slo_grade = |cs: &[&Completion]| -> Option<f64> {
+        if opts.slo_ttft_s.is_none() && opts.slo_tbt_s.is_none() {
+            return None;
+        }
+        let served: Vec<&Completion> =
+            cs.iter().copied().filter(|c| c.error.is_none()).collect();
+        if served.is_empty() {
+            return None;
+        }
+        let ok = served
+            .iter()
+            .filter(|c| attains_slo(c, opts.slo_ttft_s, opts.slo_tbt_s))
+            .count();
+        Some(ok as f64 / served.len() as f64)
+    };
+    let all: Vec<&Completion> = completions.iter().collect();
+    let slo_attainment = slo_grade(&all);
+    // Per-tenant breakdown only when at least one request carried a tag:
+    // an untagged run keeps its report shape unchanged.
+    let mut by_tenant: BTreeMap<String, Vec<&Completion>> = BTreeMap::new();
+    if completions.iter().any(|c| c.tenant.is_some()) {
+        for c in &completions {
+            by_tenant.entry(c.tenant.clone().unwrap_or_default()).or_default().push(c);
+        }
+    }
+    let tenants: Vec<TenantReport> = by_tenant
+        .iter()
+        .map(|(name, cs)| {
+            let t_ttfts: Vec<f64> = cs.iter().filter_map(|c| c.ttft_s).collect();
+            let t_gaps: Vec<f64> = cs.iter().flat_map(|c| c.tbt_gaps_s()).collect();
+            TenantReport {
+                tenant: name.clone(),
+                requests: cs.len(),
+                served: cs.iter().filter(|c| c.error.is_none()).count(),
+                cancelled: cs
+                    .iter()
+                    .filter(|c| matches!(c.error, Some(ServeError::Cancelled)))
+                    .count(),
+                deadline_expired: cs
+                    .iter()
+                    .filter(|c| matches!(c.error, Some(ServeError::DeadlineExpired)))
+                    .count(),
+                rejected: cs
+                    .iter()
+                    .filter(|c| {
+                        matches!(
+                            c.error,
+                            Some(ServeError::Rejected { .. }) | Some(ServeError::Stalled { .. })
+                        )
+                    })
+                    .count(),
+                total_tokens: cs.iter().map(|c| c.tokens.len()).sum(),
+                ttft_p50_s: pctl_of(&t_ttfts, 50.0),
+                ttft_p99_s: pctl_of(&t_ttfts, 99.0),
+                tbt_p50_s: pctl_of(&t_gaps, 50.0),
+                tbt_p99_s: pctl_of(&t_gaps, 99.0),
+                slo_attainment: slo_grade(cs),
+            }
+        })
+        .collect();
     Ok(ServeReport {
         throughput_tok_s: total_tokens as f64 / wall_s,
         latency_p50_s: pctl(50.0),
@@ -899,6 +1239,10 @@ fn serve_inner(
         tbt_p99_s: pctl_of(&gaps, 99.0),
         cancelled,
         deadline_expired,
+        tenants,
+        slo_ttft_s: opts.slo_ttft_s,
+        slo_tbt_s: opts.slo_tbt_s,
+        slo_attainment,
         rounds,
         completions,
         wall_s,
@@ -1589,5 +1933,185 @@ mod tests {
             assert_eq!(c.error, Some(ServeError::Cancelled));
             assert!(c.tokens.len() < 64, "no request ran to completion");
         }
+    }
+
+    #[test]
+    fn wfq_prioritizes_underserved_tenants_and_keeps_tokens() {
+        // One slot fully serializes admissions. After tenant "bulk" is
+        // served once, WFQ must put both "vip" requests (weight 100,
+        // zero service) ahead of bulk's second request.
+        let mk_reqs = || {
+            vec![
+                Request::new(0, vec![1, 2, 3, 4], 3).with_tenant("bulk"),
+                Request::new(1, vec![5, 6, 7, 8], 3).with_tenant("bulk"),
+                Request::new(2, vec![9, 10, 11, 12], 3).with_tenant("vip"),
+                Request::new(3, vec![13, 14, 15, 16], 3).with_tenant("vip"),
+            ]
+        };
+        let mk_opts = |sched| ServeOptions {
+            slots_per_worker: 1,
+            sched,
+            tenant_weights: vec![("bulk".to_string(), 1.0), ("vip".to_string(), 100.0)],
+            ..ServeOptions::default()
+        };
+        let w = tiny_weights();
+        let wfq = serve_with(&w, mk_reqs(), 1, &mk_opts(SchedPolicy::Wfq)).unwrap();
+        assert_eq!(wfq.completions.len(), 4);
+        let at = |id: usize| {
+            wfq.completions.iter().find(|c| c.id == id).expect("completed").admitted_s
+        };
+        assert!(at(0) < at(2), "tie at zero service keeps arrival order");
+        assert!(
+            at(2) < at(1) && at(3) < at(1),
+            "vip overtakes bulk's second request: bulk1={} vip0={} vip1={}",
+            at(1),
+            at(2),
+            at(3)
+        );
+        // Tenant tags ride through to completions.
+        for c in &wfq.completions {
+            let want = if c.id < 2 { "bulk" } else { "vip" };
+            assert_eq!(c.tenant.as_deref(), Some(want));
+        }
+        // Scheduling policy is an admission order, never numerics.
+        let fifo = serve_with(&w, mk_reqs(), 1, &mk_opts(SchedPolicy::Fifo)).unwrap();
+        for (a, b) in wfq.completions.iter().zip(&fifo.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "wfq must not change tokens");
+        }
+    }
+
+    #[test]
+    fn bad_tenant_weights_are_rejected() {
+        for weight in [0.0, -1.0, f64::NAN] {
+            let opts = ServeOptions {
+                tenant_weights: vec![("a".to_string(), weight)],
+                ..ServeOptions::default()
+            };
+            let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+            assert!(err.to_string().contains("weight must be positive"), "{err}");
+        }
+        let opts = ServeOptions {
+            tenant_weights: vec![(String::new(), 1.0)],
+            ..ServeOptions::default()
+        };
+        let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+        assert!(err.to_string().contains("non-empty tenant name"), "{err}");
+        for slo in [0.0, -1.0, f64::INFINITY] {
+            let opts = ServeOptions { slo_ttft_s: Some(slo), ..ServeOptions::default() };
+            let err = serve_with(&tiny_weights(), reqs(1), 1, &opts).unwrap_err();
+            assert!(err.to_string().contains("positive number of seconds"), "{err}");
+        }
+    }
+
+    #[test]
+    fn timed_trace_releases_arrivals_on_schedule() {
+        // The second request arrives 200 ms into the run: the feeder
+        // must hold it back, so its admission lands at or after its
+        // arrival instant (generous margin for the worker-epoch skew).
+        let arrivals = vec![
+            (Request::new(0, vec![1, 2, 3], 3), 0.0),
+            (Request::new(1, vec![4, 5, 6], 3), 0.2),
+        ];
+        let rep =
+            serve_trace(&tiny_weights(), arrivals, 1, &ServeOptions::default()).unwrap();
+        assert_eq!(rep.completions.len(), 2);
+        let early = rep.completions.iter().find(|c| c.id == 0).unwrap();
+        let late = rep.completions.iter().find(|c| c.id == 1).unwrap();
+        assert!(early.error.is_none() && late.error.is_none());
+        assert_eq!(late.tokens.len(), 3);
+        assert!(
+            late.admitted_s >= 0.15,
+            "held until its arrival instant, admitted at {}",
+            late.admitted_s
+        );
+        assert!(late.admitted_s > early.admitted_s);
+    }
+
+    #[test]
+    fn slo_grading_reports_attainment_per_tenant() {
+        let mk_reqs = || {
+            vec![
+                Request::new(0, vec![1, 2, 3], 3).with_tenant("chat"),
+                Request::new(1, vec![4, 5, 6], 3).with_tenant("rag"),
+            ]
+        };
+        let w = tiny_weights();
+        // A generous TTFT target: everything served attains it.
+        let opts = ServeOptions { slo_ttft_s: Some(3600.0), ..ServeOptions::default() };
+        let rep = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+        assert_eq!(rep.slo_ttft_s, Some(3600.0));
+        assert_eq!(rep.slo_attainment, Some(1.0));
+        assert_eq!(rep.tenants.len(), 2);
+        let chat = rep.tenants.iter().find(|t| t.tenant == "chat").unwrap();
+        assert_eq!((chat.requests, chat.served, chat.total_tokens), (1, 1, 3));
+        assert_eq!((chat.cancelled, chat.deadline_expired, chat.rejected), (0, 0, 0));
+        assert!(chat.ttft_p50_s > 0.0 && chat.ttft_p50_s <= chat.ttft_p99_s);
+        assert_eq!(chat.slo_attainment, Some(1.0));
+        // An unattainable TBT target: nothing attains it.
+        let opts = ServeOptions { slo_tbt_s: Some(1e-12), ..ServeOptions::default() };
+        let rep = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+        assert_eq!(rep.slo_attainment, Some(0.0));
+        for t in &rep.tenants {
+            assert_eq!(t.slo_attainment, Some(0.0), "tenant {}", t.tenant);
+        }
+        // Untagged runs without targets keep the flat report shape.
+        let rep = serve(&w, reqs(2), 1, 42);
+        assert!(rep.tenants.is_empty());
+        assert_eq!(rep.slo_attainment, None);
+    }
+
+    #[test]
+    fn adaptive_budget_tracks_modeled_balance() {
+        let w = tiny_weights();
+        let mk_reqs = || {
+            (0..6)
+                .map(|id| {
+                    let prompt = (0..3 + 4 * id).map(|i| 1 + (i % 50) as u32).collect();
+                    Request::new(id, prompt, 4)
+                })
+                .collect::<Vec<Request>>()
+        };
+        let opts = ServeOptions {
+            spec: ExecSpec::Imax(ImaxSpec::default()),
+            adaptive_budget: Some(AdaptiveBudget::new(4, 64)),
+            prefill_chunk: Some(3),
+            adaptive_chunk: true,
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&w, mk_reqs(), 1, &opts).unwrap();
+        assert_eq!(rep.completions.len(), 6);
+        assert!(
+            rep.rounds.adaptive_rounds > 0,
+            "modeled backend re-budgets every settled round: {:?}",
+            rep.rounds
+        );
+        let (lo, hi) = (rep.rounds.budget_lo, rep.rounds.budget_hi);
+        assert!(
+            (4..=64).contains(&lo) && (4..=64).contains(&hi) && lo <= hi,
+            "controller stays inside [4, 64]: lo={lo} hi={hi}"
+        );
+        // The controller moves the schedule, never the numerics: token
+        // for token identical to a fixed-budget run.
+        let fixed = ServeOptions {
+            spec: ExecSpec::Imax(ImaxSpec::default()),
+            token_budget: Some(8),
+            prefill_chunk: Some(3),
+            ..ServeOptions::default()
+        };
+        let base = serve_with(&w, mk_reqs(), 1, &fixed).unwrap();
+        for (a, b) in rep.completions.iter().zip(&base.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "adaptive budget must not change tokens");
+        }
+        // A functional backend feeds no modeled balance: the budget
+        // freezes at its starting point and the trace stays empty.
+        let nat = ServeOptions {
+            adaptive_budget: Some(AdaptiveBudget::new(4, 64)),
+            ..ServeOptions::default()
+        };
+        let rep = serve_with(&w, mk_reqs(), 1, &nat).unwrap();
+        assert_eq!(rep.completions.len(), 6);
+        assert_eq!(rep.rounds.adaptive_rounds, 0, "native backend never re-budgets");
     }
 }

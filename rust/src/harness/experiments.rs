@@ -25,17 +25,24 @@ pub const REPORT_DIR: &str = "reports";
 /// One row of the Fig 11–13 device comparison.
 #[derive(Clone, Debug)]
 pub struct DeviceMetrics {
+    /// Platform name (the figure's x-axis label).
     pub device: String,
+    /// End-to-end workload latency.
     pub latency_s: f64,
+    /// Power-delay product (energy, joules).
     pub pdp_j: f64,
+    /// Energy-delay product (joule-seconds).
     pub edp_js: f64,
 }
 
 /// Full result set for one workload across all five platforms.
 #[derive(Clone, Debug)]
 pub struct WorkloadResult {
+    /// The `[n_in:n_out]` workload the row set describes.
     pub workload: Workload,
+    /// One metrics row per compared platform.
     pub devices: Vec<DeviceMetrics>,
+    /// The IMAX simulation behind the IMAX rows.
     pub imax_run: WorkloadRun,
 }
 

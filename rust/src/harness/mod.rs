@@ -1,8 +1,14 @@
-//! Experiment harness: the 54-workload grid ([`workloads`]) and one
-//! runner per paper table/figure ([`experiments`]). The `rust/benches/`
-//! targets and the CLI subcommands are thin wrappers over these.
+//! Experiment harness: the 54-workload grid ([`workloads`]), one
+//! runner per paper table/figure ([`experiments`]), and the replayable
+//! multi-tenant traffic scenarios ([`scenario`]) behind `serve
+//! --scenario`. The `rust/benches/` targets and the CLI subcommands are
+//! thin wrappers over these.
+
+#![warn(missing_docs)]
 
 pub mod experiments;
+pub mod scenario;
 pub mod workloads;
 
 pub use experiments::{eval_grid, eval_workload, WorkloadResult};
+pub use scenario::{ArrivalProcess, Scenario, TenantShape, TenantSpec};

@@ -1,0 +1,927 @@
+//! Seeded multi-tenant traffic scenarios for the serving front-end.
+//!
+//! A [`Scenario`] bundles an arrival process, a set of named tenant
+//! classes with distinct request shapes, and the SLO targets the serve
+//! report grades against — everything needed to replay one load
+//! experiment bit-identically from a committed text file. The format is
+//! a hand-rolled line-based `key value` dialect (the crate carries no
+//! serde; see `docs/scenarios.md` for the full spec): scenario-level
+//! keys first, then one `tenant <name>` section per class. Parsing and
+//! serialization round-trip exactly — floats are printed with Rust's
+//! shortest-round-trip formatting — so `parse(to_text(parse(f)))`
+//! yields the same [`Scenario`] and therefore, through the seeded
+//! [`Rng`], the same arrival trace to the bit.
+//!
+//! Three arrival processes cover the serving regimes the scheduler has
+//! to survive: steady [`ArrivalProcess::Poisson`] load,
+//! [`ArrivalProcess::Bursty`] Markov-modulated flash crowds (a 2-state
+//! MMPP with exponential dwell times), and a smooth
+//! [`ArrivalProcess::Diurnal`] ramp (sinusoidal rate sampled by
+//! thinning). Three tenant shapes exercise distinct engine paths:
+//! [`TenantShape::Chat`] short prompts (decode-bound),
+//! [`TenantShape::Rag`] long prompts (prefill-bound), and
+//! [`TenantShape::Agent`] prompts sharing a templated per-tenant prefix
+//! (exercising the prefix cache — every request of the tenant opens
+//! with the same `prefix_len` tokens, then a unique tail).
+
+use crate::coordinator::{CancelHandle, Request};
+use crate::harness::workloads::{templated_prompt, Arrival};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+
+/// Tenant-index offset for the shared agent prefix: [`TenantShape::Agent`]
+/// prompts open with `templated_prompt(AGENT_PREFIX_ID_BASE + tenant_idx,
+/// prefix_len, ..)`, so every request of one tenant shares a prefix (and
+/// a prefix-cache fingerprint) that no request id can collide with.
+pub const AGENT_PREFIX_ID_BASE: usize = 0x5CE0_0000;
+
+/// The arrival-time process of a [`Scenario`] (all rates in requests
+/// per second of scenario time, before `time_scale` is applied).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals: exponential interarrivals at a
+    /// fixed mean rate.
+    Poisson {
+        /// Mean arrival rate.
+        rate_per_s: f64,
+    },
+    /// 2-state Markov-modulated Poisson process: the trace alternates
+    /// between a base-rate state and a burst-rate state, dwelling in
+    /// each for an exponentially distributed time. Models flash crowds
+    /// without losing memorylessness (so the simulation is exact).
+    Bursty {
+        /// Arrival rate in the quiet state.
+        base_rate_per_s: f64,
+        /// Arrival rate in the burst state.
+        burst_rate_per_s: f64,
+        /// Mean dwell time in the quiet state (seconds).
+        mean_dwell_base_s: f64,
+        /// Mean dwell time in the burst state (seconds).
+        mean_dwell_burst_s: f64,
+    },
+    /// Sinusoidal rate ramp between a low and a high rate with the
+    /// given period, sampled exactly by thinning a Poisson process at
+    /// the high rate. The trace starts at the low point of the cycle.
+    Diurnal {
+        /// Rate at the trough of the cycle.
+        low_rate_per_s: f64,
+        /// Rate at the peak of the cycle.
+        high_rate_per_s: f64,
+        /// Full cycle length (seconds).
+        period_s: f64,
+    },
+}
+
+/// Request shape of a tenant class (what part of the engine it leans on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantShape {
+    /// Short unique prompts: decode-dominated interactive chat.
+    Chat,
+    /// Long unique prompts: prefill-dominated retrieval-augmented load.
+    Rag,
+    /// A shared templated prefix of `prefix_len` tokens followed by a
+    /// unique tail: agent/tool loops that hit the prefix cache.
+    Agent,
+}
+
+impl TenantShape {
+    /// The format keyword for this shape.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantShape::Chat => "chat",
+            TenantShape::Rag => "rag",
+            TenantShape::Agent => "agent",
+        }
+    }
+
+    /// Parse a format keyword (inverse of [`TenantShape::name`]).
+    pub fn by_name(s: &str) -> Option<TenantShape> {
+        match s {
+            "chat" => Some(TenantShape::Chat),
+            "rag" => Some(TenantShape::Rag),
+            "agent" => Some(TenantShape::Agent),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant class of a [`Scenario`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name (a single whitespace-free token; tags every request
+    /// and keys the per-tenant serve report).
+    pub name: String,
+    /// WFQ weight: admitted tokens are charged at `tokens / weight`, so
+    /// a weight-2 tenant earns twice the service of a weight-1 tenant
+    /// under contention.
+    pub weight: f64,
+    /// Relative share of arrivals assigned to this tenant (normalized
+    /// over all tenants; it shapes the traffic mix, not the scheduler).
+    pub share: f64,
+    /// Request shape (see [`TenantShape`]).
+    pub shape: TenantShape,
+    /// Prompt length in tokens.
+    pub n_in: usize,
+    /// Decode length in tokens.
+    pub n_out: usize,
+    /// Shared-prefix length for [`TenantShape::Agent`] (must be
+    /// positive and strictly below `n_in`; ignored otherwise).
+    pub prefix_len: usize,
+    /// Fraction of this tenant's requests that self-cancel mid-flight.
+    pub cancel_frac: f64,
+    /// Upper bound of the uniform post-arrival cancel delay (seconds).
+    pub cancel_after_s: f64,
+    /// Fraction of this tenant's requests carrying a deadline.
+    pub deadline_frac: f64,
+    /// The enqueue-relative deadline those requests carry (seconds).
+    pub deadline_s: f64,
+}
+
+impl TenantSpec {
+    /// A tenant with the format's default field values (chat shape,
+    /// weight/share 1, 16-in/8-out, no cancels or deadlines).
+    pub fn named(name: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1.0,
+            share: 1.0,
+            shape: TenantShape::Chat,
+            n_in: 16,
+            n_out: 8,
+            prefix_len: 0,
+            cancel_frac: 0.0,
+            cancel_after_s: 0.0,
+            deadline_frac: 0.0,
+            deadline_s: 0.0,
+        }
+    }
+
+    /// Build this tenant's prompt for global request `id`.
+    ///
+    /// `tenant_idx` selects the shared agent prefix; `id` keeps every
+    /// request's full prompt (and prefix-cache fingerprint) distinct.
+    pub fn prompt(&self, tenant_idx: usize, id: usize, vocab_size: usize) -> Vec<u32> {
+        match self.shape {
+            TenantShape::Agent => {
+                let mut p = templated_prompt(
+                    AGENT_PREFIX_ID_BASE + tenant_idx,
+                    self.prefix_len,
+                    vocab_size,
+                );
+                p.extend(templated_prompt(id, self.n_in - self.prefix_len, vocab_size));
+                p
+            }
+            TenantShape::Chat | TenantShape::Rag => templated_prompt(id, self.n_in, vocab_size),
+        }
+    }
+}
+
+/// A complete replayable traffic scenario (see the module docs and
+/// `docs/scenarios.md` for the file format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Scenario name (a single whitespace-free token).
+    pub name: String,
+    /// PRNG seed: same seed, same scenario, same trace — to the bit.
+    pub seed: u64,
+    /// Number of arrivals to generate.
+    pub n: usize,
+    /// Vocabulary bound for prompt tokens.
+    pub vocab_size: usize,
+    /// Replay speed multiplier: generated arrival times and cancel
+    /// delays are divided by this, so `2.0` replays the same scenario
+    /// clock twice as fast in wall time (SLO targets are not scaled).
+    pub time_scale: f64,
+    /// The arrival-time process.
+    pub arrivals: ArrivalProcess,
+    /// TTFT target graded by the serve report (0 disables).
+    pub slo_ttft_s: f64,
+    /// p99 time-between-tokens target graded by the serve report (0
+    /// disables).
+    pub slo_tbt_s: f64,
+    /// The tenant classes (at least one).
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for Scenario {
+    fn default() -> Scenario {
+        Scenario {
+            name: "scenario".to_string(),
+            seed: 0,
+            n: 0,
+            vocab_size: 512,
+            time_scale: 1.0,
+            arrivals: ArrivalProcess::Poisson { rate_per_s: 100.0 },
+            slo_ttft_s: 0.0,
+            slo_tbt_s: 0.0,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+fn token_ok(s: &str) -> bool {
+    !s.is_empty() && !s.contains(char::is_whitespace) && !s.contains('#')
+}
+
+/// Strictly positive and not NaN (`NaN > 0.0` is false).
+fn is_pos(v: f64) -> bool {
+    v > 0.0
+}
+
+/// Non-negative and not NaN.
+fn non_neg(v: f64) -> bool {
+    v >= 0.0
+}
+
+/// Exponential draw with the given rate (strictly positive argument to
+/// `ln` because `next_f64` is in `[0, 1)`).
+fn exp_draw(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// The arrival-clock simulator: one instance walks a single seeded
+/// trace forward, one call per arrival.
+struct ArrivalClock {
+    proc: ArrivalProcess,
+    t: f64,
+    in_burst: bool,
+    /// Scenario time of the next MMPP state switch; negative until the
+    /// first dwell is drawn (lazily, so `new` needs no RNG).
+    next_switch: f64,
+}
+
+impl ArrivalClock {
+    fn new(proc: ArrivalProcess) -> ArrivalClock {
+        ArrivalClock {
+            proc,
+            t: 0.0,
+            in_burst: false,
+            next_switch: -1.0,
+        }
+    }
+
+    /// Advance to (and return) the next arrival time.
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        match self.proc {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                self.t += exp_draw(rng, rate_per_s);
+            }
+            ArrivalProcess::Bursty {
+                base_rate_per_s,
+                burst_rate_per_s,
+                mean_dwell_base_s,
+                mean_dwell_burst_s,
+            } => {
+                if self.next_switch < 0.0 {
+                    self.next_switch = self.t + exp_draw(rng, 1.0 / mean_dwell_base_s);
+                }
+                loop {
+                    let rate = if self.in_burst {
+                        burst_rate_per_s
+                    } else {
+                        base_rate_per_s
+                    };
+                    let dt = exp_draw(rng, rate);
+                    if self.t + dt <= self.next_switch {
+                        self.t += dt;
+                        break;
+                    }
+                    // The candidate arrival lands past the state switch:
+                    // jump to the switch and redraw. Exact because the
+                    // exponential is memoryless.
+                    self.t = self.next_switch;
+                    self.in_burst = !self.in_burst;
+                    let dwell = if self.in_burst {
+                        mean_dwell_burst_s
+                    } else {
+                        mean_dwell_base_s
+                    };
+                    self.next_switch = self.t + exp_draw(rng, 1.0 / dwell);
+                }
+            }
+            ArrivalProcess::Diurnal {
+                low_rate_per_s,
+                high_rate_per_s,
+                period_s,
+            } => {
+                // Thinning: candidates at the peak rate, accepted with
+                // probability rate(t)/high. Exact for any rate(t) <=
+                // high; the cosine ramp starts at its trough.
+                loop {
+                    self.t += exp_draw(rng, high_rate_per_s);
+                    let phase = 0.5 - 0.5 * (2.0 * std::f64::consts::PI * self.t / period_s).cos();
+                    let rate = low_rate_per_s + (high_rate_per_s - low_rate_per_s) * phase;
+                    if rng.next_f64() * high_rate_per_s < rate {
+                        break;
+                    }
+                }
+            }
+        }
+        self.t
+    }
+}
+
+fn pick_share(rng: &mut Rng, shares: &[f64], total: f64) -> usize {
+    let mut t = rng.next_f64() * total;
+    for (i, &s) in shares.iter().enumerate() {
+        t -= s;
+        if t < 0.0 {
+            return i;
+        }
+    }
+    shares.len() - 1
+}
+
+impl Scenario {
+    /// Validate every field (called by [`Scenario::parse`]; call it
+    /// directly on hand-built scenarios).
+    pub fn validate(&self) -> Result<()> {
+        if !token_ok(&self.name) {
+            bail!("scenario name must be a single non-empty token: {:?}", self.name);
+        }
+        if self.n == 0 {
+            bail!("scenario must generate at least one arrival (n >= 1)");
+        }
+        if self.vocab_size == 0 {
+            bail!("vocab_size must be positive");
+        }
+        if !is_pos(self.time_scale) {
+            bail!("time_scale must be positive, got {}", self.time_scale);
+        }
+        if !non_neg(self.slo_ttft_s) || !non_neg(self.slo_tbt_s) {
+            bail!("SLO targets must be non-negative");
+        }
+        match self.arrivals {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                if !is_pos(rate_per_s) {
+                    bail!("poisson rate must be positive, got {rate_per_s}");
+                }
+            }
+            ArrivalProcess::Bursty {
+                base_rate_per_s,
+                burst_rate_per_s,
+                mean_dwell_base_s,
+                mean_dwell_burst_s,
+            } => {
+                if !is_pos(base_rate_per_s) || !is_pos(burst_rate_per_s) {
+                    bail!("bursty rates must be positive");
+                }
+                if !is_pos(mean_dwell_base_s) || !is_pos(mean_dwell_burst_s) {
+                    bail!("bursty dwell times must be positive");
+                }
+            }
+            ArrivalProcess::Diurnal {
+                low_rate_per_s,
+                high_rate_per_s,
+                period_s,
+            } => {
+                if !non_neg(low_rate_per_s) || !is_pos(high_rate_per_s) {
+                    bail!("diurnal rates must be non-negative with a positive peak");
+                }
+                if high_rate_per_s < low_rate_per_s {
+                    bail!("diurnal peak rate must be >= trough rate");
+                }
+                if !is_pos(period_s) {
+                    bail!("diurnal period must be positive");
+                }
+            }
+        }
+        if self.tenants.is_empty() {
+            bail!("scenario needs at least one tenant section");
+        }
+        let mut seen = std::collections::HashSet::new();
+        let mut total_share = 0.0;
+        for t in &self.tenants {
+            if !token_ok(&t.name) {
+                bail!("tenant name must be a single non-empty token: {:?}", t.name);
+            }
+            if !seen.insert(t.name.as_str()) {
+                bail!("duplicate tenant name {:?}", t.name);
+            }
+            if !is_pos(t.weight) {
+                bail!("tenant {:?}: weight must be positive", t.name);
+            }
+            if !non_neg(t.share) {
+                bail!("tenant {:?}: share must be non-negative", t.name);
+            }
+            total_share += t.share;
+            if t.n_in == 0 || t.n_out == 0 {
+                bail!("tenant {:?}: n_in and n_out must be positive", t.name);
+            }
+            for (key, v) in [("cancel_frac", t.cancel_frac), ("deadline_frac", t.deadline_frac)] {
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("tenant {:?}: {key} must be in [0, 1], got {v}", t.name);
+                }
+            }
+            if !non_neg(t.cancel_after_s) || !non_neg(t.deadline_s) {
+                bail!("tenant {:?}: delays must be non-negative", t.name);
+            }
+            if t.shape == TenantShape::Agent && (t.prefix_len == 0 || t.prefix_len >= t.n_in) {
+                bail!(
+                    "tenant {:?}: agent shape needs 0 < prefix_len < n_in (got prefix_len {} \
+                     with n_in {})",
+                    t.name,
+                    t.prefix_len,
+                    t.n_in
+                );
+            }
+        }
+        if !is_pos(total_share) {
+            bail!("tenant shares must sum to a positive value");
+        }
+        Ok(())
+    }
+
+    /// Parse the scenario text format. Scenario-level keys come before
+    /// the first `tenant <name>` line; `#` starts a comment anywhere.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let mut sc = Scenario::default();
+        let mut cur: Option<usize> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let tok: Vec<&str> = line.split_whitespace().collect();
+            let key = tok[0];
+            let want = |n: usize| -> Result<()> {
+                if tok.len() != n + 1 {
+                    bail!("line {ln}: `{key}` takes {n} value(s), got {}", tok.len() - 1);
+                }
+                Ok(())
+            };
+            let f64_at = |j: usize| -> Result<f64> {
+                tok[j]
+                    .parse::<f64>()
+                    .with_context(|| format!("line {ln}: bad number {:?} for `{key}`", tok[j]))
+            };
+            let usize_at = |j: usize| -> Result<usize> {
+                tok[j]
+                    .parse::<usize>()
+                    .with_context(|| format!("line {ln}: bad integer {:?} for `{key}`", tok[j]))
+            };
+            match key {
+                "scenario" | "seed" | "n" | "vocab_size" | "time_scale" | "arrivals"
+                | "slo_ttft_s" | "slo_tbt_s"
+                    if cur.is_some() =>
+                {
+                    bail!("line {ln}: scenario-level key `{key}` inside a tenant section");
+                }
+                "scenario" => {
+                    want(1)?;
+                    sc.name = tok[1].to_string();
+                }
+                "seed" => {
+                    want(1)?;
+                    sc.seed = tok[1]
+                        .parse::<u64>()
+                        .with_context(|| format!("line {ln}: bad seed {:?}", tok[1]))?;
+                }
+                "n" => {
+                    want(1)?;
+                    sc.n = usize_at(1)?;
+                }
+                "vocab_size" => {
+                    want(1)?;
+                    sc.vocab_size = usize_at(1)?;
+                }
+                "time_scale" => {
+                    want(1)?;
+                    sc.time_scale = f64_at(1)?;
+                }
+                "slo_ttft_s" => {
+                    want(1)?;
+                    sc.slo_ttft_s = f64_at(1)?;
+                }
+                "slo_tbt_s" => {
+                    want(1)?;
+                    sc.slo_tbt_s = f64_at(1)?;
+                }
+                "arrivals" => {
+                    if tok.len() < 2 {
+                        bail!("line {ln}: `arrivals` needs a process kind");
+                    }
+                    sc.arrivals = match tok[1] {
+                        "poisson" => {
+                            want(2)?;
+                            ArrivalProcess::Poisson { rate_per_s: f64_at(2)? }
+                        }
+                        "bursty" => {
+                            want(5)?;
+                            ArrivalProcess::Bursty {
+                                base_rate_per_s: f64_at(2)?,
+                                burst_rate_per_s: f64_at(3)?,
+                                mean_dwell_base_s: f64_at(4)?,
+                                mean_dwell_burst_s: f64_at(5)?,
+                            }
+                        }
+                        "diurnal" => {
+                            want(4)?;
+                            ArrivalProcess::Diurnal {
+                                low_rate_per_s: f64_at(2)?,
+                                high_rate_per_s: f64_at(3)?,
+                                period_s: f64_at(4)?,
+                            }
+                        }
+                        other => bail!(
+                            "line {ln}: unknown arrival process {other:?} \
+                             (expected poisson, bursty or diurnal)"
+                        ),
+                    };
+                }
+                "tenant" => {
+                    want(1)?;
+                    sc.tenants.push(TenantSpec::named(tok[1]));
+                    cur = Some(sc.tenants.len() - 1);
+                }
+                "weight" | "share" | "shape" | "n_in" | "n_out" | "prefix_len" | "cancel_frac"
+                | "cancel_after_s" | "deadline_frac" | "deadline_s" => {
+                    want(1)?;
+                    let Some(ti) = cur else {
+                        bail!("line {ln}: tenant key `{key}` before any `tenant <name>` line");
+                    };
+                    let shape = if key == "shape" {
+                        Some(TenantShape::by_name(tok[1]).with_context(|| {
+                            format!(
+                                "line {ln}: unknown shape {:?} (expected chat, rag or agent)",
+                                tok[1]
+                            )
+                        })?)
+                    } else {
+                        None
+                    };
+                    let t = &mut sc.tenants[ti];
+                    match key {
+                        "weight" => t.weight = f64_at(1)?,
+                        "share" => t.share = f64_at(1)?,
+                        "shape" => t.shape = shape.expect("parsed above"),
+                        "n_in" => t.n_in = usize_at(1)?,
+                        "n_out" => t.n_out = usize_at(1)?,
+                        "prefix_len" => t.prefix_len = usize_at(1)?,
+                        "cancel_frac" => t.cancel_frac = f64_at(1)?,
+                        "cancel_after_s" => t.cancel_after_s = f64_at(1)?,
+                        "deadline_frac" => t.deadline_frac = f64_at(1)?,
+                        "deadline_s" => t.deadline_s = f64_at(1)?,
+                        _ => unreachable!("guarded by the outer match arm"),
+                    }
+                }
+                other => bail!("line {ln}: unknown key {other:?}"),
+            }
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Serialize to the text format. Floats print with Rust's shortest
+    /// round-trip formatting, so `parse(to_text())` reproduces this
+    /// scenario (and its arrival trace) exactly.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "scenario {}", self.name);
+        let _ = writeln!(s, "seed {}", self.seed);
+        let _ = writeln!(s, "n {}", self.n);
+        let _ = writeln!(s, "vocab_size {}", self.vocab_size);
+        let _ = writeln!(s, "time_scale {:?}", self.time_scale);
+        match self.arrivals {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                let _ = writeln!(s, "arrivals poisson {rate_per_s:?}");
+            }
+            ArrivalProcess::Bursty {
+                base_rate_per_s,
+                burst_rate_per_s,
+                mean_dwell_base_s,
+                mean_dwell_burst_s,
+            } => {
+                let _ = writeln!(
+                    s,
+                    "arrivals bursty {base_rate_per_s:?} {burst_rate_per_s:?} \
+                     {mean_dwell_base_s:?} {mean_dwell_burst_s:?}"
+                );
+            }
+            ArrivalProcess::Diurnal {
+                low_rate_per_s,
+                high_rate_per_s,
+                period_s,
+            } => {
+                let _ = writeln!(
+                    s,
+                    "arrivals diurnal {low_rate_per_s:?} {high_rate_per_s:?} {period_s:?}"
+                );
+            }
+        }
+        let _ = writeln!(s, "slo_ttft_s {:?}", self.slo_ttft_s);
+        let _ = writeln!(s, "slo_tbt_s {:?}", self.slo_tbt_s);
+        for t in &self.tenants {
+            let _ = writeln!(s);
+            let _ = writeln!(s, "tenant {}", t.name);
+            let _ = writeln!(s, "weight {:?}", t.weight);
+            let _ = writeln!(s, "share {:?}", t.share);
+            let _ = writeln!(s, "shape {}", t.shape.name());
+            let _ = writeln!(s, "n_in {}", t.n_in);
+            let _ = writeln!(s, "n_out {}", t.n_out);
+            let _ = writeln!(s, "prefix_len {}", t.prefix_len);
+            let _ = writeln!(s, "cancel_frac {:?}", t.cancel_frac);
+            let _ = writeln!(s, "cancel_after_s {:?}", t.cancel_after_s);
+            let _ = writeln!(s, "deadline_frac {:?}", t.deadline_frac);
+            let _ = writeln!(s, "deadline_s {:?}", t.deadline_s);
+        }
+        s
+    }
+
+    /// Generate the scenario's seeded arrival trace: requests tagged
+    /// with their tenant, arrival times walked by the configured
+    /// process and divided by `time_scale`, per-tenant cancel/deadline
+    /// marks. Same scenario, same trace — to the bit.
+    pub fn arrivals(&self) -> Vec<Arrival> {
+        let mut rng = Rng::new(self.seed);
+        let mut clock = ArrivalClock::new(self.arrivals);
+        let shares: Vec<f64> = self.tenants.iter().map(|t| t.share).collect();
+        let total: f64 = shares.iter().sum();
+        let mut out = Vec::with_capacity(self.n);
+        for id in 0..self.n {
+            let at = clock.next_arrival(&mut rng);
+            let ti = pick_share(&mut rng, &shares, total);
+            let t = &self.tenants[ti];
+            let mut request = Request::new(id, t.prompt(ti, id, self.vocab_size), t.n_out)
+                .with_tenant(t.name.clone());
+            // Draw both marks unconditionally so a tenant's cancel mix
+            // never perturbs another tenant's trace positions.
+            let cancel = if rng.next_f64() < t.cancel_frac {
+                let handle = CancelHandle::new();
+                request = request.with_cancel(handle.clone());
+                Some((handle, rng.next_f64() * t.cancel_after_s / self.time_scale))
+            } else {
+                let _ = rng.next_f64();
+                None
+            };
+            if rng.next_f64() < t.deadline_frac {
+                request = request.with_deadline_s(t.deadline_s);
+            }
+            out.push(Arrival {
+                request,
+                at_s: at / self.time_scale,
+                cancel,
+            });
+        }
+        out
+    }
+
+    /// The `(name, weight)` pairs for the scheduler's WFQ ledger.
+    pub fn tenant_weights(&self) -> Vec<(String, f64)> {
+        self.tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.weight))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = "\
+# A three-tenant mixed scenario.
+scenario mixed
+seed 42
+n 96
+vocab_size 128
+time_scale 4.0
+arrivals bursty 60.0 240.0 0.5 0.125
+slo_ttft_s 0.5
+slo_tbt_s 0.05
+
+tenant chat
+weight 2.0
+share 0.5
+shape chat
+n_in 12
+n_out 8
+cancel_frac 0.1
+cancel_after_s 0.05
+
+tenant rag
+share 0.25
+shape rag
+n_in 48
+n_out 4
+deadline_frac 0.5
+deadline_s 2.0
+
+tenant agents
+weight 0.5
+share 0.25
+shape agent
+n_in 32
+n_out 6
+prefix_len 24
+";
+
+    #[test]
+    fn parse_reads_every_field() {
+        let sc = Scenario::parse(EXAMPLE).unwrap();
+        assert_eq!(sc.name, "mixed");
+        assert_eq!(sc.seed, 42);
+        assert_eq!(sc.n, 96);
+        assert_eq!(sc.vocab_size, 128);
+        assert_eq!(sc.time_scale, 4.0);
+        assert_eq!(
+            sc.arrivals,
+            ArrivalProcess::Bursty {
+                base_rate_per_s: 60.0,
+                burst_rate_per_s: 240.0,
+                mean_dwell_base_s: 0.5,
+                mean_dwell_burst_s: 0.125,
+            }
+        );
+        assert_eq!(sc.slo_ttft_s, 0.5);
+        assert_eq!(sc.slo_tbt_s, 0.05);
+        assert_eq!(sc.tenants.len(), 3);
+        assert_eq!(sc.tenants[0].weight, 2.0);
+        // Unset keys keep their defaults.
+        assert_eq!(sc.tenants[1].weight, 1.0);
+        assert_eq!(sc.tenants[1].cancel_frac, 0.0);
+        assert_eq!(sc.tenants[2].shape, TenantShape::Agent);
+        assert_eq!(sc.tenants[2].prefix_len, 24);
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let sc = Scenario::parse(EXAMPLE).unwrap();
+        let sc2 = Scenario::parse(&sc.to_text()).unwrap();
+        assert_eq!(sc, sc2, "parse(to_text()) reproduces the scenario");
+        // And serializing again is a fixed point.
+        assert_eq!(sc.to_text(), sc2.to_text());
+    }
+
+    #[test]
+    fn arrival_trace_is_bit_identical_across_replays() {
+        let sc = Scenario::parse(EXAMPLE).unwrap();
+        let a = sc.arrivals();
+        let b = Scenario::parse(&sc.to_text()).unwrap().arrivals();
+        assert_eq!(a.len(), 96);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.id, y.request.id);
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.request.tenant, y.request.tenant);
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits(), "bit-identical times");
+            assert_eq!(x.cancel.is_some(), y.cancel.is_some());
+            match (&x.cancel, &y.cancel) {
+                (Some((_, dx)), Some((_, dy))) => assert_eq!(dx.to_bits(), dy.to_bits()),
+                (None, None) => {}
+                _ => unreachable!(),
+            }
+            assert_eq!(x.request.deadline_s, y.request.deadline_s);
+        }
+        // A different seed moves the trace.
+        let mut other = sc.clone();
+        other.seed = 43;
+        let c = other.arrivals();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_s != y.at_s));
+    }
+
+    #[test]
+    fn trace_is_well_formed() {
+        let sc = Scenario::parse(EXAMPLE).unwrap();
+        let a = sc.arrivals();
+        for w in a.windows(2) {
+            assert!(w[1].at_s > w[0].at_s, "arrival times strictly increase");
+        }
+        // Every tenant lands somewhere in the mix.
+        for t in &sc.tenants {
+            let n = a
+                .iter()
+                .filter(|x| x.request.tenant.as_deref() == Some(t.name.as_str()))
+                .count();
+            assert!(n > 0, "tenant {} never drawn", t.name);
+            assert!(n < a.len(), "tenant {} drew everything", t.name);
+        }
+        // Prompt lengths match the owning tenant's shape.
+        for x in &a {
+            let t = sc
+                .tenants
+                .iter()
+                .find(|t| Some(t.name.as_str()) == x.request.tenant.as_deref())
+                .unwrap();
+            assert_eq!(x.request.prompt.len(), t.n_in);
+            assert!(x.request.prompt.iter().all(|&tok| (tok as usize) < 128));
+        }
+    }
+
+    #[test]
+    fn agent_requests_share_a_prefix_with_unique_tails() {
+        let sc = Scenario::parse(EXAMPLE).unwrap();
+        let a = sc.arrivals();
+        let agents: Vec<_> = a
+            .iter()
+            .filter(|x| x.request.tenant.as_deref() == Some("agents"))
+            .collect();
+        assert!(agents.len() >= 2, "need two agent arrivals to compare");
+        let plen = sc.tenants[2].prefix_len;
+        for pair in agents.windows(2) {
+            assert_eq!(
+                pair[0].request.prompt[..plen],
+                pair[1].request.prompt[..plen],
+                "shared templated prefix"
+            );
+            assert_ne!(
+                pair[0].request.prompt[plen..],
+                pair[1].request.prompt[plen..],
+                "unique tails keep full prompts distinct"
+            );
+        }
+    }
+
+    #[test]
+    fn time_scale_divides_the_arrival_clock() {
+        let mut sc = Scenario::parse(EXAMPLE).unwrap();
+        sc.time_scale = 1.0;
+        let slow = sc.arrivals();
+        sc.time_scale = 4.0;
+        let fast = sc.arrivals();
+        for (s, f) in slow.iter().zip(&fast) {
+            assert_eq!(s.at_s / 4.0, f.at_s, "same scenario clock, scaled replay");
+        }
+    }
+
+    #[test]
+    fn diurnal_and_poisson_processes_generate() {
+        for arrivals in [
+            ArrivalProcess::Poisson { rate_per_s: 200.0 },
+            ArrivalProcess::Diurnal {
+                low_rate_per_s: 20.0,
+                high_rate_per_s: 200.0,
+                period_s: 1.0,
+            },
+        ] {
+            let sc = Scenario {
+                n: 64,
+                arrivals,
+                tenants: vec![TenantSpec::named("only")],
+                ..Scenario::default()
+            };
+            sc.validate().unwrap();
+            let a = sc.arrivals();
+            assert_eq!(a.len(), 64);
+            for w in a.windows(2) {
+                assert!(w[1].at_s > w[0].at_s);
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_ramp_thins_the_trough() {
+        // The cosine ramp troughs at phase 0 and peaks at phase 1/2, so
+        // the trough-centered half-window (phase within a quarter period
+        // of 0) must hold far fewer arrivals than the peak-centered one
+        // — the thinning actually shapes the trace.
+        let sc = Scenario {
+            n: 400,
+            seed: 9,
+            arrivals: ArrivalProcess::Diurnal {
+                low_rate_per_s: 5.0,
+                high_rate_per_s: 400.0,
+                period_s: 2.0,
+            },
+            tenants: vec![TenantSpec::named("only")],
+            ..Scenario::default()
+        };
+        let a = sc.arrivals();
+        let trough = a
+            .iter()
+            .filter(|x| {
+                let phase = (x.at_s % 2.0) / 2.0;
+                !(0.25..0.75).contains(&phase)
+            })
+            .count();
+        let peak = a.len() - trough;
+        assert!(
+            peak > trough * 2,
+            "peak half-cycle should dominate: {trough} trough vs {peak} peak"
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for (text, needle) in [
+            ("n 4\ntenant a\nseed 3\n", "inside a tenant section"),
+            ("n 4\nweight 2\ntenant a\n", "before any `tenant"),
+            ("n 4\nbogus 1\ntenant a\n", "unknown key"),
+            ("n 4\narrivals sawtooth 1\ntenant a\n", "unknown arrival process"),
+            ("n 4\narrivals poisson nope\ntenant a\n", "bad number"),
+            ("n 0\ntenant a\n", "at least one arrival"),
+            ("n 4\n", "at least one tenant"),
+            ("n 4\ntenant a\ntenant a\n", "duplicate tenant"),
+            ("n 4\ntenant a\nshape agent\n", "prefix_len"),
+            ("n 4\ntenant a\ncancel_frac 1.5\n", "must be in [0, 1]"),
+            ("n 4\ntenant a\nweight 0\n", "weight must be positive"),
+        ] {
+            let err = Scenario::parse(text).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "{text:?} should fail with {needle:?}, got: {err:#}"
+            );
+        }
+    }
+}

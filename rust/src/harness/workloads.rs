@@ -72,6 +72,7 @@ pub fn templated_prompt(id: usize, len: usize, vocab_size: usize) -> Vec<u32> {
 
 /// One request in an open-loop serving trace.
 pub struct Arrival {
+    /// The request itself (cancel handle and deadline already wired).
     pub request: Request,
     /// Seconds after trace start at which the request enters the queue.
     pub at_s: f64,

@@ -23,9 +23,11 @@ use imax_llm::baseline::calibration as cal;
 use imax_llm::baseline::GpuDevice;
 use imax_llm::coordinator::hybrid::{simulate_auto, Workload};
 use imax_llm::coordinator::{
-    serve_streaming, serve_with, CancelHandle, Request, SchedPolicy, ServeError, ServeOptions,
+    serve_streaming, serve_trace, serve_with, AdaptiveBudget, CancelHandle, Request,
+    SchedPolicy, ServeError, ServeOptions,
 };
 use imax_llm::harness::experiments as exp;
+use imax_llm::harness::scenario::Scenario;
 use imax_llm::harness::workloads::{templated_prompt, TEMPLATE_SPAN};
 use imax_llm::imax::{ImaxDevice, KernelClass, LmmConfig, TransferMode};
 use imax_llm::model::{
@@ -230,6 +232,23 @@ fn kv_quant_flag(flags: &HashMap<String, String>) -> Result<KvScheme> {
         .with_context(|| format!("unknown KV page encoding '{name}' (use f16|q8_0)"))
 }
 
+/// Parse `--tenant-weights name:w,name:w` into the WFQ ledger's pairs.
+fn parse_tenant_weights(s: &str) -> Result<Vec<(String, f64)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let (name, w) = p
+                .split_once(':')
+                .with_context(|| format!("tenant weight must be name:weight, got '{p}'"))?;
+            let w: f64 = w
+                .trim()
+                .parse()
+                .with_context(|| format!("bad tenant weight in '{p}'"))?;
+            Ok((name.trim().to_string(), w))
+        })
+        .collect()
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = model_flag(flags)?;
     let scheme = scheme_flag(flags)?;
@@ -303,13 +322,55 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let swap_pages: usize = flags.get("swap-pages").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let sched = match flags.get("sched") {
         Some(s) => SchedPolicy::by_name(s)
-            .with_context(|| format!("unknown admission policy '{s}' (use fifo|sjf)"))?,
+            .with_context(|| format!("unknown admission policy '{s}' (use fifo|sjf|wfq)"))?,
         None => SchedPolicy::Fifo,
     };
     let token_budget: Option<usize> =
         flags.get("token-budget").map(|s| s.parse()).transpose()?;
     let prefill_chunk: Option<usize> =
         flags.get("prefill-chunk").map(|s| s.parse()).transpose()?;
+    let adaptive_budget: Option<AdaptiveBudget> =
+        flags.get("adaptive-budget").map(|s| AdaptiveBudget::parse(s)).transpose()?;
+    let adaptive_chunk = flags.get("adaptive-chunk").map(|v| v == "true").unwrap_or(false);
+    let mut tenant_weights: Vec<(String, f64)> = flags
+        .get("tenant-weights")
+        .map(|s| parse_tenant_weights(s))
+        .transpose()?
+        .unwrap_or_default();
+    let mut slo_ttft_s: Option<f64> =
+        flags.get("slo-ttft-s").map(|s| s.parse()).transpose()?;
+    let mut slo_tbt_s: Option<f64> = flags.get("slo-tbt-s").map(|s| s.parse()).transpose()?;
+    let scenario: Option<Scenario> = flags
+        .get("scenario")
+        .map(|path| -> Result<Scenario> {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario file '{path}'"))?;
+            Scenario::parse(&text).with_context(|| format!("parsing scenario file '{path}'"))
+        })
+        .transpose()?;
+    if let Some(sc) = &scenario {
+        if sc.vocab_size > cfg.vocab_size {
+            bail!(
+                "scenario vocab_size {} exceeds the model's vocabulary ({})",
+                sc.vocab_size,
+                cfg.vocab_size
+            );
+        }
+        if flags.contains_key("cancel-after") {
+            bail!("--cancel-after drives its own trace; a scenario carries its own cancel mix");
+        }
+        // The scenario file is the default for traffic-facing knobs;
+        // explicit flags still win.
+        if tenant_weights.is_empty() {
+            tenant_weights = sc.tenant_weights();
+        }
+        if slo_ttft_s.is_none() && sc.slo_ttft_s > 0.0 {
+            slo_ttft_s = Some(sc.slo_ttft_s);
+        }
+        if slo_tbt_s.is_none() && sc.slo_tbt_s > 0.0 {
+            slo_tbt_s = Some(sc.slo_tbt_s);
+        }
+    }
     let admit_window: usize = flags
         .get("admit-window")
         .map(|s| s.parse())
@@ -376,43 +437,98 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         sched,
         token_budget,
         prefill_chunk,
+        adaptive_budget,
+        adaptive_chunk,
+        tenant_weights,
+        slo_ttft_s,
+        slo_tbt_s,
         admit_window,
         speculate,
         drafter,
         kv_quant,
         audit,
     };
-    let rep = match cancel_after {
-        // --cancel-after N: stream tokens and fire each request's
-        // cancel handle once N of its tokens have been delivered —
-        // exercising mid-decode teardown through the public front-end.
-        Some(n) => {
-            let mut requests = requests;
-            let handles: Vec<CancelHandle> = requests
-                .iter_mut()
-                .map(|r| {
-                    let h = CancelHandle::new();
-                    r.cancel = Some(h.clone());
-                    h
-                })
-                .collect();
-            let stream = serve_streaming(&weights, requests, workers, &opts)?;
-            let (events, handle) = stream.into_parts();
-            let mut delivered = vec![0usize; handles.len()];
-            let mut streamed = 0usize;
-            for ev in events.iter() {
-                streamed += 1;
-                if let Some(count) = delivered.get_mut(ev.request_id) {
-                    *count += 1;
-                    if *count >= n {
-                        handles[ev.request_id].cancel();
+    let rep = if let Some(sc) = &scenario {
+        // --scenario FILE: replay the seeded multi-tenant trace through
+        // the timed open-loop front-end; a load-driver thread fires each
+        // scenario cancel at its trace offset (arrival + delay).
+        let mut cancels: Vec<(CancelHandle, f64)> = Vec::new();
+        let mut trace: Vec<(Request, f64)> = Vec::new();
+        for a in sc.arrivals() {
+            if let Some((h, delay)) = a.cancel {
+                cancels.push((h, a.at_s + delay));
+            }
+            trace.push((a.request, a.at_s));
+        }
+        eprintln!(
+            "scenario '{}': {} arrivals over {:.2}s of wall time (time_scale {}), \
+             {} tenants, {} self-cancelling",
+            sc.name,
+            trace.len(),
+            trace.last().map(|(_, t)| *t).unwrap_or(0.0),
+            sc.time_scale,
+            sc.tenants.len(),
+            cancels.len(),
+        );
+        cancels.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap_or(std::cmp::Ordering::Equal));
+        let canceller = if cancels.is_empty() {
+            None
+        } else {
+            let t0 = std::time::Instant::now();
+            Some(std::thread::spawn(move || {
+                for (h, fire_s) in cancels {
+                    let target = std::time::Duration::from_secs_f64(fire_s.max(0.0));
+                    loop {
+                        let elapsed = t0.elapsed();
+                        if elapsed >= target {
+                            break;
+                        }
+                        std::thread::sleep(
+                            (target - elapsed).min(std::time::Duration::from_millis(5)),
+                        );
+                    }
+                    h.cancel();
+                }
+            }))
+        };
+        let rep = serve_trace(&weights, trace, workers, &opts)?;
+        if let Some(c) = canceller {
+            c.join().ok();
+        }
+        rep
+    } else {
+        match cancel_after {
+            // --cancel-after N: stream tokens and fire each request's
+            // cancel handle once N of its tokens have been delivered —
+            // exercising mid-decode teardown through the public front-end.
+            Some(n) => {
+                let mut requests = requests;
+                let handles: Vec<CancelHandle> = requests
+                    .iter_mut()
+                    .map(|r| {
+                        let h = CancelHandle::new();
+                        r.cancel = Some(h.clone());
+                        h
+                    })
+                    .collect();
+                let stream = serve_streaming(&weights, requests, workers, &opts)?;
+                let (events, handle) = stream.into_parts();
+                let mut delivered = vec![0usize; handles.len()];
+                let mut streamed = 0usize;
+                for ev in events.iter() {
+                    streamed += 1;
+                    if let Some(count) = delivered.get_mut(ev.request_id) {
+                        *count += 1;
+                        if *count >= n {
+                            handles[ev.request_id].cancel();
+                        }
                     }
                 }
+                eprintln!("streamed {streamed} token events (cancel after {n} per request)");
+                handle.join().expect("serve thread panicked")?
             }
-            eprintln!("streamed {streamed} token events (cancel after {n} per request)");
-            handle.join().expect("serve thread panicked")?
+            None => serve_with(&weights, requests, workers, &opts)?,
         }
-        None => serve_with(&weights, requests, workers, &opts)?,
     };
     println!(
         "served {} requests / {} tokens in {:.2}s — {:.1} tok/s, p50 {:.3}s p95 {:.3}s [{}]",
@@ -428,7 +544,42 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "TTFT p50 {:.4}s p99 {:.4}s; TBT p50 {:.5}s p99 {:.5}s",
         rep.ttft_p50_s, rep.ttft_p99_s, rep.tbt_p50_s, rep.tbt_p99_s,
     );
-    if token_budget.is_some() {
+    if let Some(att) = rep.slo_attainment {
+        let target = |v: Option<f64>| v.map_or("-".to_string(), |s| format!("{s}s"));
+        println!(
+            "SLO attainment {:.1}% (TTFT target {}, per-request TBT p99 target {})",
+            100.0 * att,
+            target(rep.slo_ttft_s),
+            target(rep.slo_tbt_s),
+        );
+    }
+    if !rep.tenants.is_empty() {
+        let mut t = Table::new(
+            "per-tenant serving report",
+            &[
+                "tenant", "reqs", "served", "cancel", "expire", "reject", "tokens",
+                "ttft p50 (s)", "ttft p99 (s)", "tbt p99 (s)", "slo",
+            ],
+        );
+        for tr in &rep.tenants {
+            t.row(vec![
+                tr.tenant.clone(),
+                tr.requests.to_string(),
+                tr.served.to_string(),
+                tr.cancelled.to_string(),
+                tr.deadline_expired.to_string(),
+                tr.rejected.to_string(),
+                tr.total_tokens.to_string(),
+                format!("{:.4}", tr.ttft_p50_s),
+                format!("{:.4}", tr.ttft_p99_s),
+                format!("{:.5}", tr.tbt_p99_s),
+                tr.slo_attainment
+                    .map_or("-".to_string(), |a| format!("{:.0}%", 100.0 * a)),
+            ]);
+        }
+        t.print();
+    }
+    if token_budget.is_some() || adaptive_budget.is_some() {
         let r = &rep.rounds;
         println!(
             "token-budget rounds: {} total ({} mixed), {} decode tokens, {} chunked \
@@ -440,6 +591,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             r.prefill_tokens_per_round(),
             r.max_prefill_tokens_round,
         );
+        if r.adaptive_rounds > 0 {
+            println!(
+                "adaptive budget: {} controller steps; per-round budget walked \
+                 [{}, {}] on the modeled LOAD/EXEC balance",
+                r.adaptive_rounds, r.budget_lo, r.budget_hi,
+            );
+        }
     }
     println!(
         "peak resident KV ({} pages, page-granular, summed per worker): {}",
@@ -704,8 +862,11 @@ functional engine (real tiny models, real tokens):
               [--backend SPEC]   (default imax)
   serve       [--requests N] [--workers N] [--slots N] [--ubatch N]
               [--page-size N] [--kv-pages N]
-              [--prefix-cache] [--swap-pages N] [--sched fifo|sjf]
+              [--prefix-cache] [--swap-pages N] [--sched fifo|sjf|wfq]
               [--token-budget N] [--prefill-chunk N] [--admit-window N]
+              [--adaptive-budget MIN:MAX] [--adaptive-chunk]
+              [--scenario FILE] [--tenant-weights name:w,...]
+              [--slo-ttft-s F] [--slo-tbt-s F]
               [--speculate K] [--drafter ngram[:N]] [--kv-quant f16|q8_0]
               [--deadline-s F] [--cancel-after N] [--audit]
               [--model tiny|110m] [--scheme S]
@@ -722,8 +883,36 @@ functional engine (real tiny models, real tokens):
               prints hit counters); --swap-pages N backs eviction with a
               host swap arena of N pages per worker (swap traffic is charged
               through the imax DMA transfer mode; requires --prefix-cache);
-              --sched picks admission order: fifo (default) or sjf
-              (shortest job first by prefix-aware worst-case pages).
+              --sched picks admission order: fifo (default), sjf
+              (shortest job first by prefix-aware worst-case pages), or
+              wfq (weighted fair queueing: every admission window is
+              ordered by least weighted service, where admitted work
+              charges its tenant's account at tokens/weight;
+              --tenant-weights name:w,... sets the weights, default 1).
+              --scenario FILE replays a seeded multi-tenant traffic
+              scenario (format: docs/scenarios.md; examples under
+              examples/scenarios/): requests arrive open-loop at their
+              generated offsets via a feeder thread — bursty/diurnal
+              arrival processes, per-tenant request shapes (the agent
+              shape shares a templated prefix with the prefix cache),
+              cancel/deadline mixes, and scenario-level tenant weights
+              and SLO targets (explicit flags win). Same file, same
+              trace — to the bit. The report adds a per-tenant
+              breakdown table. --slo-ttft-s F / --slo-tbt-s F grade
+              every served request against a TTFT / per-request p99
+              TBT target and report SLO attainment overall and per
+              tenant. --adaptive-budget MIN:MAX replaces the fixed
+              --token-budget with a closed-loop controller: after every
+              settled round it reads the modeled LOAD/EXEC balance the
+              imax backend emits and walks the next round's budget by
+              quarter-steps inside [MIN, MAX] (load-bound rounds grow
+              the budget to amortize weight streaming; exec-bound
+              rounds shrink it to protect TBT). On a functional backend
+              the budget freezes at MAX. --adaptive-chunk additionally
+              splits each round's leftover budget evenly across the
+              flights still prefilling (capped by --prefill-chunk)
+              instead of feeding them strictly in admission order —
+              both are schedule changes only, tokens stay bit-identical.
               --token-budget N switches each worker to token-budget
               iteration scheduling: every round carries all live decode
               tokens first, then resumable prefill chunks of at most

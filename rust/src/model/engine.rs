@@ -92,6 +92,34 @@ pub trait MatvecExec {
     fn kv_transfer(&mut self, _phase: Phase, _dir: KvSwapDir, _bytes: usize) {}
 }
 
+/// Modeled LOAD/EXEC split of the last settled scheduler round, fed
+/// back through [`KernelExec::last_round_balance`]. This is the signal
+/// the adaptive token budget tracks: a LOAD-dominated round re-streams
+/// every weight once regardless of how many tokens share it, so a high
+/// load fraction means a bigger round amortizes the same transfer over
+/// more useful work; an EXEC-dominated round gains nothing from growing
+/// and only stretches time-between-tokens.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundBalance {
+    /// Modeled host→accelerator streaming seconds the round added.
+    pub load_s: f64,
+    /// Modeled kernel-execution seconds the round added.
+    pub exec_s: f64,
+}
+
+impl RoundBalance {
+    /// LOAD share of the round's LOAD+EXEC time; `None` when the round
+    /// recorded neither (e.g. every kernel ran host-side).
+    pub fn load_fraction(&self) -> Option<f64> {
+        let total = self.load_s + self.exec_s;
+        if total > 0.0 {
+            Some(self.load_s / total)
+        } else {
+            None
+        }
+    }
+}
+
 /// The plan/submit execution API the engine drives: [`MatvecExec`] kernel
 /// recording plus explicit flush points.
 ///
@@ -121,6 +149,14 @@ pub trait KernelExec: MatvecExec {
     /// cost deltas here so the modeled transfer bottleneck stays visible
     /// round by round; the default is a no-op.
     fn round_boundary(&mut self) {}
+
+    /// Modeled LOAD/EXEC balance of the round the most recent
+    /// [`KernelExec::round_boundary`] settled, if this backend models
+    /// costs. Functional backends return `None` (the default), which
+    /// freezes any adaptive budget at its starting value.
+    fn last_round_balance(&self) -> Option<RoundBalance> {
+        None
+    }
 }
 
 /// Pure-Rust execution (no instrumentation).

@@ -30,8 +30,8 @@ pub mod weights;
 pub use config::{LinearKind, ModelConfig, QuantScheme};
 pub use drafter::{DrafterSpec, NgramDrafter, DEFAULT_NGRAM};
 pub use engine::{
-    Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, PrefillCursor, Session,
-    SharedPrefill, DEFAULT_UBATCH,
+    Engine, GenerateResult, KernelExec, MatvecExec, NativeExec, PrefillCursor, RoundBalance,
+    Session, SharedPrefill, DEFAULT_UBATCH,
 };
 pub use kv_cache::{AdoptedPrefix, CacheError, KvCache, KvReuseStats, KvScheme, DEFAULT_PAGE_SIZE};
 pub use graph::{KvSwapDir, MatvecOp, OpKind, Phase};

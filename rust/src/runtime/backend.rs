@@ -39,7 +39,7 @@ use crate::imax::device::{ImaxDevice, ImaxImpl};
 use crate::imax::dma::TransferMode;
 use crate::imax::lmm::LmmConfig;
 use crate::imax::timing::RunBreakdown;
-use crate::model::engine::{KernelExec, MatvecExec, NativeExec};
+use crate::model::engine::{KernelExec, MatvecExec, NativeExec, RoundBalance};
 use crate::model::graph::{KvSwapDir, MatvecOp, Phase};
 use crate::tensor::{ActQuant, QTensor};
 
@@ -527,6 +527,22 @@ impl KernelExec for PlacementExec {
             p.exec.round_boundary();
         }
     }
+
+    fn last_round_balance(&self) -> Option<RoundBalance> {
+        // Sum over parts: each instrumented range contributed its own
+        // share of the round's modeled LOAD/EXEC time. `None` only when
+        // no part models costs at all.
+        let mut any = false;
+        let mut sum = RoundBalance::default();
+        for p in &self.parts {
+            if let Some(b) = p.exec.last_round_balance() {
+                any = true;
+                sum.load_s += b.load_s;
+                sum.exec_s += b.exec_s;
+            }
+        }
+        any.then_some(sum)
+    }
 }
 
 /// A constructed backend executor. Closed enum rather than a trait
@@ -696,6 +712,16 @@ impl KernelExec for BackendExec {
             BackendExec::Placement(e) => e.round_boundary(),
             #[cfg(feature = "pjrt")]
             BackendExec::Pjrt(e) => e.round_boundary(),
+        }
+    }
+
+    fn last_round_balance(&self) -> Option<RoundBalance> {
+        match self {
+            BackendExec::Native(e) => e.last_round_balance(),
+            BackendExec::Imax(e) => e.last_round_balance(),
+            BackendExec::Placement(e) => e.last_round_balance(),
+            #[cfg(feature = "pjrt")]
+            BackendExec::Pjrt(e) => e.last_round_balance(),
         }
     }
 }

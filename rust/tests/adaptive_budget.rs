@@ -1,0 +1,131 @@
+//! The adaptive per-round token budget must inherit the fixed budget's
+//! decode-starvation guarantee: whatever budget the controller walks to,
+//! prefill only ever spends what the live decodes left of it, and the
+//! walk itself stays inside `[min, max]`.
+
+use std::time::Instant;
+
+use imax_llm::coordinator::{
+    AdaptiveBudget, ContinuousBatcher, InstrumentedExec, OffloadPolicy, Request,
+};
+use imax_llm::imax::{ImaxDevice, LmmConfig, TransferMode};
+use imax_llm::model::engine::NativeExec;
+use imax_llm::model::{Engine, ModelConfig, ModelWeights, QuantScheme, RoundBalance, Sampler};
+
+fn instrumented() -> InstrumentedExec<NativeExec> {
+    InstrumentedExec::new(
+        NativeExec,
+        ImaxDevice::fpga(2),
+        OffloadPolicy::new(LmmConfig::new(64)),
+        TransferMode::Coalesced,
+    )
+}
+
+#[test]
+fn controller_direction_follows_the_modeled_balance() {
+    let a = AdaptiveBudget::new(4, 64);
+    let load_bound = RoundBalance { load_s: 0.9, exec_s: 0.1 };
+    let exec_bound = RoundBalance { load_s: 0.1, exec_s: 0.9 };
+    let balanced = RoundBalance { load_s: 0.5, exec_s: 0.5 };
+    let unmodeled = RoundBalance { load_s: 0.0, exec_s: 0.0 };
+
+    // LOAD-bound rounds grow the budget (more tokens amortize each
+    // weight transfer) until the ceiling absorbs the walk.
+    let mut cur = 8;
+    for _ in 0..16 {
+        let next = a.next_budget(cur, &load_bound);
+        assert!(next >= cur, "LOAD-bound must never shrink: {cur} -> {next}");
+        cur = next;
+    }
+    assert_eq!(cur, a.max, "LOAD-bound walk saturates at the ceiling");
+
+    // EXEC-bound rounds shrink it (the budget is adding latency, not
+    // amortization) until the floor catches it.
+    let mut cur = 32;
+    for _ in 0..16 {
+        let next = a.next_budget(cur, &exec_bound);
+        assert!(next <= cur, "EXEC-bound must never grow: {cur} -> {next}");
+        cur = next;
+    }
+    assert_eq!(cur, a.min, "EXEC-bound walk saturates at the floor");
+
+    // Inside the dead-band the controller holds still, and a round with
+    // no modeled time at all freezes it (functional backend).
+    assert_eq!(a.next_budget(16, &balanced), 16);
+    assert_eq!(a.next_budget(16, &unmodeled), 16);
+
+    // Out-of-range starting points are clamped, never amplified.
+    assert_eq!(a.next_budget(1, &balanced), a.min);
+    assert_eq!(a.next_budget(1000, &balanced), a.max);
+}
+
+#[test]
+fn adaptive_budget_never_starves_decodes() {
+    // The fixed-budget starvation test (scheduler.rs
+    // `token_budget_decode_pass_never_starves`) replayed under the
+    // controller: two live decodes, then a long prompt chunk-streaming
+    // in while the budget walks. Every settled round must satisfy
+    // `prefill <= budget_that_round - decode`, where "budget that
+    // round" comes from the controller's own trace.
+    let weights = ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 23);
+    let spec = AdaptiveBudget::new(2, 4);
+    let mut b = ContinuousBatcher::new(Engine::with_slots(weights, 3), 32, Instant::now())
+        .with_token_budget(2)
+        .with_adaptive_budget(spec)
+        .with_prefill_chunk(2);
+    let mut exec = instrumented();
+    b.admit(Request::new(0, vec![1], 4), Sampler::greedy(), 0.0, &mut exec).unwrap();
+    b.admit(Request::new(1, vec![2], 4), Sampler::greedy(), 0.0, &mut exec).unwrap();
+    assert!(b.decode_round(&mut exec).is_empty());
+    b.admit(Request::new(2, (1..=9).collect(), 1), Sampler::greedy(), 0.0, &mut exec).unwrap();
+    let logs = b.drain(&mut exec);
+    assert_eq!(logs.len(), 3, "the long prompt completes despite decode priority");
+
+    let rounds = b.rounds();
+    let trace = b.budget_trace();
+    assert!(!rounds.is_empty());
+    assert_eq!(
+        trace.len(),
+        rounds.len(),
+        "one controller step per settled round keeps the traces aligned"
+    );
+    for &bud in trace {
+        assert!((spec.min..=spec.max).contains(&bud), "budget {bud} escaped [2, 4]");
+    }
+    // Round 0 ran under the initial budget (2, the seed passed to
+    // with_token_budget); round i under trace[i - 1].
+    for (i, r) in rounds.iter().enumerate() {
+        let budget = if i == 0 { 2 } else { trace[i - 1] };
+        assert!(
+            r.prefill_tokens <= budget.saturating_sub(r.decode_tokens),
+            "round {i} (budget {budget}) starved decodes: {r:?}"
+        );
+    }
+    let both_live: Vec<_> = rounds.iter().filter(|r| r.decode_tokens == 2).collect();
+    assert!(!both_live.is_empty(), "rounds carried both live decodes");
+}
+
+#[test]
+fn adaptive_schedule_is_output_invariant() {
+    // The controller reshapes rounds, never tokens: a run under the
+    // adaptive budget emits exactly the token streams of a fixed-budget
+    // run (same seeded sampler, same requests).
+    let run = |adaptive: bool| {
+        let weights = ModelWeights::random(&ModelConfig::tiny(), QuantScheme::Q8_0, 23);
+        let mut b = ContinuousBatcher::new(Engine::with_slots(weights, 3), 32, Instant::now())
+            .with_token_budget(3)
+            .with_prefill_chunk(2);
+        if adaptive {
+            b = b.with_adaptive_budget(AdaptiveBudget::new(1, 8));
+        }
+        let mut exec = instrumented();
+        for id in 0..3usize {
+            let req = Request::new(id, (1..=(4 + 3 * id as u32)).collect(), 5);
+            b.admit(req, Sampler::greedy(), 0.0, &mut exec).unwrap();
+        }
+        let mut logs = b.drain(&mut exec);
+        logs.sort_by_key(|l| l.id);
+        logs.into_iter().map(|l| l.tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true), "budget adaptation must be schedule-only");
+}

@@ -22,7 +22,10 @@ seeds the perf trajectory), then compares against the baseline:
   it), and the recorded baseline value is trajectory-only. Used for
   ratio metrics (``kv_quant/*``) whose exact value may shift as bench
   shapes evolve but whose claimed win must never drop below the
-  paper's floor;
+  paper's floor, and for the multi-tenant serving gates
+  (``multi_tenant/*``: WFQ rank gain, adaptive-controller steps, and
+  SLO attainment on the committed scenario replay) where the floor is
+  the contract and the recorded value is machine-dependent timing;
 * a metric only the *current* side has is reported but never fails — a
   new bench starts recording before it starts gating. A baseline value
   of null likewise records without gating (used to stage metrics whose
